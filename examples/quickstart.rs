@@ -1,0 +1,49 @@
+//! Quickstart: simulate a ring of 100 PEs with and without the moving
+//! Δ-window constraint and print the paper's two headline observables —
+//! the utilization (simulation phase) and the STH width (measurement
+//! phase).  Run with: `cargo run --release --example quickstart`
+
+use repro::coordinator::{run_ensemble, RunSpec};
+use repro::pdes::{Mode, VolumeLoad};
+use repro::stats::Lane;
+
+fn main() {
+    let base = RunSpec {
+        l: 100,
+        load: VolumeLoad::Sites(1),
+        mode: Mode::Conservative,
+        trials: 32,
+        steps: 8000,
+        seed: 7,
+    };
+
+    println!(
+        "ring of {} PEs, 1 site/PE, {} trials, {} steps\n",
+        base.l, base.trials, base.steps
+    );
+
+    for (label, mode) in [
+        ("unconstrained (basic conservative)", Mode::Conservative),
+        ("Δ-window constrained (Δ = 3)", Mode::Windowed { delta: 3.0 }),
+    ] {
+        let series = run_ensemble(&RunSpec { mode, ..base });
+        let t_end = series.steps() - 1;
+        println!("{label}:");
+        println!(
+            "  <u>   = {:.3}  (fraction of PEs working per step)",
+            series.mean(t_end, Lane::U)
+        );
+        println!(
+            "  <w>   = {:.3}  (RMS width of the virtual time horizon)",
+            series.mean(t_end, Lane::W)
+        );
+        println!(
+            "  <w_a> = {:.3}  (absolute spread — the memory bound per PE)",
+            series.mean(t_end, Lane::Wa)
+        );
+        println!();
+    }
+
+    println!("note: the window bounds the width (measurement phase scales) while");
+    println!("the utilization stays finite (simulation phase scales) — the paper's result.");
+}

@@ -1,0 +1,103 @@
+"""AOT: lower the L2 chunk model to HLO *text* artifacts for the Rust runtime.
+
+The interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is one ``(L, B, T_c)`` shape of ``model.run_chunk``:
+
+    inputs : tau0 (B, L) f64, pend0 (B, L) i32, key_data (2,) u32,
+             params (4,) f64
+    outputs: tuple(tau_T (B, L) f64, pend_T (B, L) i32, stats (T_c, B, 11))
+
+A plain-text ``manifest.txt`` (``name L B T path`` per line) lets the Rust
+artifact registry discover what was built without a JSON dependency.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--registry small|default]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import run_chunk
+
+#: (name, L, B, T_c) artifact registries.  `default` covers the e2e campaign
+#: sizes; `small` is a fast-compile set for tests and CI.
+REGISTRIES = {
+    "small": [
+        ("pdes_L16_B4_T8", 16, 4, 8),
+    ],
+    "default": [
+        ("pdes_L16_B4_T8", 16, 4, 8),          # test / smoke shape
+        ("pdes_L64_B32_T32", 64, 32, 32),      # quickstart shape
+        ("pdes_L256_B16_T64", 256, 16, 64),    # campaign shape (medium)
+        ("pdes_L1024_B8_T64", 1024, 8, 64),    # campaign shape (large)
+    ],
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_chunk(l: int, b: int, t_chunk: int) -> str:
+    """Lower one (B, L, T_c) instantiation of the chunk model to HLO text."""
+    tau_spec = jax.ShapeDtypeStruct((b, l), jnp.float64)
+    pend_spec = jax.ShapeDtypeStruct((b, l), jnp.int32)
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    par_spec = jax.ShapeDtypeStruct((4,), jnp.float64)
+
+    def fn(tau0, pend0, key_data, params):
+        return run_chunk(tau0, pend0, key_data, params, t_chunk=t_chunk, use_pallas=True)
+
+    lowered = jax.jit(fn).lower(tau_spec, pend_spec, key_spec, par_spec)
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, registry: str, force: bool = False) -> list[tuple[str, int, int, int, str]]:
+    """Build every artifact in ``registry`` into ``out_dir``; returns manifest rows."""
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+    for name, l, b, t in REGISTRIES[registry]:
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        if force or not os.path.exists(path):
+            text = lower_chunk(l, b, t)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)")
+        else:
+            print(f"kept  {path}")
+        rows.append((name, l, b, t, os.path.basename(path)))
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("# name L B T file\n")
+        for row in rows:
+            f.write(" ".join(str(x) for x in row) + "\n")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--registry", default="default", choices=sorted(REGISTRIES))
+    ap.add_argument("--force", action="store_true", help="rebuild even if artifacts exist")
+    args = ap.parse_args()
+    build(args.out_dir, args.registry, args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Layer-1 Pallas kernel: one parallel PDES update attempt.
+
+The compute hot-spot of the paper is the per-step update of L local virtual
+times under the conservative causality rule (Eq. 1, one-sided for border
+events of N_V ≥ 2 rings) and the moving Δ-window global constraint (Eq. 3),
+with pending events that persist while blocked (see kernels/ref.py).  The
+kernel is gridded over the trial-ensemble axis: each program instance owns
+one full ``(1, L)`` ring row so that
+
+* the nearest-neighbour comparison is an in-register rotate/compare, and
+* the global virtual time ``min_j tau_j`` (the Δ-window anchor) is an
+  in-block reduction — no cross-program communication is needed.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): a ``(1, L)`` f64 block is
+8 kB at L = 1024 — far under VMEM; the workload is VPU (select/compare/add)
+bound with zero MXU content, so the efficiency target is reduction/rotate
+vectorization, not matmul utilization.  ``interpret=True`` is mandatory on
+this CPU-PJRT testbed: real TPU lowering emits a Mosaic custom-call that the
+CPU plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import BOTH, INTERIOR, LEFT, RIGHT
+
+
+def _pdes_step_kernel(
+    params_ref, tau_ref, pend_ref, site_u_ref, eta_ref, tau_out_ref, pend_out_ref, upd_out_ref
+):
+    """Pallas body: one update attempt for one ensemble member's ring."""
+    tau = tau_ref[...]  # (1, L)
+    pend = pend_ref[...]
+    p_side = params_ref[0]
+    delta = params_ref[1]
+    nn_flag = params_ref[2]
+    win_flag = params_ref[3]
+
+    # Ring neighbour comparison (Eq. 1), one-sided per the pending event.
+    left = jnp.roll(tau, 1, axis=-1)
+    right = jnp.roll(tau, -1, axis=-1)
+    nn_ok = jnp.select(
+        [pend == INTERIOR, pend == LEFT, pend == RIGHT],
+        [jnp.ones_like(tau, bool), tau <= left, tau <= right],
+        default=tau <= jnp.minimum(left, right),
+    )
+
+    # Global virtual time: in-block reduction over the full ring.
+    gvt = jnp.min(tau)
+    win_ok = tau <= delta + gvt
+
+    updated = jnp.logical_and(
+        jnp.logical_or(nn_ok, nn_flag < 0.5),
+        jnp.logical_or(win_ok, win_flag < 0.5),
+    )
+
+    tau_out_ref[...] = tau + jnp.where(updated, eta_ref[...], 0.0)
+    # updaters draw their next pending event; blocked PEs keep theirs
+    site_u = site_u_ref[...]
+    fresh = jnp.where(
+        p_side >= 1.0,
+        BOTH,
+        jnp.where(site_u < p_side, LEFT, jnp.where(site_u < 2.0 * p_side, RIGHT, INTERIOR)),
+    ).astype(pend.dtype)
+    redraw = jnp.logical_and(updated, nn_flag > 0.5)
+    pend_out_ref[...] = jnp.where(redraw, fresh, pend)
+    upd_out_ref[...] = updated
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pdes_step(tau, pend, site_u, eta, params, *, interpret=True):
+    """One parallel PDES update attempt via the Pallas kernel.
+
+    Args:
+      tau:    (B, L) f64 local virtual times, one ring per ensemble member.
+      pend:   (B, L) i32 pending-event classes (see kernels/ref.py).
+      site_u: (B, L) f64 uniforms for the updaters' next event draw.
+      eta:    (B, L) f64 exponential(1) increments.
+      params: (4,) f64 ``[p_side, delta, nn_flag, window_flag]``.
+      interpret: run the kernel in interpret mode (required on CPU PJRT).
+
+    Returns:
+      (tau_next, pend_next, updated): (B, L) f64, (B, L) i32, (B, L) bool.
+    """
+    b, l = tau.shape
+    row = pl.BlockSpec((1, l), lambda i: (i, 0))
+    return pl.pallas_call(
+        _pdes_step_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((4,), lambda i: (0,)),  # params broadcast to all rows
+            row,
+            row,
+            row,
+            row,
+        ],
+        out_specs=[row, row, row],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l), tau.dtype),
+            jax.ShapeDtypeStruct((b, l), pend.dtype),
+            jax.ShapeDtypeStruct((b, l), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(params, tau, pend, site_u, eta)

@@ -1,0 +1,96 @@
+"""Pure-jnp correctness oracle for the PDES step kernel.
+
+This module is the ground truth the Pallas kernel (`pdes_step.py`) is tested
+against.  It implements one parallel update attempt of the conservative PDES
+model of Kolakowska/Novotny/Korniss (PRE 67, 046703) with the paper's
+*pending-event* semantics (validated against the paper's own utilization
+data — see DESIGN.md §Event-Semantics):
+
+* every PE holds a pending event: the site class of its next update attempt
+  (0 = interior, 1 = left border, 2 = right border, 3 = both, for N_V = 1);
+* a blocked PE retries the *same* event next step (conservative PDES
+  executes events in timestamp order — no resampling while blocked);
+* the causality check (Eq. 1) is one-sided for border sites of N_V ≥ 2
+  rings and two-sided for N_V = 1;
+* the moving-window constraint (Eq. 3) ``tau_k <= delta + min_j tau_j``
+  gates every event class when active;
+* an updating PE advances ``tau_k += eta_k`` (Exp(1)) and draws a fresh
+  pending event from ``site_u``.
+
+All randomness is drawn by the caller so kernel and oracle compare
+bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Stand-in for an infinite window on the AOT path (f64 infinity does not
+#: survive every literal path cleanly, and 1e300 + tau never overflows for
+#: any reachable tau).
+DELTA_INF = 1.0e300
+
+#: Pending-event classes.
+INTERIOR, LEFT, RIGHT, BOTH = 0, 1, 2, 3
+
+
+def params_array(nv, delta, enforce_nn, enforce_window):
+    """Pack the runtime parameters into the (4,) f64 vector the artifact takes.
+
+    ``nv`` is the number of volume elements per PE (``float('inf')`` for the
+    RD limit); it enters the dynamics only through ``p_side = 1/nv``, with
+    ``p_side >= 1`` marking the two-sided N_V = 1 case.  The mode flags are
+    encoded as 0.0/1.0 so one compiled artifact serves all four update-rule
+    modes of the paper.
+    """
+    p_side = 0.0 if jnp.isinf(nv) else 1.0 / float(nv)
+    return jnp.array(
+        [p_side, delta, 1.0 if enforce_nn else 0.0, 1.0 if enforce_window else 0.0],
+        dtype=jnp.float64,
+    )
+
+
+def draw_pending(site_u, p_side):
+    """Fresh pending-event classes from uniforms (see `params_array`)."""
+    one_sided = jnp.where(
+        site_u < p_side,
+        LEFT,
+        jnp.where(site_u < 2.0 * p_side, RIGHT, INTERIOR),
+    )
+    return jnp.where(p_side >= 1.0, BOTH, one_sided).astype(jnp.int32)
+
+
+def pdes_step_ref(tau, pend, site_u, eta, params):
+    """One parallel PDES update attempt (pure-jnp reference).
+
+    Args:
+      tau:    (..., L) f64 local virtual times.
+      pend:   (..., L) i32 pending-event classes.
+      site_u: (..., L) f64 uniforms for the *next* event draw of updaters.
+      eta:    (..., L) f64 exponential(1) time increments.
+      params: (4,) f64 ``[p_side, delta, nn_flag, window_flag]``.
+
+    Returns:
+      (tau_next, pend_next, updated).
+    """
+    p_side, delta, nn_flag, win_flag = params[0], params[1], params[2], params[3]
+
+    left = jnp.roll(tau, 1, axis=-1)
+    right = jnp.roll(tau, -1, axis=-1)
+    nn_ok = jnp.select(
+        [pend == INTERIOR, pend == LEFT, pend == RIGHT],
+        [jnp.ones_like(tau, bool), tau <= left, tau <= right],
+        default=tau <= jnp.minimum(left, right),
+    )
+
+    gvt = jnp.min(tau, axis=-1, keepdims=True)  # global virtual time
+    win_ok = tau <= delta + gvt
+
+    nn_gate = jnp.logical_or(nn_ok, nn_flag < 0.5)
+    win_gate = jnp.logical_or(win_ok, win_flag < 0.5)
+    updated = jnp.logical_and(nn_gate, win_gate)
+
+    tau_next = tau + jnp.where(updated, eta, 0.0)
+    redraw = jnp.logical_and(updated, nn_flag > 0.5)
+    pend_next = jnp.where(redraw, draw_pending(site_u, p_side), pend)
+    return tau_next, pend_next, updated

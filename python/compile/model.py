@@ -1,0 +1,110 @@
+"""Layer-2 JAX model: chunked scan of the PDES update with in-graph statistics.
+
+One artifact executes ``T_c`` parallel steps for a ``(B, L)`` ensemble of
+rings and returns, per step and per ensemble member, the eleven observables
+the paper's evaluation needs (utilization, STH widths, slow/fast group
+decomposition, extrema).  Computing the statistics *in-graph* keeps the
+artifact's output at ``11`` scalars per (step, member) instead of shipping
+the full ``(B, L)`` horizon back to the coordinator every step — this is the
+L2 perf contract (see DESIGN.md §Perf).
+
+The scan carries ``(tau, key)``; randomness is threefry, split once per step.
+The Rust coordinator streams chunks: it feeds ``tau_T`` of one call as
+``tau_0`` of the next, with a fresh fold of the key, so Python never appears
+on the run path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.pdes_step import pdes_step
+from .kernels.ref import pdes_step_ref
+
+#: Order of the per-step statistics lanes in the artifact output.
+STAT_NAMES = (
+    "u",        # utilization: fraction of PEs that updated this step
+    "mean",     # mean virtual time  tau_bar
+    "w2",       # STH variance (Eq. 4)
+    "wa",       # mean absolute deviation (Eq. 5)
+    "min",      # global virtual time (window anchor)
+    "max",      # leading edge of the horizon
+    "f_s",      # fraction of slow PEs (tau <= tau_bar)      (Eqs. 15-18)
+    "w2_s",     # slow-group variance contribution
+    "wa_s",     # slow-group absolute width
+    "w2_f",     # fast-group variance contribution
+    "wa_f",     # fast-group absolute width
+)
+N_STATS = len(STAT_NAMES)
+
+
+def step_stats(tau, updated):
+    """Per-step observables for a (B, L) horizon and its update mask.
+
+    Returns a (B, N_STATS) f64 array ordered as ``STAT_NAMES``.  Group widths
+    follow Eqs. (15)-(16): deviations are taken from the *global* mean, and
+    each group is normalized by its own population (guarded against empty
+    groups; the fast group is empty whenever the horizon is flat).
+    """
+    l = tau.shape[-1]
+    u = jnp.mean(updated.astype(tau.dtype), axis=-1)
+    mean = jnp.mean(tau, axis=-1)
+    dev = tau - mean[..., None]
+    w2 = jnp.mean(dev * dev, axis=-1)
+    wa = jnp.mean(jnp.abs(dev), axis=-1)
+    tmin = jnp.min(tau, axis=-1)
+    tmax = jnp.max(tau, axis=-1)
+
+    slow = tau <= mean[..., None]
+    n_s = jnp.sum(slow, axis=-1)
+    n_f = l - n_s
+    slow_f = slow.astype(tau.dtype)
+    fast_f = 1.0 - slow_f
+    safe_s = jnp.maximum(n_s, 1).astype(tau.dtype)
+    safe_f = jnp.maximum(n_f, 1).astype(tau.dtype)
+    w2_s = jnp.sum(slow_f * dev * dev, axis=-1) / safe_s
+    wa_s = jnp.sum(slow_f * jnp.abs(dev), axis=-1) / safe_s
+    w2_f = jnp.sum(fast_f * dev * dev, axis=-1) / safe_f
+    wa_f = jnp.sum(fast_f * jnp.abs(dev), axis=-1) / safe_f
+    f_s = n_s.astype(tau.dtype) / l
+
+    return jnp.stack([u, mean, w2, wa, tmin, tmax, f_s, w2_s, wa_s, w2_f, wa_f], axis=-1)
+
+
+def _chunk(tau0, pend0, key_data, params, *, t_chunk, step_fn):
+    """Run ``t_chunk`` update attempts; return (tau_T, pend_T, stats)."""
+
+    def body(carry, _):
+        tau, pend, key = carry
+        key, k_site, k_eta = jax.random.split(key, 3)
+        site_u = jax.random.uniform(k_site, tau.shape, dtype=tau.dtype)
+        eta = jax.random.exponential(k_eta, tau.shape, dtype=tau.dtype)
+        tau_next, pend_next, updated = step_fn(tau, pend, site_u, eta, params)
+        return (tau_next, pend_next, key), step_stats(tau_next, updated)
+
+    key = jax.random.wrap_key_data(key_data.astype(jnp.uint32), impl="threefry2x32")
+    (tau_t, pend_t, _), stats = jax.lax.scan(body, (tau0, pend0, key), None, length=t_chunk)
+    return tau_t, pend_t, stats
+
+
+@functools.partial(jax.jit, static_argnames=("t_chunk", "use_pallas"))
+def run_chunk(tau0, pend0, key_data, params, *, t_chunk, use_pallas=True):
+    """The artifact entry point: ``t_chunk`` PDES steps with statistics.
+
+    Args:
+      tau0:     (B, L) f64 initial local virtual times.
+      pend0:    (B, L) i32 initial pending-event classes (kernels/ref.py).
+      key_data: (2,) u32 raw threefry key data.
+      params:   (4,) f64 ``[p_side, delta, nn_flag, window_flag]``.
+      t_chunk:  static number of steps in this chunk.
+      use_pallas: route the step through the Pallas kernel (True, default)
+        or the pure-jnp reference (False; used by tests to isolate L2).
+
+    Returns:
+      (tau_T (B, L) f64, pend_T (B, L) i32, stats (t_chunk, B, N_STATS) f64).
+    """
+    step_fn = pdes_step if use_pallas else pdes_step_ref
+    return _chunk(tau0, pend0, key_data, params, t_chunk=t_chunk, step_fn=step_fn)

@@ -1,0 +1,39 @@
+"""AOT path: HLO text emission, manifest format, artifact invariants."""
+
+import os
+import tempfile
+
+from compile.aot import REGISTRIES, build, lower_chunk
+
+
+def test_lower_small_shape_produces_hlo_text():
+    text = lower_chunk(8, 2, 4)
+    assert "HloModule" in text
+    # scan must lower to a while loop, not an unrolled body (artifact size)
+    assert "while" in text
+    # f64 state and the 11-lane stats output must appear in the signature
+    assert "f64[2,8]" in text
+    assert "s32[2,8]" in text
+    assert "f64[4,2,11]" in text
+
+
+def test_lower_is_deterministic():
+    assert lower_chunk(8, 2, 4) == lower_chunk(8, 2, 4)
+
+
+def test_build_writes_manifest_and_is_idempotent():
+    with tempfile.TemporaryDirectory() as d:
+        rows = build(d, "small")
+        assert rows == [("pdes_L16_B4_T8", 16, 4, 8, "pdes_L16_B4_T8.hlo.txt")]
+        manifest = open(os.path.join(d, "manifest.txt")).read().splitlines()
+        assert manifest[0].startswith("#")
+        assert manifest[1].split() == ["pdes_L16_B4_T8", "16", "4", "8", "pdes_L16_B4_T8.hlo.txt"]
+        mtime = os.path.getmtime(os.path.join(d, "pdes_L16_B4_T8.hlo.txt"))
+        build(d, "small")  # second call must keep the file (no-op)
+        assert os.path.getmtime(os.path.join(d, "pdes_L16_B4_T8.hlo.txt")) == mtime
+
+
+def test_default_registry_covers_campaign_shapes():
+    shapes = {(l, b, t) for _, l, b, t in REGISTRIES["default"]}
+    assert (16, 4, 8) in shapes      # test shape
+    assert any(l >= 1024 for l, _, _ in shapes)  # large-campaign shape

@@ -1,0 +1,136 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.pdes_step import pdes_step
+from compile.kernels.ref import (
+    BOTH,
+    DELTA_INF,
+    INTERIOR,
+    LEFT,
+    RIGHT,
+    draw_pending,
+    params_array,
+    pdes_step_ref,
+)
+
+
+def _draws(seed, b, l, p_side=1.0):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    tau = jax.random.uniform(k1, (b, l), dtype=jnp.float64) * 10.0
+    site_u = jax.random.uniform(k2, (b, l), dtype=jnp.float64)
+    eta = jax.random.exponential(k3, (b, l), dtype=jnp.float64)
+    pend = draw_pending(jax.random.uniform(k4, (b, l), dtype=jnp.float64), p_side)
+    return tau, pend, site_u, eta
+
+
+MODES = [
+    ("conservative", params_array(1, DELTA_INF, True, False)),
+    ("windowed", params_array(1, 2.0, True, True)),
+    ("rd", params_array(float("inf"), DELTA_INF, False, False)),
+    ("windowed_rd", params_array(float("inf"), 1.0, False, True)),
+    ("nv10_windowed", params_array(10, 10.0, True, True)),
+]
+
+
+@pytest.mark.parametrize("name,params", MODES, ids=[m[0] for m in MODES])
+@pytest.mark.parametrize("b,l", [(1, 8), (4, 32), (3, 128), (8, 5)])
+def test_kernel_matches_ref(name, params, b, l):
+    p_side = float(params[0])
+    tau, pend, site_u, eta = _draws(hash((name, b, l)) % 2**31, b, l, p_side)
+    t_ref, p_ref, m_ref = pdes_step_ref(tau, pend, site_u, eta, params)
+    t_pl, p_pl, m_pl = pdes_step(tau, pend, site_u, eta, params)
+    np.testing.assert_array_equal(np.asarray(t_pl), np.asarray(t_ref))
+    np.testing.assert_array_equal(np.asarray(p_pl), np.asarray(p_ref))
+    np.testing.assert_array_equal(np.asarray(m_pl), np.asarray(m_ref))
+
+
+def test_nv1_local_minima_always_update():
+    """With NV=1 and no window, exactly the local minima of the ring update."""
+    params = params_array(1, DELTA_INF, True, False)
+    tau, pend, site_u, eta = _draws(7, 2, 64, 1.0)
+    assert (np.asarray(pend) == BOTH).all()
+    _, _, updated = pdes_step(tau, pend, site_u, eta, params)
+    left = jnp.roll(tau, 1, axis=-1)
+    right = jnp.roll(tau, -1, axis=-1)
+    is_min = tau <= jnp.minimum(left, right)
+    np.testing.assert_array_equal(np.asarray(updated), np.asarray(is_min))
+
+
+def test_one_sided_border_checks():
+    """LEFT events check only the left neighbour, RIGHT only the right."""
+    params = params_array(4, DELTA_INF, True, False)
+    tau, _, site_u, eta = _draws(9, 3, 32, 0.25)
+    for cls, expect in [
+        (LEFT, lambda t: t <= jnp.roll(t, 1, -1)),
+        (RIGHT, lambda t: t <= jnp.roll(t, -1, -1)),
+        (INTERIOR, lambda t: jnp.ones_like(t, bool)),
+    ]:
+        pend = jnp.full(tau.shape, cls, dtype=jnp.int32)
+        _, _, updated = pdes_step(tau, pend, site_u, eta, params)
+        np.testing.assert_array_equal(np.asarray(updated), np.asarray(expect(tau)))
+
+
+def test_blocked_pes_keep_pending_and_tau():
+    params = params_array(10, 1.5, True, True)
+    tau, pend, site_u, eta = _draws(11, 4, 32, 0.1)
+    tau_next, pend_next, updated = pdes_step(tau, pend, site_u, eta, params)
+    upd = np.asarray(updated)
+    t0, t1 = np.asarray(tau), np.asarray(tau_next)
+    p0, p1 = np.asarray(pend), np.asarray(pend_next)
+    e = np.asarray(eta)
+    assert (t1[upd] == t0[upd] + e[upd]).all()
+    assert (t1[~upd] == t0[~upd]).all()
+    assert (p1[~upd] == p0[~upd]).all(), "blocked PEs must not resample"
+
+
+def test_delta_zero_only_global_minimum_updates():
+    """Δ=0: only PEs sitting exactly at the global minimum may update."""
+    params = params_array(float("inf"), 0.0, False, True)  # RD + zero window
+    tau, pend, site_u, eta = _draws(13, 4, 32, 0.0)
+    _, _, updated = pdes_step(tau, pend, site_u, eta, params)
+    gvt = np.asarray(tau).min(axis=-1, keepdims=True)
+    at_min = np.asarray(tau) <= gvt
+    np.testing.assert_array_equal(np.asarray(updated), at_min)
+
+
+def test_infinite_window_equals_unconstrained():
+    tau, pend, site_u, eta = _draws(17, 4, 32, 1.0)
+    p_unc = params_array(1, DELTA_INF, True, False)
+    p_win = params_array(1, DELTA_INF, True, True)
+    t1, pe1, m1 = pdes_step(tau, pend, site_u, eta, p_unc)
+    t2, pe2, m2 = pdes_step(tau, pend, site_u, eta, p_win)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_array_equal(np.asarray(pe1), np.asarray(pe2))
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+
+def test_rd_mode_everyone_updates_without_window():
+    params = params_array(float("inf"), DELTA_INF, False, False)
+    tau, pend, site_u, eta = _draws(19, 2, 16, 0.0)
+    tau_next, _, updated = pdes_step(tau, pend, site_u, eta, params)
+    assert np.asarray(updated).all()
+    np.testing.assert_allclose(np.asarray(tau_next), np.asarray(tau) + np.asarray(eta))
+
+
+def test_flat_initial_horizon_all_update():
+    """The paper's initial condition: all tau equal => every PE updates at t=1."""
+    b, l = 3, 24
+    tau = jnp.zeros((b, l), dtype=jnp.float64)
+    for name, params in MODES:
+        _, pend, site_u, eta = _draws(23, b, l, float(params[0]))
+        _, _, updated = pdes_step(tau, pend, site_u, eta, params)
+        assert np.asarray(updated).all(), name
+
+
+def test_draw_pending_distribution():
+    u = jax.random.uniform(jax.random.PRNGKey(0), (100_000,), dtype=jnp.float64)
+    p = np.asarray(draw_pending(u, 0.1))  # NV = 10
+    frac = [(p == c).mean() for c in (INTERIOR, LEFT, RIGHT, BOTH)]
+    np.testing.assert_allclose(frac, [0.8, 0.1, 0.1, 0.0], atol=5e-3)
+    assert (np.asarray(draw_pending(u, 1.0)) == BOTH).all()
+    assert (np.asarray(draw_pending(u, 0.0)) == INTERIOR).all()

@@ -1,0 +1,97 @@
+"""Hypothesis sweeps over shapes/params: kernel-vs-ref and model invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.pdes_step import pdes_step
+from compile.kernels.ref import (
+    BOTH,
+    DELTA_INF,
+    INTERIOR,
+    LEFT,
+    RIGHT,
+    draw_pending,
+    params_array,
+    pdes_step_ref,
+)
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+@st.composite
+def step_inputs(draw):
+    b = draw(st.integers(min_value=1, max_value=6))
+    l = draw(st.integers(min_value=3, max_value=96))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    nv = draw(st.sampled_from([1, 2, 4, 10, 100, float("inf")]))
+    delta = draw(st.sampled_from([0.0, 0.5, 1.0, 5.0, 100.0, DELTA_INF]))
+    nn = draw(st.booleans())
+    win = draw(st.booleans())
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    tau = jax.random.uniform(k1, (b, l), dtype=jnp.float64) * draw(
+        st.sampled_from([0.0, 1.0, 100.0])
+    )
+    site_u = jax.random.uniform(k2, (b, l), dtype=jnp.float64)
+    eta = jax.random.exponential(k3, (b, l), dtype=jnp.float64)
+    params = params_array(nv, delta, nn, win)
+    pend = draw_pending(jax.random.uniform(k4, (b, l), dtype=jnp.float64), params[0])
+    return tau, pend, site_u, eta, params
+
+
+@given(step_inputs())
+@settings(**SETTINGS)
+def test_kernel_equals_ref_everywhere(inp):
+    tau, pend, site_u, eta, params = inp
+    t_ref, p_ref, m_ref = pdes_step_ref(tau, pend, site_u, eta, params)
+    t_pl, p_pl, m_pl = pdes_step(tau, pend, site_u, eta, params)
+    np.testing.assert_array_equal(np.asarray(t_pl), np.asarray(t_ref))
+    np.testing.assert_array_equal(np.asarray(p_pl), np.asarray(p_ref))
+    np.testing.assert_array_equal(np.asarray(m_pl), np.asarray(m_ref))
+
+
+@given(step_inputs())
+@settings(**SETTINGS)
+def test_mask_implies_conditions(inp):
+    """Every updated PE provably satisfied the active gate conditions."""
+    tau, pend, site_u, eta, params = inp
+    _, delta, nn_flag, win_flag = (float(x) for x in np.asarray(params))
+    _, _, updated = pdes_step_ref(tau, pend, site_u, eta, params)
+    t, u_, pe = np.asarray(tau), np.asarray(updated), np.asarray(pend)
+    left, right = np.roll(t, 1, -1), np.roll(t, -1, -1)
+    nn_ok = np.select(
+        [pe == INTERIOR, pe == LEFT, pe == RIGHT],
+        [np.ones_like(t, bool), t <= left, t <= right],
+        default=t <= np.minimum(left, right),
+    )
+    win_ok = t <= delta + t.min(-1, keepdims=True)
+    if nn_flag > 0.5:
+        assert not (u_ & ~nn_ok).any(), "causality violated by an updated PE"
+    if win_flag > 0.5:
+        assert not (u_ & ~win_ok).any(), "window violated by an updated PE"
+
+
+@given(step_inputs())
+@settings(**SETTINGS)
+def test_idle_pes_never_move_and_tau_monotone(inp):
+    tau, pend, site_u, eta, params = inp
+    tau_next, pend_next, updated = pdes_step_ref(tau, pend, site_u, eta, params)
+    t0, t1, u_ = np.asarray(tau), np.asarray(tau_next), np.asarray(updated)
+    assert (t1 >= t0).all()
+    assert (t1[~u_] == t0[~u_]).all()
+    assert (np.asarray(pend_next)[~u_] == np.asarray(pend)[~u_]).all()
+
+
+@given(step_inputs())
+@settings(**SETTINGS)
+def test_global_minimum_pe_always_updates_when_conservative(inp):
+    """The slowest PE can always update (deadlock freedom, any mode)."""
+    tau, pend, site_u, eta, params = inp
+    _, _, updated = pdes_step_ref(tau, pend, site_u, eta, params)
+    t, u_ = np.asarray(tau), np.asarray(updated)
+    at_gvt = t == t.min(-1, keepdims=True)
+    # every row's global-min PE satisfies both Eq.1 and Eq.3 trivially
+    assert (u_ | ~at_gvt).all()

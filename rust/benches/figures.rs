@@ -1,0 +1,50 @@
+//! End-to-end benches: one per paper figure/table (DESIGN.md §4), timing
+//! the full regeneration pipeline at quick scale so `cargo bench` exercises
+//! every experiment path, plus the artifact-runtime bench for the JAX path.
+//!
+//! These are throughput/latency measurements of *our* harness, not the
+//! paper's numbers; EXPERIMENTS.md records the science output separately.
+
+use std::time::Duration;
+
+use repro::bench::Bencher;
+use repro::coordinator::{run_with_executor_bench, JaxRunSpec};
+use repro::experiments::{self, Ctx};
+use repro::pdes::{Mode, VolumeLoad};
+use repro::runtime::PdesRuntime;
+
+fn main() {
+    let out = std::env::temp_dir().join("repro_bench_out");
+    let ctx = Ctx::new(&out, true); // quick grids: benches time the pipeline
+    // one warmup + one sample per figure: each regeneration is seconds-long,
+    // so repeated sampling would dominate the bench budget
+    let b = Bencher::new(Duration::from_millis(1), Duration::from_millis(1), 1);
+
+    println!("# per-figure end-to-end benches (quick grids; items = 1 regeneration)");
+    for name in experiments::ALL {
+        b.report(&format!("figure/{name}"), 1.0, || {
+            experiments::run(name, &ctx).expect(name);
+        });
+    }
+
+    // artifact path: chunk execution throughput (PE-steps/s through PJRT)
+    match PdesRuntime::load(std::path::Path::new("artifacts")) {
+        Ok(mut rt) => {
+            let exe = rt.executor("pdes_L64_B32_T32").expect("artifact");
+            let info = exe.info().clone();
+            let spec = JaxRunSpec {
+                l: info.l,
+                load: VolumeLoad::Sites(1),
+                mode: Mode::Windowed { delta: 10.0 },
+                trials: info.b as u64,
+                steps: info.t_chunk,
+                seed: 5,
+            };
+            let items = (info.l * info.b * info.t_chunk) as f64;
+            b.report("runtime/chunk_L64_B32_T32", items, || {
+                run_with_executor_bench(&exe, &spec).expect("chunk");
+            });
+        }
+        Err(e) => println!("runtime bench skipped (no artifacts): {e}"),
+    }
+}

@@ -1,0 +1,100 @@
+//! Microbenchmarks of the hot paths, used by the §Perf iteration loop
+//! (own harness — criterion is unavailable offline).
+//!
+//! Reported throughput unit: PE-steps/second (one PE-step = one update
+//! attempt of one processing element).
+
+use std::time::Duration;
+
+use repro::bench::Bencher;
+use repro::pdes::{InstrumentedRing, LatticePdes, Mode, RingPdes, Topology, VolumeLoad};
+use repro::rng::Rng;
+use repro::stats::horizon_frame;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick {
+        Bencher::quick()
+    } else {
+        Bencher::new(Duration::from_millis(200), Duration::from_secs(1), 7)
+    };
+
+    println!("# hotpath microbenches (items = PE-steps unless noted)");
+
+    for (name, l, load, mode) in [
+        (
+            "ring_step/conservative_L1000_NV1",
+            1000usize,
+            VolumeLoad::Sites(1),
+            Mode::Conservative,
+        ),
+        (
+            "ring_step/conservative_L1000_NV100",
+            1000,
+            VolumeLoad::Sites(100),
+            Mode::Conservative,
+        ),
+        (
+            "ring_step/windowed10_L1000_NV1",
+            1000,
+            VolumeLoad::Sites(1),
+            Mode::Windowed { delta: 10.0 },
+        ),
+        (
+            "ring_step/rd_L1000",
+            1000,
+            VolumeLoad::Infinite,
+            Mode::Rd,
+        ),
+    ] {
+        let mut sim = RingPdes::new(l, load, mode, Rng::for_stream(1, 0));
+        for _ in 0..500 {
+            sim.step(); // reach steady state so branch mix is realistic
+        }
+        b.report(name, l as f64, || {
+            std::hint::black_box(sim.step());
+        });
+    }
+
+    // instrumented ring (mean-field counters) — the overhead must be known
+    let mut inst = InstrumentedRing::new(
+        1000,
+        VolumeLoad::Sites(10),
+        Mode::Windowed { delta: 10.0 },
+        Rng::for_stream(2, 0),
+    );
+    for _ in 0..500 {
+        inst.step();
+    }
+    b.report("ring_step/instrumented_L1000_NV10_d10", 1000.0, || {
+        std::hint::black_box(inst.step());
+    });
+
+    // 2-d lattice
+    let mut lat = LatticePdes::new(
+        Topology::Square { side: 32 },
+        Mode::Conservative,
+        Rng::for_stream(3, 0),
+    );
+    for _ in 0..500 {
+        lat.step();
+    }
+    b.report("lattice_step/square32_conservative", 1024.0, || {
+        std::hint::black_box(lat.step());
+    });
+
+    // statistics frame (per-PE cost of the measurement pipeline)
+    let tau: Vec<f64> = (0..1000).map(|i| ((i * 37) % 101) as f64 * 0.1).collect();
+    b.report("stats/horizon_frame_L1000", 1000.0, || {
+        std::hint::black_box(horizon_frame(&tau, 250));
+    });
+
+    // rng draws (items = draws)
+    let mut rng = Rng::for_stream(4, 0);
+    b.report("rng/uniform", 1.0, || {
+        std::hint::black_box(rng.uniform());
+    });
+    b.report("rng/exponential", 1.0, || {
+        std::hint::black_box(rng.exponential());
+    });
+}

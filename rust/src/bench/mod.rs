@@ -1,0 +1,167 @@
+//! From-scratch benchmark harness (criterion is unavailable offline).
+//!
+//! Measures wall-clock over adaptive iteration counts with warmup, reports
+//! median / mean / min over samples, and throughput in items/second.
+//! Timings are carried as f64 seconds so sub-nanosecond per-iteration costs
+//! (possible for inlined RNG draws in release builds) do not round to zero.
+//! Used by `rust/benches/*.rs` (built with `harness = false`) and by the
+//! §Perf iteration loop.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement (per-iteration times in seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    /// Median time per iteration, seconds.
+    pub median_s: f64,
+    /// Mean time per iteration, seconds.
+    pub mean_s: f64,
+    /// Fastest sample, seconds.
+    pub min_s: f64,
+    /// Iterations per sample used.
+    pub iters: u64,
+    /// Number of samples taken.
+    pub samples: usize,
+}
+
+impl Measurement {
+    /// Items/second at the median, given `items` processed per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.median_s
+    }
+
+    /// Median as a `Duration` (display convenience).
+    pub fn median(&self) -> Duration {
+        Duration::from_secs_f64(self.median_s)
+    }
+}
+
+/// Benchmark runner with fixed time budgets.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            budget: Duration::from_secs(2),
+            samples: 11,
+        }
+    }
+}
+
+impl Bencher {
+    /// A runner with custom warmup/measurement budgets.
+    pub fn new(warmup: Duration, budget: Duration, samples: usize) -> Self {
+        assert!(samples >= 1);
+        Self {
+            warmup,
+            budget,
+            samples,
+        }
+    }
+
+    /// Quick preset for smoke benches (CI-friendly).
+    pub fn quick() -> Self {
+        Self::new(Duration::from_millis(50), Duration::from_millis(400), 5)
+    }
+
+    /// Measure `f`, choosing an iteration count so each sample runs
+    /// ≳ budget/samples.
+    pub fn measure<F: FnMut()>(&self, mut f: F) -> Measurement {
+        // warmup + calibration
+        let cal_start = Instant::now();
+        let mut cal_iters: u64 = 0;
+        while cal_start.elapsed() < self.warmup {
+            f();
+            cal_iters += 1;
+        }
+        let per_iter = (self.warmup.as_secs_f64() / cal_iters.max(1) as f64).max(1e-12);
+        let target = self.budget.as_secs_f64() / self.samples as f64;
+        let iters = ((target / per_iter).ceil() as u64).max(1);
+
+        let mut times: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            times.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Measurement {
+            median_s: times[times.len() / 2],
+            mean_s: times.iter().sum::<f64>() / times.len() as f64,
+            min_s: times[0],
+            iters,
+            samples: self.samples,
+        }
+    }
+
+    /// Measure and print one line in the harness's standard format.
+    pub fn report<F: FnMut()>(&self, name: &str, items_per_iter: f64, f: F) -> Measurement {
+        let m = self.measure(f);
+        println!(
+            "bench {name:<44} median {:>12} mean {:>12} min {:>12}  {:>12.3e} items/s",
+            fmt_secs(m.median_s),
+            fmt_secs(m.mean_s),
+            fmt_secs(m.min_s),
+            m.throughput(items_per_iter),
+        );
+        m
+    }
+}
+
+/// Human-readable time from seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.2} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let b = Bencher::new(Duration::from_millis(5), Duration::from_millis(30), 3);
+        let mut acc = 0u64;
+        let m = b.measure(|| {
+            acc = acc.wrapping_add(std::hint::black_box(17));
+        });
+        assert!(m.iters >= 1);
+        assert!(m.min_s <= m.median_s);
+        assert!(m.median_s > 0.0);
+        assert!(m.throughput(1.0).is_finite());
+    }
+
+    #[test]
+    fn throughput_scales() {
+        let m = Measurement {
+            median_s: 0.01,
+            mean_s: 0.01,
+            min_s: 0.01,
+            iters: 1,
+            samples: 1,
+        };
+        assert!((m.throughput(100.0) - 10_000.0).abs() < 1e-9);
+        assert_eq!(m.median(), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_secs(5e-10), "0.50 ns");
+        assert_eq!(fmt_secs(1.5e-3), "1.50 ms");
+        assert_eq!(fmt_secs(2.0), "2.000 s");
+    }
+}

@@ -1,0 +1,125 @@
+//! Minimal command-line parser (offline environment — no clap).
+//!
+//! Grammar: `repro <command> [--flag] [--key value] [positional...]`.
+//! Flags and options may appear in any order after the command.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// The subcommand (first non-flag token).
+    pub command: String,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+}
+
+/// Option keys that take a value; anything else starting with `--` is a flag.
+const VALUED: &[&str] = &[
+    "out", "config", "trials", "steps", "seed", "l", "nv", "delta", "mode", "artifacts",
+    "workers", "chunks", "warm",
+];
+
+impl Args {
+    /// Parse from an argument iterator (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if VALUED.contains(&name) {
+                    match it.next() {
+                        Some(v) => {
+                            out.options.insert(name.to_string(), v);
+                        }
+                        None => bail!("option --{name} requires a value"),
+                    }
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.command.is_empty() {
+                out.command = tok;
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Is `--name` present?
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// String option with default.
+    pub fn opt(&self, name: &str, default: &str) -> String {
+        self.options
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Numeric option with default ("inf" accepted).
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(s) if s == "inf" => Ok(f64::INFINITY),
+            Some(s) => s
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--{name}: not a number: {s:?}")),
+        }
+    }
+
+    /// Integer option with default.
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--{name}: not an integer: {s:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = parse("fig5 --trials 64 --quick --out results extra");
+        assert_eq!(a.command, "fig5");
+        assert_eq!(a.opt_u64("trials", 0).unwrap(), 64);
+        assert!(a.has_flag("quick"));
+        assert_eq!(a.opt("out", "x"), "results");
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn inf_and_defaults() {
+        let a = parse("run --delta inf");
+        assert!(a.opt_f64("delta", 1.0).unwrap().is_infinite());
+        assert_eq!(a.opt_f64("l", 100.0).unwrap(), 100.0);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(vec!["run".into(), "--out".into()]).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("run --trials ten");
+        assert!(a.opt_u64("trials", 1).is_err());
+    }
+}

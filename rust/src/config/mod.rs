@@ -1,0 +1,245 @@
+//! Experiment configuration: a minimal TOML-subset reader (offline
+//! environment — no serde/toml crates; see DESIGN.md §2).
+//!
+//! Supported syntax, which covers every experiment spec in `configs/`:
+//!
+//! ```toml
+//! [section]
+//! int_key = 42
+//! float_key = 2.5          # "inf" is accepted
+//! string_key = "text"
+//! list_key = [1, 10, 100]
+//! bool_key = true
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// Numeric scalar (ints are stored as f64; "inf" allowed).
+    Number(f64),
+    /// Quoted string.
+    Text(String),
+    /// true/false.
+    Bool(bool),
+    /// Homogeneous numeric list.
+    List(Vec<f64>),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Number(x) => write!(f, "{x}"),
+            Value::Text(s) => write!(f, "\"{s}\""),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::List(v) => write!(f, "{v:?}"),
+        }
+    }
+}
+
+/// A parsed config: section → key → value.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = Config::default();
+        let mut section = String::from("root");
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                let name = line
+                    .strip_prefix('[')
+                    .and_then(|s| s.strip_suffix(']'))
+                    .ok_or_else(|| anyhow!("line {}: malformed section header", lineno + 1))?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(val.trim())
+                .with_context(|| format!("line {}: bad value {:?}", lineno + 1, val.trim()))?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// Numeric lookup with default.
+    pub fn number(&self, section: &str, key: &str, default: f64) -> f64 {
+        match self.get(section, key) {
+            Some(Value::Number(x)) => *x,
+            _ => default,
+        }
+    }
+
+    /// Integer lookup with default (floors the stored number).
+    pub fn integer(&self, section: &str, key: &str, default: u64) -> u64 {
+        match self.get(section, key) {
+            Some(Value::Number(x)) => *x as u64,
+            _ => default,
+        }
+    }
+
+    /// Bool lookup with default.
+    pub fn boolean(&self, section: &str, key: &str, default: bool) -> bool {
+        match self.get(section, key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    /// String lookup with default.
+    pub fn text(&self, section: &str, key: &str, default: &str) -> String {
+        match self.get(section, key) {
+            Some(Value::Text(s)) => s.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    /// List lookup (empty when missing).
+    pub fn list(&self, section: &str, key: &str) -> Vec<f64> {
+        match self.get(section, key) {
+            Some(Value::List(v)) => v.clone(),
+            Some(Value::Number(x)) => vec![*x],
+            _ => Vec::new(),
+        }
+    }
+
+    /// Section names.
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_number(tok: &str) -> Result<f64> {
+    match tok {
+        "inf" => Ok(f64::INFINITY),
+        _ => tok
+            .parse::<f64>()
+            .map_err(|_| anyhow!("not a number: {tok:?}")),
+    }
+}
+
+fn parse_value(tok: &str) -> Result<Value> {
+    if tok == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if tok == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = tok.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Text(body.to_string()));
+    }
+    if let Some(body) = tok.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated list"))?;
+        let mut items = Vec::new();
+        for part in body.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_number(part)?);
+        }
+        return Ok(Value::List(items));
+    }
+    if tok.is_empty() {
+        bail!("empty value");
+    }
+    Ok(Value::Number(parse_number(tok)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# campaign spec
+[experiment]
+name = "fig5"
+trials = 128
+t_max = 4000
+deltas = [10, 100]
+nv = [1, 10, 100]
+use_window = true
+delta_inf = inf   # infinite window
+"#;
+
+    #[test]
+    fn parses_all_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.text("experiment", "name", ""), "fig5");
+        assert_eq!(c.integer("experiment", "trials", 0), 128);
+        assert_eq!(c.list("experiment", "deltas"), vec![10.0, 100.0]);
+        assert_eq!(c.list("experiment", "nv"), vec![1.0, 10.0, 100.0]);
+        assert!(c.boolean("experiment", "use_window", false));
+        assert!(c.number("experiment", "delta_inf", 0.0).is_infinite());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("[a]\nx = 1").unwrap();
+        assert_eq!(c.number("a", "missing", 7.5), 7.5);
+        assert_eq!(c.number("missing", "x", 3.0), 3.0);
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let c = Config::parse("[s]\nk = \"a # b\" # trailing").unwrap();
+        assert_eq!(c.text("s", "k", ""), "a # b");
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(Config::parse("[s]\nnovalue").is_err());
+        assert!(Config::parse("[unclosed\nk = 1").is_err());
+        assert!(Config::parse("[s]\nk = \"open").is_err());
+        assert!(Config::parse("[s]\nk = [1, 2").is_err());
+        assert!(Config::parse("[s]\nk = notanumber").is_err());
+    }
+}

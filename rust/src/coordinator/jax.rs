@@ -1,0 +1,69 @@
+//! JAX-artifact campaigns: stream the compiled chunk model through the
+//! PJRT runtime, chaining chunks (τ_T of one call feeds τ_0 of the next)
+//! so arbitrarily long trajectories run with Python nowhere in sight.
+
+use anyhow::Result;
+
+use crate::pdes::{Mode, VolumeLoad};
+use crate::rng::{Rng, SplitMix64};
+use crate::runtime::{initial_pending, pack_params, ChunkExecutor, PdesRuntime};
+use crate::stats::EnsembleSeries;
+
+/// Parameters of one artifact-path ensemble run.
+#[derive(Clone, Copy, Debug)]
+pub struct JaxRunSpec {
+    /// Ring size (must match an artifact in the manifest).
+    pub l: usize,
+    /// Volume elements per PE.
+    pub load: VolumeLoad,
+    /// Update-rule mode.
+    pub mode: Mode,
+    /// Total trials (rounded up to whole artifact batches of B).
+    pub trials: u64,
+    /// Total parallel steps (rounded up to whole chunks of T_c).
+    pub steps: usize,
+    /// Master seed.
+    pub seed: u64,
+}
+
+/// Run an ensemble through the artifact path and aggregate the ⟨·(t)⟩
+/// curves (exact same statistics pipeline as the native path).
+pub fn run_artifact_ensemble(runtime: &mut PdesRuntime, spec: &JaxRunSpec) -> Result<EnsembleSeries> {
+    let exe = runtime.executor_for_ring(spec.l)?;
+    run_with_executor(&exe, spec)
+}
+
+/// Inner driver, usable with a pre-compiled executor (bench path).
+pub fn run_with_executor(exe: &ChunkExecutor, spec: &JaxRunSpec) -> Result<EnsembleSeries> {
+    let info = exe.info();
+    anyhow::ensure!(info.l == spec.l, "artifact ring mismatch");
+    let b = info.b;
+    let t_chunk = info.t_chunk;
+    let n_batches = spec.trials.div_ceil(b as u64).max(1);
+    let n_chunks = spec.steps.div_ceil(t_chunk).max(1);
+    let total_steps = n_chunks * t_chunk;
+    let params = pack_params(spec.load, spec.mode);
+
+    let mut series = EnsembleSeries::new(total_steps);
+    // One key stream per batch so trials are reproducible per seed.
+    let mut keygen = SplitMix64::new(spec.seed ^ 0xA5A5_5A5A_DEAD_BEEF);
+    let mut pend_rng = Rng::for_stream(spec.seed, 0x9E37);
+    for _batch in 0..n_batches {
+        let mut tau = vec![0.0f64; b * info.l];
+        let mut pend = initial_pending(spec.load, spec.mode, b * info.l, &mut pend_rng);
+        for chunk in 0..n_chunks {
+            let k = keygen.next_u64();
+            let key = [(k >> 32) as u32, k as u32];
+            let result = exe.run(&tau, &pend, key, params)?;
+            for t in 0..t_chunk {
+                let step = chunk * t_chunk + t;
+                for row in 0..b {
+                    series.push_artifact_row(step, result.stats_row(t, row));
+                }
+            }
+            tau = result.tau;
+            pend = result.pend;
+        }
+    }
+    Ok(series)
+}

@@ -1,0 +1,22 @@
+//! Campaign orchestration: the Layer-3 coordination logic.
+//!
+//! A *campaign* is an ensemble of independent PDES trials at one parameter
+//! point (L, N_V, Δ, mode), aggregated into ⟨·(t)⟩ curves or steady-state
+//! estimates; the experiment drivers (`crate::experiments`) sweep campaigns
+//! over the paper's parameter grids.
+//!
+//! Two execution paths share the same statistics pipeline:
+//! * [`native`] — the Rust substrate sharded across a worker pool
+//!   (arbitrary L, N_V, Δ; the instrumented and lattice variants too);
+//! * [`jax`] — the AOT JAX/Pallas artifacts streamed chunk-by-chunk through
+//!   the PJRT runtime (fixed artifact shapes; cross-validates the kernel).
+
+mod campaign;
+mod jax;
+pub mod pool;
+mod spec;
+
+pub use campaign::{run_ensemble, steady_state, RunSpec, SteadyStats};
+pub use jax::{run_artifact_ensemble, run_with_executor as run_with_executor_bench, JaxRunSpec};
+pub use pool::{shard_trials, worker_count};
+pub use spec::CampaignSpec;

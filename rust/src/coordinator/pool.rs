@@ -1,0 +1,109 @@
+//! Trial sharding across a scoped worker pool (std::thread — no tokio in
+//! the offline toolchain; the pool is structural on 1-core boxes and scales
+//! on real multi-core hosts).
+
+use std::thread;
+
+/// Number of workers to use (respects `REPRO_WORKERS`, defaults to the
+/// available parallelism).
+pub fn worker_count() -> usize {
+    if let Ok(v) = std::env::var("REPRO_WORKERS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `trials` into per-worker contiguous id ranges (first shards take
+/// the remainder so sizes differ by at most one).
+pub fn shard_trials(trials: u64, workers: usize) -> Vec<std::ops::Range<u64>> {
+    let workers = workers.clamp(1, trials.max(1) as usize);
+    let base = trials / workers as u64;
+    let extra = trials % workers as u64;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers as u64 {
+        let len = base + if w < extra { 1 } else { 0 };
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `job(range)` for every shard on its own thread and fold the results
+/// with `merge`.  `job` must be `Send` + deterministic per trial id so the
+/// outcome is independent of scheduling; results are merged in shard order
+/// so floating-point accumulation order is reproducible for a fixed worker
+/// count.
+pub fn map_shards<R, J, M>(trials: u64, job: J, merge: M) -> Option<R>
+where
+    R: Send,
+    J: Fn(std::ops::Range<u64>) -> R + Sync,
+    M: FnMut(R, R) -> R,
+{
+    map_shards_with(trials, worker_count(), job, merge)
+}
+
+/// [`map_shards`] with an explicit worker count.
+pub fn map_shards_with<R, J, M>(trials: u64, workers: usize, job: J, mut merge: M) -> Option<R>
+where
+    R: Send,
+    J: Fn(std::ops::Range<u64>) -> R + Sync,
+    M: FnMut(R, R) -> R,
+{
+    let shards = shard_trials(trials, workers);
+    let results: Vec<R> = thread::scope(|scope| {
+        let handles: Vec<_> = shards
+            .into_iter()
+            .filter(|r| !r.is_empty())
+            .map(|range| scope.spawn(|| job(range)))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut it = results.into_iter();
+    let mut acc = it.next()?;
+    for r in it {
+        acc = merge(acc, r);
+    }
+    Some(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_cover_exactly() {
+        for trials in [0u64, 1, 7, 64, 100] {
+            for workers in [1usize, 2, 3, 8] {
+                let shards = shard_trials(trials, workers);
+                let total: u64 = shards.iter().map(|r| r.end - r.start).sum();
+                assert_eq!(total, trials);
+                // contiguity
+                let mut expect = 0;
+                for r in &shards {
+                    assert_eq!(r.start, expect);
+                    expect = r.end;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn map_shards_sums() {
+        let total = map_shards(
+            100,
+            |range| range.map(|i| i as i64).sum::<i64>(),
+            |a, b| a + b,
+        )
+        .unwrap();
+        assert_eq!(total, 4950);
+    }
+
+    #[test]
+    fn zero_trials_is_none_or_zero() {
+        let r = map_shards(0, |range| range.count(), |a, b| a + b);
+        assert!(r.is_none() || r == Some(0));
+    }
+}

@@ -1,0 +1,79 @@
+//! Eq. 8 — the Krug–Meakin finite-size extrapolation for the basic
+//! conservative scheme at N_V = 1:
+//!
+//!   ⟨u_L⟩ ≈ ⟨u_∞⟩ + const / L^{2(1-α)},  α = 1/2 (KPZ)
+//!
+//! Toroczkai et al: ⟨u_∞⟩ = 24.6461(7) %.  We measure ⟨u_L⟩ over an L-grid
+//! and extrapolate with both the Krug–Meakin line and the rational fit
+//! (Eq. 10), reporting paper-vs-measured.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::coordinator::{steady_state, RunSpec};
+use crate::fit::{extrapolate_to_zero, krug_meakin_extrapolate};
+use crate::output::Table;
+use crate::pdes::{Mode, VolumeLoad};
+use crate::scaling::kpz;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let ls: &[usize] = if ctx.quick {
+        &[10, 32, 100]
+    } else {
+        &[10, 18, 32, 56, 100, 178, 316, 562, 1000]
+    };
+    let trials = ctx.trials(32);
+    let warm = ctx.steps(4000);
+    let measure = ctx.steps(4000);
+
+    let mut table = Table::new(
+        format!("Eq 8: steady <u_L>, NV=1, unconstrained (N={trials})"),
+        &["L", "u", "u_err"],
+    );
+    let mut lsf = Vec::new();
+    let mut us = Vec::new();
+    for &l in ls {
+        let st = steady_state(
+            &RunSpec {
+                l,
+                load: VolumeLoad::Sites(1),
+                mode: Mode::Conservative,
+                trials,
+                steps: 0,
+                seed: ctx.seed,
+            },
+            warm,
+            measure,
+        );
+        table.push(vec![l as f64, st.u, st.u_err]);
+        lsf.push(l as f64);
+        us.push(st.u);
+    }
+    table.write_tsv(&ctx.out_dir, "eq8_u_vs_L")?;
+    println!("{}", table.render());
+
+    let km = krug_meakin_extrapolate(&lsf, &us, kpz::ALPHA);
+    let xs: Vec<f64> = lsf.iter().map(|&l| 1.0 / l).collect();
+    let rational = extrapolate_to_zero(&xs, &us).map(|f| f.at_zero());
+
+    let mut summary = Table::new(
+        "Eq 8 extrapolation: <u_inf>",
+        &["method", "u_inf", "paper", "rel_err"],
+    );
+    summary.push(vec![
+        1.0, // 1 = Krug-Meakin
+        km.u_inf,
+        kpz::U_INF,
+        (km.u_inf - kpz::U_INF).abs() / kpz::U_INF,
+    ]);
+    if let Some(r) = rational {
+        summary.push(vec![2.0, r, kpz::U_INF, (r - kpz::U_INF).abs() / kpz::U_INF]);
+    }
+    summary.write_tsv(&ctx.out_dir, "eq8_extrapolation")?;
+    println!("{}", summary.render());
+    println!(
+        "Krug-Meakin: u_inf = {:.5} (paper 0.246461), finite-size coeff = {:.3}",
+        km.u_inf, km.coeff
+    );
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Fig. 11 — the family of utilization curves y_Δ(x) against
+//! x = u_KPZ(N_V), the parameterization behind the appendix fit:
+//! for Δ₁ < Δ₂ < … < ∞ the curves order as y_Δ₁ < y_Δ₂ < … < y_∞ = x,
+//! each approximately a root y = a(Δ) x^{p(Δ)}.
+
+use anyhow::Result;
+
+use super::fig6::u_inf;
+use super::Ctx;
+use crate::fit::powerlaw_fit;
+use crate::output::Table;
+use crate::pdes::{Mode, VolumeLoad};
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let deltas: &[f64] = if ctx.quick { &[1.0, 10.0] } else { &[1.0, 5.0, 10.0, 100.0] };
+    let nvs: &[u64] = if ctx.quick { &[1, 10, 100] } else { &[1, 10, 100, 1000] };
+    let ls: &[usize] = if ctx.quick { &[10, 32, 100] } else { &[10, 32, 100, 316] };
+    let trials = ctx.trials(24);
+    let warm = ctx.steps(3000);
+    let measure = ctx.steps(3000);
+
+    // x-axis: u_KPZ(N_V) = u_inf at Δ = ∞
+    let xs: Vec<f64> = nvs
+        .iter()
+        .map(|&nv| {
+            u_inf(
+                ctx,
+                VolumeLoad::Sites(nv),
+                Mode::Conservative,
+                ls,
+                trials,
+                warm,
+                measure,
+            )
+        })
+        .collect();
+
+    let mut headers = vec!["NV".to_string(), "x_uKPZ".to_string()];
+    for &d in deltas {
+        headers.push(format!("y_d{d}"));
+    }
+    let mut table = Table::with_headers("Fig 11: y_Δ(x) vs x = u_KPZ(NV)", headers);
+    let mut ys_per_delta: Vec<Vec<f64>> = vec![Vec::new(); deltas.len()];
+    for (i, &nv) in nvs.iter().enumerate() {
+        let mut row = vec![nv as f64, xs[i]];
+        for (j, &d) in deltas.iter().enumerate() {
+            let y = u_inf(
+                ctx,
+                VolumeLoad::Sites(nv),
+                Mode::Windowed { delta: d },
+                ls,
+                trials,
+                warm,
+                measure,
+            );
+            ys_per_delta[j].push(y);
+            row.push(y);
+        }
+        table.push(row);
+    }
+    table.write_tsv(&ctx.out_dir, "fig11_family")?;
+    println!("{}", table.render());
+
+    // the appendix's first approximation: y = a(Δ) x^{p(Δ)}
+    let mut fits = Table::new(
+        "Fig 11 fits: y = a(Δ) x^p(Δ)",
+        &["delta", "a", "p"],
+    );
+    for (j, &d) in deltas.iter().enumerate() {
+        if let Some(f) = powerlaw_fit(&xs, &ys_per_delta[j]) {
+            fits.push(vec![d, f.c, f.p]);
+        }
+    }
+    fits.write_tsv(&ctx.out_dir, "fig11_fits")?;
+    println!("{}", fits.render());
+    println!("(expected ordering: larger Δ → curve closer to y = x, p → 1, a → 1)");
+    Ok(())
+}

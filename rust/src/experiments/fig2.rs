@@ -1,0 +1,68 @@
+//! Fig. 2 — time evolution of ⟨u(t)⟩ for the *unconstrained* PDES
+//! (short-range connections, infinite Δ-window) at various system sizes.
+//!
+//! Paper parameters: L ∈ {10, 10⁴}, N_V ∈ {1, 10, 100}, N = 1024 trials.
+//! Ours (1-core testbed): L ∈ {10, 100, 1000}, same N_V grid, N = 256.
+//! Expected shape: u starts at 1, relaxes to a non-zero plateau; the
+//! plateau rises with N_V (fewer border checks) and falls slightly with L.
+
+use anyhow::Result;
+
+use super::{log_grid, Ctx};
+use crate::coordinator::{run_ensemble, RunSpec};
+use crate::output::Table;
+use crate::pdes::{Mode, VolumeLoad};
+use crate::stats::Lane;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let ls: &[usize] = if ctx.quick { &[10, 100] } else { &[10, 100, 1000] };
+    let nvs: &[u64] = &[1, 10, 100];
+    let steps = ctx.steps(1000);
+    let trials = ctx.trials(256);
+
+    let mut headers = vec!["t".to_string()];
+    let mut curves = Vec::new();
+    for &l in ls {
+        for &nv in nvs {
+            headers.push(format!("u_L{l}_NV{nv}"));
+            let series = run_ensemble(&RunSpec {
+                l,
+                load: VolumeLoad::Sites(nv),
+                mode: Mode::Conservative,
+                trials,
+                steps,
+                seed: ctx.seed,
+            });
+            curves.push(series.curve(Lane::U));
+        }
+    }
+
+    let mut table = Table::with_headers(
+        format!("Fig 2: <u(t)>, unconstrained PDES (N = {trials} trials)"),
+        headers,
+    );
+    for &t in &log_grid(steps, 12) {
+        let mut row = vec![t as f64];
+        for c in &curves {
+            row.push(c[t - 1]);
+        }
+        table.push(row);
+    }
+    table.write_tsv(&ctx.out_dir, "fig2_utilization_evolution")?;
+    println!("{}", table.render());
+
+    // Steady-state summary (the plateau the paper reads off the curves).
+    let mut summary = Table::new("Fig 2 summary: plateau <u>", &["L", "NV", "u_steady"]);
+    let mut idx = 0;
+    for &l in ls {
+        for &nv in nvs {
+            let tail: f64 = curves[idx][steps - steps / 4..].iter().sum::<f64>()
+                / (steps / 4) as f64;
+            summary.push(vec![l as f64, nv as f64, tail]);
+            idx += 1;
+        }
+    }
+    summary.write_tsv(&ctx.out_dir, "fig2_summary")?;
+    println!("{}", summary.render());
+    Ok(())
+}

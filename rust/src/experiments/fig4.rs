@@ -1,0 +1,78 @@
+//! Fig. 4 — time evolution of the mean STH width ⟨w(t)⟩ in unconstrained
+//! PDES: (a) N_V = 1, (b) N_V = 10, for several ring sizes.
+//!
+//! Paper: L ∈ {10, 100, 10⁴}; growth w ~ t^β then saturation at w ~ L^α
+//! (KPZ: β = 1/3, α = 1/2).  Ours: L ∈ {10, 100, 1000} with step counts
+//! sized so the two smaller rings saturate (t_× ≈ L^{3/2}); increasing N_V
+//! shifts t_× later and raises the plateau, as in the paper.
+
+use anyhow::Result;
+
+use super::{log_grid, Ctx};
+use crate::coordinator::{run_ensemble, RunSpec};
+use crate::output::Table;
+use crate::pdes::{Mode, VolumeLoad};
+use crate::stats::Lane;
+
+/// Step budget per ring size (enough to saturate L ≤ 100; L = 1000 shows
+/// the growth phase plus the start of saturation, as the paper's L = 10⁴
+/// panel does).
+fn steps_for(l: usize, ctx: &Ctx) -> usize {
+    let full = match l {
+        0..=10 => 2_000,
+        11..=100 => 20_000,
+        _ => 40_000,
+    };
+    ctx.steps(full)
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let ls: &[usize] = if ctx.quick { &[10, 100] } else { &[10, 100, 1000] };
+    let trials = ctx.trials(96);
+
+    for (panel, nv) in [("a", 1u64), ("b", 10u64)] {
+        let mut headers = vec!["t".to_string()];
+        let mut curves = Vec::new();
+        let mut max_steps = 0usize;
+        for &l in ls {
+            headers.push(format!("w_L{l}"));
+            let steps = steps_for(l, ctx);
+            max_steps = max_steps.max(steps);
+            let series = run_ensemble(&RunSpec {
+                l,
+                load: VolumeLoad::Sites(nv),
+                mode: Mode::Conservative,
+                trials,
+                steps,
+                seed: ctx.seed + nv,
+            });
+            curves.push(series.curve(Lane::W));
+        }
+
+        let mut table = Table::with_headers(
+            format!("Fig 4{panel}: <w(t)> unconstrained, NV={nv} (N={trials})"),
+            headers,
+        );
+        for &t in &log_grid(max_steps, 10) {
+            let mut row = vec![t as f64];
+            for c in &curves {
+                row.push(if t <= c.len() { c[t - 1] } else { f64::NAN });
+            }
+            table.push(row);
+        }
+        table.write_tsv(&ctx.out_dir, &format!("fig4{panel}_width_evolution"))?;
+        println!("{}", table.render());
+
+        let mut summary = Table::new(
+            format!("Fig 4{panel} summary: plateau <w> (tail mean)"),
+            &["L", "w_plateau"],
+        );
+        for (&l, c) in ls.iter().zip(&curves) {
+            let tail = &c[c.len() - c.len() / 4..];
+            summary.push(vec![l as f64, tail.iter().sum::<f64>() / tail.len() as f64]);
+        }
+        summary.write_tsv(&ctx.out_dir, &format!("fig4{panel}_summary"))?;
+        println!("{}", summary.render());
+    }
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Fig. 5 — mean steady-state utilization ⟨u⟩ in *constrained* PDES as a
+//! function of system size, for Δ = 10 (a) and Δ = 100 (b).
+//!
+//! As N_V grows the curves converge to the Δ-constrained RD limit (shown as
+//! its own column, computed with the `WindowedRd` mode exactly as the paper
+//! does); the narrow window reaches the RD limit faster than the wide one.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::coordinator::{steady_state, RunSpec};
+use crate::output::Table;
+use crate::pdes::{Mode, VolumeLoad};
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let ls: &[usize] = if ctx.quick {
+        &[10, 32, 100]
+    } else {
+        &[10, 18, 32, 56, 100, 178, 316, 1000]
+    };
+    let nvs: &[u64] = &[1, 10, 100];
+    let trials = ctx.trials(32);
+    let warm = ctx.steps(3000);
+    let measure = ctx.steps(3000);
+
+    for delta in [10.0, 100.0] {
+        let mut headers = vec!["L".to_string()];
+        for &nv in nvs {
+            headers.push(format!("u_NV{nv}"));
+        }
+        headers.push("u_RD".to_string());
+
+        let mut table = Table::with_headers(
+            format!("Fig 5 (Δ={delta}): steady <u> vs system size (N={trials})"),
+            headers,
+        );
+        for &l in ls {
+            let mut row = vec![l as f64];
+            for &nv in nvs {
+                let st = steady_state(
+                    &RunSpec {
+                        l,
+                        load: VolumeLoad::Sites(nv),
+                        mode: Mode::Windowed { delta },
+                        trials,
+                        steps: 0,
+                        seed: ctx.seed,
+                    },
+                    warm,
+                    measure,
+                );
+                row.push(st.u);
+            }
+            // the RD limit: window condition alone (N_V → ∞)
+            let st = steady_state(
+                &RunSpec {
+                    l,
+                    load: VolumeLoad::Infinite,
+                    mode: Mode::WindowedRd { delta },
+                    trials,
+                    steps: 0,
+                    seed: ctx.seed,
+                },
+                warm,
+                measure,
+            );
+            row.push(st.u);
+            table.push(row);
+        }
+        table.write_tsv(&ctx.out_dir, &format!("fig5_delta{delta}"))?;
+        println!("{}", table.render());
+    }
+    Ok(())
+}

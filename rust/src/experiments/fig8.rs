@@ -1,0 +1,71 @@
+//! Fig. 8 — time evolution of ⟨w(t)⟩ in Δ-constrained PDES (Δ = 10) for
+//! L ∈ {100, 1000} and several N_V, showing the transition "bump" (the
+//! double-peak analysed in Fig. 10) and the plateau whose height *falls*
+//! with system size — the opposite of the unconstrained divergence.
+
+use anyhow::Result;
+
+use super::{log_grid, Ctx};
+use crate::coordinator::{run_ensemble, RunSpec};
+use crate::output::Table;
+use crate::pdes::{Mode, VolumeLoad};
+use crate::stats::Lane;
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let delta = 10.0;
+    let ls: &[usize] = if ctx.quick { &[100] } else { &[100, 1000] };
+    let nvs: &[u64] = &[1, 10, 100, 1000];
+    let steps = ctx.steps(2000);
+    let trials = ctx.trials(96);
+
+    for &l in ls {
+        let mut headers = vec!["t".to_string()];
+        let mut curves = Vec::new();
+        for &nv in nvs {
+            headers.push(format!("w_NV{nv}"));
+            let series = run_ensemble(&RunSpec {
+                l,
+                load: VolumeLoad::Sites(nv),
+                mode: Mode::Windowed { delta },
+                trials,
+                steps,
+                seed: ctx.seed + nv,
+            });
+            curves.push(series.curve(Lane::W));
+        }
+
+        let mut table = Table::with_headers(
+            format!("Fig 8 (L={l}): <w(t)> with Δ={delta} (N={trials})"),
+            headers,
+        );
+        for &t in &log_grid(steps, 12) {
+            let mut row = vec![t as f64];
+            for c in &curves {
+                row.push(c[t - 1]);
+            }
+            table.push(row);
+        }
+        table.write_tsv(&ctx.out_dir, &format!("fig8_L{l}"))?;
+        println!("{}", table.render());
+
+        // summary: peak (the bump) and plateau per curve
+        let mut summary = Table::new(
+            format!("Fig 8 summary (L={l}): bump and plateau"),
+            &["NV", "w_peak", "t_peak", "w_plateau"],
+        );
+        for (&nv, c) in nvs.iter().zip(&curves) {
+            let (t_peak, w_peak) = c
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, &w)| (i + 1, w))
+                .unwrap();
+            let tail = &c[c.len() - c.len() / 4..];
+            let plateau = tail.iter().sum::<f64>() / tail.len() as f64;
+            summary.push(vec![nv as f64, w_peak, t_peak as f64, plateau]);
+        }
+        summary.write_tsv(&ctx.out_dir, &format!("fig8_L{l}_summary"))?;
+        println!("{}", summary.render());
+    }
+    Ok(())
+}

@@ -1,0 +1,150 @@
+//! One driver per paper figure/table (DESIGN.md §4).
+//!
+//! Every driver prints the same rows/series the paper plots and writes TSV
+//! files under the output directory.  `--quick` shrinks ensembles and grids
+//! for smoke runs; full mode uses the scaled-down-but-faithful parameters
+//! recorded in EXPERIMENTS.md (this testbed is one CPU core; the paper used
+//! NERSC — shapes are preserved, error bars are larger).
+
+mod appendix;
+mod dims;
+mod eq8;
+mod fig10;
+mod fig11;
+mod fig2;
+mod fig3;
+mod fig4;
+mod fig5;
+mod fig6;
+mod fig7;
+mod fig8;
+mod fig9;
+mod kpz;
+mod meanfield;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+/// Shared experiment context.
+#[derive(Clone, Debug)]
+pub struct Ctx {
+    /// Output directory for TSV series.
+    pub out_dir: PathBuf,
+    /// Reduced grids/ensembles for smoke runs.
+    pub quick: bool,
+    /// Master seed (every campaign derives trial streams from it).
+    pub seed: u64,
+}
+
+impl Ctx {
+    /// Context writing under `out_dir`.
+    pub fn new(out_dir: impl Into<PathBuf>, quick: bool) -> Self {
+        Self {
+            out_dir: out_dir.into(),
+            quick,
+            seed: 20020601, // cs.DC submission year/month as default seed
+        }
+    }
+
+    /// Trials helper: `full` in full mode, a reduced count in quick mode.
+    pub fn trials(&self, full: u64) -> u64 {
+        if self.quick {
+            (full / 8).max(4)
+        } else {
+            full
+        }
+    }
+
+    /// Steps helper.
+    pub fn steps(&self, full: usize) -> usize {
+        if self.quick {
+            (full / 10).max(50)
+        } else {
+            full
+        }
+    }
+}
+
+/// All experiment names in run order.
+pub const ALL: &[&str] = &[
+    "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "eq8",
+    "kpz", "meanfield", "appendix", "dims",
+];
+
+/// Run one experiment by name.
+pub fn run(name: &str, ctx: &Ctx) -> Result<()> {
+    match name {
+        "fig2" => fig2::run(ctx),
+        "fig3" => fig3::run(ctx),
+        "fig4" => fig4::run(ctx),
+        "fig5" => fig5::run(ctx),
+        "fig6" => fig6::run(ctx),
+        "fig7" => fig7::run(ctx),
+        "fig8" => fig8::run(ctx),
+        "fig9" => fig9::run(ctx),
+        "fig10" => fig10::run(ctx),
+        "fig11" => fig11::run(ctx),
+        "eq8" => eq8::run(ctx),
+        "kpz" => kpz::run(ctx),
+        "meanfield" => meanfield::run(ctx),
+        "appendix" => appendix::run(ctx),
+        "dims" => dims::run(ctx),
+        "all" => {
+            for n in ALL {
+                println!("\n##### experiment {n} #####");
+                run(n, ctx)?;
+            }
+            Ok(())
+        }
+        _ => bail!("unknown experiment {name:?}; known: {ALL:?} or `all`"),
+    }
+}
+
+/// Log-spaced integer grid in `[1, max]` with ~`per_decade` points per
+/// decade (deduplicated, ascending) — the sampling used for the paper's
+/// log-log evolution plots.
+pub(crate) fn log_grid(max: usize, per_decade: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut last = 0usize;
+    let decades = (max as f64).log10();
+    let n = (decades * per_decade as f64).ceil() as usize + 1;
+    for i in 0..=n {
+        let t = 10f64.powf(i as f64 * decades / n as f64).round() as usize;
+        let t = t.clamp(1, max);
+        if t != last {
+            out.push(t);
+            last = t;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_grid_properties() {
+        let g = log_grid(1000, 8);
+        assert_eq!(*g.first().unwrap(), 1);
+        assert_eq!(*g.last().unwrap(), 1000);
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+        assert!(g.len() >= 20 && g.len() <= 40, "len {}", g.len());
+    }
+
+    #[test]
+    fn ctx_scaling() {
+        let full = Ctx::new("/tmp/x", false);
+        let quick = Ctx::new("/tmp/x", true);
+        assert_eq!(full.trials(128), 128);
+        assert_eq!(quick.trials(128), 16);
+        assert!(quick.steps(10_000) < 10_000);
+    }
+
+    #[test]
+    fn unknown_experiment_rejected() {
+        let ctx = Ctx::new(std::env::temp_dir().join("repro_exp_test"), true);
+        assert!(run("nope", &ctx).is_err());
+    }
+}

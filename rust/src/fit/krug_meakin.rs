@@ -1,0 +1,71 @@
+//! The Krug–Meakin finite-size extrapolation (Eq. 8):
+//!
+//!   ⟨u_L⟩ ≈ ⟨u_∞⟩ + const / L^{2(1-α)},
+//!
+//! which for the KPZ value α = 1/2 reduces to a straight line in 1/L.
+//! Toroczkai et al used this to obtain ⟨u_∞⟩ = 24.6461(7) % for the basic
+//! conservative scheme at N_V = 1; the `eq8` experiment reproduces that
+//! extrapolation from our measured ⟨u_L⟩.
+
+use super::leastsq::linear_fit;
+
+/// Result of the Eq.-8 extrapolation.
+#[derive(Clone, Copy, Debug)]
+pub struct KrugMeakinFit {
+    /// ⟨u_∞⟩ — the infinite-system utilization.
+    pub u_inf: f64,
+    /// The finite-size prefactor (`const.` of Eq. 8).
+    pub coeff: f64,
+    /// The exponent 2(1-α) used.
+    pub exponent: f64,
+    /// RMS residual of the linearized fit.
+    pub rms: f64,
+}
+
+/// Extrapolate steady-state utilizations `u` measured at sizes `l` to
+/// L → ∞ assuming roughness exponent `alpha` (KPZ: 0.5 → exponent 1).
+pub fn krug_meakin_extrapolate(l: &[f64], u: &[f64], alpha: f64) -> KrugMeakinFit {
+    assert_eq!(l.len(), u.len());
+    assert!(l.len() >= 2);
+    let e = 2.0 * (1.0 - alpha);
+    let x: Vec<f64> = l.iter().map(|&v| v.powf(-e)).collect();
+    let (a, b) = linear_fit(&x, u);
+    let rms = (x
+        .iter()
+        .zip(u)
+        .map(|(&xi, &ui)| (a + b * xi - ui).powi(2))
+        .sum::<f64>()
+        / l.len() as f64)
+        .sqrt();
+    KrugMeakinFit {
+        u_inf: a,
+        coeff: b,
+        exponent: e,
+        rms,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_kpz_line() {
+        let ls = [10.0, 100.0, 1000.0, 10000.0];
+        let us: Vec<f64> = ls.iter().map(|&l| 0.246461 + 0.76 / l).collect();
+        let fit = krug_meakin_extrapolate(&ls, &us, 0.5);
+        assert!((fit.u_inf - 0.246461).abs() < 1e-12);
+        assert!((fit.coeff - 0.76).abs() < 1e-9);
+        assert_eq!(fit.exponent, 1.0);
+    }
+
+    #[test]
+    fn works_for_other_alpha() {
+        // 2-d-like alpha = 0.3 -> exponent 1.4
+        let ls: [f64; 3] = [16.0, 64.0, 256.0];
+        let us: Vec<f64> = ls.iter().map(|&l| 0.12 + 2.0 * l.powf(-1.4)).collect();
+        let fit = krug_meakin_extrapolate(&ls, &us, 0.3);
+        assert!((fit.u_inf - 0.12).abs() < 1e-10);
+        assert!((fit.exponent - 1.4).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,159 @@
+//! Dense linear least squares on small systems (the fit problems here have
+//! at most ~10 parameters, so normal equations + Gauss-Jordan with partial
+//! pivoting are accurate and dependency-free).
+
+/// Solve the square system `a x = b` in place (Gauss-Jordan, partial
+/// pivoting).  `a` is row-major n×n.  Returns `None` for singular systems.
+pub fn solve(mut a: Vec<f64>, mut b: Vec<f64>) -> Option<Vec<f64>> {
+    let n = b.len();
+    assert_eq!(a.len(), n * n);
+    for col in 0..n {
+        // pivot
+        let (mut piv, mut best) = (col, a[col * n + col].abs());
+        for r in col + 1..n {
+            let v = a[r * n + col].abs();
+            if v > best {
+                piv = r;
+                best = v;
+            }
+        }
+        if best < 1e-300 {
+            return None;
+        }
+        if piv != col {
+            for c in 0..n {
+                a.swap(col * n + c, piv * n + c);
+            }
+            b.swap(col, piv);
+        }
+        let d = a[col * n + col];
+        for c in 0..n {
+            a[col * n + c] /= d;
+        }
+        b[col] /= d;
+        for r in 0..n {
+            if r != col {
+                let f = a[r * n + col];
+                if f != 0.0 {
+                    for c in 0..n {
+                        a[r * n + c] -= f * a[col * n + c];
+                    }
+                    b[r] -= f * b[col];
+                }
+            }
+        }
+    }
+    Some(b)
+}
+
+/// Least squares `min ||X beta - y||²` via normal equations.
+/// `x` is row-major m×p (m observations, p regressors).
+pub fn lstsq(x: &[f64], y: &[f64], p: usize) -> Option<Vec<f64>> {
+    let m = y.len();
+    assert_eq!(x.len(), m * p);
+    let mut xtx = vec![0.0; p * p];
+    let mut xty = vec![0.0; p];
+    for i in 0..m {
+        let row = &x[i * p..(i + 1) * p];
+        for a in 0..p {
+            xty[a] += row[a] * y[i];
+            for b in 0..p {
+                xtx[a * p + b] += row[a] * row[b];
+            }
+        }
+    }
+    solve(xtx, xty)
+}
+
+/// Ordinary least-squares line `y = a + b x`; returns `(a, b)`.
+pub fn linear_fit(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let n = x.len() as f64;
+    let sx: f64 = x.iter().sum();
+    let sy: f64 = y.iter().sum();
+    let sxx: f64 = x.iter().map(|v| v * v).sum();
+    let sxy: f64 = x.iter().zip(y).map(|(a, b)| a * b).sum();
+    let denom = n * sxx - sx * sx;
+    let b = (n * sxy - sx * sy) / denom;
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+/// Polynomial least squares of degree `deg`; returns coefficients
+/// `[c0, c1, ..., c_deg]` for `y = Σ c_k x^k`.
+pub fn polyfit(x: &[f64], y: &[f64], deg: usize) -> Option<Vec<f64>> {
+    let p = deg + 1;
+    let m = x.len();
+    let mut design = vec![0.0; m * p];
+    for (i, &xi) in x.iter().enumerate() {
+        let mut pow = 1.0;
+        for k in 0..p {
+            design[i * p + k] = pow;
+            pow *= xi;
+        }
+    }
+    lstsq(&design, y, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solve_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![3.0, 4.0];
+        assert_eq!(solve(a, b).unwrap(), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn solve_known_system() {
+        // 2x + y = 5 ; x - y = 1  -> x=2, y=1
+        let a = vec![2.0, 1.0, 1.0, -1.0];
+        let b = vec![5.0, 1.0];
+        let s = solve(a, b).unwrap();
+        assert!((s[0] - 2.0).abs() < 1e-12 && (s[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_singular_returns_none() {
+        let a = vec![1.0, 2.0, 2.0, 4.0];
+        assert!(solve(a, vec![1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn linear_fit_exact() {
+        let x = [0.0, 1.0, 2.0, 3.0];
+        let y = [1.0, 3.0, 5.0, 7.0];
+        let (a, b) = linear_fit(&x, &y);
+        assert!((a - 1.0).abs() < 1e-12 && (b - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn polyfit_recovers_quadratic() {
+        let x: Vec<f64> = (0..20).map(|i| i as f64 / 4.0).collect();
+        let y: Vec<f64> = x.iter().map(|&v| 2.0 - v + 0.5 * v * v).collect();
+        let c = polyfit(&x, &y, 2).unwrap();
+        assert!((c[0] - 2.0).abs() < 1e-9);
+        assert!((c[1] + 1.0).abs() < 1e-9);
+        assert!((c[2] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lstsq_overdetermined_noisy() {
+        // y = 3 + 2x with deterministic noise; fit must land close
+        let m = 50;
+        let mut x = vec![0.0; m * 2];
+        let mut y = vec![0.0; m];
+        for i in 0..m {
+            let xi = i as f64 / 10.0;
+            x[i * 2] = 1.0;
+            x[i * 2 + 1] = xi;
+            y[i] = 3.0 + 2.0 * xi + 0.01 * (i as f64).sin();
+        }
+        let beta = lstsq(&x, &y, 2).unwrap();
+        assert!((beta[0] - 3.0).abs() < 0.01);
+        assert!((beta[1] - 2.0).abs() < 0.01);
+    }
+}

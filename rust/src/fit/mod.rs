@@ -1,0 +1,28 @@
+//! Fitting and extrapolation machinery for the paper's analysis pipeline.
+//!
+//! * [`leastsq`] — dense linear least squares (normal equations + Gauss-
+//!   Jordan), the base of everything else;
+//! * [`rational`] — rational-function fits in 1/L (Eq. 10) and the L → ∞
+//!   utilization extrapolation (Eq. 11);
+//! * [`powerlaw`] — log-log power-law fits for the scaling exponents;
+//! * [`neldermead`] — derivative-free simplex minimizer for the nonlinear
+//!   appendix fits;
+//! * [`krug_meakin`] — the Eq. 8 finite-size extrapolation;
+//! * [`appendix`] — the paper's closed-form fits A.1-A.3 and Eq. 12.
+
+mod appendix;
+mod krug_meakin;
+mod leastsq;
+mod neldermead;
+mod powerlaw;
+mod rational;
+
+pub use appendix::{
+    eq12_u, fit_u_kpz, fit_u_rd, p_four_point, p_two_point, u_kpz_four_point, u_kpz_two_point,
+    u_rd_four_point, u_rd_two_point, TwoPointFit,
+};
+pub use krug_meakin::{krug_meakin_extrapolate, KrugMeakinFit};
+pub use leastsq::{linear_fit, lstsq, polyfit, solve};
+pub use neldermead::nelder_mead;
+pub use powerlaw::{powerlaw_fit, PowerLaw};
+pub use rational::{extrapolate_to_zero, ratfit_eval, RationalFit};

@@ -1,0 +1,140 @@
+//! Nelder–Mead downhill simplex — the derivative-free minimizer used for
+//! the nonlinear appendix fits (A.1-A.3) where exponents enter the model.
+
+/// Minimize `f` starting from `x0` with initial step `step` per coordinate.
+///
+/// Standard coefficients (α=1, γ=2, ρ=0.5, σ=0.5); terminates when the
+/// simplex's function-value spread drops below `tol` or after `max_iter`
+/// iterations.  Returns the best vertex.
+pub fn nelder_mead<F: FnMut(&[f64]) -> f64>(
+    mut f: F,
+    x0: &[f64],
+    step: f64,
+    tol: f64,
+    max_iter: usize,
+) -> Vec<f64> {
+    let n = x0.len();
+    let mut simplex: Vec<Vec<f64>> = Vec::with_capacity(n + 1);
+    simplex.push(x0.to_vec());
+    for i in 0..n {
+        let mut v = x0.to_vec();
+        v[i] += if v[i].abs() > 1e-12 { step * v[i].abs() } else { step };
+        simplex.push(v);
+    }
+    let mut fv: Vec<f64> = simplex.iter().map(|v| f(v)).collect();
+
+    for _ in 0..max_iter {
+        // order
+        let mut idx: Vec<usize> = (0..=n).collect();
+        idx.sort_by(|&a, &b| fv[a].partial_cmp(&fv[b]).unwrap_or(std::cmp::Ordering::Equal));
+        let simplex2: Vec<Vec<f64>> = idx.iter().map(|&i| simplex[i].clone()).collect();
+        let fv2: Vec<f64> = idx.iter().map(|&i| fv[i]).collect();
+        simplex = simplex2;
+        fv = fv2;
+
+        if (fv[n] - fv[0]).abs() <= tol * (1.0 + fv[0].abs()) {
+            break;
+        }
+
+        // centroid of all but worst
+        let mut centroid = vec![0.0; n];
+        for v in &simplex[..n] {
+            for (c, &x) in centroid.iter_mut().zip(v) {
+                *c += x / n as f64;
+            }
+        }
+        let lerp = |a: &[f64], b: &[f64], t: f64| -> Vec<f64> {
+            a.iter().zip(b).map(|(&p, &q)| p + t * (q - p)).collect()
+        };
+
+        // reflection
+        let xr = lerp(&centroid, &simplex[n], -1.0);
+        let fr = f(&xr);
+        if fr < fv[0] {
+            // expansion
+            let xe = lerp(&centroid, &simplex[n], -2.0);
+            let fe = f(&xe);
+            if fe < fr {
+                simplex[n] = xe;
+                fv[n] = fe;
+            } else {
+                simplex[n] = xr;
+                fv[n] = fr;
+            }
+        } else if fr < fv[n - 1] {
+            simplex[n] = xr;
+            fv[n] = fr;
+        } else {
+            // contraction
+            let xc = lerp(&centroid, &simplex[n], 0.5);
+            let fc = f(&xc);
+            if fc < fv[n] {
+                simplex[n] = xc;
+                fv[n] = fc;
+            } else {
+                // shrink toward best
+                for i in 1..=n {
+                    simplex[i] = lerp(&simplex[0], &simplex[i], 0.5);
+                    fv[i] = f(&simplex[i]);
+                }
+            }
+        }
+    }
+
+    let best = (0..=n)
+        .min_by(|&a, &b| fv[a].partial_cmp(&fv[b]).unwrap_or(std::cmp::Ordering::Equal))
+        .unwrap();
+    simplex.swap_remove(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_bowl() {
+        let x = nelder_mead(
+            |v| (v[0] - 3.0).powi(2) + (v[1] + 1.0).powi(2),
+            &[0.0, 0.0],
+            0.5,
+            1e-12,
+            2000,
+        );
+        assert!((x[0] - 3.0).abs() < 1e-4, "{x:?}");
+        assert!((x[1] + 1.0).abs() < 1e-4, "{x:?}");
+    }
+
+    #[test]
+    fn rosenbrock() {
+        let x = nelder_mead(
+            |v| (1.0 - v[0]).powi(2) + 100.0 * (v[1] - v[0] * v[0]).powi(2),
+            &[-1.2, 1.0],
+            0.5,
+            1e-14,
+            5000,
+        );
+        assert!((x[0] - 1.0).abs() < 1e-3, "{x:?}");
+        assert!((x[1] - 1.0).abs() < 1e-3, "{x:?}");
+    }
+
+    #[test]
+    fn recovers_powerlaw_parameters() {
+        // y = 2.5 / x^0.7 sampled; fit (c, e) by squared error
+        let xs: Vec<f64> = (1..30).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 2.5 / x.powf(0.7)).collect();
+        let sol = nelder_mead(
+            |p| {
+                xs.iter()
+                    .zip(&ys)
+                    .map(|(&x, &y)| (p[0] / x.powf(p[1]) - y).powi(2))
+                    .sum()
+            },
+            &[1.0, 1.0],
+            0.5,
+            1e-15,
+            4000,
+        );
+        assert!((sol[0] - 2.5).abs() < 1e-3, "{sol:?}");
+        assert!((sol[1] - 0.7).abs() < 1e-3, "{sol:?}");
+    }
+}

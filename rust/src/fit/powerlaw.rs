@@ -1,0 +1,94 @@
+//! Power-law fits `y = c x^p` via log-log linear regression — the tool for
+//! extracting the growth exponent β (w ~ t^β) and the roughness exponent α
+//! (w_sat ~ L^α) from the simulation curves.
+
+use super::leastsq::linear_fit;
+
+/// A fitted power law `y = c x^p`.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerLaw {
+    /// Prefactor c.
+    pub c: f64,
+    /// Exponent p.
+    pub p: f64,
+    /// RMS residual in log space.
+    pub rms_log: f64,
+}
+
+impl PowerLaw {
+    /// Evaluate at `x`.
+    pub fn eval(&self, x: f64) -> f64 {
+        self.c * x.powf(self.p)
+    }
+}
+
+/// Fit `y = c x^p` over the (x, y) samples with x, y > 0.
+///
+/// Non-positive samples are skipped (they carry no log-space information);
+/// at least two valid points are required.
+pub fn powerlaw_fit(x: &[f64], y: &[f64]) -> Option<PowerLaw> {
+    let pts: Vec<(f64, f64)> = x
+        .iter()
+        .zip(y)
+        .filter(|(&a, &b)| a > 0.0 && b > 0.0)
+        .map(|(&a, &b)| (a.ln(), b.ln()))
+        .collect();
+    if pts.len() < 2 {
+        return None;
+    }
+    let lx: Vec<f64> = pts.iter().map(|p| p.0).collect();
+    let ly: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    let (a, b) = linear_fit(&lx, &ly);
+    let rms = (lx
+        .iter()
+        .zip(&ly)
+        .map(|(&u, &v)| (a + b * u - v).powi(2))
+        .sum::<f64>()
+        / pts.len() as f64)
+        .sqrt();
+    Some(PowerLaw {
+        c: a.exp(),
+        p: b,
+        rms_log: rms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_powerlaw() {
+        let x: Vec<f64> = (1..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|&v| 3.0 * v.powf(0.5)).collect();
+        let f = powerlaw_fit(&x, &y).unwrap();
+        assert!((f.c - 3.0).abs() < 1e-9);
+        assert!((f.p - 0.5).abs() < 1e-12);
+        assert!(f.rms_log < 1e-12);
+    }
+
+    #[test]
+    fn kpz_beta_recovery_with_noise() {
+        // w(t) = 0.9 t^{1/3} with 2% multiplicative wobble
+        let t: Vec<f64> = (10..200).map(|i| i as f64).collect();
+        let w: Vec<f64> = t
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| 0.9 * v.powf(1.0 / 3.0) * (1.0 + 0.02 * ((i * 13) as f64).sin()))
+            .collect();
+        let f = powerlaw_fit(&t, &w).unwrap();
+        assert!((f.p - 1.0 / 3.0).abs() < 0.01, "beta = {}", f.p);
+    }
+
+    #[test]
+    fn skips_nonpositive() {
+        let f = powerlaw_fit(&[0.0, 1.0, 2.0, 4.0], &[5.0, 2.0, 4.0, 8.0]).unwrap();
+        assert!((f.p - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_is_none() {
+        assert!(powerlaw_fit(&[1.0], &[1.0]).is_none());
+        assert!(powerlaw_fit(&[-1.0, -2.0], &[1.0, 2.0]).is_none());
+    }
+}

@@ -1,0 +1,182 @@
+//! Rational-function fits in 1/L — the paper's Eq. (10) machinery.
+//!
+//! The paper extrapolates steady-state utilization data ⟨u_L⟩ to L → ∞ by
+//! fitting a rational function of x = 1/L,
+//!
+//!   u(x) = (a0 + Σ a_k x^k) / (1 + Σ b_k x^k),
+//!
+//! varying the numerator/denominator degrees (K_n, K_d) to find the best
+//! interpolation, and reading off ⟨u_∞⟩ = a0 (Eq. 11).  The fit is linear
+//! after multiplying through by the denominator:
+//!
+//!   u ≈ a0 + a1 x + ... + a_Kn x^Kn − u·(b1 x + ... + b_Kd x^Kd),
+//!
+//! so each (K_n, K_d) candidate is a least-squares solve; model selection
+//! uses the residual with a parameter-count penalty (small-sample AIC-like).
+
+use super::leastsq::lstsq;
+
+/// A fitted rational function of x.
+#[derive(Clone, Debug)]
+pub struct RationalFit {
+    /// Numerator coefficients a_0..a_Kn.
+    pub num: Vec<f64>,
+    /// Denominator coefficients b_1..b_Kd (the constant term is 1).
+    pub den: Vec<f64>,
+    /// Root-mean-square residual of the fit.
+    pub rms: f64,
+}
+
+impl RationalFit {
+    /// Evaluate the fitted function at `x`.
+    pub fn eval(&self, x: f64) -> f64 {
+        let mut num = 0.0;
+        let mut pow = 1.0;
+        for &a in &self.num {
+            num += a * pow;
+            pow *= x;
+        }
+        let mut den = 1.0;
+        pow = x;
+        for &b in &self.den {
+            den += b * pow;
+            pow *= x;
+        }
+        num / den
+    }
+
+    /// The x → 0 limit (a0): the L → ∞ extrapolation when x = 1/L.
+    pub fn at_zero(&self) -> f64 {
+        self.num[0]
+    }
+
+    /// Leading finite-size coefficient a1 − a0·b1 (the `const.` of Eq. 11).
+    pub fn leading_slope(&self) -> f64 {
+        let a1 = self.num.get(1).copied().unwrap_or(0.0);
+        let b1 = self.den.first().copied().unwrap_or(0.0);
+        a1 - self.num[0] * b1
+    }
+}
+
+/// Fit one (K_n, K_d) rational model to (x, y) samples.
+pub fn ratfit_eval(x: &[f64], y: &[f64], kn: usize, kd: usize) -> Option<RationalFit> {
+    let m = x.len();
+    let p = kn + 1 + kd;
+    if m < p + 1 {
+        return None; // need at least one dof
+    }
+    let mut design = vec![0.0; m * p];
+    for i in 0..m {
+        let mut pow = 1.0;
+        for k in 0..=kn {
+            design[i * p + k] = pow;
+            pow *= x[i];
+        }
+        let mut powd = x[i];
+        for k in 0..kd {
+            design[i * p + kn + 1 + k] = -y[i] * powd;
+            powd *= x[i];
+        }
+    }
+    let beta = lstsq(&design, y, p)?;
+    let fit = RationalFit {
+        num: beta[..=kn].to_vec(),
+        den: beta[kn + 1..].to_vec(),
+        rms: 0.0,
+    };
+    // reject fits whose denominator vanishes inside the data range
+    let xmax = x.iter().copied().fold(0.0f64, f64::max);
+    for i in 0..=32 {
+        let xi = xmax * i as f64 / 32.0;
+        let mut den = 1.0;
+        let mut pow = xi;
+        for &b in &fit.den {
+            den += b * pow;
+            pow *= xi;
+        }
+        if den.abs() < 1e-6 {
+            return None;
+        }
+    }
+    let rms = (x
+        .iter()
+        .zip(y)
+        .map(|(&xi, &yi)| (fit.eval(xi) - yi).powi(2))
+        .sum::<f64>()
+        / m as f64)
+        .sqrt();
+    Some(RationalFit { rms, ..fit })
+}
+
+/// The paper's extrapolation procedure: scan small (K_n, K_d) degrees,
+/// keep the model with the best penalized residual, return the fit.
+///
+/// `x` should be 1/L (positive, small); `y` the steady-state observable.
+pub fn extrapolate_to_zero(x: &[f64], y: &[f64]) -> Option<RationalFit> {
+    let mut best: Option<(f64, RationalFit)> = None;
+    let m = x.len() as f64;
+    for kn in 1..=3usize {
+        for kd in 0..=3usize {
+            if let Some(fit) = ratfit_eval(x, y, kn, kd) {
+                // AIC-like penalty: m ln(rms²) + 2p, guarding rms == 0
+                let p = (kn + 1 + kd) as f64;
+                let score = m * fit.rms.max(1e-15).ln() * 2.0 + 2.0 * p;
+                // extrapolations outside [0, 1.05·max(y)] are unphysical for
+                // utilizations; skip such models
+                let ymax = y.iter().copied().fold(0.0f64, f64::max);
+                let a0 = fit.at_zero();
+                if !(0.0..=ymax * 1.05 + 1e-9).contains(&a0) {
+                    continue;
+                }
+                if best.as_ref().is_none_or(|(s, _)| score < *s) {
+                    best = Some((score, fit));
+                }
+            }
+        }
+    }
+    best.map(|(_, f)| f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_rational_recovered() {
+        // y = (0.25 + 2x) / (1 + 3x)
+        let x: Vec<f64> = (1..=12).map(|i| 0.01 * i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|&v| (0.25 + 2.0 * v) / (1.0 + 3.0 * v)).collect();
+        let fit = ratfit_eval(&x, &y, 1, 1).unwrap();
+        assert!((fit.at_zero() - 0.25).abs() < 1e-9, "a0 = {}", fit.at_zero());
+        assert!(fit.rms < 1e-10);
+    }
+
+    #[test]
+    fn extrapolation_beats_naive_last_point() {
+        // u(L) = 0.2465 + 0.9/L: sample at L = 10..1000
+        let ls = [10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1000.0];
+        let x: Vec<f64> = ls.iter().map(|&l| 1.0 / l).collect();
+        let y: Vec<f64> = x.iter().map(|&v| 0.2465 + 0.9 * v).collect();
+        let fit = extrapolate_to_zero(&x, &y).unwrap();
+        assert!((fit.at_zero() - 0.2465).abs() < 1e-6);
+        assert!((fit.leading_slope() - 0.9).abs() < 1e-3);
+    }
+
+    #[test]
+    fn noisy_extrapolation_close() {
+        let ls = [10.0, 31.6, 100.0, 316.0, 1000.0, 3160.0];
+        let x: Vec<f64> = ls.iter().map(|&l| 1.0 / l).collect();
+        let y: Vec<f64> = x
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| 0.12 + 0.5 * v + 1e-4 * ((i * 37) as f64).sin())
+            .collect();
+        let fit = extrapolate_to_zero(&x, &y).unwrap();
+        assert!((fit.at_zero() - 0.12).abs() < 5e-3, "a0 = {}", fit.at_zero());
+    }
+
+    #[test]
+    fn too_few_points_is_none() {
+        assert!(ratfit_eval(&[0.1, 0.2], &[1.0, 2.0], 2, 2).is_none());
+    }
+}

@@ -1,0 +1,34 @@
+//! Reproduction of Kolakowska, Novotny & Korniss, *"Algorithmic scalability
+//! in globally constrained conservative parallel discrete event simulations
+//! of asynchronous systems"* (Phys. Rev. E **67**, 046703; cs.DC 2002).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer Rust + JAX + Pallas
+//! stack (see DESIGN.md):
+//!
+//! * [`pdes`] — the native PDES substrate (ring, instrumented ring, 2-d/3-d
+//!   lattices) implementing the conservative update rule (Eq. 1) and the
+//!   moving Δ-window constraint (Eq. 3);
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`), Python never on the run path;
+//! * [`coordinator`] — campaign orchestration: sweep planning, ensemble
+//!   sharding across workers, chunk streaming, steady-state control;
+//! * [`stats`], [`fit`], [`scaling`] — the measurement machinery: ensemble
+//!   curves, rational-function L → ∞ extrapolation (Eq. 10), KPZ exponent
+//!   extraction, the appendix fits (A.1-A.3, Eq. 12);
+//! * [`experiments`] — one driver per paper figure/table (Figs. 2-11,
+//!   Eq. 8, Eqs. 13-14, the appendix, 2-d/3-d estimates);
+//! * [`rng`], [`cli`], [`config`], [`output`], [`bench`] — the
+//!   dependency-free substrate required by the offline toolchain.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod fit;
+pub mod output;
+pub mod pdes;
+pub mod rng;
+pub mod runtime;
+pub mod scaling;
+pub mod stats;

@@ -1,0 +1,133 @@
+//! `repro` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//! * `repro fig2 .. fig11 | eq8 | kpz | meanfield | appendix | dims | all`
+//!   — regenerate a paper figure/table (§4 of DESIGN.md); `--quick` for
+//!   smoke runs, `--out DIR` for the TSV directory.
+//! * `repro run --l L --nv NV --delta D [--trials N] [--steps T]`
+//!   — one native campaign point, printing the ⟨u⟩/⟨w⟩ summary.
+//! * `repro jax --l L [--trials N] [--steps T]`
+//!   — the same through the AOT JAX/Pallas artifacts (PJRT runtime).
+//! * `repro info` — artifact manifest + platform diagnostics.
+
+use anyhow::Result;
+
+use repro::cli::Args;
+use repro::coordinator::{run_artifact_ensemble, run_ensemble, JaxRunSpec, RunSpec};
+use repro::experiments::{self, Ctx};
+use repro::pdes::{Mode, VolumeLoad};
+use repro::runtime::PdesRuntime;
+use repro::stats::Lane;
+
+fn mode_from(args: &Args) -> Result<Mode> {
+    let delta = args.opt_f64("delta", f64::INFINITY)?;
+    let rd = args.has_flag("rd");
+    Ok(match (rd, delta.is_finite()) {
+        (false, false) => Mode::Conservative,
+        (false, true) => Mode::Windowed { delta },
+        (true, false) => Mode::Rd,
+        (true, true) => Mode::WindowedRd { delta },
+    })
+}
+
+fn load_from(args: &Args) -> Result<VolumeLoad> {
+    let nv = args.opt("nv", "1");
+    Ok(if nv == "inf" {
+        VolumeLoad::Infinite
+    } else {
+        VolumeLoad::Sites(nv.parse()?)
+    })
+}
+
+fn print_summary(series: &repro::stats::EnsembleSeries) {
+    let t_last = series.steps() - 1;
+    println!(
+        "steps = {}, trials = {}\n<u>(end) = {:.4} ± {:.4}\n<w>(end) = {:.4}\n<w_a>(end) = {:.4}\nGVT(end) = {:.2}",
+        series.steps(),
+        series.trials(),
+        series.mean(t_last, Lane::U),
+        series.stderr(t_last, Lane::U),
+        series.mean(t_last, Lane::W),
+        series.mean(t_last, Lane::Wa),
+        series.mean(t_last, Lane::Min),
+    );
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    match args.command.as_str() {
+        "" | "help" => {
+            println!(
+                "usage: repro <fig2..fig11|eq8|kpz|meanfield|appendix|dims|all> [--quick] [--out DIR]\n\
+                 \x20      repro run  --l L --nv NV --delta D [--rd] [--trials N] [--steps T] [--seed S]\n\
+                 \x20      repro jax  --l L --nv NV --delta D [--trials N] [--steps T] [--artifacts DIR]\n\
+                 \x20      repro campaign --config FILE [--out DIR]\n\
+                 \x20      repro info [--artifacts DIR]"
+            );
+            Ok(())
+        }
+        "info" => {
+            let dir = std::path::PathBuf::from(args.opt("artifacts", "artifacts"));
+            let mut rt = PdesRuntime::load(&dir)?;
+            println!("platform: {}", rt.platform());
+            for e in rt.manifest().entries().to_vec() {
+                print!("artifact {} (L={}, B={}, T={}) ... ", e.name, e.l, e.b, e.t_chunk);
+                rt.executor(&e.name)?;
+                println!("compiles OK");
+            }
+            Ok(())
+        }
+        "campaign" => {
+            let path = std::path::PathBuf::from(args.opt("config", "configs/sweep_window.toml"));
+            let cfg = repro::config::Config::load(&path)?;
+            let spec = repro::coordinator::CampaignSpec::from_config(&cfg)?;
+            println!("campaign {:?}: {} grid points", spec.name, {
+                let d = if spec.deltas.is_empty() { 1 } else { spec.deltas.len() };
+                let n = if spec.nvs.is_empty() { 1 } else { spec.nvs.len() };
+                spec.ls.len() * n * d
+            });
+            let out = std::path::PathBuf::from(args.opt("out", "results"));
+            let table = spec.execute(&out)?;
+            println!("{}", table.render());
+            Ok(())
+        }
+        "run" => {
+            let spec = RunSpec {
+                l: args.opt_u64("l", 100)? as usize,
+                load: load_from(&args)?,
+                mode: mode_from(&args)?,
+                trials: args.opt_u64("trials", 32)?,
+                steps: args.opt_u64("steps", 1000)? as usize,
+                seed: args.opt_u64("seed", 20020601)?,
+            };
+            println!("native campaign: {spec:?}");
+            let series = run_ensemble(&spec);
+            print_summary(&series);
+            Ok(())
+        }
+        "jax" => {
+            let dir = std::path::PathBuf::from(args.opt("artifacts", "artifacts"));
+            let mut rt = PdesRuntime::load(&dir)?;
+            let spec = JaxRunSpec {
+                l: args.opt_u64("l", 64)? as usize,
+                load: load_from(&args)?,
+                mode: mode_from(&args)?,
+                trials: args.opt_u64("trials", 32)?,
+                steps: args.opt_u64("steps", 256)? as usize,
+                seed: args.opt_u64("seed", 20020601)?,
+            };
+            println!("artifact campaign on {}: {spec:?}", rt.platform());
+            let series = run_artifact_ensemble(&mut rt, &spec)?;
+            print_summary(&series);
+            Ok(())
+        }
+        name => {
+            let ctx = Ctx {
+                out_dir: args.opt("out", "results").into(),
+                quick: args.has_flag("quick"),
+                seed: args.opt_u64("seed", 20020601)?,
+            };
+            experiments::run(name, &ctx)
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Result output: TSV series files (one per figure panel) and aligned
+//! ASCII tables printed to stdout, so every experiment both records and
+//! displays the same rows/series the paper reports.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A named table of columns written as TSV and printable as ASCII.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<f64>>,
+}
+
+impl Table {
+    /// New table with column headers.
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self::with_headers(title, headers.iter().map(|s| s.to_string()).collect())
+    }
+
+    /// New table with owned (dynamically built) column headers.
+    pub fn with_headers(title: impl Into<String>, headers: Vec<String>) -> Self {
+        Self {
+            title: title.into(),
+            headers,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append one row (must match the header count).
+    pub fn push(&mut self, row: Vec<f64>) {
+        assert_eq!(row.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no rows have been added.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Column headers.
+    pub fn headers(&self) -> &[String] {
+        &self.headers
+    }
+
+    /// Raw rows.
+    pub fn rows(&self) -> &[Vec<f64>] {
+        &self.rows
+    }
+
+    /// Write as TSV under `dir/<name>.tsv` (creates `dir`).
+    pub fn write_tsv(&self, dir: &Path, name: &str) -> Result<PathBuf> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating output dir {}", dir.display()))?;
+        let path = dir.join(format!("{name}.tsv"));
+        let mut f = fs::File::create(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        writeln!(f, "# {}", self.title)?;
+        writeln!(f, "{}", self.headers.join("\t"))?;
+        for row in &self.rows {
+            let cells: Vec<String> = row.iter().map(|v| format_cell(*v)).collect();
+            writeln!(f, "{}", cells.join("\t"))?;
+        }
+        Ok(path)
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn render(&self) -> String {
+        let mut cols: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        let cells: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| r.iter().map(|v| format_cell(*v)).collect())
+            .collect();
+        for row in &cells {
+            for (w, c) in cols.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = format!("== {} ==\n", self.title);
+        let head: Vec<String> = self
+            .headers
+            .iter()
+            .zip(&cols)
+            .map(|(h, w)| format!("{h:>w$}"))
+            .collect();
+        out.push_str(&head.join("  "));
+        out.push('\n');
+        for row in &cells {
+            let line: Vec<String> = row
+                .iter()
+                .zip(&cols)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect();
+            out.push_str(&line.join("  "));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Compact numeric formatting: integers render bare, small/large values in
+/// scientific notation, the rest with six significant digits.
+fn format_cell(v: f64) -> String {
+    if v.is_nan() {
+        return "nan".into();
+    }
+    if v.is_infinite() {
+        return if v > 0.0 { "inf".into() } else { "-inf".into() };
+    }
+    if v == v.trunc() && v.abs() < 1e12 {
+        return format!("{}", v as i64);
+    }
+    let a = v.abs();
+    if a >= 1e6 || (a > 0.0 && a < 1e-4) {
+        format!("{v:.5e}")
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tsv_roundtrip() {
+        let dir = std::env::temp_dir().join("repro_output_test");
+        let mut t = Table::new("demo", &["t", "u"]);
+        t.push(vec![1.0, 0.25]);
+        t.push(vec![2.0, 0.125]);
+        let path = t.write_tsv(&dir, "demo").unwrap();
+        let text = fs::read_to_string(path).unwrap();
+        assert!(text.contains("# demo"));
+        assert!(text.contains("t\tu"));
+        assert!(text.contains("1\t0.250000"));
+        fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn render_alignment_and_formats() {
+        let mut t = Table::new("x", &["L", "value"]);
+        t.push(vec![10.0, 0.5]);
+        t.push(vec![10000.0, 1.25e-7]);
+        let s = t.render();
+        assert!(s.contains("== x =="));
+        assert!(s.contains("10000"));
+        assert!(s.contains("1.25000e-7"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.push(vec![1.0]);
+    }
+}

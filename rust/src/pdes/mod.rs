@@ -1,0 +1,19 @@
+//! The native PDES substrate: the paper's model of L processing elements
+//! advancing local virtual times under the conservative causality rule
+//! (Eq. 1) and the moving Δ-window global constraint (Eq. 3).
+//!
+//! This is the flexible-shape twin of the AOT JAX/Pallas path (see
+//! `python/compile/`): the figure sweeps need L, N_V and Δ values a fixed
+//! HLO artifact set cannot cover, the mean-field experiments (Eqs. 13-14)
+//! need per-PE wait instrumentation, and the 2-d/3-d extension needs other
+//! topologies.  Integration tests cross-validate both paths statistically.
+
+mod instrument;
+mod lattice;
+mod mode;
+pub(crate) mod ring;
+
+pub use instrument::{InstrumentedRing, MeanFieldCounters};
+pub use lattice::{LatticePdes, Topology};
+pub use mode::{Mode, VolumeLoad};
+pub use ring::{Pending, RingPdes, StepOutcome};

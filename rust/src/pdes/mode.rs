@@ -1,0 +1,125 @@
+//! Update-rule modes and volume loads of the paper's model.
+
+/// The four update-rule variants of the paper (DESIGN.md §1).
+///
+/// Internally a mode is the pair (enforce the nearest-neighbour causality
+/// condition Eq. 1?, window width Δ).  `Δ = f64::INFINITY` disables Eq. 3 —
+/// the paper's "infinite window is equivalent to the absence of the
+/// constraint".
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Mode {
+    /// Basic conservative scheme: Eq. 1 on border sites, no window.
+    Conservative,
+    /// The paper's contribution: Eq. 1 plus the moving Δ-window (Eq. 3).
+    Windowed { delta: f64 },
+    /// Random deposition: no conditions at all (the N_V → ∞ limit).
+    Rd,
+    /// Δ-constrained random deposition (Eq. 3 alone; Fig. 6's N_V = 10⁸ rows).
+    WindowedRd { delta: f64 },
+}
+
+impl Mode {
+    /// Does this mode enforce the nearest-neighbour condition (Eq. 1)?
+    #[inline]
+    pub fn enforces_nn(self) -> bool {
+        matches!(self, Mode::Conservative | Mode::Windowed { .. })
+    }
+
+    /// Window width Δ (infinite when Eq. 3 is off).
+    #[inline]
+    pub fn delta(self) -> f64 {
+        match self {
+            Mode::Windowed { delta } | Mode::WindowedRd { delta } => delta,
+            Mode::Conservative | Mode::Rd => f64::INFINITY,
+        }
+    }
+
+    /// Does this mode enforce the window condition (Eq. 3)?
+    #[inline]
+    pub fn enforces_window(self) -> bool {
+        self.delta().is_finite()
+    }
+
+    /// Human-readable tag used in output file names and tables.
+    pub fn tag(self) -> String {
+        match self {
+            Mode::Conservative => "conservative".into(),
+            Mode::Windowed { delta } => format!("windowed_d{delta}"),
+            Mode::Rd => "rd".into(),
+            Mode::WindowedRd { delta } => format!("rd_d{delta}"),
+        }
+    }
+}
+
+/// Number of volume elements (lattice sites) per PE.
+///
+/// Only the *border-site probability* `min(2/N_V, 1)` enters the dynamics
+/// (interior sites always update; Section II of the paper), so the RD limit
+/// N_V → ∞ is representable exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum VolumeLoad {
+    /// Finite N_V ≥ 1.
+    Sites(u64),
+    /// The N_V → ∞ limit: border sites are never chosen.
+    Infinite,
+}
+
+impl VolumeLoad {
+    /// Probability that the randomly chosen site is a border site.
+    #[inline]
+    pub fn p_border(self) -> f64 {
+        match self {
+            VolumeLoad::Sites(nv) => {
+                assert!(nv >= 1, "N_V must be >= 1");
+                (2.0 / nv as f64).min(1.0)
+            }
+            VolumeLoad::Infinite => 0.0,
+        }
+    }
+
+    /// Tag for file names / tables ("1", "10", "inf", ...).
+    pub fn tag(self) -> String {
+        match self {
+            VolumeLoad::Sites(nv) => nv.to_string(),
+            VolumeLoad::Infinite => "inf".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_flags() {
+        assert!(Mode::Conservative.enforces_nn());
+        assert!(!Mode::Conservative.enforces_window());
+        assert!(Mode::Windowed { delta: 5.0 }.enforces_window());
+        assert_eq!(Mode::Windowed { delta: 5.0 }.delta(), 5.0);
+        assert!(!Mode::Rd.enforces_nn());
+        assert!(!Mode::Rd.enforces_window());
+        assert!(Mode::WindowedRd { delta: 1.0 }.enforces_window());
+        assert!(!Mode::WindowedRd { delta: 1.0 }.enforces_nn());
+    }
+
+    #[test]
+    fn border_probability() {
+        assert_eq!(VolumeLoad::Sites(1).p_border(), 1.0);
+        assert_eq!(VolumeLoad::Sites(2).p_border(), 1.0);
+        assert_eq!(VolumeLoad::Sites(4).p_border(), 0.5);
+        assert_eq!(VolumeLoad::Sites(100).p_border(), 0.02);
+        assert_eq!(VolumeLoad::Infinite.p_border(), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_sites_rejected() {
+        VolumeLoad::Sites(0).p_border();
+    }
+
+    #[test]
+    fn tags() {
+        assert_eq!(Mode::Windowed { delta: 10.0 }.tag(), "windowed_d10");
+        assert_eq!(VolumeLoad::Infinite.tag(), "inf");
+    }
+}

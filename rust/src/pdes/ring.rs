@@ -1,0 +1,436 @@
+//! The 1-d ring PDES simulator — the paper's primary model (Section II).
+//!
+//! One `step()` is one *parallel step* t: every PE simultaneously makes one
+//! update attempt against the frozen horizon τ(t).  Decisions therefore read
+//! from `tau` and write into a scratch buffer which is swapped in at the end
+//! of the step, exactly mirroring the synchronous-attempt semantics of the
+//! paper (and of the L1 Pallas kernel).
+//!
+//! Event semantics (validated against the paper's own utilization data,
+//! DESIGN.md §Event-Semantics): each PE holds one *pending event* — the
+//! randomly chosen site of its next update attempt.  In conservative PDES
+//! the pending event must be executed in timestamp order, so a blocked PE
+//! retries the *same* site on the next parallel step; it does not resample.
+//! The causality check (Eq. 1) involves only the PEs that own neighbours of
+//! the chosen site:
+//!
+//! * interior site (probability 1 − 2/N_V) — no check, always updates;
+//! * left/right border site (probability 1/N_V each) — one-sided check
+//!   against that neighbour;
+//! * N_V = 1 — the single site's both neighbours live on other PEs, so the
+//!   check is two-sided (Eq. 1 as written).
+
+use super::{Mode, VolumeLoad};
+use crate::rng::Rng;
+
+/// The pending event of a PE: which site class its next update touches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Pending {
+    /// Interior site: no causality check.
+    Interior = 0,
+    /// Left border site: requires τ_k ≤ τ_{k−1}.
+    Left = 1,
+    /// Right border site: requires τ_k ≤ τ_{k+1}.
+    Right = 2,
+    /// N_V = 1: requires τ_k ≤ min(τ_{k−1}, τ_{k+1}).
+    Both = 3,
+}
+
+/// Result of one parallel step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutcome {
+    /// Number of PEs that performed an update this step (u = n_updated / L).
+    pub n_updated: usize,
+}
+
+/// State of an L-PE ring simulation.
+pub struct RingPdes {
+    tau: Vec<f64>,
+    next: Vec<f64>,
+    pend: Vec<Pending>,
+    ok: Vec<bool>, // decision-pass scratch (§Perf: split passes)
+    mode: Mode,
+    p_side: f64, // 1/N_V (0 in the RD limit); N_V = 1 encoded as 1.0
+    nv1: bool,
+    rng: Rng,
+    t: u64,
+}
+
+impl RingPdes {
+    /// A fresh ring of `l` PEs, fully synchronized at τ = 0 (the paper's
+    /// initial condition), each holding a freshly drawn pending event.
+    pub fn new(l: usize, load: VolumeLoad, mode: Mode, mut rng: Rng) -> Self {
+        assert!(l >= 3, "ring needs at least 3 PEs (distinct neighbours)");
+        let (p_side, nv1) = match load {
+            VolumeLoad::Sites(1) => (1.0, true),
+            VolumeLoad::Sites(nv) => (1.0 / nv as f64, false),
+            VolumeLoad::Infinite => (0.0, false),
+        };
+        let mut pend = vec![Pending::Interior; l];
+        if mode.enforces_nn() {
+            for p in pend.iter_mut() {
+                *p = draw_pending(&mut rng, p_side, nv1);
+            }
+        }
+        Self {
+            tau: vec![0.0; l],
+            next: vec![0.0; l],
+            pend,
+            ok: vec![false; l],
+            mode,
+            p_side,
+            nv1,
+            rng,
+            t: 0,
+        }
+    }
+
+    /// Replace the horizon (used for custom initial conditions / resync).
+    pub fn set_tau(&mut self, tau: &[f64]) {
+        assert_eq!(tau.len(), self.tau.len());
+        self.tau.copy_from_slice(tau);
+    }
+
+    /// Synchronize every PE to the current mean virtual time (the paper's
+    /// "setting all local simulated times to one value at t_s").
+    pub fn synchronize(&mut self) {
+        let mean = self.tau.iter().sum::<f64>() / self.tau.len() as f64;
+        self.tau.fill(mean);
+    }
+
+    /// Number of PEs.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.tau.len()
+    }
+
+    /// True when the ring is empty (never: `new` requires l >= 3).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.tau.is_empty()
+    }
+
+    /// The simulated time horizon at the current parallel step.
+    #[inline]
+    pub fn tau(&self) -> &[f64] {
+        &self.tau
+    }
+
+    /// The pending event classes (test/diagnostic access).
+    #[inline]
+    pub fn pending(&self) -> &[Pending] {
+        &self.pend
+    }
+
+    /// The parallel step index t.
+    #[inline]
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    /// The update mode.
+    #[inline]
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    /// Global virtual time: min_k τ_k (the window anchor of Eq. 3).
+    #[inline]
+    pub fn global_virtual_time(&self) -> f64 {
+        self.tau.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// One parallel step; optionally records the per-PE update mask.
+    ///
+    /// §Perf: the decision pass is separated from the RNG/update pass so the
+    /// compare/min work vectorizes; the exponential draw (the costliest
+    /// operation) is paid only by PEs that update, and the pending redraw
+    /// only by updated PEs of rings with N_V > 1.
+    pub fn step_masked(&mut self, mut mask: Option<&mut [bool]>) -> StepOutcome {
+        let l = self.tau.len();
+        if let Some(m) = mask.as_deref_mut() {
+            assert_eq!(m.len(), l);
+        }
+        let enforce_nn = self.mode.enforces_nn();
+        let enforce_win = self.mode.enforces_window();
+        // Window edge from the frozen horizon.  `delta + gvt` is computed
+        // once per step; the edge is +inf when the constraint is off.
+        let edge = if enforce_win {
+            self.mode.delta() + self.global_virtual_time()
+        } else {
+            f64::INFINITY
+        };
+
+        // --- decision pass (no RNG: the pending event is already fixed)
+        let tau = &self.tau;
+        let ok_buf = &mut self.ok;
+        if enforce_nn && self.nv1 {
+            // N_V = 1: two-sided check for every PE — branch-free
+            ok_buf[0] = tau[0] <= tau[l - 1].min(tau[1]) && tau[0] <= edge;
+            for k in 1..l - 1 {
+                let ok = tau[k] <= tau[k - 1].min(tau[k + 1]);
+                ok_buf[k] = ok & (tau[k] <= edge);
+            }
+            ok_buf[l - 1] = tau[l - 1] <= tau[l - 2].min(tau[0]) && tau[l - 1] <= edge;
+        } else if enforce_nn {
+            let pend = &self.pend;
+            for k in 0..l {
+                let tk = tau[k];
+                let ok = match pend[k] {
+                    Pending::Interior => true,
+                    Pending::Left => tk <= tau[if k == 0 { l - 1 } else { k - 1 }],
+                    Pending::Right => tk <= tau[if k + 1 == l { 0 } else { k + 1 }],
+                    Pending::Both => {
+                        let left = tau[if k == 0 { l - 1 } else { k - 1 }];
+                        let right = tau[if k + 1 == l { 0 } else { k + 1 }];
+                        tk <= left.min(right)
+                    }
+                };
+                ok_buf[k] = ok & (tk <= edge);
+            }
+        } else if enforce_win {
+            for k in 0..l {
+                ok_buf[k] = tau[k] <= edge;
+            }
+        } else {
+            ok_buf.fill(true);
+        }
+
+        // --- update pass: draws only where needed
+        let mut n_updated = 0usize;
+        {
+            let rng = &mut self.rng;
+            let redraw = enforce_nn && !self.nv1;
+            let (p_side, nv1) = (self.p_side, self.nv1);
+            let ok_ro: &[bool] = ok_buf;
+            for (k, ((n, &t), &ok)) in self.next[..l]
+                .iter_mut()
+                .zip(&tau[..l])
+                .zip(&ok_ro[..l])
+                .enumerate()
+            {
+                *n = if ok {
+                    n_updated += 1;
+                    if redraw {
+                        self.pend[k] = draw_pending(rng, p_side, nv1);
+                    }
+                    t + rng.exponential()
+                } else {
+                    t
+                };
+            }
+        }
+        if let Some(m) = mask.as_deref_mut() {
+            m.copy_from_slice(ok_buf);
+        }
+        std::mem::swap(&mut self.tau, &mut self.next);
+        self.t += 1;
+        StepOutcome { n_updated }
+    }
+
+    /// One parallel step (no mask capture).
+    #[inline]
+    pub fn step(&mut self) -> StepOutcome {
+        self.step_masked(None)
+    }
+}
+
+/// Draw the site class of a fresh event: left/right border with
+/// probability 1/N_V each, interior otherwise; `Both` when N_V = 1.
+#[inline]
+pub(crate) fn draw_pending(rng: &mut Rng, p_side: f64, nv1: bool) -> Pending {
+    if nv1 {
+        return Pending::Both;
+    }
+    if p_side <= 0.0 {
+        return Pending::Interior;
+    }
+    let u = rng.uniform();
+    if u < p_side {
+        Pending::Left
+    } else if u < 2.0 * p_side {
+        Pending::Right
+    } else {
+        Pending::Interior
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn ring(l: usize, load: VolumeLoad, mode: Mode, seed: u64) -> RingPdes {
+        RingPdes::new(l, load, mode, Rng::for_stream(seed, 0))
+    }
+
+    #[test]
+    fn first_step_everyone_updates() {
+        for mode in [
+            Mode::Conservative,
+            Mode::Windowed { delta: 1.0 },
+            Mode::Rd,
+            Mode::WindowedRd { delta: 0.5 },
+        ] {
+            let mut r = ring(16, VolumeLoad::Sites(1), mode, 1);
+            let out = r.step();
+            assert_eq!(out.n_updated, 16, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn conservative_nv1_updates_local_minima_only() {
+        let mut r = ring(64, VolumeLoad::Sites(1), Mode::Conservative, 2);
+        r.step(); // desynchronize
+        for _ in 0..50 {
+            let before = r.tau().to_vec();
+            let mut mask = vec![false; 64];
+            r.step_masked(Some(&mut mask));
+            for k in 0..64 {
+                let left = before[(k + 63) % 64];
+                let right = before[(k + 1) % 64];
+                assert_eq!(mask[k], before[k] <= left.min(right), "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn pending_event_persists_until_executed() {
+        let mut r = ring(32, VolumeLoad::Sites(4), Mode::Conservative, 3);
+        let mut mask = vec![false; 32];
+        for _ in 0..100 {
+            let pend_before = r.pending().to_vec();
+            r.step_masked(Some(&mut mask));
+            for k in 0..32 {
+                if !mask[k] {
+                    assert_eq!(r.pending()[k], pend_before[k], "blocked PE resampled");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_sided_check_blocks_only_on_the_owning_side() {
+        let mut r = ring(8, VolumeLoad::Sites(4), Mode::Conservative, 4);
+        for _ in 0..200 {
+            let before = r.tau().to_vec();
+            let pend = r.pending().to_vec();
+            let mut mask = vec![false; 8];
+            r.step_masked(Some(&mut mask));
+            for k in 0..8 {
+                let expect = match pend[k] {
+                    Pending::Interior => true,
+                    Pending::Left => before[k] <= before[(k + 7) % 8],
+                    Pending::Right => before[k] <= before[(k + 1) % 8],
+                    Pending::Both => unreachable!("N_V = 4 has no Both events"),
+                };
+                assert_eq!(mask[k], expect, "k={k} pend={:?}", pend[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn rd_mode_updates_everyone_every_step() {
+        let mut r = ring(32, VolumeLoad::Infinite, Mode::Rd, 3);
+        for _ in 0..20 {
+            assert_eq!(r.step().n_updated, 32);
+        }
+    }
+
+    #[test]
+    fn tau_is_monotone_nondecreasing() {
+        let mut r = ring(32, VolumeLoad::Sites(10), Mode::Windowed { delta: 5.0 }, 4);
+        let mut prev = r.tau().to_vec();
+        for _ in 0..200 {
+            r.step();
+            for (a, b) in prev.iter().zip(r.tau()) {
+                assert!(b >= a);
+            }
+            prev.copy_from_slice(r.tau());
+        }
+    }
+
+    #[test]
+    fn window_constraint_bounds_spread() {
+        let delta = 3.0;
+        let mut r = ring(128, VolumeLoad::Sites(1), Mode::Windowed { delta }, 5);
+        for _ in 0..500 {
+            r.step();
+            let min = r.global_virtual_time();
+            let max = r.tau().iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            // Eq. 3 lets a PE at the edge overshoot by one exp(1) increment.
+            assert!(max - min < delta + 40.0, "spread {}", max - min);
+        }
+        // and the spread actually sits near delta, not at zero
+        let min = r.global_virtual_time();
+        let max = r.tau().iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        assert!(max - min > delta * 0.5);
+    }
+
+    #[test]
+    fn unconstrained_roughens_beyond_any_window() {
+        let mut r = ring(128, VolumeLoad::Sites(1), Mode::Conservative, 6);
+        for _ in 0..4000 {
+            r.step();
+        }
+        // KPZ width for L=128 is ⟨w⟩ ≈ 3-4 (paper Fig. 4a), so the extreme
+        // spread comfortably exceeds any small window.
+        let min = r.global_virtual_time();
+        let max = r.tau().iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        assert!(max - min > 8.0, "spread {}", max - min);
+    }
+
+    #[test]
+    fn utilization_settles_near_paper_values() {
+        // paper: u_KPZ(1) = 24.65%, u_KPZ(10) ≈ 0.646, u_KPZ(100) ≈ 0.873
+        for (nv, lo, hi) in [(1u64, 0.23, 0.28), (10, 0.60, 0.70), (100, 0.84, 0.92)] {
+            let mut r = ring(256, VolumeLoad::Sites(nv), Mode::Conservative, 7);
+            for _ in 0..2000 {
+                r.step();
+            }
+            let mut acc = 0.0;
+            let n = 2000;
+            for _ in 0..n {
+                acc += r.step().n_updated as f64 / 256.0;
+            }
+            let u = acc / n as f64;
+            assert!((lo..hi).contains(&u), "NV={nv}: u = {u}");
+        }
+    }
+
+    #[test]
+    fn delta_zero_only_minimum_updates_after_desync() {
+        let mut r = ring(32, VolumeLoad::Sites(1), Mode::WindowedRd { delta: 0.0 }, 8);
+        r.step(); // desynchronize (all taus become distinct a.s.)
+        for _ in 0..20 {
+            let out = r.step();
+            assert_eq!(out.n_updated, 1, "only the global-min PE may move");
+        }
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let mut a = ring(32, VolumeLoad::Sites(10), Mode::Windowed { delta: 2.0 }, 9);
+        let mut b = ring(32, VolumeLoad::Sites(10), Mode::Windowed { delta: 2.0 }, 9);
+        for _ in 0..100 {
+            a.step();
+            b.step();
+        }
+        assert_eq!(a.tau(), b.tau());
+    }
+
+    #[test]
+    fn synchronize_resets_spread() {
+        let mut r = ring(32, VolumeLoad::Sites(1), Mode::Conservative, 10);
+        for _ in 0..100 {
+            r.step();
+        }
+        r.synchronize();
+        let min = r.global_virtual_time();
+        let max = r.tau().iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(min, max);
+        // and evolution resumes: next step everyone updates again
+        assert_eq!(r.step().n_updated, 32);
+    }
+}

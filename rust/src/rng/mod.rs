@@ -1,0 +1,130 @@
+//! Deterministic, dependency-free random number generation.
+//!
+//! The offline toolchain has no `rand` crate, so the simulator substrate
+//! carries its own generator: xoshiro256++ (Blackman/Vigna) seeded through
+//! SplitMix64.  Streams are split hierarchically — `Rng::for_stream(seed,
+//! id)` derives an independent generator per (experiment, trial) pair so
+//! ensemble members are reproducible regardless of worker scheduling.
+
+mod splitmix;
+mod xoshiro;
+mod ziggurat;
+
+pub use splitmix::SplitMix64;
+pub use xoshiro::Xoshiro256pp;
+pub use ziggurat::exponential_ziggurat;
+
+/// The crate-wide RNG used by the native PDES substrate.
+pub type Rng = Xoshiro256pp;
+
+impl Rng {
+    /// Derive an independent stream for trial `id` under master `seed`.
+    ///
+    /// Uses SplitMix64 over `seed ^ golden*id` so neighbouring ids land in
+    /// uncorrelated states (SplitMix64 is a bijective mixer; xoshiro's own
+    /// seeding recommendation).
+    pub fn for_stream(seed: u64, id: u64) -> Self {
+        let mut sm = SplitMix64::new(seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        Self::from_splitmix(&mut sm)
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // take the top 53 bits of a u64 draw
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Exponential(1) draw — the paper's unit-mean Poisson-process time
+    /// increment.  Uses the ziggurat sampler (§Perf: ~3× faster than the
+    /// `-ln(1-u)` inversion in the PDES hot loop; exactness verified by
+    /// the distribution tests in `ziggurat.rs`).
+    #[inline]
+    pub fn exponential(&mut self) -> f64 {
+        exponential_ziggurat(self)
+    }
+
+    /// Exponential(1) via inversion (reference sampler for the ziggurat's
+    /// distribution tests).
+    #[inline]
+    pub fn exponential_inversion(&mut self) -> f64 {
+        // 1 - uniform() is in (0, 1], so the log is finite.
+        -(1.0 - self.uniform()).ln()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire-style widening multiply; the
+    /// modulo bias at n << 2^64 is far below statistical noise, so the
+    /// simple product-shift is used without rejection).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::for_stream(42, 7);
+        let mut b = Rng::for_stream(42, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Rng::for_stream(42, 0);
+        let mut b = Rng::for_stream(42, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_moments() {
+        let mut r = Rng::for_stream(1, 0);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.uniform();
+            assert!((0.0..1.0).contains(&x));
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 5e-3, "mean {mean}");
+        assert!((var - 1.0 / 12.0).abs() < 5e-3, "var {var}");
+    }
+
+    #[test]
+    fn exponential_moments() {
+        let mut r = Rng::for_stream(2, 0);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.exponential();
+            assert!(x >= 0.0 && x.is_finite());
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - 1.0).abs() < 2e-2, "mean {mean}");
+        assert!((var - 1.0).abs() < 5e-2, "var {var}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut r = Rng::for_stream(3, 0);
+        let mut counts = [0u32; 10];
+        for _ in 0..100_000 {
+            counts[r.below(10) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "counts {counts:?}");
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! xoshiro256++ 1.0 (Blackman & Vigna, 2019) — the substrate generator.
+//!
+//! Chosen for speed in the PDES hot loop (one rotate + adds per draw), a
+//! 2^256-1 period, and clean statistical behaviour in TestU01 BigCrush.
+
+use super::SplitMix64;
+
+/// xoshiro256++ state (never all-zero).
+#[derive(Clone, Debug)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed via a SplitMix64 mixer (the authors' recommended procedure).
+    pub fn from_splitmix(sm: &mut SplitMix64) -> Self {
+        let s = [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()];
+        // all-zero is unreachable from SplitMix64 outputs in practice, but
+        // guard anyway: the zero state is a fixed point.
+        if s == [0; 4] {
+            Self { s: [1, 2, 3, 4] }
+        } else {
+            Self { s }
+        }
+    }
+
+    /// Next 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_vector() {
+        // Reference outputs for state {1,2,3,4} (from the authors' C code).
+        let mut r = Xoshiro256pp { s: [1, 2, 3, 4] };
+        let expected: [u64; 4] = [41943041, 58720359, 3588806011781223, 3591011842654386];
+        for e in expected {
+            assert_eq!(r.next_u64(), e);
+        }
+    }
+
+    #[test]
+    fn zero_state_guard() {
+        let mut sm = SplitMix64::new(0);
+        let r = Xoshiro256pp::from_splitmix(&mut sm);
+        assert_ne!(r.s, [0; 4]);
+    }
+}

@@ -1,0 +1,128 @@
+//! Artifact discovery: parse `artifacts/manifest.txt` written by
+//! `python/compile/aot.py` (plain `name L B T file` rows — no JSON
+//! dependency in the offline toolchain).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One compiled chunk-model shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactInfo {
+    /// Registry name, e.g. `pdes_L64_B32_T32`.
+    pub name: String,
+    /// Ring size L.
+    pub l: usize,
+    /// Ensemble rows per execution B.
+    pub b: usize,
+    /// Steps per execution T_c.
+    pub t_chunk: usize,
+    /// Absolute path of the HLO text file.
+    pub path: PathBuf,
+}
+
+/// The parsed artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Parse the manifest in `dir` (usually `artifacts/`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` anchors the relative file names.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 5 {
+                bail!("manifest line {}: expected 5 fields", lineno + 1);
+            }
+            entries.push(ArtifactInfo {
+                name: parts[0].to_string(),
+                l: parts[1].parse().context("L")?,
+                b: parts[2].parse().context("B")?,
+                t_chunk: parts[3].parse().context("T")?,
+                path: dir.join(parts[4]),
+            });
+        }
+        Ok(Self { entries })
+    }
+
+    /// All artifacts.
+    pub fn entries(&self) -> &[ArtifactInfo] {
+        &self.entries
+    }
+
+    /// Find by registry name.
+    pub fn by_name(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("no artifact named {name:?} in manifest"))
+    }
+
+    /// Find the artifact with exactly ring size `l` (any B/T), preferring
+    /// the largest batch (fewest executions per ensemble).
+    pub fn by_ring(&self, l: usize) -> Result<&ArtifactInfo> {
+        self.entries
+            .iter()
+            .filter(|e| e.l == l)
+            .max_by_key(|e| e.b)
+            .ok_or_else(|| anyhow!("no artifact with L = {l}; rebuild with aot.py"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TEXT: &str = "# name L B T file\n\
+        pdes_L16_B4_T8 16 4 8 pdes_L16_B4_T8.hlo.txt\n\
+        pdes_L64_B32_T32 64 32 32 pdes_L64_B32_T32.hlo.txt\n";
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(TEXT, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries().len(), 2);
+        let e = m.by_name("pdes_L16_B4_T8").unwrap();
+        assert_eq!((e.l, e.b, e.t_chunk), (16, 4, 8));
+        assert_eq!(e.path, Path::new("/tmp/a/pdes_L16_B4_T8.hlo.txt"));
+        assert!(m.by_name("nope").is_err());
+        assert_eq!(m.by_ring(64).unwrap().name, "pdes_L64_B32_T32");
+        assert!(m.by_ring(7).is_err());
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(Manifest::parse("a b c\n", Path::new(".")).is_err());
+        assert!(Manifest::parse("a x 4 8 f.txt\n", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // When `make artifacts` has run, the real manifest must parse.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.entries().is_empty());
+            for e in m.entries() {
+                assert!(e.path.exists(), "{} missing", e.path.display());
+            }
+        }
+    }
+}

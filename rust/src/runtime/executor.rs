@@ -1,0 +1,182 @@
+//! Compile-and-execute of the chunk artifacts on the PJRT CPU client.
+//!
+//! `PdesRuntime` owns the client and a compile cache; `ChunkExecutor` is a
+//! handle to one compiled shape.  The interchange follows
+//! /opt/xla-example/load_hlo: HLO text → `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`, with the
+//! jax-side `return_tuple=True` convention unwrapped via `to_tuple2`.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::{ArtifactInfo, Manifest};
+
+/// Stats lanes per (step, ensemble row) in the artifact output — must match
+/// `python/compile/model.py::N_STATS`.
+pub const N_ARTIFACT_STATS: usize = 11;
+
+/// Result of one chunk execution.
+#[derive(Clone, Debug)]
+pub struct ChunkResult {
+    /// Final horizons, row-major `(B, L)`.
+    pub tau: Vec<f64>,
+    /// Final pending-event classes, row-major `(B, L)` (carried back in as
+    /// `pend0` of the next chunk — blocked events persist across chunks).
+    pub pend: Vec<i32>,
+    /// Per-step stats, row-major `(T_c, B, 11)`.
+    pub stats: Vec<f64>,
+    /// Shape echo (B, L, T_c).
+    pub b: usize,
+    /// Ring size.
+    pub l: usize,
+    /// Steps executed.
+    pub t_chunk: usize,
+}
+
+impl ChunkResult {
+    /// Stats row for step `t`, ensemble row `row`.
+    pub fn stats_row(&self, t: usize, row: usize) -> &[f64] {
+        let base = (t * self.b + row) * N_ARTIFACT_STATS;
+        &self.stats[base..base + N_ARTIFACT_STATS]
+    }
+
+    /// Horizon of ensemble row `row`.
+    pub fn tau_row(&self, row: usize) -> &[f64] {
+        &self.tau[row * self.l..(row + 1) * self.l]
+    }
+}
+
+/// One compiled artifact, ready to execute.
+pub struct ChunkExecutor {
+    info: ArtifactInfo,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+}
+
+impl ChunkExecutor {
+    /// Shape metadata.
+    pub fn info(&self) -> &ArtifactInfo {
+        &self.info
+    }
+
+    /// Execute one chunk: `tau0`/`pend0` are row-major `(B, L)`, `key` the
+    /// raw threefry key data, `params` the packed `[p_side, Δ, nn, win]`.
+    pub fn run(
+        &self,
+        tau0: &[f64],
+        pend0: &[i32],
+        key: [u32; 2],
+        params: [f64; 4],
+    ) -> Result<ChunkResult> {
+        let (l, b, t_chunk) = (self.info.l, self.info.b, self.info.t_chunk);
+        anyhow::ensure!(
+            tau0.len() == b * l && pend0.len() == b * l,
+            "tau0/pend0 have {}/{} elements, artifact {} needs {}",
+            tau0.len(),
+            pend0.len(),
+            self.info.name,
+            b * l
+        );
+        let tau_lit = xla::Literal::vec1(tau0)
+            .reshape(&[b as i64, l as i64])
+            .context("reshaping tau0")?;
+        let pend_lit = xla::Literal::vec1(pend0)
+            .reshape(&[b as i64, l as i64])
+            .context("reshaping pend0")?;
+        let key_lit = xla::Literal::vec1(&key[..]);
+        let params_lit = xla::Literal::vec1(&params[..]);
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[tau_lit, pend_lit, key_lit, params_lit])
+            .with_context(|| format!("executing {}", self.info.name))?;
+        let out = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("no output buffer"))?
+            .to_literal_sync()?;
+        let (tau_out, pend_out, stats_out) = out
+            .to_tuple3()
+            .context("unpacking (tau, pend, stats) tuple")?;
+        let tau = tau_out.to_vec::<f64>()?;
+        let pend = pend_out.to_vec::<i32>()?;
+        let stats = stats_out.to_vec::<f64>()?;
+        anyhow::ensure!(tau.len() == b * l, "bad tau shape from artifact");
+        anyhow::ensure!(pend.len() == b * l, "bad pend shape from artifact");
+        anyhow::ensure!(
+            stats.len() == t_chunk * b * N_ARTIFACT_STATS,
+            "bad stats shape from artifact"
+        );
+        Ok(ChunkResult {
+            tau,
+            pend,
+            stats,
+            b,
+            l,
+            t_chunk,
+        })
+    }
+}
+
+/// The PJRT CPU runtime with a compile cache.
+pub struct PdesRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl PdesRuntime {
+    /// Load the manifest in `dir` and start a CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// The artifact manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the artifact named `name`.
+    pub fn executor(&mut self, name: &str) -> Result<ChunkExecutor> {
+        let info = self.manifest.by_name(name)?.clone();
+        if let Some(exe) = self.cache.get(name) {
+            return Ok(ChunkExecutor {
+                info,
+                exe: Rc::clone(exe),
+            });
+        }
+        let path_str = info
+            .path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {}", info.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", info.name))?,
+        );
+        self.cache.insert(name.to_string(), Rc::clone(&exe));
+        Ok(ChunkExecutor { info, exe })
+    }
+
+    /// Compile the artifact for ring size `l` (largest batch available).
+    pub fn executor_for_ring(&mut self, l: usize) -> Result<ChunkExecutor> {
+        let name = self.manifest.by_ring(l)?.name.clone();
+        self.executor(&name)
+    }
+}

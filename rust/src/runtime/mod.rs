@@ -1,0 +1,96 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and execute
+//! them from the Rust hot path.  Python is never invoked here — the HLO
+//! text in `artifacts/` is the entire interface (see DESIGN.md §2 and
+//! python/compile/aot.py).
+
+mod artifact;
+mod executor;
+
+pub use artifact::{ArtifactInfo, Manifest};
+pub use executor::{ChunkExecutor, ChunkResult, PdesRuntime, N_ARTIFACT_STATS};
+
+/// The Δ value the AOT path uses to encode an infinite window (must match
+/// `python/compile/kernels/ref.py::DELTA_INF`; true f64 infinity is avoided
+/// on the literal path).
+pub const DELTA_INF_ENCODING: f64 = 1.0e300;
+
+/// Encode a window width for the artifact parameter vector.
+pub fn encode_delta(delta: f64) -> f64 {
+    if delta.is_infinite() {
+        DELTA_INF_ENCODING
+    } else {
+        delta
+    }
+}
+
+/// Pack the artifact parameter vector `[p_side, delta, nn, win]` from the
+/// substrate types (single source of truth for the encoding; `p_side` is
+/// 1/N_V, with `p_side >= 1` marking the two-sided N_V = 1 case — see
+/// python/compile/kernels/ref.py).
+pub fn pack_params(load: crate::pdes::VolumeLoad, mode: crate::pdes::Mode) -> [f64; 4] {
+    let p_side = match load {
+        crate::pdes::VolumeLoad::Sites(nv) => 1.0 / nv as f64,
+        crate::pdes::VolumeLoad::Infinite => 0.0,
+    };
+    [
+        p_side,
+        encode_delta(mode.delta()),
+        if mode.enforces_nn() { 1.0 } else { 0.0 },
+        if mode.enforces_window() { 1.0 } else { 0.0 },
+    ]
+}
+
+/// Draw the initial pending-event classes for an artifact batch, matching
+/// the kernel's encoding (0 interior, 1 left, 2 right, 3 both).
+pub fn initial_pending(
+    load: crate::pdes::VolumeLoad,
+    mode: crate::pdes::Mode,
+    n: usize,
+    rng: &mut crate::rng::Rng,
+) -> Vec<i32> {
+    use crate::pdes::Pending;
+    let (p_side, nv1) = match load {
+        crate::pdes::VolumeLoad::Sites(1) => (1.0, true),
+        crate::pdes::VolumeLoad::Sites(nv) => (1.0 / nv as f64, false),
+        crate::pdes::VolumeLoad::Infinite => (0.0, false),
+    };
+    (0..n)
+        .map(|_| {
+            if !mode.enforces_nn() {
+                return Pending::Interior as i32;
+            }
+            crate::pdes::ring::draw_pending(rng, p_side, nv1) as i32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pdes::{Mode, VolumeLoad};
+
+    #[test]
+    fn param_packing() {
+        let p = pack_params(VolumeLoad::Sites(100), Mode::Windowed { delta: 10.0 });
+        assert_eq!(p, [0.01, 10.0, 1.0, 1.0]);
+        let p = pack_params(VolumeLoad::Infinite, Mode::Rd);
+        assert_eq!(p, [0.0, DELTA_INF_ENCODING, 0.0, 0.0]);
+        let p = pack_params(VolumeLoad::Sites(1), Mode::Conservative);
+        assert_eq!(p, [1.0, DELTA_INF_ENCODING, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn initial_pending_distribution() {
+        let mut rng = crate::rng::Rng::for_stream(1, 0);
+        // NV = 1: all Both (3)
+        let p = initial_pending(VolumeLoad::Sites(1), Mode::Conservative, 64, &mut rng);
+        assert!(p.iter().all(|&x| x == 3));
+        // RD: all Interior regardless of load
+        let p = initial_pending(VolumeLoad::Infinite, Mode::Rd, 64, &mut rng);
+        assert!(p.iter().all(|&x| x == 0));
+        // NV = 4: roughly half border, split between sides
+        let p = initial_pending(VolumeLoad::Sites(4), Mode::Conservative, 4000, &mut rng);
+        let border = p.iter().filter(|&&x| x == 1 || x == 2).count();
+        assert!((1700..2300).contains(&border), "border count {border}");
+    }
+}

@@ -1,0 +1,112 @@
+//! Kinetic-roughening scaling analysis (Section III of the paper):
+//! extraction of the growth exponent β (⟨w²⟩ ~ t^{2β} for t ≪ t_×), the
+//! roughness exponent α (⟨w²⟩ ~ L^{2α} for t ≫ t_×), and the crossover
+//! time t_× ~ L^z with zβ = α.
+
+use crate::fit::{powerlaw_fit, PowerLaw};
+
+/// Scaling exponents extracted from simulation curves.
+#[derive(Clone, Copy, Debug)]
+pub struct GrowthExponent {
+    /// β from ⟨w(t)⟩ ~ t^β over the fit window.
+    pub beta: f64,
+    /// Fit window in step indices.
+    pub window: (usize, usize),
+    /// Log-space residual (fit quality).
+    pub rms_log: f64,
+}
+
+/// Extract β from a width curve ⟨w(t)⟩ (t = 1-based step index).
+///
+/// The fit window `[t_lo, t_hi)` must sit inside the growth phase
+/// (t ≪ t_×); callers pick it from the known crossover scale t_× ~ L^{3/2}.
+pub fn growth_exponent(w: &[f64], t_lo: usize, t_hi: usize) -> Option<GrowthExponent> {
+    let t_hi = t_hi.min(w.len());
+    if t_lo + 2 > t_hi {
+        return None;
+    }
+    let ts: Vec<f64> = (t_lo..t_hi).map(|t| (t + 1) as f64).collect();
+    let ws: Vec<f64> = w[t_lo..t_hi].to_vec();
+    let fit = powerlaw_fit(&ts, &ws)?;
+    Some(GrowthExponent {
+        beta: fit.p,
+        window: (t_lo, t_hi),
+        rms_log: fit.rms_log,
+    })
+}
+
+/// Extract α from saturated widths: ⟨w⟩_sat(L) ~ L^α.
+pub fn roughness_exponent(l: &[f64], w_sat: &[f64]) -> Option<PowerLaw> {
+    powerlaw_fit(l, w_sat)
+}
+
+/// Estimate the crossover time t_× as the intersection of the growth-phase
+/// power law with the saturation plateau: c t_×^β = w_sat.
+pub fn crossover_time(growth: &PowerLaw, w_sat: f64) -> f64 {
+    (w_sat / growth.c).powf(1.0 / growth.p)
+}
+
+/// KPZ reference values for the 1-d ring (the class of the unconstrained
+/// N_V = 1 model; Eq. 2 of the paper).
+pub mod kpz {
+    /// Growth exponent β = 1/3.
+    pub const BETA: f64 = 1.0 / 3.0;
+    /// Roughness exponent α = 1/2.
+    pub const ALPHA: f64 = 0.5;
+    /// Dynamic exponent z = α/β = 3/2.
+    pub const Z: f64 = 1.5;
+    /// ⟨u_∞⟩ = 24.6461(7) % (Toroczkai et al, via Eq. 8).
+    pub const U_INF: f64 = 0.246461;
+}
+
+/// Random-deposition reference values (the N_V → ∞ limit).
+pub mod rd {
+    /// Growth exponent β = 1/2 (uncorrelated columns).
+    pub const BETA: f64 = 0.5;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beta_recovered_from_synthetic_kpz_curve() {
+        // w(t) = 0.8 t^{1/3} saturating at w=4 (L^alpha-like plateau)
+        let w: Vec<f64> = (0..2000)
+            .map(|t| (0.8 * ((t + 1) as f64).powf(1.0 / 3.0)).min(4.0))
+            .collect();
+        let g = growth_exponent(&w, 5, 80).unwrap();
+        assert!((g.beta - 1.0 / 3.0).abs() < 0.02, "beta = {}", g.beta);
+        let tx = crossover_time(
+            &PowerLaw {
+                c: 0.8,
+                p: g.beta,
+                rms_log: 0.0,
+            },
+            4.0,
+        );
+        // true crossover: (4/0.8)^3 = 125
+        assert!((tx - 125.0).abs() < 30.0, "t_x = {tx}");
+    }
+
+    #[test]
+    fn alpha_recovered_from_saturated_widths() {
+        let ls: [f64; 3] = [10.0, 100.0, 1000.0];
+        let ws: Vec<f64> = ls.iter().map(|&l| 0.4 * l.powf(0.5)).collect();
+        let fit = roughness_exponent(&ls, &ws).unwrap();
+        assert!((fit.p - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaling_relation_z_beta_alpha() {
+        assert!((kpz::Z * kpz::BETA - kpz::ALPHA).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_validation() {
+        let w = vec![1.0; 10];
+        assert!(growth_exponent(&w, 8, 9).is_none());
+        let flat = growth_exponent(&w, 0, 10).unwrap();
+        assert!(flat.beta.abs() < 1e-12); // flat curve fits beta = 0
+    }
+}

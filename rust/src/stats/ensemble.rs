@@ -1,0 +1,229 @@
+//! Ensemble aggregation: per-step observable frames from N independent
+//! trials → the ⟨·(t)⟩ curves with error bars that every figure plots.
+
+use super::{HorizonFrame, OnlineMoments};
+
+/// Observable lanes tracked per step.  The first eleven match the L2
+/// artifact's `STAT_NAMES` order; `W` (the RMS width, averaged over trials
+/// *after* the square root, as the paper does) is derived.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Lane {
+    /// Utilization ⟨u(t)⟩.
+    U = 0,
+    /// Mean virtual time ⟨τ̄(t)⟩.
+    Mean = 1,
+    /// Variance ⟨w²(t)⟩.
+    W2 = 2,
+    /// Absolute width ⟨w_a(t)⟩.
+    Wa = 3,
+    /// Global virtual time ⟨min τ⟩ (progress-rate numerator).
+    Min = 4,
+    /// Leading edge ⟨max τ⟩.
+    Max = 5,
+    /// Slow-group fraction ⟨f_S⟩.
+    FSlow = 6,
+    /// Slow-group variance ⟨w²_S⟩.
+    W2Slow = 7,
+    /// Slow-group absolute width ⟨w_a(S)⟩.
+    WaSlow = 8,
+    /// Fast-group variance ⟨w²_F⟩.
+    W2Fast = 9,
+    /// Fast-group absolute width ⟨w_a(F)⟩.
+    WaFast = 10,
+    /// RMS width ⟨w(t)⟩ = ⟨sqrt(w²)⟩ (Eq. 4 as plotted in Figs. 4, 8).
+    W = 11,
+}
+
+/// Number of lanes.
+pub const N_LANES: usize = 12;
+
+/// All lanes in index order (TSV writers iterate this).
+pub const ALL_LANES: [Lane; N_LANES] = [
+    Lane::U,
+    Lane::Mean,
+    Lane::W2,
+    Lane::Wa,
+    Lane::Min,
+    Lane::Max,
+    Lane::FSlow,
+    Lane::W2Slow,
+    Lane::WaSlow,
+    Lane::W2Fast,
+    Lane::WaFast,
+    Lane::W,
+];
+
+impl Lane {
+    /// Column header used in TSV output.
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::U => "u",
+            Lane::Mean => "mean",
+            Lane::W2 => "w2",
+            Lane::Wa => "wa",
+            Lane::Min => "min",
+            Lane::Max => "max",
+            Lane::FSlow => "f_s",
+            Lane::W2Slow => "w2_s",
+            Lane::WaSlow => "wa_s",
+            Lane::W2Fast => "w2_f",
+            Lane::WaFast => "wa_f",
+            Lane::W => "w",
+        }
+    }
+}
+
+/// Per-step ensemble accumulators for every lane.
+#[derive(Clone)]
+pub struct EnsembleSeries {
+    steps: usize,
+    acc: Vec<OnlineMoments>, // steps * N_LANES, row-major by step
+}
+
+impl EnsembleSeries {
+    /// Series over `steps` parallel steps.
+    pub fn new(steps: usize) -> Self {
+        Self {
+            steps,
+            acc: vec![OnlineMoments::new(); steps * N_LANES],
+        }
+    }
+
+    /// Number of steps tracked.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Number of trials accumulated (from lane U of step 0).
+    pub fn trials(&self) -> u64 {
+        self.acc[Lane::U as usize].count()
+    }
+
+    /// Record one trial's frame at step `t`.
+    pub fn push_frame(&mut self, t: usize, frame: &HorizonFrame) {
+        let row = &mut self.acc[t * N_LANES..(t + 1) * N_LANES];
+        row[Lane::U as usize].push(frame.u);
+        row[Lane::Mean as usize].push(frame.mean);
+        row[Lane::W2 as usize].push(frame.w2);
+        row[Lane::Wa as usize].push(frame.wa);
+        row[Lane::Min as usize].push(frame.min);
+        row[Lane::Max as usize].push(frame.max);
+        row[Lane::FSlow as usize].push(frame.f_s);
+        row[Lane::W2Slow as usize].push(frame.w2_s);
+        row[Lane::WaSlow as usize].push(frame.wa_s);
+        row[Lane::W2Fast as usize].push(frame.w2_f);
+        row[Lane::WaFast as usize].push(frame.wa_f);
+        row[Lane::W as usize].push(frame.w2.sqrt());
+    }
+
+    /// Record a raw 11-lane stats row from the L2 artifact (one trial, one
+    /// step); the W lane is derived from the W2 entry.
+    pub fn push_artifact_row(&mut self, t: usize, stats: &[f64]) {
+        assert_eq!(stats.len(), N_LANES - 1, "artifact rows carry 11 lanes");
+        let row = &mut self.acc[t * N_LANES..(t + 1) * N_LANES];
+        for (lane, &x) in stats.iter().enumerate() {
+            row[lane].push(x);
+        }
+        row[Lane::W as usize].push(stats[Lane::W2 as usize].sqrt());
+    }
+
+    /// Merge another series (same step count) — used by the worker pool.
+    pub fn merge(&mut self, other: &Self) {
+        assert_eq!(self.steps, other.steps);
+        for (a, b) in self.acc.iter_mut().zip(&other.acc) {
+            a.merge(b);
+        }
+    }
+
+    /// Ensemble mean of `lane` at step `t`.
+    pub fn mean(&self, t: usize, lane: Lane) -> f64 {
+        self.acc[t * N_LANES + lane as usize].mean()
+    }
+
+    /// Standard error of `lane` at step `t`.
+    pub fn stderr(&self, t: usize, lane: Lane) -> f64 {
+        self.acc[t * N_LANES + lane as usize].stderr()
+    }
+
+    /// Full mean curve for one lane.
+    pub fn curve(&self, lane: Lane) -> Vec<f64> {
+        (0..self.steps).map(|t| self.mean(t, lane)).collect()
+    }
+
+    /// Mean of a lane over the tail `frac` of the series (steady estimate
+    /// helper; see `steady` for the drift-checked version).
+    pub fn tail_mean(&self, lane: Lane, frac: f64) -> f64 {
+        let start = ((1.0 - frac) * self.steps as f64) as usize;
+        let mut m = OnlineMoments::new();
+        for t in start..self.steps {
+            m.push(self.mean(t, lane));
+        }
+        m.mean()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(u: f64, w2: f64) -> HorizonFrame {
+        HorizonFrame {
+            u,
+            w2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn mean_and_error() {
+        let mut s = EnsembleSeries::new(2);
+        s.push_frame(0, &frame(0.2, 4.0));
+        s.push_frame(0, &frame(0.4, 16.0));
+        assert_eq!(s.trials(), 2);
+        assert!((s.mean(0, Lane::U) - 0.3).abs() < 1e-12);
+        // W lane averages sqrt(w2) per trial: (2+4)/2 = 3, not sqrt(10)
+        assert!((s.mean(0, Lane::W) - 3.0).abs() < 1e-12);
+        assert!(s.stderr(0, Lane::U) > 0.0);
+    }
+
+    #[test]
+    fn merge_matches_sequential() {
+        let mut a = EnsembleSeries::new(3);
+        let mut b = EnsembleSeries::new(3);
+        let mut all = EnsembleSeries::new(3);
+        for i in 0..10 {
+            let f = frame(i as f64 / 10.0, i as f64);
+            let tgt = if i % 2 == 0 { &mut a } else { &mut b };
+            for t in 0..3 {
+                tgt.push_frame(t, &f);
+                all.push_frame(t, &f);
+            }
+        }
+        a.merge(&b);
+        for t in 0..3 {
+            assert!((a.mean(t, Lane::U) - all.mean(t, Lane::U)).abs() < 1e-12);
+            assert!((a.stderr(t, Lane::W2) - all.stderr(t, Lane::W2)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn artifact_row_roundtrip() {
+        let mut s = EnsembleSeries::new(1);
+        let stats = [0.5, 1.0, 9.0, 2.0, 0.1, 3.0, 0.6, 8.0, 1.9, 10.0, 2.2];
+        s.push_artifact_row(0, &stats);
+        assert_eq!(s.mean(0, Lane::U), 0.5);
+        assert_eq!(s.mean(0, Lane::W2), 9.0);
+        assert_eq!(s.mean(0, Lane::W), 3.0);
+        assert_eq!(s.mean(0, Lane::WaFast), 2.2);
+    }
+
+    #[test]
+    fn tail_mean() {
+        let mut s = EnsembleSeries::new(10);
+        for t in 0..10 {
+            s.push_frame(t, &frame(if t < 5 { 1.0 } else { 0.5 }, 0.0));
+        }
+        assert!((s.tail_mean(Lane::U, 0.5) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,16 @@
+//! Observables and their ensemble statistics.
+//!
+//! `horizon` computes the paper's per-step observables from a horizon
+//! snapshot (Eqs. 4-5, 15-18); `moments` is the Welford accumulator;
+//! `ensemble` aggregates per-step frames across independent trials into the
+//! ⟨·(t)⟩ curves of the figures; `steady` estimates steady-state plateaus.
+
+mod ensemble;
+mod horizon;
+mod moments;
+mod steady;
+
+pub use ensemble::{EnsembleSeries, Lane, ALL_LANES, N_LANES};
+pub use horizon::{horizon_frame, HorizonFrame};
+pub use moments::OnlineMoments;
+pub use steady::{steady_estimate, SteadyEstimate};

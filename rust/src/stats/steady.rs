@@ -1,0 +1,122 @@
+//! Steady-state plateau detection and estimation.
+//!
+//! The paper reports steady-state values (⟨u⟩, ⟨w⟩) as t → ∞ limits of the
+//! ensemble curves.  We estimate them from the tail of a finite series with
+//! a drift check: the series is deemed saturated when the means of the last
+//! two quarter-windows agree within a tolerance scaled by the fluctuation
+//! level; the estimate then averages the saturated tail.
+
+use super::OnlineMoments;
+
+/// A steady-state estimate with quality diagnostics.
+#[derive(Clone, Copy, Debug)]
+pub struct SteadyEstimate {
+    /// Plateau value (mean over the saturated tail).
+    pub value: f64,
+    /// Standard error of the plateau mean (treating tail points as iid —
+    /// an underestimate under autocorrelation; used for relative weights).
+    pub err: f64,
+    /// First step index included in the tail average.
+    pub t_onset: usize,
+    /// Whether the drift check passed (false → the series likely has not
+    /// saturated; the value is then a lower/upper bound, not a plateau).
+    pub saturated: bool,
+}
+
+/// Estimate the steady-state value of `series`.
+///
+/// `rel_tol` is the allowed relative drift between the two tail quarters
+/// (0.02 is a good default for utilization curves averaged over ≥ 64
+/// trials).
+pub fn steady_estimate(series: &[f64], rel_tol: f64) -> SteadyEstimate {
+    assert!(!series.is_empty());
+    let n = series.len();
+    let q = (n / 4).max(1);
+    let half_start = n - (2 * q).min(n);
+
+    let mean_of = |range: std::ops::Range<usize>| {
+        let mut m = OnlineMoments::new();
+        for t in range {
+            m.push(series[t]);
+        }
+        m
+    };
+
+    let a = mean_of(half_start..n - q); // third quarter
+    let b = mean_of(n - q..n); // fourth quarter
+    let scale = b.mean().abs().max(1e-300);
+    let drift = (b.mean() - a.mean()).abs() / scale;
+    let noise = (a.stderr().powi(2) + b.stderr().powi(2)).sqrt() / scale;
+    let saturated = drift <= rel_tol.max(2.0 * noise);
+
+    // Find the earliest onset: walk backwards while window means stay
+    // within tolerance of the final-quarter mean.
+    let target = b.mean();
+    let t_onset;
+    let w = q.max(1);
+    let mut t = half_start;
+    loop {
+        if t < w {
+            t_onset = t;
+            break;
+        }
+        let m = mean_of(t - w..t);
+        if (m.mean() - target).abs() / scale > rel_tol.max(2.0 * noise) {
+            t_onset = t;
+            break;
+        }
+        t -= w;
+    }
+
+    let tail = mean_of(t_onset..n);
+    SteadyEstimate {
+        value: tail.mean(),
+        err: tail.stderr(),
+        t_onset,
+        saturated,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_series_is_saturated() {
+        let s = vec![0.25; 100];
+        let e = steady_estimate(&s, 0.02);
+        assert!(e.saturated);
+        assert!((e.value - 0.25).abs() < 1e-12);
+        assert!(e.t_onset < 30);
+    }
+
+    #[test]
+    fn relaxing_series_onset_detected() {
+        // exponential relaxation to 0.25
+        let s: Vec<f64> = (0..400)
+            .map(|t| 0.25 + 0.75 * (-(t as f64) / 20.0).exp())
+            .collect();
+        let e = steady_estimate(&s, 0.02);
+        assert!(e.saturated);
+        assert!((e.value - 0.25).abs() < 0.01, "value {}", e.value);
+        assert!(e.t_onset > 20, "onset {}", e.t_onset);
+    }
+
+    #[test]
+    fn drifting_series_flagged() {
+        let s: Vec<f64> = (0..200).map(|t| t as f64).collect();
+        let e = steady_estimate(&s, 0.02);
+        assert!(!e.saturated);
+    }
+
+    #[test]
+    fn noisy_plateau_ok() {
+        // deterministic pseudo-noise around 1.0
+        let s: Vec<f64> = (0..300)
+            .map(|t| 1.0 + 0.01 * ((t * 2654435761_usize) as f64).sin())
+            .collect();
+        let e = steady_estimate(&s, 0.02);
+        assert!(e.saturated);
+        assert!((e.value - 1.0).abs() < 0.005);
+    }
+}

@@ -1,0 +1,172 @@
+//! Integration tests across layers: artifact runtime ⇄ native substrate
+//! cross-validation, campaign end-to-end smoke, experiment drivers.
+//!
+//! Artifact tests are skipped gracefully when `make artifacts` has not run
+//! (e.g. a pure-cargo environment); CI always builds artifacts first.
+
+use std::path::{Path, PathBuf};
+
+use repro::coordinator::{run_artifact_ensemble, run_ensemble, JaxRunSpec, RunSpec};
+use repro::pdes::{Mode, VolumeLoad};
+use repro::runtime::PdesRuntime;
+use repro::stats::Lane;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+#[test]
+fn artifact_chunk_executes_and_chains() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let mut rt = PdesRuntime::load(&dir).unwrap();
+    let exe = rt.executor("pdes_L16_B4_T8").unwrap();
+    let params = repro::runtime::pack_params(VolumeLoad::Sites(1), Mode::Conservative);
+    let pend0 = vec![3i32; 4 * 16]; // N_V = 1: every event is two-sided
+    let r1 = exe.run(&vec![0.0; 4 * 16], &pend0, [1, 2], params).unwrap();
+    assert_eq!(r1.tau.len(), 64);
+    assert_eq!(r1.pend.len(), 64);
+    assert_eq!(r1.stats.len(), 8 * 4 * 11);
+    // first step from a synchronized start: u == 1 on every row
+    for row in 0..4 {
+        assert_eq!(r1.stats_row(0, row)[0], 1.0);
+    }
+    // N_V = 1 events stay two-sided forever
+    assert!(r1.pend.iter().all(|&p| p == 3));
+    // chain: taus keep growing
+    let r2 = exe.run(&r1.tau, &r1.pend, [3, 4], params).unwrap();
+    for (a, b) in r1.tau.iter().zip(&r2.tau) {
+        assert!(b >= a);
+    }
+    // monotone virtual time per row: mean lane is nondecreasing over steps
+    for row in 0..4 {
+        let mut prev = 0.0;
+        for t in 0..8 {
+            let mean = r1.stats_row(t, row)[1];
+            assert!(mean >= prev);
+            prev = mean;
+        }
+    }
+}
+
+#[test]
+fn artifact_and_native_paths_agree_statistically() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let mut rt = PdesRuntime::load(&dir).unwrap();
+    for (mode, load) in [
+        (Mode::Conservative, VolumeLoad::Sites(1)),
+        (Mode::Windowed { delta: 5.0 }, VolumeLoad::Sites(1)),
+        (Mode::Windowed { delta: 5.0 }, VolumeLoad::Sites(10)),
+        (Mode::WindowedRd { delta: 5.0 }, VolumeLoad::Infinite),
+    ] {
+        let jax = run_artifact_ensemble(
+            &mut rt,
+            &JaxRunSpec {
+                l: 64,
+                load,
+                mode,
+                trials: 64,
+                steps: 96,
+                seed: 17,
+            },
+        )
+        .unwrap();
+        let native = run_ensemble(&RunSpec {
+            l: 64,
+            load,
+            mode,
+            trials: 64,
+            steps: 96,
+            seed: 18,
+        });
+        for lane in [Lane::U, Lane::W, Lane::Wa] {
+            let a = jax.tail_mean(lane, 0.25);
+            let b = native.tail_mean(lane, 0.25);
+            let t_end = jax.steps() - 1;
+            let noise = (jax.stderr(t_end, lane).powi(2) + native.stderr(t_end, lane).powi(2))
+                .sqrt()
+                .max(1e-6);
+            assert!(
+                (a - b).abs() < 6.0 * noise + 0.02 * b.abs().max(0.05),
+                "{mode:?} {load:?} lane {lane:?}: jax {a} vs native {b} (noise {noise})"
+            );
+        }
+    }
+}
+
+#[test]
+fn experiment_drivers_smoke() {
+    // quick-mode smoke of the cheap drivers (the full set runs in benches)
+    let out = std::env::temp_dir().join("repro_it_results");
+    let ctx = repro::experiments::Ctx::new(&out, true);
+    for name in ["fig3", "fig7", "fig10"] {
+        repro::experiments::run(name, &ctx).unwrap();
+    }
+    assert!(out.join("fig3_snapshots.tsv").exists());
+    assert!(out.join("fig7_surfaces.tsv").exists());
+    assert!(out.join("fig10_groups.tsv").exists());
+    std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn steady_state_campaign_reproduces_u_inf_trend() {
+    // u(L) must decrease toward ~0.2465 as L grows (finite-size from above)
+    let mut last = 1.0;
+    for l in [16usize, 64, 256] {
+        let st = repro::coordinator::steady_state(
+            &RunSpec {
+                l,
+                load: VolumeLoad::Sites(1),
+                mode: Mode::Conservative,
+                trials: 12,
+                steps: 0,
+                seed: 5,
+            },
+            1500,
+            1500,
+        );
+        assert!(st.u < last + 0.005, "u should fall with L: {} at L={l}", st.u);
+        assert!(st.u > 0.2, "u must stay finite");
+        last = st.u;
+    }
+    assert!((0.24..0.30).contains(&last));
+}
+
+#[test]
+fn window_bounds_width_at_scale() {
+    // the paper's measurement-phase claim at L = 1000
+    let st = repro::coordinator::steady_state(
+        &RunSpec {
+            l: 1000,
+            load: VolumeLoad::Sites(10),
+            mode: Mode::Windowed { delta: 5.0 },
+            trials: 6,
+            steps: 0,
+            seed: 6,
+        },
+        1000,
+        1000,
+    );
+    assert!(st.wa < 5.0, "w_a = {} must stay below Δ", st.wa);
+    assert!(st.u > 0.05, "utilization must stay finite");
+}
+
+#[test]
+fn cli_binary_parses_and_reports_info() {
+    // exercise the Args path exactly as main() does
+    let args = repro::cli::Args::parse(
+        ["run", "--l", "32", "--nv", "inf", "--delta", "inf", "--rd"]
+            .iter()
+            .map(|s| s.to_string()),
+    )
+    .unwrap();
+    assert_eq!(args.command, "run");
+    assert!(args.has_flag("rd"));
+    assert_eq!(args.opt("nv", ""), "inf");
+}

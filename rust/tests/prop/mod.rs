@@ -1,0 +1,116 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! A property runs over `cases` random inputs drawn from a deterministic
+//! generator; on failure the framework *shrinks* the failing case by
+//! retrying with each "simpler" variant the `Shrink` implementation offers
+//! and reports the smallest reproduction found.
+
+use repro::rng::Rng;
+
+/// A random-input generator with shrinking.
+pub trait Gen: Sized + std::fmt::Debug + Clone {
+    /// Draw one case.
+    fn generate(rng: &mut Rng) -> Self;
+    /// Candidate simplifications, simplest first (empty = atomic).
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panics with the smallest
+/// failing case found after shrinking.
+pub fn check<G: Gen, F: Fn(&G) -> Result<(), String>>(name: &str, cases: u64, prop: F) {
+    let mut rng = Rng::for_stream(0xC0FFEE, name.len() as u64);
+    for case in 0..cases {
+        let input = G::generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // shrink loop: greedily take any simpler failing candidate
+            let mut best = (input.clone(), msg.clone());
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in best.0.shrink() {
+                    if let Err(m) = prop(&cand) {
+                        best = (cand, m);
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property {name:?} failed on case {case}:\n  input (shrunk): {:?}\n  error: {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Standard PDES test-case parameters.
+#[derive(Clone, Debug)]
+pub struct PdesCase {
+    pub l: usize,
+    pub nv: u64,
+    pub delta: f64,
+    pub rd: bool,
+    pub steps: usize,
+    pub seed: u64,
+}
+
+impl Gen for PdesCase {
+    fn generate(rng: &mut Rng) -> Self {
+        let ls = [3usize, 5, 8, 16, 33, 64, 100];
+        let nvs = [1u64, 2, 3, 10, 100];
+        let deltas = [0.0, 0.5, 1.0, 5.0, 20.0, f64::INFINITY];
+        PdesCase {
+            l: ls[rng.below(ls.len() as u64) as usize],
+            nv: nvs[rng.below(nvs.len() as u64) as usize],
+            delta: deltas[rng.below(deltas.len() as u64) as usize],
+            rd: rng.uniform() < 0.25,
+            steps: 1 + rng.below(120) as usize,
+            seed: rng.next_u64(),
+        }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.steps > 1 {
+            out.push(PdesCase {
+                steps: self.steps / 2,
+                ..self.clone()
+            });
+        }
+        if self.l > 3 {
+            out.push(PdesCase {
+                l: (self.l / 2).max(3),
+                ..self.clone()
+            });
+        }
+        if self.nv > 1 {
+            out.push(PdesCase {
+                nv: 1,
+                ..self.clone()
+            });
+        }
+        out
+    }
+}
+
+impl PdesCase {
+    /// The mode this case describes.
+    pub fn mode(&self) -> repro::pdes::Mode {
+        use repro::pdes::Mode;
+        match (self.rd, self.delta.is_finite()) {
+            (false, false) => Mode::Conservative,
+            (false, true) => Mode::Windowed { delta: self.delta },
+            (true, false) => Mode::Rd,
+            (true, true) => Mode::WindowedRd { delta: self.delta },
+        }
+    }
+
+    /// The volume load.
+    pub fn load(&self) -> repro::pdes::VolumeLoad {
+        repro::pdes::VolumeLoad::Sites(self.nv)
+    }
+}

@@ -1,0 +1,197 @@
+//! Property-based tests of the PDES substrate invariants (own shrinking
+//! framework in `prop/`; proptest is unavailable offline).
+
+mod prop;
+
+use prop::{check, PdesCase};
+use repro::pdes::{Mode, RingPdes, VolumeLoad};
+use repro::rng::Rng;
+use repro::stats::horizon_frame;
+
+const CASES: u64 = 60;
+
+/// Causality (Eq. 1): when NV = 1 (every site is a border site) an updated
+/// PE was never ahead of either neighbour at decision time.
+#[test]
+fn causality_never_violated() {
+    check::<PdesCase, _>("causality", CASES, |c| {
+        if c.rd {
+            return Ok(()); // RD modes do not enforce Eq. 1 by design
+        }
+        let case = PdesCase { nv: 1, ..c.clone() };
+        let mut sim = RingPdes::new(case.l, case.load(), case.mode(), Rng::for_stream(case.seed, 0));
+        let mut mask = vec![false; case.l];
+        for step in 0..case.steps {
+            let before = sim.tau().to_vec();
+            sim.step_masked(Some(&mut mask));
+            for k in 0..case.l {
+                if mask[k] {
+                    let left = before[(k + case.l - 1) % case.l];
+                    let right = before[(k + 1) % case.l];
+                    if before[k] > left.min(right) + 1e-15 {
+                        return Err(format!("step {step}, PE {k}: updated while ahead"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Window (Eq. 3): an updated PE was inside the Δ-window at decision time.
+#[test]
+fn window_never_violated() {
+    check::<PdesCase, _>("window", CASES, |c| {
+        if !c.delta.is_finite() {
+            return Ok(());
+        }
+        let mut sim = RingPdes::new(c.l, c.load(), c.mode(), Rng::for_stream(c.seed, 0));
+        let mut mask = vec![false; c.l];
+        for step in 0..c.steps {
+            let before = sim.tau().to_vec();
+            let gvt = before.iter().copied().fold(f64::INFINITY, f64::min);
+            sim.step_masked(Some(&mut mask));
+            for k in 0..c.l {
+                if mask[k] && before[k] > c.delta + gvt + 1e-12 {
+                    return Err(format!("step {step}, PE {k}: updated outside window"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Local times never decrease, idle PEs never move.
+#[test]
+fn monotone_and_frozen_idle() {
+    check::<PdesCase, _>("monotone", CASES, |c| {
+        let mut sim = RingPdes::new(c.l, c.load(), c.mode(), Rng::for_stream(c.seed, 0));
+        let mut mask = vec![false; c.l];
+        for step in 0..c.steps {
+            let before = sim.tau().to_vec();
+            sim.step_masked(Some(&mut mask));
+            for k in 0..c.l {
+                let (b, a) = (before[k], sim.tau()[k]);
+                if a < b {
+                    return Err(format!("step {step}, PE {k}: time decreased"));
+                }
+                if !mask[k] && a != b {
+                    return Err(format!("step {step}, PE {k}: idle PE moved"));
+                }
+                if mask[k] && a <= b {
+                    return Err(format!("step {step}, PE {k}: updated PE did not advance"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Deadlock freedom: at least one PE (the global minimum) updates each step.
+#[test]
+fn progress_guaranteed() {
+    check::<PdesCase, _>("progress", CASES, |c| {
+        let mut sim = RingPdes::new(c.l, c.load(), c.mode(), Rng::for_stream(c.seed, 0));
+        for step in 0..c.steps {
+            if sim.step().n_updated == 0 {
+                return Err(format!("step {step}: no PE updated (deadlock)"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Δ = ∞ windowed mode is trajectory-identical to the unconstrained mode
+/// (the paper: "an infinite window is equivalent to the absence of the
+/// constraint").
+#[test]
+fn infinite_window_equals_unconstrained() {
+    check::<PdesCase, _>("inf_window", CASES, |c| {
+        let mk = |mode: Mode| {
+            let mut sim = RingPdes::new(c.l, c.load(), mode, Rng::for_stream(c.seed, 1));
+            for _ in 0..c.steps {
+                sim.step();
+            }
+            sim.tau().to_vec()
+        };
+        // Mode::Windowed { delta: inf } normalizes to enforces_window() = false,
+        // so both run the identical decision sequence and RNG stream.
+        let a = mk(Mode::Conservative);
+        let b = mk(Mode::Windowed {
+            delta: f64::INFINITY,
+        });
+        if a != b {
+            return Err("trajectories diverged".into());
+        }
+        Ok(())
+    });
+}
+
+/// The convex slow/fast decomposition (Eqs. 17-18) holds on every visited
+/// horizon, and w_a ≤ w (Jensen).
+#[test]
+fn decomposition_identities() {
+    check::<PdesCase, _>("decomposition", CASES, |c| {
+        let mut sim = RingPdes::new(c.l, c.load(), c.mode(), Rng::for_stream(c.seed, 2));
+        for step in 0..c.steps {
+            let out = sim.step();
+            let f = horizon_frame(sim.tau(), out.n_updated);
+            let w2_rec = f.f_s * f.w2_s + (1.0 - f.f_s) * f.w2_f;
+            if (f.w2 - w2_rec).abs() > 1e-9 * f.w2.max(1.0) {
+                return Err(format!("step {step}: Eq. 17 violated"));
+            }
+            let wa_rec = f.f_s * f.wa_s + (1.0 - f.f_s) * f.wa_f;
+            if (f.wa - wa_rec).abs() > 1e-9 * f.wa.max(1.0) {
+                return Err(format!("step {step}: Eq. 18 violated"));
+            }
+            if f.wa > f.w() + 1e-12 {
+                return Err(format!("step {step}: w_a > w"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Δ = 0 after desynchronization: only global-minimum PEs may update.
+#[test]
+fn delta_zero_minimum_only() {
+    check::<PdesCase, _>("delta0", CASES, |c| {
+        let mode = if c.rd {
+            Mode::WindowedRd { delta: 0.0 }
+        } else {
+            Mode::Windowed { delta: 0.0 }
+        };
+        let mut sim = RingPdes::new(c.l, VolumeLoad::Sites(1), mode, Rng::for_stream(c.seed, 3));
+        sim.step(); // desynchronize
+        let mut mask = vec![false; c.l];
+        for step in 0..c.steps.min(30) {
+            let before = sim.tau().to_vec();
+            let gvt = before.iter().copied().fold(f64::INFINITY, f64::min);
+            sim.step_masked(Some(&mut mask));
+            for k in 0..c.l {
+                if mask[k] && before[k] > gvt {
+                    return Err(format!("step {step}: non-minimum PE updated at Δ=0"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Determinism: the same seed replays the same trajectory.
+#[test]
+fn deterministic_replay() {
+    check::<PdesCase, _>("determinism", 20, |c| {
+        let run = || {
+            let mut sim = RingPdes::new(c.l, c.load(), c.mode(), Rng::for_stream(c.seed, 4));
+            for _ in 0..c.steps {
+                sim.step();
+            }
+            sim.tau().to_vec()
+        };
+        if run() != run() {
+            return Err("replay diverged".into());
+        }
+        Ok(())
+    });
+}
