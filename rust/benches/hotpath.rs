@@ -7,7 +7,7 @@
 use std::time::Duration;
 
 use repro::bench::Bencher;
-use repro::pdes::{InstrumentedRing, LatticePdes, Mode, RingPdes, Topology, VolumeLoad};
+use repro::pdes::{BatchPdes, InstrumentedRing, LatticePdes, Mode, RingPdes, Topology, VolumeLoad};
 use repro::rng::Rng;
 use repro::stats::horizon_frame;
 
@@ -54,6 +54,60 @@ fn main() {
         b.report(name, l as f64, || {
             std::hint::black_box(sim.step());
         });
+    }
+
+    // ring vs batch: the acceptance bar is batched per-step-per-PE
+    // throughput at parity or better than the serial ring for B >= 8
+    // (items = B * L PE-steps per batched step)
+    for rows in [1usize, 8, 32] {
+        let mut sim = BatchPdes::with_streams(
+            Topology::Ring { l: 1000 },
+            VolumeLoad::Sites(1),
+            Mode::Conservative,
+            rows,
+            1,
+            0,
+        );
+        for _ in 0..500 {
+            sim.step();
+        }
+        b.report(
+            &format!("batch_step/ring_L1000_NV1_B{rows}"),
+            (1000 * rows) as f64,
+            || {
+                sim.step();
+                std::hint::black_box(sim.counts()[0]);
+            },
+        );
+    }
+
+    // per-topology step throughput at B = 8 (items = B * L PE-steps)
+    for (name, topo) in [
+        ("ring_L1024", Topology::Ring { l: 1024 }),
+        ("kring2_L1024", Topology::KRing { l: 1024, k: 2 }),
+        ("smallworld_L1024", Topology::SmallWorld { l: 1024, extra: 256, seed: 9 }),
+        ("square32", Topology::Square { side: 32 }),
+        ("cubic10", Topology::Cubic { side: 10 }),
+    ] {
+        let mut sim = BatchPdes::with_streams(
+            topo,
+            VolumeLoad::Sites(1),
+            Mode::Windowed { delta: 10.0 },
+            8,
+            2,
+            0,
+        );
+        for _ in 0..300 {
+            sim.step();
+        }
+        b.report(
+            &format!("batch_step/{name}_B8"),
+            (topo.len() * 8) as f64,
+            || {
+                sim.step();
+                std::hint::black_box(sim.counts()[0]);
+            },
+        );
     }
 
     // instrumented ring (mean-field counters) — the overhead must be known

@@ -1,11 +1,23 @@
-//! Native-path campaigns: ensembles of ring simulations aggregated into
-//! curves (figures 2-4, 7-10) or steady-state estimates (figures 5-6, 9).
+//! Native-path campaigns: ensembles of PDES trials aggregated into curves
+//! (figures 2-4, 7-10) or steady-state estimates (figures 5-6, 9).
+//!
+//! Since the batched-engine refactor, every ensemble runs through
+//! [`BatchPdes`]: each worker shard packs its contiguous trial-id range
+//! into `(B, L)` batches of at most [`BATCH_ROWS`] replicas and advances
+//! them struct-of-arrays, instead of one-ring-per-trial.  Trial `i` still
+//! uses the stream `(seed, i)`, so results are identical to the serial
+//! path (bit-identical per trial; ensemble moments up to floating-point
+//! accumulation order) and independent of worker scheduling.
 
-use crate::pdes::{Mode, RingPdes, VolumeLoad};
-use crate::rng::Rng;
+use crate::pdes::{BatchPdes, Mode, Topology, VolumeLoad};
 use crate::stats::{horizon_frame, EnsembleSeries, OnlineMoments};
 
 use super::pool::map_shards;
+
+/// Replica rows advanced per `BatchPdes` struct: big enough to amortize
+/// the per-step pass, small enough that a (B, L) block of the largest
+/// campaign rings stays cache-resident.
+pub const BATCH_ROWS: usize = 64;
 
 /// One campaign parameter point.
 #[derive(Clone, Copy, Debug)]
@@ -25,19 +37,35 @@ pub struct RunSpec {
     pub seed: u64,
 }
 
-/// Run the ensemble and collect full ⟨·(t)⟩ curves.
+/// Run the ensemble on the paper's ring and collect full ⟨·(t)⟩ curves.
 pub fn run_ensemble(spec: &RunSpec) -> EnsembleSeries {
+    run_topology_ensemble(Topology::Ring { l: spec.l }, spec)
+}
+
+/// Run the ensemble on an arbitrary topology and collect ⟨·(t)⟩ curves.
+pub fn run_topology_ensemble(topology: Topology, spec: &RunSpec) -> EnsembleSeries {
+    assert_eq!(topology.len(), spec.l, "RunSpec.l must match the topology");
+    // built once per parameter point; shared (read-only) by every batch
+    let nbr = topology.neighbour_table();
     map_shards(
         spec.trials,
         |range| {
             let mut series = EnsembleSeries::new(spec.steps);
-            for trial in range {
-                let rng = Rng::for_stream(spec.seed, trial);
-                let mut sim = RingPdes::new(spec.l, spec.load, spec.mode, rng);
+            let mut start = range.start;
+            while start < range.end {
+                let rows = ((range.end - start) as usize).min(BATCH_ROWS);
+                let mut sim = BatchPdes::with_table(
+                    topology,
+                    nbr.clone(),
+                    spec.load,
+                    spec.mode,
+                    BatchPdes::trial_streams(spec.seed, start, rows),
+                );
                 for t in 0..spec.steps {
-                    let out = sim.step();
-                    series.push_frame(t, &horizon_frame(sim.tau(), out.n_updated));
+                    sim.step();
+                    series.push_batch_rows(t, sim.tau(), sim.pes(), sim.counts());
                 }
+                start += rows as u64;
             }
             series
         },
@@ -67,13 +95,27 @@ pub struct SteadyStats {
     pub gvt_rate: f64,
 }
 
-/// Warm up each trial for `warm` steps, then measure `measure` steps.
-///
-/// Cheaper than [`run_ensemble`] for plateau sweeps: no per-step series is
-/// retained, only time-averaged tail statistics.  Each trial contributes
-/// its time-averaged values once; errors are ensemble standard errors
-/// (trials are independent, unlike consecutive steps).
+/// Warm up each trial for `warm` steps, then measure `measure` steps, on
+/// the paper's ring.
 pub fn steady_state(spec: &RunSpec, warm: usize, measure: usize) -> SteadyStats {
+    steady_state_topology(Topology::Ring { l: spec.l }, spec, warm, measure)
+}
+
+/// [`steady_state`] on an arbitrary topology.
+///
+/// Cheaper than [`run_topology_ensemble`] for plateau sweeps: no per-step
+/// series is retained, only time-averaged tail statistics.  Each trial
+/// contributes its time-averaged values once; errors are ensemble standard
+/// errors (trials are independent, unlike consecutive steps).
+pub fn steady_state_topology(
+    topology: Topology,
+    spec: &RunSpec,
+    warm: usize,
+    measure: usize,
+) -> SteadyStats {
+    assert_eq!(topology.len(), spec.l, "RunSpec.l must match the topology");
+    // built once per parameter point; shared (read-only) by every batch
+    let nbr = topology.neighbour_table();
     let acc = map_shards(
         spec.trials,
         |range| {
@@ -82,26 +124,40 @@ pub fn steady_state(spec: &RunSpec, warm: usize, measure: usize) -> SteadyStats 
             let mut w = OnlineMoments::new();
             let mut wa = OnlineMoments::new();
             let mut rate = OnlineMoments::new();
-            for trial in range {
-                let rng = Rng::for_stream(spec.seed, trial);
-                let mut sim = RingPdes::new(spec.l, spec.load, spec.mode, rng);
+            let mut start = range.start;
+            while start < range.end {
+                let rows = ((range.end - start) as usize).min(BATCH_ROWS);
+                let mut sim = BatchPdes::with_table(
+                    topology,
+                    nbr.clone(),
+                    spec.load,
+                    spec.mode,
+                    BatchPdes::trial_streams(spec.seed, start, rows),
+                );
                 for _ in 0..warm {
                     sim.step();
                 }
-                let gvt0 = sim.global_virtual_time();
-                let (mut su, mut sw, mut swa) = (0.0, 0.0, 0.0);
+                let gvt0: Vec<f64> = (0..rows).map(|r| sim.global_virtual_time_row(r)).collect();
+                let mut su = vec![0.0f64; rows];
+                let mut sw = vec![0.0f64; rows];
+                let mut swa = vec![0.0f64; rows];
                 for _ in 0..measure {
-                    let out = sim.step();
-                    let f = horizon_frame(sim.tau(), out.n_updated);
-                    su += f.u;
-                    sw += f.w();
-                    swa += f.wa;
+                    sim.step();
+                    for row in 0..rows {
+                        let f = horizon_frame(sim.tau_row(row), sim.counts()[row] as usize);
+                        su[row] += f.u;
+                        sw[row] += f.w();
+                        swa[row] += f.wa;
+                    }
                 }
                 let m = measure as f64;
-                u.push(su / m);
-                w.push(sw / m);
-                wa.push(swa / m);
-                rate.push((sim.global_virtual_time() - gvt0) / m);
+                for row in 0..rows {
+                    u.push(su[row] / m);
+                    w.push(sw[row] / m);
+                    wa.push(swa[row] / m);
+                    rate.push((sim.global_virtual_time_row(row) - gvt0[row]) / m);
+                }
+                start += rows as u64;
             }
             (u, w, wa, rate)
         },
@@ -156,8 +212,6 @@ mod tests {
     #[test]
     fn deterministic_regardless_of_workers() {
         use crate::coordinator::pool::map_shards_with;
-        use crate::rng::Rng;
-        use crate::stats::horizon_frame;
         let s = spec(16, Mode::Windowed { delta: 5.0 }, 6, 20);
         let run = |workers: usize| {
             let series = map_shards_with(
@@ -165,13 +219,12 @@ mod tests {
                 workers,
                 |range| {
                     let mut series = EnsembleSeries::new(s.steps);
-                    for trial in range {
-                        let rng = Rng::for_stream(s.seed, trial);
-                        let mut sim = RingPdes::new(s.l, s.load, s.mode, rng);
-                        for t in 0..s.steps {
-                            let out = sim.step();
-                            series.push_frame(t, &horizon_frame(sim.tau(), out.n_updated));
-                        }
+                    let rows = (range.end - range.start) as usize;
+                    let mut sim =
+                        BatchPdes::with_streams(Topology::Ring { l: s.l }, s.load, s.mode, rows, s.seed, range.start);
+                    for t in 0..s.steps {
+                        sim.step();
+                        series.push_batch_rows(t, sim.tau(), sim.pes(), sim.counts());
                     }
                     series
                 },
@@ -191,6 +244,45 @@ mod tests {
     }
 
     #[test]
+    fn batched_ensemble_matches_serial_trials() {
+        // one 6-row batch must reproduce six serial B = 1 runs trial-for-trial
+        let s = spec(24, Mode::Windowed { delta: 4.0 }, 6, 30);
+        let batched = run_ensemble(&s);
+        let serial = map_shards(
+            s.trials,
+            |range| {
+                let mut series = EnsembleSeries::new(s.steps);
+                for trial in range {
+                    let mut sim = BatchPdes::with_streams(
+                        Topology::Ring { l: s.l },
+                        s.load,
+                        s.mode,
+                        1,
+                        s.seed,
+                        trial,
+                    );
+                    for t in 0..s.steps {
+                        sim.step();
+                        series.push_batch_rows(t, sim.tau(), sim.pes(), sim.counts());
+                    }
+                }
+                series
+            },
+            |mut a, b| {
+                a.merge(&b);
+                a
+            },
+        )
+        .unwrap();
+        for lane in [Lane::U, Lane::W2, Lane::Min, Lane::Max] {
+            for t in [0usize, 10, 29] {
+                let (x, y) = (batched.mean(t, lane), serial.mean(t, lane));
+                assert!((x - y).abs() < 1e-12, "{lane:?} t={t}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
     fn steady_state_utilization_nv1() {
         let st = steady_state(&spec(128, Mode::Conservative, 8, 0), 1500, 1500);
         assert!((0.22..0.30).contains(&st.u), "u = {}", st.u);
@@ -207,5 +299,14 @@ mod tests {
         let tight = steady_state(&spec(64, Mode::Windowed { delta: 0.5 }, 8, 0), 500, 500);
         assert!(tight.u < open.u, "{} !< {}", tight.u, open.u);
         assert!(tight.w < open.w);
+    }
+
+    #[test]
+    fn topology_steady_state_orders_utilization() {
+        // denser causality graphs wait more: ring > k-ring(2) at N_V = 1
+        let s = spec(48, Mode::Conservative, 6, 0);
+        let ring = steady_state_topology(Topology::Ring { l: 48 }, &s, 400, 600);
+        let k2 = steady_state_topology(Topology::KRing { l: 48, k: 2 }, &s, 400, 600);
+        assert!(ring.u > k2.u, "ring {} !> kring2 {}", ring.u, k2.u);
     }
 }

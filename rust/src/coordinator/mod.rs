@@ -16,7 +16,10 @@ mod jax;
 pub mod pool;
 mod spec;
 
-pub use campaign::{run_ensemble, steady_state, RunSpec, SteadyStats};
+pub use campaign::{
+    run_ensemble, run_topology_ensemble, steady_state, steady_state_topology, RunSpec,
+    SteadyStats, BATCH_ROWS,
+};
 pub use jax::{run_artifact_ensemble, run_with_executor as run_with_executor_bench, JaxRunSpec};
 pub use pool::{shard_trials, worker_count};
 pub use spec::CampaignSpec;

@@ -106,4 +106,54 @@ mod tests {
         let r = map_shards(0, |range| range.count(), |a, b| a + b);
         assert!(r.is_none() || r == Some(0));
     }
+
+    #[test]
+    fn merge_preserves_shard_order() {
+        // the fold must consume shards in trial order regardless of which
+        // thread finishes first — concatenation (non-commutative) proves it
+        for workers in [1usize, 2, 3, 7, 16] {
+            let ids = map_shards_with(
+                13,
+                workers,
+                |range| range.collect::<Vec<u64>>(),
+                |mut a, mut b| {
+                    a.append(&mut b);
+                    a
+                },
+            )
+            .unwrap();
+            assert_eq!(ids, (0..13).collect::<Vec<u64>>(), "workers = {workers}");
+        }
+    }
+
+    #[test]
+    fn moment_merge_is_worker_count_invariant() {
+        // ensemble moments must agree across worker counts to fp-merge
+        // accuracy: per-trial values are scheduling-independent and the
+        // fold is shard-ordered, so only Welford combination order differs
+        use crate::stats::OnlineMoments;
+        let job = |range: std::ops::Range<u64>| {
+            let mut m = OnlineMoments::new();
+            for trial in range {
+                // deterministic per-trial "measurement"
+                m.push(((trial * 2654435761) % 1000) as f64 / 1000.0);
+            }
+            m
+        };
+        let run = |workers: usize| {
+            map_shards_with(100, workers, job, |mut a, b| {
+                a.merge(&b);
+                a
+            })
+            .unwrap()
+        };
+        let (one, two, seven) = (run(1), run(2), run(7));
+        assert_eq!(one.count(), 100);
+        assert_eq!(two.count(), 100);
+        assert_eq!(seven.count(), 100);
+        for other in [&two, &seven] {
+            assert!((one.mean() - other.mean()).abs() < 1e-12);
+            assert!((one.variance() - other.variance()).abs() < 1e-10);
+        }
+    }
 }

@@ -5,9 +5,9 @@ use anyhow::{bail, Result};
 
 use crate::config::Config;
 use crate::output::Table;
-use crate::pdes::{Mode, VolumeLoad};
+use crate::pdes::{Mode, Topology, VolumeLoad};
 
-use super::campaign::{steady_state, RunSpec};
+use super::campaign::{steady_state_topology, RunSpec};
 
 /// A parsed campaign: the cartesian grid of (L, N_V, Δ) points.
 #[derive(Clone, Debug)]
@@ -16,6 +16,12 @@ pub struct CampaignSpec {
     pub name: String,
     /// Mode family: "conservative" | "windowed" | "rd" | "windowed_rd".
     pub mode: String,
+    /// PE graph: "ring" | "kring" | "smallworld" (cond-mat/0304617).
+    pub topology: String,
+    /// Neighbours per side for "kring".
+    pub k: usize,
+    /// Random symmetric long-range links for "smallworld".
+    pub links: usize,
     /// Ring sizes.
     pub ls: Vec<usize>,
     /// Volume loads.
@@ -39,6 +45,9 @@ impl CampaignSpec {
         let spec = Self {
             name: cfg.text(s, "name", "campaign"),
             mode: cfg.text(s, "mode", "conservative"),
+            topology: cfg.text(s, "topology", "ring"),
+            k: cfg.integer(s, "k", 2) as usize,
+            links: cfg.integer(s, "links", 0) as usize,
             ls: cfg.list(s, "l").iter().map(|&x| x as usize).collect(),
             nvs: cfg.list(s, "nv").iter().map(|&x| x as u64).collect(),
             deltas: cfg.list(s, "deltas"),
@@ -58,7 +67,25 @@ impl CampaignSpec {
             "conservative" | "windowed" | "rd" | "windowed_rd" => {}
             m => bail!("campaign: unknown mode {m:?}"),
         }
+        match spec.topology.as_str() {
+            "ring" | "kring" | "smallworld" => {}
+            t => bail!("campaign: unknown topology {t:?} (ring|kring|smallworld)"),
+        }
         Ok(spec)
+    }
+
+    /// The PE graph for ring size `l` (links are seeded from the campaign
+    /// seed so reruns rebuild the identical small-world graph).
+    pub fn topology_for(&self, l: usize) -> Topology {
+        match self.topology.as_str() {
+            "kring" => Topology::KRing { l, k: self.k },
+            "smallworld" => Topology::SmallWorld {
+                l,
+                extra: self.links,
+                seed: self.seed,
+            },
+            _ => Topology::Ring { l },
+        }
     }
 
     /// The (mode, load) for one grid point.
@@ -100,7 +127,8 @@ impl CampaignSpec {
             for &nv in nvs {
                 for &delta in deltas {
                     let (mode, load) = self.point(nv, delta);
-                    let st = steady_state(
+                    let st = steady_state_topology(
+                        self.topology_for(l),
                         &RunSpec {
                             l,
                             load,
@@ -153,6 +181,29 @@ measure = 50
             assert!(row[3] > 0.0 && row[3] <= 1.0);
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn topology_parsing_and_execution() {
+        let cfg = Config::parse(
+            "[campaign]\nmode = \"windowed\"\ntopology = \"kring\"\nk = 2\n\
+             l = [12]\nnv = [1]\ndeltas = [3]\ntrials = 4\nwarm = 30\nmeasure = 30",
+        )
+        .unwrap();
+        let spec = CampaignSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.topology, "kring");
+        assert_eq!(spec.topology_for(12), Topology::KRing { l: 12, k: 2 });
+        let dir = std::env::temp_dir().join("repro_campaign_topo_test");
+        let table = spec.execute(&dir).unwrap();
+        assert_eq!(table.len(), 1);
+        assert!(table.rows()[0][3] > 0.0 && table.rows()[0][3] <= 1.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_topology_rejected() {
+        let cfg = Config::parse("[campaign]\ntopology = \"torus\"\nl = [8]\nnv = [1]").unwrap();
+        assert!(CampaignSpec::from_config(&cfg).is_err());
     }
 
     #[test]

@@ -21,6 +21,7 @@ mod fig8;
 mod fig9;
 mod kpz;
 mod meanfield;
+mod topology;
 
 use std::path::PathBuf;
 
@@ -69,7 +70,7 @@ impl Ctx {
 /// All experiment names in run order.
 pub const ALL: &[&str] = &[
     "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "eq8",
-    "kpz", "meanfield", "appendix", "dims",
+    "kpz", "meanfield", "appendix", "dims", "topology",
 ];
 
 /// Run one experiment by name.
@@ -90,6 +91,7 @@ pub fn run(name: &str, ctx: &Ctx) -> Result<()> {
         "meanfield" => meanfield::run(ctx),
         "appendix" => appendix::run(ctx),
         "dims" => dims::run(ctx),
+        "topology" => topology::run(ctx),
         "all" => {
             for n in ALL {
                 println!("\n##### experiment {n} #####");

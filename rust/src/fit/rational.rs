@@ -128,7 +128,11 @@ pub fn extrapolate_to_zero(x: &[f64], y: &[f64]) -> Option<RationalFit> {
                 if !(0.0..=ymax * 1.05 + 1e-9).contains(&a0) {
                     continue;
                 }
-                if best.as_ref().is_none_or(|(s, _)| score < *s) {
+                let better = match &best {
+                    Some((s, _)) => score < *s,
+                    None => true,
+                };
+                if better {
                     best = Some((score, fit));
                 }
             }

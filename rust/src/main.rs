@@ -1,11 +1,12 @@
 //! `repro` — the Layer-3 coordinator CLI.
 //!
 //! Subcommands:
-//! * `repro fig2 .. fig11 | eq8 | kpz | meanfield | appendix | dims | all`
-//!   — regenerate a paper figure/table (§4 of DESIGN.md); `--quick` for
-//!   smoke runs, `--out DIR` for the TSV directory.
-//! * `repro run --l L --nv NV --delta D [--trials N] [--steps T]`
-//!   — one native campaign point, printing the ⟨u⟩/⟨w⟩ summary.
+//! * `repro fig2 .. fig11 | eq8 | kpz | meanfield | appendix | dims |
+//!   topology | all` — regenerate a paper figure/table (§4 of DESIGN.md);
+//!   `--quick` for smoke runs, `--out DIR` for the TSV directory.
+//! * `repro run --l L --nv NV --delta D [--trials N] [--steps T]
+//!   [--topology ring|kring|smallworld]` — one native campaign point on
+//!   any PE graph, printing the ⟨u⟩/⟨w⟩ summary.
 //! * `repro jax --l L [--trials N] [--steps T]`
 //!   — the same through the AOT JAX/Pallas artifacts (PJRT runtime).
 //! * `repro info` — artifact manifest + platform diagnostics.
@@ -13,9 +14,9 @@
 use anyhow::Result;
 
 use repro::cli::Args;
-use repro::coordinator::{run_artifact_ensemble, run_ensemble, JaxRunSpec, RunSpec};
+use repro::coordinator::{run_artifact_ensemble, run_topology_ensemble, JaxRunSpec, RunSpec};
 use repro::experiments::{self, Ctx};
-use repro::pdes::{Mode, VolumeLoad};
+use repro::pdes::{Mode, Topology, VolumeLoad};
 use repro::runtime::PdesRuntime;
 use repro::stats::Lane;
 
@@ -27,6 +28,23 @@ fn mode_from(args: &Args) -> Result<Mode> {
         (false, true) => Mode::Windowed { delta },
         (true, false) => Mode::Rd,
         (true, true) => Mode::WindowedRd { delta },
+    })
+}
+
+fn topology_from(args: &Args, l: usize) -> Result<Topology> {
+    let name = args.opt("topology", "ring");
+    Ok(match name.as_str() {
+        "ring" => Topology::Ring { l },
+        "kring" => Topology::KRing {
+            l,
+            k: args.opt_u64("k", 2)? as usize,
+        },
+        "smallworld" => Topology::SmallWorld {
+            l,
+            extra: args.opt_u64("links", (l / 4) as u64)? as usize,
+            seed: args.opt_u64("seed", 20020601)?,
+        },
+        other => anyhow::bail!("--topology {other:?}: expected ring|kring|smallworld"),
     })
 }
 
@@ -58,8 +76,9 @@ fn main() -> Result<()> {
     match args.command.as_str() {
         "" | "help" => {
             println!(
-                "usage: repro <fig2..fig11|eq8|kpz|meanfield|appendix|dims|all> [--quick] [--out DIR]\n\
+                "usage: repro <fig2..fig11|eq8|kpz|meanfield|appendix|dims|topology|all> [--quick] [--out DIR]\n\
                  \x20      repro run  --l L --nv NV --delta D [--rd] [--trials N] [--steps T] [--seed S]\n\
+                 \x20                 [--topology ring|kring|smallworld] [--k K] [--links N]\n\
                  \x20      repro jax  --l L --nv NV --delta D [--trials N] [--steps T] [--artifacts DIR]\n\
                  \x20      repro campaign --config FILE [--out DIR]\n\
                  \x20      repro info [--artifacts DIR]"
@@ -100,8 +119,9 @@ fn main() -> Result<()> {
                 steps: args.opt_u64("steps", 1000)? as usize,
                 seed: args.opt_u64("seed", 20020601)?,
             };
-            println!("native campaign: {spec:?}");
-            let series = run_ensemble(&spec);
+            let topology = topology_from(&args, spec.l)?;
+            println!("native campaign on {}: {spec:?}", topology.tag());
+            let series = run_topology_ensemble(topology, &spec);
             print_summary(&series);
             Ok(())
         }

@@ -1,0 +1,636 @@
+//! The batched, topology-generic PDES engine.
+//!
+//! `BatchPdes` advances `B` *independent* replicas of an L-PE simulation in
+//! one struct-of-arrays pass: every per-PE array is a flat row-major
+//! `(B, L)` block, mirroring the L2 artifact layout in `runtime/`
+//! (`ChunkResult::tau` is the same shape).  Trial ensembles therefore run
+//! batched through one struct instead of one-ring-per-call, the decision
+//! pass stays branch-light and cache-friendly, and every replica row is
+//! bit-identical to a serial [`super::RingPdes`]-style run under the same
+//! RNG stream — `RingPdes` itself is the `B = 1` ring view over this
+//! engine.
+//!
+//! Event semantics are those of the paper (see `ring.rs` module docs),
+//! generalized from the ring to any [`Topology`]: each PE holds one
+//! pending event — interior (no check), a border event facing one
+//! neighbour *slot* (one-sided check), or, at N_V = 1, a border event
+//! facing every neighbour.  Blocked events persist until executed.
+//!
+//! RNG discipline (load-bearing for replay / golden tests): per replica
+//! row, draws happen in PE order; an updating PE first redraws its pending
+//! event (only when N_V > 1 and finite) and then draws its exponential
+//! time increment.  Idle PEs draw nothing.  This is exactly the serial
+//! ring's draw order, so a batch row replays a serial trajectory.
+
+use super::topology::{NeighbourTable, Topology};
+use super::{Mode, VolumeLoad};
+use crate::rng::Rng;
+
+/// Pending-event encoding of one PE: no check needed this event.
+pub const PEND_INTERIOR: u8 = 0;
+/// Pending-event encoding: check every neighbour (the N_V = 1 case).
+pub const PEND_ALL: u8 = u8::MAX;
+// 1..=degree encode a border event facing neighbour slot `value - 1`.
+
+/// Draw a fresh pending event for a PE with `z` neighbour slots.
+///
+/// Consumes at most one uniform draw, and none at all in the N_V = 1 and
+/// N_V → ∞ limits — identical draw behaviour to `ring::draw_pending`
+/// (which is the `z = 2` case, kept verbatim for bit-compatibility).
+#[inline]
+pub(crate) fn draw_pending_slot(rng: &mut Rng, p_side: f64, nv1: bool, z: usize) -> u8 {
+    if nv1 {
+        return PEND_ALL;
+    }
+    if p_side <= 0.0 {
+        return PEND_INTERIOR;
+    }
+    let u = rng.uniform();
+    if z == 2 {
+        // the ring's exact comparison chain (bit-compatible with the
+        // historical `ring::draw_pending`)
+        return if u < p_side {
+            1
+        } else if u < 2.0 * p_side {
+            2
+        } else {
+            PEND_INTERIOR
+        };
+    }
+    // Generic degree: each neighbour slot is faced with probability 1/N_V
+    // (total border probability z/N_V, capped at 1 in the N_V < z regime
+    // where the per-site picture degenerates to all-border), and the slot
+    // choice is uniform over z — every slot reachable, left/right
+    // symmetric, for any N_V.
+    let border = (z as f64 * p_side).min(1.0);
+    if u < border {
+        (((u / border) * z as f64) as usize).min(z - 1) as u8 + 1
+    } else {
+        PEND_INTERIOR
+    }
+}
+
+/// `B` independent replicas of an L-PE simulation on one [`Topology`],
+/// advanced together in a flat `(B, L)` struct-of-arrays layout.
+pub struct BatchPdes {
+    rows: usize,
+    pes: usize,
+    topology: Topology,
+    nbr: NeighbourTable,
+    /// Simulated-time horizons, row-major `(B, L)`.
+    tau: Vec<f64>,
+    /// Decision-pass output horizons (swapped in at the end of a step).
+    next: Vec<f64>,
+    /// Pending-event classes, row-major `(B, L)`.
+    pend: Vec<u8>,
+    /// Decision scratch for one row (§Perf: split passes, reused per row).
+    ok: Vec<bool>,
+    /// Per-row updated-PE count of the latest step.
+    counts: Vec<u32>,
+    mode: Mode,
+    p_side: f64,
+    nv1: bool,
+    /// One independent generator per replica row.
+    rngs: Vec<Rng>,
+    t: u64,
+    /// Fast-path flag: ring topology at N_V = 1 (every check two-sided).
+    ring_nv1: bool,
+}
+
+impl BatchPdes {
+    /// A fresh batch: every row synchronized at τ = 0 (the paper's initial
+    /// condition), row `i` driven by `rngs[i]`.  Row count = `rngs.len()`.
+    pub fn new(topology: Topology, load: VolumeLoad, mode: Mode, rngs: Vec<Rng>) -> Self {
+        let nbr = topology.neighbour_table();
+        Self::with_table(topology, nbr, load, mode, rngs)
+    }
+
+    /// [`Self::new`] with a prebuilt neighbour table — lets the coordinator
+    /// build the graph (small-world link sampling included) once per
+    /// parameter point and share it across trial batches.
+    pub fn with_table(
+        topology: Topology,
+        nbr: NeighbourTable,
+        load: VolumeLoad,
+        mode: Mode,
+        mut rngs: Vec<Rng>,
+    ) -> Self {
+        let pes = topology.len();
+        assert!(pes >= 3, "topology needs at least 3 PEs");
+        assert_eq!(nbr.pes(), pes, "neighbour table does not match topology");
+        let rows = rngs.len();
+        assert!(rows >= 1, "batch needs at least one replica row");
+        let (p_side, nv1) = match load {
+            VolumeLoad::Sites(1) => (1.0, true),
+            VolumeLoad::Sites(nv) => {
+                assert!(nv >= 1, "N_V must be >= 1");
+                (1.0 / nv as f64, false)
+            }
+            VolumeLoad::Infinite => (0.0, false),
+        };
+        assert!(
+            nbr.max_degree() < PEND_ALL as usize,
+            "PE degree must fit the one-byte pending-slot encoding"
+        );
+        let mut pend = vec![PEND_INTERIOR; rows * pes];
+        if mode.enforces_nn() {
+            for (row, rng) in rngs.iter_mut().enumerate() {
+                for k in 0..pes {
+                    pend[row * pes + k] = draw_pending_slot(rng, p_side, nv1, nbr.degree(k));
+                }
+            }
+        }
+        // The two-sided fast path hard-codes ring adjacency, so it must be
+        // earned from the *table* actually supplied, not just the enum —
+        // a custom table paired with a Ring tag falls back to the generic
+        // (table-honouring) pass instead of silently using the wrong graph.
+        let ring_nv1 = nv1
+            && matches!(topology, Topology::Ring { .. })
+            && (0..pes).all(|k| {
+                let nb = nbr.neighbours(k);
+                nb.len() == 2
+                    && nb[0] == ((k + pes - 1) % pes) as u32
+                    && nb[1] == ((k + 1) % pes) as u32
+            });
+        Self {
+            rows,
+            pes,
+            topology,
+            nbr,
+            tau: vec![0.0; rows * pes],
+            next: vec![0.0; rows * pes],
+            pend,
+            ok: vec![false; pes],
+            counts: vec![0; rows],
+            mode,
+            p_side,
+            nv1,
+            rngs,
+            t: 0,
+            ring_nv1,
+        }
+    }
+
+    /// The per-trial RNG streams for trial ids `first .. first + rows`
+    /// (row `i` → stream `(seed, first + i)`) — the single source of the
+    /// coordinator's trial-stream convention, so batched trials reproduce
+    /// serial trials exactly.
+    pub fn trial_streams(seed: u64, first: u64, rows: usize) -> Vec<Rng> {
+        (0..rows as u64).map(|i| Rng::for_stream(seed, first + i)).collect()
+    }
+
+    /// Convenience constructor over [`Self::trial_streams`].
+    pub fn with_streams(
+        topology: Topology,
+        load: VolumeLoad,
+        mode: Mode,
+        rows: usize,
+        seed: u64,
+        first: u64,
+    ) -> Self {
+        Self::new(topology, load, mode, Self::trial_streams(seed, first, rows))
+    }
+
+    /// Number of replica rows B.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of PEs per replica L.
+    #[inline]
+    pub fn pes(&self) -> usize {
+        self.pes
+    }
+
+    /// The topology shared by every row.
+    #[inline]
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+
+    /// The shared neighbour table (diagnostic / test access).
+    #[inline]
+    pub fn neighbour_table(&self) -> &NeighbourTable {
+        &self.nbr
+    }
+
+    /// The update mode.
+    #[inline]
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    /// The parallel step index t.
+    #[inline]
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    /// The full `(B, L)` horizon block, row-major.
+    #[inline]
+    pub fn tau(&self) -> &[f64] {
+        &self.tau
+    }
+
+    /// Horizon of one replica row.
+    #[inline]
+    pub fn tau_row(&self, row: usize) -> &[f64] {
+        &self.tau[row * self.pes..(row + 1) * self.pes]
+    }
+
+    /// Raw pending-event classes of one row (encoding per module docs).
+    #[inline]
+    pub fn pending_row(&self, row: usize) -> &[u8] {
+        &self.pend[row * self.pes..(row + 1) * self.pes]
+    }
+
+    /// Per-row updated-PE counts of the latest step (`u_row = counts[row] / L`).
+    #[inline]
+    pub fn counts(&self) -> &[u32] {
+        &self.counts
+    }
+
+    /// Global virtual time of one row: min_k τ_k (the window anchor, Eq. 3).
+    pub fn global_virtual_time_row(&self, row: usize) -> f64 {
+        let mut gvt = f64::INFINITY;
+        for &x in self.tau_row(row) {
+            if x < gvt {
+                gvt = x;
+            }
+        }
+        gvt
+    }
+
+    /// Replace one row's horizon (custom initial conditions / resync).
+    pub fn set_tau_row(&mut self, row: usize, tau: &[f64]) {
+        assert_eq!(tau.len(), self.pes);
+        self.tau[row * self.pes..(row + 1) * self.pes].copy_from_slice(tau);
+    }
+
+    /// Synchronize one row to its mean virtual time (the paper's "setting
+    /// all local simulated times to one value at t_s").
+    pub fn synchronize_row(&mut self, row: usize) {
+        let slice = &mut self.tau[row * self.pes..(row + 1) * self.pes];
+        let mean = slice.iter().sum::<f64>() / slice.len() as f64;
+        slice.fill(mean);
+    }
+
+    /// One parallel step of every row; optionally records the `(B, L)`
+    /// per-PE update mask.  Per-row updated counts land in [`Self::counts`].
+    ///
+    /// §Perf: the decision pass is separated from the RNG/update pass so
+    /// the compare/min work vectorizes; rows share one decision scratch
+    /// buffer and one read-only neighbour table, and the ring + N_V = 1
+    /// configuration takes a branch-free two-sided fast path.
+    pub fn step_masked(&mut self, mut mask: Option<&mut [bool]>) {
+        let rows = self.rows;
+        let pes = self.pes;
+        if let Some(m) = mask.as_deref_mut() {
+            assert_eq!(m.len(), rows * pes);
+        }
+        let enforce_nn = self.mode.enforces_nn();
+        let enforce_win = self.mode.enforces_window();
+        let delta = self.mode.delta();
+        let (p_side, nv1) = (self.p_side, self.nv1);
+        let redraw = enforce_nn && !nv1;
+        // the two-sided fast path only applies when Eq. 1 is enforced at
+        // all — RD modes at N_V = 1 must skip the neighbour check entirely
+        let ring_fast = enforce_nn && self.ring_nv1;
+
+        let Self {
+            tau,
+            next,
+            pend,
+            ok,
+            counts,
+            rngs,
+            nbr,
+            t,
+            ..
+        } = self;
+
+        for row in 0..rows {
+            let base = row * pes;
+
+            // Window edge from the row's frozen horizon; +inf when Eq. 3
+            // is off, computed once per row per step.
+            let edge = if enforce_win {
+                let mut gvt = f64::INFINITY;
+                for &x in &tau[base..base + pes] {
+                    if x < gvt {
+                        gvt = x;
+                    }
+                }
+                delta + gvt
+            } else {
+                f64::INFINITY
+            };
+
+            // --- decision pass (no RNG: the pending event is already fixed)
+            if ring_fast {
+                // N_V = 1 ring: two-sided check for every PE — branch-free
+                let row_tau = &tau[base..base + pes];
+                ok[0] = row_tau[0] <= row_tau[pes - 1].min(row_tau[1]) && row_tau[0] <= edge;
+                for k in 1..pes - 1 {
+                    let two_sided = row_tau[k] <= row_tau[k - 1].min(row_tau[k + 1]);
+                    ok[k] = two_sided & (row_tau[k] <= edge);
+                }
+                ok[pes - 1] =
+                    row_tau[pes - 1] <= row_tau[pes - 2].min(row_tau[0]) && row_tau[pes - 1] <= edge;
+            } else if enforce_nn {
+                let row_tau = &tau[base..base + pes];
+                for k in 0..pes {
+                    let tk = row_tau[k];
+                    let nn_ok = match pend[base + k] {
+                        PEND_INTERIOR => true,
+                        PEND_ALL => {
+                            let mut fine = true;
+                            for &j in nbr.neighbours(k) {
+                                fine &= tk <= row_tau[j as usize];
+                            }
+                            fine
+                        }
+                        slot => {
+                            let j = nbr.neighbours(k)[(slot - 1) as usize];
+                            tk <= row_tau[j as usize]
+                        }
+                    };
+                    ok[k] = nn_ok & (tk <= edge);
+                }
+            } else if enforce_win {
+                for k in 0..pes {
+                    ok[k] = tau[base + k] <= edge;
+                }
+            } else {
+                ok.fill(true);
+            }
+
+            // --- update pass: draws only where needed, in PE order
+            let rng = &mut rngs[row];
+            let mut n_up = 0u32;
+            for k in 0..pes {
+                let i = base + k;
+                if ok[k] {
+                    n_up += 1;
+                    if redraw {
+                        pend[i] = draw_pending_slot(rng, p_side, nv1, nbr.degree(k));
+                    }
+                    next[i] = tau[i] + rng.exponential();
+                } else {
+                    next[i] = tau[i];
+                }
+            }
+            counts[row] = n_up;
+
+            if let Some(m) = mask.as_deref_mut() {
+                m[base..base + pes].copy_from_slice(&ok[..]);
+            }
+        }
+
+        std::mem::swap(tau, next);
+        *t += 1;
+    }
+
+    /// One parallel step (no mask capture).
+    #[inline]
+    pub fn step(&mut self) {
+        self.step_masked(None);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pdes::{Mode, RingPdes, Topology, VolumeLoad};
+    use crate::rng::Rng;
+
+    fn batch(topo: Topology, load: VolumeLoad, mode: Mode, rows: usize, seed: u64) -> BatchPdes {
+        BatchPdes::with_streams(topo, load, mode, rows, seed, 0)
+    }
+
+    #[test]
+    fn first_step_everyone_updates_on_every_topology() {
+        for topo in [
+            Topology::Ring { l: 12 },
+            Topology::KRing { l: 12, k: 2 },
+            Topology::SmallWorld { l: 12, extra: 4, seed: 5 },
+            Topology::Square { side: 4 },
+            Topology::Cubic { side: 3 },
+        ] {
+            let mut sim = batch(topo, VolumeLoad::Sites(1), Mode::Conservative, 3, 1);
+            sim.step();
+            for row in 0..3 {
+                assert_eq!(sim.counts()[row] as usize, topo.len(), "{topo:?} row {row}");
+            }
+        }
+    }
+
+    #[test]
+    fn rows_are_independent_replicas() {
+        // a 3-row batch must equal three B = 1 batches on the same streams
+        let topo = Topology::KRing { l: 16, k: 2 };
+        let mut all = batch(topo, VolumeLoad::Sites(4), Mode::Windowed { delta: 3.0 }, 3, 9);
+        let mut singles: Vec<BatchPdes> = (0..3u64)
+            .map(|i| {
+                BatchPdes::new(
+                    topo,
+                    VolumeLoad::Sites(4),
+                    Mode::Windowed { delta: 3.0 },
+                    vec![Rng::for_stream(9, i)],
+                )
+            })
+            .collect();
+        for _ in 0..150 {
+            all.step();
+            for s in singles.iter_mut() {
+                s.step();
+            }
+        }
+        for (row, s) in singles.iter().enumerate() {
+            assert_eq!(all.tau_row(row), s.tau_row(0), "row {row} diverged");
+            assert_eq!(all.pending_row(row), s.pending_row(0), "row {row} pend diverged");
+        }
+    }
+
+    #[test]
+    fn ring_row_matches_ring_pdes_bit_identically() {
+        // acceptance criterion: B = 1 batch ≡ RingPdes under a fixed seed
+        let mut b = batch(
+            Topology::Ring { l: 32 },
+            VolumeLoad::Sites(10),
+            Mode::Windowed { delta: 2.0 },
+            1,
+            9,
+        );
+        let mut r = RingPdes::new(
+            32,
+            VolumeLoad::Sites(10),
+            Mode::Windowed { delta: 2.0 },
+            Rng::for_stream(9, 0),
+        );
+        for _ in 0..200 {
+            b.step();
+            r.step();
+            assert_eq!(b.tau_row(0), r.tau());
+        }
+    }
+
+    #[test]
+    fn kring1_trajectory_equals_ring_trajectory() {
+        // KRing { k: 1 } builds the identical neighbour table, so the whole
+        // trajectory (including pending redraws) must match the ring's.
+        let mk = |topo| {
+            let mut sim = batch(topo, VolumeLoad::Sites(6), Mode::Conservative, 2, 4);
+            for _ in 0..120 {
+                sim.step();
+            }
+            sim.tau().to_vec()
+        };
+        assert_eq!(
+            mk(Topology::Ring { l: 10 }),
+            mk(Topology::KRing { l: 10, k: 1 })
+        );
+    }
+
+    #[test]
+    fn border_slots_are_symmetric_for_generic_degree() {
+        // z = 4 (k-ring), N_V = 8: each slot must be drawn with probability
+        // 1/8 and interior with 1/2 — in particular slot 4 (right_2) must
+        // appear at all (regression: an earlier sampler starved slots > N_V
+        // and broke the k-ring's left/right symmetry).  Bands are > 6σ wide
+        // at n = 8000 draws.
+        let mut rng = Rng::for_stream(42, 0);
+        let mut counts = [0usize; 5]; // [interior, slot1..slot4]
+        let n = 8000;
+        for _ in 0..n {
+            let p = draw_pending_slot(&mut rng, 1.0 / 8.0, false, 4);
+            assert!(p <= 4, "unexpected pending byte {p}");
+            counts[p as usize] += 1;
+        }
+        assert!((3600..4400).contains(&counts[0]), "interior: {counts:?}");
+        for s in 1..=4usize {
+            assert!((800..1200).contains(&counts[s]), "slot {s}: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn all_border_regime_when_nv_below_degree() {
+        // N_V = 2 < z = 4: the per-site picture degenerates to all-border;
+        // slots stay uniform and interior events vanish.
+        let mut rng = Rng::for_stream(43, 0);
+        let mut counts = [0usize; 5];
+        for _ in 0..4000 {
+            counts[draw_pending_slot(&mut rng, 0.5, false, 4) as usize] += 1;
+        }
+        assert_eq!(counts[0], 0, "no interior events: {counts:?}");
+        for s in 1..=4usize {
+            assert!((800..1200).contains(&counts[s]), "slot {s}: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn pending_persists_until_executed_generic() {
+        let topo = Topology::Square { side: 4 };
+        let mut sim = batch(topo, VolumeLoad::Sites(8), Mode::Conservative, 2, 3);
+        let n = topo.len() * 2;
+        let mut mask = vec![false; n];
+        for _ in 0..100 {
+            let before: Vec<u8> = (0..2).flat_map(|r| sim.pending_row(r).to_vec()).collect();
+            sim.step_masked(Some(&mut mask));
+            let after: Vec<u8> = (0..2).flat_map(|r| sim.pending_row(r).to_vec()).collect();
+            for i in 0..n {
+                if !mask[i] {
+                    assert_eq!(after[i], before[i], "blocked PE {i} resampled");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn more_neighbours_cut_utilization() {
+        // paper §IIIA logic: stricter checks (more neighbours) → lower u
+        let u_of = |topo| {
+            let mut sim = batch(topo, VolumeLoad::Sites(1), Mode::Conservative, 4, 11);
+            for _ in 0..400 {
+                sim.step();
+            }
+            let mut acc = 0.0;
+            for _ in 0..800 {
+                sim.step();
+                for row in 0..4 {
+                    acc += sim.counts()[row] as f64;
+                }
+            }
+            acc / (800.0 * 4.0 * sim.pes() as f64)
+        };
+        let u_ring = u_of(Topology::Ring { l: 64 });
+        let u_k2 = u_of(Topology::KRing { l: 64, k: 2 });
+        assert!(u_ring > u_k2, "u_ring {u_ring} !> u_k2 {u_k2}");
+    }
+
+    #[test]
+    fn small_world_links_suppress_width() {
+        // cond-mat/0304617: random links bound the horizon width that the
+        // plain ring lets roughen (KPZ) — compare spreads at equal steps.
+        let spread_of = |topo| {
+            let mut sim = batch(topo, VolumeLoad::Sites(1), Mode::Conservative, 4, 12);
+            for _ in 0..3000 {
+                sim.step();
+            }
+            let mut acc = 0.0;
+            for row in 0..4 {
+                let tau = sim.tau_row(row);
+                let min = tau.iter().copied().fold(f64::INFINITY, f64::min);
+                let max = tau.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                acc += max - min;
+            }
+            acc / 4.0
+        };
+        let ring = spread_of(Topology::Ring { l: 128 });
+        let sw = spread_of(Topology::SmallWorld { l: 128, extra: 64, seed: 2 });
+        assert!(sw < ring, "small-world spread {sw} !< ring spread {ring}");
+    }
+
+    #[test]
+    fn synchronize_row_is_per_row() {
+        let mut sim = batch(
+            Topology::Ring { l: 8 },
+            VolumeLoad::Sites(1),
+            Mode::Conservative,
+            2,
+            5,
+        );
+        for _ in 0..50 {
+            sim.step();
+        }
+        sim.synchronize_row(0);
+        let flat = sim.tau_row(0);
+        assert!(flat.iter().all(|&x| x == flat[0]));
+        let other = sim.tau_row(1);
+        assert!(other.iter().any(|&x| x != other[0]), "row 1 must be untouched");
+    }
+
+    #[test]
+    fn window_bounds_every_row() {
+        let delta = 2.0;
+        let mut sim = batch(
+            Topology::SmallWorld { l: 48, extra: 12, seed: 8 },
+            VolumeLoad::Sites(1),
+            Mode::Windowed { delta },
+            3,
+            6,
+        );
+        for _ in 0..400 {
+            sim.step();
+        }
+        for row in 0..3 {
+            let tau = sim.tau_row(row);
+            let min = tau.iter().copied().fold(f64::INFINITY, f64::min);
+            let max = tau.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            // Eq. 3 lets an in-window PE overshoot by its exp(1) increment;
+            // 20 is ≫ the largest plausible draw over this run length.
+            assert!(max - min < delta + 20.0, "row {row} spread {}", max - min);
+        }
+    }
+}

@@ -1,164 +1,50 @@
-//! Higher-dimensional PDES topologies (the paper's Section III A remark:
+//! Higher-dimensional PDES view (the paper's Section III A remark:
 //! in 2-d each PE connects to four immediate neighbours, in 3-d to six;
 //! u_∞ ≈ 12 % and ≈ 7.5 % respectively for N_V = 1).
 //!
-//! Implemented for N_V = 1 — every update attempt checks all lattice
-//! neighbours — with optional Δ-window, on periodic square/cubic lattices.
+//! Since the batched-engine refactor this is a thin `B = 1`, N_V = 1 view
+//! over [`super::BatchPdes`] for any [`Topology`] — every update attempt
+//! checks all lattice neighbours — with optional Δ-window.  Kept as a
+//! named type because the dimensional-estimate experiments (`dims`) and
+//! the cross-validation tests read better against it; multi-replica use
+//! should go straight to `BatchPdes`.
 
-use super::Mode;
+use super::batch::BatchPdes;
+use super::{Mode, Topology, VolumeLoad};
 use crate::rng::Rng;
 
-/// Periodic lattice topologies for the PE graph.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum Topology {
-    /// 1-d ring of `l` PEs (equivalent to [`super::RingPdes`] at N_V = 1;
-    /// kept for cross-validation between the two implementations).
-    Ring { l: usize },
-    /// 2-d `side × side` torus, 4 neighbours per PE.
-    Square { side: usize },
-    /// 3-d `side³` torus, 6 neighbours per PE.
-    Cubic { side: usize },
-}
-
-impl Topology {
-    /// Total number of PEs.
-    pub fn len(self) -> usize {
-        match self {
-            Topology::Ring { l } => l,
-            Topology::Square { side } => side * side,
-            Topology::Cubic { side } => side * side * side,
-        }
-    }
-
-    /// True when the topology has no PEs (degenerate sizes are rejected by
-    /// [`LatticePdes::new`], so this is always false in practice).
-    pub fn is_empty(self) -> bool {
-        self.len() == 0
-    }
-
-    /// Neighbours per PE.
-    pub fn coordination(self) -> usize {
-        match self {
-            Topology::Ring { .. } => 2,
-            Topology::Square { .. } => 4,
-            Topology::Cubic { .. } => 6,
-        }
-    }
-
-    /// Flat neighbour table, `coordination()` entries per PE.
-    fn neighbour_table(self) -> Vec<u32> {
-        let z = self.coordination();
-        let n = self.len();
-        let mut table = vec![0u32; n * z];
-        match self {
-            Topology::Ring { l } => {
-                for k in 0..l {
-                    table[k * 2] = ((k + l - 1) % l) as u32;
-                    table[k * 2 + 1] = ((k + 1) % l) as u32;
-                }
-            }
-            Topology::Square { side } => {
-                let idx = |x: usize, y: usize| (y * side + x) as u32;
-                for y in 0..side {
-                    for x in 0..side {
-                        let k = (y * side + x) * 4;
-                        table[k] = idx((x + side - 1) % side, y);
-                        table[k + 1] = idx((x + 1) % side, y);
-                        table[k + 2] = idx(x, (y + side - 1) % side);
-                        table[k + 3] = idx(x, (y + 1) % side);
-                    }
-                }
-            }
-            Topology::Cubic { side } => {
-                let idx = |x: usize, y: usize, z_: usize| ((z_ * side + y) * side + x) as u32;
-                for z_ in 0..side {
-                    for y in 0..side {
-                        for x in 0..side {
-                            let k = ((z_ * side + y) * side + x) * 6;
-                            table[k] = idx((x + side - 1) % side, y, z_);
-                            table[k + 1] = idx((x + 1) % side, y, z_);
-                            table[k + 2] = idx(x, (y + side - 1) % side, z_);
-                            table[k + 3] = idx(x, (y + 1) % side, z_);
-                            table[k + 4] = idx(x, y, (z_ + side - 1) % side);
-                            table[k + 5] = idx(x, y, (z_ + 1) % side);
-                        }
-                    }
-                }
-            }
-        }
-        table
-    }
-}
-
-/// PDES simulator on an arbitrary periodic lattice (N_V = 1).
+/// PDES simulator on an arbitrary periodic topology (N_V = 1).
 pub struct LatticePdes {
-    tau: Vec<f64>,
-    next: Vec<f64>,
-    neighbours: Vec<u32>,
-    z: usize,
-    mode: Mode,
-    rng: Rng,
+    inner: BatchPdes,
 }
 
 impl LatticePdes {
     /// Fresh lattice, synchronized at τ = 0.
     pub fn new(topology: Topology, mode: Mode, rng: Rng) -> Self {
-        let n = topology.len();
-        assert!(n >= 3, "lattice too small");
         Self {
-            tau: vec![0.0; n],
-            next: vec![0.0; n],
-            neighbours: topology.neighbour_table(),
-            z: topology.coordination(),
-            mode,
-            rng,
+            inner: BatchPdes::new(topology, VolumeLoad::Sites(1), mode, vec![rng]),
         }
     }
 
     /// The horizon.
     pub fn tau(&self) -> &[f64] {
-        &self.tau
+        self.inner.tau_row(0)
     }
 
     /// Number of PEs.
     pub fn len(&self) -> usize {
-        self.tau.len()
+        self.inner.pes()
     }
 
     /// True when the lattice is empty (never; `new` requires ≥ 3 PEs).
     pub fn is_empty(&self) -> bool {
-        self.tau.is_empty()
+        self.inner.pes() == 0
     }
 
     /// One parallel step; returns the number of PEs that updated.
     pub fn step(&mut self) -> usize {
-        let n = self.tau.len();
-        let enforce_win = self.mode.enforces_window();
-        let edge = if enforce_win {
-            self.mode.delta() + self.tau.iter().copied().fold(f64::INFINITY, f64::min)
-        } else {
-            f64::INFINITY
-        };
-        let mut n_updated = 0;
-        for k in 0..n {
-            let tk = self.tau[k];
-            let mut ok = true;
-            if self.mode.enforces_nn() {
-                let nb = &self.neighbours[k * self.z..(k + 1) * self.z];
-                ok = nb.iter().all(|&j| tk <= self.tau[j as usize]);
-            }
-            if ok && enforce_win {
-                ok = tk <= edge;
-            }
-            if ok {
-                self.next[k] = tk + self.rng.exponential();
-                n_updated += 1;
-            } else {
-                self.next[k] = tk;
-            }
-        }
-        std::mem::swap(&mut self.tau, &mut self.next);
-        n_updated
+        self.inner.step();
+        self.inner.counts()[0] as usize
     }
 }
 
@@ -178,27 +64,6 @@ mod tests {
             acc += sim.step() as f64 / n as f64;
         }
         acc / measure as f64
-    }
-
-    #[test]
-    fn topology_tables_are_symmetric() {
-        for topo in [
-            Topology::Ring { l: 8 },
-            Topology::Square { side: 5 },
-            Topology::Cubic { side: 3 },
-        ] {
-            let table = topo.neighbour_table();
-            let z = topo.coordination();
-            for k in 0..topo.len() {
-                for &j in &table[k * z..(k + 1) * z] {
-                    let back = &table[j as usize * z..(j as usize + 1) * z];
-                    assert!(
-                        back.contains(&(k as u32)),
-                        "{topo:?}: {k} -> {j} not symmetric"
-                    );
-                }
-            }
-        }
     }
 
     #[test]
@@ -232,5 +97,23 @@ mod tests {
         let min = sim.tau().iter().copied().fold(f64::INFINITY, f64::min);
         let max = sim.tau().iter().copied().fold(f64::NEG_INFINITY, f64::max);
         assert!(max - min < 2.0 + 12.0);
+    }
+
+    #[test]
+    fn lattice_view_equals_batch_row() {
+        let topo = Topology::Cubic { side: 3 };
+        let mut view = LatticePdes::new(topo, Mode::Windowed { delta: 4.0 }, Rng::for_stream(25, 0));
+        let mut batch = BatchPdes::new(
+            topo,
+            VolumeLoad::Sites(1),
+            Mode::Windowed { delta: 4.0 },
+            vec![Rng::for_stream(25, 0)],
+        );
+        for _ in 0..100 {
+            let n = view.step();
+            batch.step();
+            assert_eq!(n, batch.counts()[0] as usize);
+        }
+        assert_eq!(view.tau(), batch.tau_row(0));
     }
 }

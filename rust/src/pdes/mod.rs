@@ -5,15 +5,30 @@
 //! This is the flexible-shape twin of the AOT JAX/Pallas path (see
 //! `python/compile/`): the figure sweeps need L, N_V and Δ values a fixed
 //! HLO artifact set cannot cover, the mean-field experiments (Eqs. 13-14)
-//! need per-PE wait instrumentation, and the 2-d/3-d extension needs other
-//! topologies.  Integration tests cross-validate both paths statistically.
+//! need per-PE wait instrumentation, and the topology studies
+//! (cond-mat/0304617) need non-ring PE graphs.  Integration tests
+//! cross-validate both paths statistically.
+//!
+//! Layering:
+//! * [`Topology`] — who checks whom (ring, k-ring, small-world, tori),
+//!   as a flat CSR neighbour table;
+//! * [`BatchPdes`] — the engine: B independent replicas in one `(B, L)`
+//!   struct-of-arrays pass (the L2 artifact layout, natively);
+//! * [`RingPdes`] / [`LatticePdes`] — thin `B = 1` views kept for the
+//!   paper-facing API and for cross-validation;
+//! * [`InstrumentedRing`] — an independent serial implementation with
+//!   mean-field stall bookkeeping, doubling as the engine's reference.
 
+mod batch;
 mod instrument;
 mod lattice;
 mod mode;
 pub(crate) mod ring;
+mod topology;
 
+pub use batch::{BatchPdes, PEND_ALL, PEND_INTERIOR};
 pub use instrument::{InstrumentedRing, MeanFieldCounters};
-pub use lattice::{LatticePdes, Topology};
+pub use lattice::LatticePdes;
 pub use mode::{Mode, VolumeLoad};
 pub use ring::{Pending, RingPdes, StepOutcome};
+pub use topology::{NeighbourTable, Topology};

@@ -1,0 +1,350 @@
+//! PE-graph topologies: who checks whom in the causality condition (Eq. 1).
+//!
+//! The paper's baseline is the nearest-neighbour ring; Toroczkai et al.
+//! (cond-mat/0304617, "Virtual Time Horizon Control via Communication
+//! Network Design") show the virtual-time-horizon width can equally be
+//! controlled by the *communication topology* — extra neighbours or sparse
+//! random long-range links suppress the KPZ roughening that makes the
+//! measurement phase non-scalable.  This module supplies the neighbour set
+//! each PE's causality check ranges over, in a flat CSR layout shared by
+//! every replica of a [`super::BatchPdes`] ensemble.
+//!
+//! Variants:
+//! * [`Topology::Ring`] — the paper's 1-d ring (2 neighbours);
+//! * [`Topology::KRing`] — k nearest neighbours per side (2k neighbours),
+//!   `KRing { k: 1 }` is exactly `Ring`;
+//! * [`Topology::SmallWorld`] — ring plus `extra` seeded random symmetric
+//!   long-range links (the cond-mat/0304617 construction);
+//! * [`Topology::Square`] / [`Topology::Cubic`] — the 2-d/3-d periodic
+//!   tori of the paper's Section III A remark.
+
+use crate::rng::Rng;
+
+/// RNG stream tag for small-world link generation ("TOPO"), kept separate
+/// from trial streams so graph construction never perturbs trajectories.
+const LINK_STREAM: u64 = 0x544F_504F;
+
+/// Periodic PE-graph topologies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// 1-d ring of `l` PEs — the paper's model.
+    Ring { l: usize },
+    /// 1-d ring with `k` neighbours on each side (`k = 1` is `Ring`).
+    KRing { l: usize, k: usize },
+    /// Ring plus `extra` random symmetric long-range links drawn from the
+    /// deterministic stream `(seed, "TOPO")`.
+    SmallWorld { l: usize, extra: usize, seed: u64 },
+    /// 2-d `side × side` torus, 4 neighbours per PE.
+    Square { side: usize },
+    /// 3-d `side³` torus, 6 neighbours per PE.
+    Cubic { side: usize },
+}
+
+impl Topology {
+    /// Total number of PEs.
+    pub fn len(self) -> usize {
+        match self {
+            Topology::Ring { l } | Topology::KRing { l, .. } | Topology::SmallWorld { l, .. } => l,
+            Topology::Square { side } => side * side,
+            Topology::Cubic { side } => side * side * side,
+        }
+    }
+
+    /// True when the topology has no PEs (degenerate sizes are rejected by
+    /// the simulator constructors, so this is always false in practice).
+    pub fn is_empty(self) -> bool {
+        self.len() == 0
+    }
+
+    /// Base neighbours per PE (the regular-lattice part; small-world extra
+    /// links come on top of this).
+    pub fn coordination(self) -> usize {
+        match self {
+            Topology::Ring { .. } | Topology::SmallWorld { .. } => 2,
+            Topology::KRing { k, .. } => 2 * k,
+            Topology::Square { .. } => 4,
+            Topology::Cubic { .. } => 6,
+        }
+    }
+
+    /// Short tag for output file names and tables.
+    pub fn tag(self) -> String {
+        match self {
+            Topology::Ring { l } => format!("ring{l}"),
+            Topology::KRing { l, k } => format!("kring{k}_{l}"),
+            Topology::SmallWorld { l, extra, .. } => format!("sw{extra}_{l}"),
+            Topology::Square { side } => format!("square{side}"),
+            Topology::Cubic { side } => format!("cubic{side}"),
+        }
+    }
+
+    /// Build the CSR neighbour table every causality check reads.
+    ///
+    /// Neighbour order is part of the event semantics (a pending border
+    /// event stores a neighbour *slot*): rings list `[left, right]`, k-rings
+    /// `[left_1, right_1, ..., left_k, right_k]`, tori axis by axis.
+    pub fn neighbour_table(self) -> NeighbourTable {
+        match self {
+            Topology::Ring { l } => {
+                assert!(l >= 3, "ring needs at least 3 PEs (distinct neighbours)");
+                ring_table(l, 1)
+            }
+            Topology::KRing { l, k } => {
+                assert!(k >= 1, "k-ring needs k >= 1");
+                assert!(2 * k < l, "k-ring needs l > 2k (distinct neighbours)");
+                ring_table(l, k)
+            }
+            Topology::SmallWorld { l, extra, seed } => {
+                assert!(l >= 3, "small-world ring needs at least 3 PEs");
+                small_world_table(l, extra, seed)
+            }
+            Topology::Square { side } => {
+                assert!(side >= 3, "square torus needs side >= 3");
+                let idx = |x: usize, y: usize| (y * side + x) as u32;
+                let mut lists = Vec::with_capacity(side * side);
+                for y in 0..side {
+                    for x in 0..side {
+                        lists.push(vec![
+                            idx((x + side - 1) % side, y),
+                            idx((x + 1) % side, y),
+                            idx(x, (y + side - 1) % side),
+                            idx(x, (y + 1) % side),
+                        ]);
+                    }
+                }
+                NeighbourTable::from_lists(&lists)
+            }
+            Topology::Cubic { side } => {
+                assert!(side >= 3, "cubic torus needs side >= 3");
+                let idx = |x: usize, y: usize, z: usize| ((z * side + y) * side + x) as u32;
+                let mut lists = Vec::with_capacity(side * side * side);
+                for z in 0..side {
+                    for y in 0..side {
+                        for x in 0..side {
+                            lists.push(vec![
+                                idx((x + side - 1) % side, y, z),
+                                idx((x + 1) % side, y, z),
+                                idx(x, (y + side - 1) % side, z),
+                                idx(x, (y + 1) % side, z),
+                                idx(x, y, (z + side - 1) % side),
+                                idx(x, y, (z + 1) % side),
+                            ]);
+                        }
+                    }
+                }
+                NeighbourTable::from_lists(&lists)
+            }
+        }
+    }
+}
+
+fn ring_table(l: usize, k: usize) -> NeighbourTable {
+    let mut lists = Vec::with_capacity(l);
+    for p in 0..l {
+        let mut nb = Vec::with_capacity(2 * k);
+        for d in 1..=k {
+            nb.push(((p + l - d) % l) as u32);
+            nb.push(((p + d) % l) as u32);
+        }
+        lists.push(nb);
+    }
+    NeighbourTable::from_lists(&lists)
+}
+
+/// Ring plus `extra` random symmetric links; deterministic per seed.  Links
+/// never duplicate an existing edge or a self-loop.  If the graph runs out
+/// of room (extra close to the complete-graph bound) the attempt budget
+/// stops generation early rather than spinning forever.
+fn small_world_table(l: usize, extra: usize, seed: u64) -> NeighbourTable {
+    let mut lists: Vec<Vec<u32>> = (0..l)
+        .map(|p| vec![((p + l - 1) % l) as u32, ((p + 1) % l) as u32])
+        .collect();
+    let mut rng = Rng::for_stream(seed, LINK_STREAM);
+    let mut added = 0usize;
+    let mut attempts = 0usize;
+    let budget = 100 * extra + 100;
+    while added < extra && attempts < budget {
+        attempts += 1;
+        let a = rng.below(l as u64) as usize;
+        let b = rng.below(l as u64) as usize;
+        if a == b || lists[a].contains(&(b as u32)) {
+            continue;
+        }
+        lists[a].push(b as u32);
+        lists[b].push(a as u32);
+        added += 1;
+    }
+    if added < extra {
+        // visible, not fatal: the graph stays valid, but tags/configs
+        // quoting the requested link count would otherwise mislead
+        eprintln!(
+            "warning: small-world graph on {l} PEs holds {added} of {extra} requested links"
+        );
+    }
+    NeighbourTable::from_lists(&lists)
+}
+
+/// Flat CSR adjacency: `targets[offsets[k] .. offsets[k+1]]` are the PEs
+/// whose virtual times PE `k`'s causality check compares against.  One
+/// table is shared by all replicas of a batch (read-only in the hot loop).
+#[derive(Clone, Debug)]
+pub struct NeighbourTable {
+    offsets: Vec<u32>,
+    targets: Vec<u32>,
+}
+
+impl NeighbourTable {
+    fn from_lists(lists: &[Vec<u32>]) -> Self {
+        let mut offsets = Vec::with_capacity(lists.len() + 1);
+        let mut targets = Vec::new();
+        offsets.push(0u32);
+        for list in lists {
+            targets.extend_from_slice(list);
+            offsets.push(targets.len() as u32);
+        }
+        NeighbourTable { offsets, targets }
+    }
+
+    /// Number of PEs.
+    pub fn pes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Degree of PE `k`.
+    #[inline]
+    pub fn degree(&self, k: usize) -> usize {
+        (self.offsets[k + 1] - self.offsets[k]) as usize
+    }
+
+    /// Neighbour ids of PE `k`, in slot order.
+    #[inline]
+    pub fn neighbours(&self, k: usize) -> &[u32] {
+        &self.targets[self.offsets[k] as usize..self.offsets[k + 1] as usize]
+    }
+
+    /// Largest degree in the graph.
+    pub fn max_degree(&self) -> usize {
+        (0..self.pes()).map(|k| self.degree(k)).max().unwrap_or(0)
+    }
+
+    /// Total directed edge count.
+    pub fn edges(&self) -> usize {
+        self.targets.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_test_topologies() -> Vec<Topology> {
+        vec![
+            Topology::Ring { l: 8 },
+            Topology::KRing { l: 9, k: 2 },
+            Topology::KRing { l: 16, k: 3 },
+            Topology::SmallWorld { l: 16, extra: 5, seed: 7 },
+            Topology::Square { side: 5 },
+            Topology::Cubic { side: 3 },
+        ]
+    }
+
+    #[test]
+    fn tables_are_symmetric_and_loop_free() {
+        for topo in all_test_topologies() {
+            let t = topo.neighbour_table();
+            assert_eq!(t.pes(), topo.len(), "{topo:?}");
+            for k in 0..t.pes() {
+                for &j in t.neighbours(k) {
+                    assert_ne!(j as usize, k, "{topo:?}: self-loop at {k}");
+                    assert!(
+                        t.neighbours(j as usize).contains(&(k as u32)),
+                        "{topo:?}: {k} -> {j} not symmetric"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_duplicate_neighbours() {
+        for topo in all_test_topologies() {
+            let t = topo.neighbour_table();
+            for k in 0..t.pes() {
+                let nb = t.neighbours(k);
+                for (i, &a) in nb.iter().enumerate() {
+                    assert!(
+                        !nb[i + 1..].contains(&a),
+                        "{topo:?}: duplicate neighbour {a} at PE {k}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn coordination_matches_regular_tables() {
+        for topo in [
+            Topology::Ring { l: 8 },
+            Topology::KRing { l: 16, k: 3 },
+            Topology::Square { side: 5 },
+            Topology::Cubic { side: 3 },
+        ] {
+            let t = topo.neighbour_table();
+            for k in 0..t.pes() {
+                assert_eq!(t.degree(k), topo.coordination(), "{topo:?} PE {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn kring1_is_ring() {
+        let a = Topology::Ring { l: 11 }.neighbour_table();
+        let b = Topology::KRing { l: 11, k: 1 }.neighbour_table();
+        for k in 0..11 {
+            assert_eq!(a.neighbours(k), b.neighbours(k));
+        }
+    }
+
+    #[test]
+    fn ring_slot_order_is_left_then_right() {
+        // slot order is load-bearing: pending border events store slots
+        let t = Topology::Ring { l: 5 }.neighbour_table();
+        assert_eq!(t.neighbours(0), &[4, 1]);
+        assert_eq!(t.neighbours(3), &[2, 4]);
+    }
+
+    #[test]
+    fn small_world_adds_requested_links_deterministically() {
+        let a = Topology::SmallWorld { l: 64, extra: 16, seed: 3 }.neighbour_table();
+        let b = Topology::SmallWorld { l: 64, extra: 16, seed: 3 }.neighbour_table();
+        let c = Topology::SmallWorld { l: 64, extra: 16, seed: 4 }.neighbour_table();
+        assert_eq!(a.edges(), 64 * 2 + 2 * 16);
+        assert_eq!(a.targets, b.targets, "same seed, same graph");
+        assert_ne!(a.targets, c.targets, "different seed, different links");
+        assert!(a.max_degree() >= 2);
+    }
+
+    #[test]
+    fn small_world_budget_caps_dense_requests() {
+        // far more links than a 5-PE graph can hold: generation must stop
+        let t = Topology::SmallWorld { l: 5, extra: 1000, seed: 1 }.neighbour_table();
+        // complete graph on 5 nodes has 10 undirected edges = 20 directed
+        assert!(t.edges() <= 20);
+    }
+
+    #[test]
+    fn sizes() {
+        assert_eq!(Topology::Ring { l: 7 }.len(), 7);
+        assert_eq!(Topology::KRing { l: 7, k: 2 }.len(), 7);
+        assert_eq!(Topology::SmallWorld { l: 7, extra: 2, seed: 0 }.len(), 7);
+        assert_eq!(Topology::Square { side: 4 }.len(), 16);
+        assert_eq!(Topology::Cubic { side: 3 }.len(), 27);
+        assert!(!Topology::Ring { l: 3 }.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn kring_too_dense_rejected() {
+        Topology::KRing { l: 6, k: 3 }.neighbour_table();
+    }
+}

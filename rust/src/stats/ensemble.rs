@@ -1,7 +1,7 @@
 //! Ensemble aggregation: per-step observable frames from N independent
 //! trials → the ⟨·(t)⟩ curves with error bars that every figure plots.
 
-use super::{HorizonFrame, OnlineMoments};
+use super::{horizon_frame, HorizonFrame, OnlineMoments};
 
 /// Observable lanes tracked per step.  The first eleven match the L2
 /// artifact's `STAT_NAMES` order; `W` (the RMS width, averaged over trials
@@ -117,6 +117,19 @@ impl EnsembleSeries {
         row[Lane::W as usize].push(frame.w2.sqrt());
     }
 
+    /// Record every replica row of one batched step: `tau` is a row-major
+    /// `(B, L)` horizon block (`BatchPdes::tau` or `ChunkResult::tau`),
+    /// `counts[row]` the row's updated-PE count.  Rows are pushed in
+    /// ascending order, so a batched ensemble accumulates moments in the
+    /// same trial order as the serial one-sim-per-trial loop it replaced.
+    pub fn push_batch_rows(&mut self, t: usize, tau: &[f64], pes: usize, counts: &[u32]) {
+        assert_eq!(tau.len(), pes * counts.len(), "tau is not a (B, L) block");
+        for (row, &n) in counts.iter().enumerate() {
+            let frame = horizon_frame(&tau[row * pes..(row + 1) * pes], n as usize);
+            self.push_frame(t, &frame);
+        }
+    }
+
     /// Record a raw 11-lane stats row from the L2 artifact (one trial, one
     /// step); the W lane is derived from the W2 entry.
     pub fn push_artifact_row(&mut self, t: usize, stats: &[f64]) {
@@ -204,6 +217,23 @@ mod tests {
         for t in 0..3 {
             assert!((a.mean(t, Lane::U) - all.mean(t, Lane::U)).abs() < 1e-12);
             assert!((a.stderr(t, Lane::W2) - all.stderr(t, Lane::W2)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn batch_rows_equal_per_trial_frames() {
+        // a (B=2, L=3) block must accumulate exactly like two push_frame
+        // calls over the per-row horizon_frame
+        let tau = [0.0, 1.0, 2.0, 4.0, 4.0, 4.0];
+        let counts = [2u32, 3];
+        let mut batched = EnsembleSeries::new(1);
+        batched.push_batch_rows(0, &tau, 3, &counts);
+        let mut serial = EnsembleSeries::new(1);
+        serial.push_frame(0, &super::super::horizon_frame(&tau[0..3], 2));
+        serial.push_frame(0, &super::super::horizon_frame(&tau[3..6], 3));
+        assert_eq!(batched.trials(), 2);
+        for lane in ALL_LANES {
+            assert_eq!(batched.mean(0, lane), serial.mean(0, lane), "{lane:?}");
         }
     }
 

@@ -158,6 +158,76 @@ fn window_bounds_width_at_scale() {
 }
 
 #[test]
+fn shard_merge_determinism_on_fixed_campaign() {
+    // coordinator/pool.rs contract: map_shards_with produces identical
+    // ensemble moments for worker counts 1, 2 and 7 on a fixed campaign
+    // (per-trial streams are scheduling-independent; only floating-point
+    // merge order may differ, bounded here at 1e-12)
+    use repro::coordinator::pool::map_shards_with;
+    use repro::pdes::{BatchPdes, Topology};
+    use repro::stats::EnsembleSeries;
+
+    let (l, trials, steps, seed) = (24usize, 14u64, 25usize, 31u64);
+    let run = |workers: usize| {
+        map_shards_with(
+            trials,
+            workers,
+            |range| {
+                let mut series = EnsembleSeries::new(steps);
+                let rows = (range.end - range.start) as usize;
+                let mut sim = BatchPdes::with_streams(
+                    Topology::Ring { l },
+                    VolumeLoad::Sites(1),
+                    Mode::Windowed { delta: 4.0 },
+                    rows,
+                    seed,
+                    range.start,
+                );
+                for t in 0..steps {
+                    sim.step();
+                    series.push_batch_rows(t, sim.tau(), sim.pes(), sim.counts());
+                }
+                series
+            },
+            |mut a, b| {
+                a.merge(&b);
+                a
+            },
+        )
+        .unwrap()
+    };
+    let one = run(1);
+    assert_eq!(one.trials(), trials);
+    for workers in [2usize, 7] {
+        let other = run(workers);
+        assert_eq!(other.trials(), trials);
+        for lane in [Lane::U, Lane::W2, Lane::Min, Lane::Max, Lane::W] {
+            for t in [0usize, steps / 2, steps - 1] {
+                let (a, b) = (one.mean(t, lane), other.mean(t, lane));
+                assert!(
+                    (a - b).abs() < 1e-12,
+                    "workers {workers}, {lane:?}, t={t}: {a} vs {b}"
+                );
+                let (ea, eb) = (one.stderr(t, lane), other.stderr(t, lane));
+                assert!(
+                    (ea - eb).abs() < 1e-12,
+                    "workers {workers}, {lane:?}, t={t}: stderr {ea} vs {eb}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn topology_experiment_driver_smoke() {
+    let out = std::env::temp_dir().join("repro_it_topology");
+    let ctx = repro::experiments::Ctx::new(&out, true);
+    repro::experiments::run("topology", &ctx).unwrap();
+    assert!(out.join("topology_sweep.tsv").exists());
+    std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
 fn cli_binary_parses_and_reports_info() {
     // exercise the Args path exactly as main() does
     let args = repro::cli::Args::parse(

@@ -4,11 +4,26 @@
 mod prop;
 
 use prop::{check, PdesCase};
-use repro::pdes::{Mode, RingPdes, VolumeLoad};
+use repro::pdes::{BatchPdes, InstrumentedRing, Mode, RingPdes, Topology, VolumeLoad};
 use repro::rng::Rng;
 use repro::stats::horizon_frame;
 
 const CASES: u64 = 60;
+
+/// The topology grid exercised by the generic-engine properties; every
+/// entry keeps the case's PE count so masks and horizons line up.
+fn case_topologies(c: &PdesCase) -> Vec<Topology> {
+    let mut out = vec![Topology::Ring { l: c.l }];
+    if c.l > 4 {
+        out.push(Topology::KRing { l: c.l, k: 2 });
+    }
+    out.push(Topology::SmallWorld {
+        l: c.l,
+        extra: c.l / 3,
+        seed: c.seed,
+    });
+    out
+}
 
 /// Causality (Eq. 1): when NV = 1 (every site is a border site) an updated
 /// PE was never ahead of either neighbour at decision time.
@@ -176,6 +191,193 @@ fn delta_zero_minimum_only() {
         }
         Ok(())
     });
+}
+
+/// The batched engine's rows are the serial trials, bit for bit: row i of
+/// a B = 3 batch equals a `RingPdes` on the stream (seed, i).
+#[test]
+fn batch_rows_replay_serial_rings() {
+    check::<PdesCase, _>("batch_rows", 25, |c| {
+        let mut batch = BatchPdes::with_streams(
+            Topology::Ring { l: c.l },
+            c.load(),
+            c.mode(),
+            3,
+            c.seed,
+            0,
+        );
+        let mut rings: Vec<RingPdes> = (0..3u64)
+            .map(|i| RingPdes::new(c.l, c.load(), c.mode(), Rng::for_stream(c.seed, i)))
+            .collect();
+        for step in 0..c.steps {
+            batch.step();
+            for (i, r) in rings.iter_mut().enumerate() {
+                let out = r.step();
+                if out.n_updated != batch.counts()[i] as usize {
+                    return Err(format!("step {step}, row {i}: counts diverged"));
+                }
+            }
+        }
+        for (i, r) in rings.iter().enumerate() {
+            if batch.tau_row(i) != r.tau() {
+                return Err(format!("row {i}: horizons diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The ring view (over the batched engine) is bit-identical to the
+/// independently implemented instrumented ring on the same stream —
+/// the strongest cross-check that the refactor preserved the paper's
+/// event semantics and RNG draw order.
+#[test]
+fn ring_view_matches_instrumented_reference() {
+    check::<PdesCase, _>("ring_vs_instrumented", 25, |c| {
+        let mut view = RingPdes::new(c.l, c.load(), c.mode(), Rng::for_stream(c.seed, 0));
+        let mut reference = InstrumentedRing::new(c.l, c.load(), c.mode(), Rng::for_stream(c.seed, 0));
+        for step in 0..c.steps.min(100) {
+            let n_view = view.step().n_updated;
+            let n_ref = reference.step();
+            if n_view != n_ref {
+                return Err(format!("step {step}: {n_view} vs {n_ref} updates"));
+            }
+            if view.tau() != reference.tau() {
+                return Err(format!("step {step}: horizons diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Engine invariants on every topology and every batch row: τ monotone
+/// non-decreasing, idle PEs frozen, updated PEs inside their row's
+/// Δ-window at decision time, and blocked pending events persisting.
+#[test]
+fn batch_invariants_hold_per_topology_and_row() {
+    check::<PdesCase, _>("batch_invariants", 25, |c| {
+        let rows = 2usize;
+        for topo in case_topologies(c) {
+            let mut sim = BatchPdes::with_streams(topo, c.load(), c.mode(), rows, c.seed, 0);
+            let n = rows * c.l;
+            let mut mask = vec![false; n];
+            for step in 0..c.steps.min(60) {
+                let before = sim.tau().to_vec();
+                let pend_before: Vec<u8> = (0..rows)
+                    .flat_map(|r| sim.pending_row(r).to_vec())
+                    .collect();
+                let edges: Vec<f64> = (0..rows)
+                    .map(|r| {
+                        let gvt = before[r * c.l..(r + 1) * c.l]
+                            .iter()
+                            .copied()
+                            .fold(f64::INFINITY, f64::min);
+                        c.delta + gvt
+                    })
+                    .collect();
+                sim.step_masked(Some(&mut mask));
+                let after = sim.tau();
+                let pend_after: Vec<u8> = (0..rows)
+                    .flat_map(|r| sim.pending_row(r).to_vec())
+                    .collect();
+                for i in 0..n {
+                    if after[i] < before[i] {
+                        return Err(format!("{topo:?} step {step}: time decreased at {i}"));
+                    }
+                    if !mask[i] && after[i] != before[i] {
+                        return Err(format!("{topo:?} step {step}: idle PE {i} moved"));
+                    }
+                    if mask[i] && after[i] <= before[i] {
+                        return Err(format!("{topo:?} step {step}: updated PE {i} stalled"));
+                    }
+                    if !mask[i] && pend_after[i] != pend_before[i] {
+                        return Err(format!("{topo:?} step {step}: blocked PE {i} resampled"));
+                    }
+                    if mask[i] && c.delta.is_finite() && before[i] > edges[i / c.l] + 1e-12 {
+                        return Err(format!("{topo:?} step {step}: PE {i} updated outside window"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Causality (Eq. 1) generalized: at N_V = 1 an updated PE was never ahead
+/// of *any* neighbour of its topology at decision time, on every row.
+#[test]
+fn causality_never_violated_generic() {
+    check::<PdesCase, _>("causality_generic", 25, |c| {
+        if c.rd {
+            return Ok(()); // RD modes do not enforce Eq. 1 by design
+        }
+        let case = PdesCase { nv: 1, ..c.clone() };
+        let rows = 2usize;
+        for topo in case_topologies(&case) {
+            let table = topo.neighbour_table();
+            let mut sim =
+                BatchPdes::with_streams(topo, case.load(), case.mode(), rows, case.seed, 0);
+            let mut mask = vec![false; rows * case.l];
+            for step in 0..case.steps.min(60) {
+                let before = sim.tau().to_vec();
+                sim.step_masked(Some(&mut mask));
+                for row in 0..rows {
+                    for k in 0..case.l {
+                        let i = row * case.l + k;
+                        if !mask[i] {
+                            continue;
+                        }
+                        for &j in table.neighbours(k) {
+                            if before[i] > before[row * case.l + j as usize] + 1e-15 {
+                                return Err(format!(
+                                    "{topo:?} step {step}, row {row}, PE {k}: updated while ahead"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The window spread bound holds on every topology: with a finite Δ the
+/// per-row horizon spread stays within Δ plus one exponential overshoot.
+#[test]
+fn window_spread_bounded_per_topology() {
+    for topo in [
+        Topology::Ring { l: 32 },
+        Topology::KRing { l: 32, k: 2 },
+        Topology::SmallWorld { l: 32, extra: 10, seed: 77 },
+        Topology::Square { side: 6 },
+        Topology::Cubic { side: 3 },
+    ] {
+        let delta = 2.0;
+        let mut sim = BatchPdes::with_streams(
+            topo,
+            VolumeLoad::Sites(1),
+            Mode::Windowed { delta },
+            3,
+            13,
+            0,
+        );
+        for _ in 0..300 {
+            sim.step();
+        }
+        for row in 0..3 {
+            let tau = sim.tau_row(row);
+            let min = tau.iter().copied().fold(f64::INFINITY, f64::min);
+            let max = tau.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            // one exp(1) draw beyond the window edge; 20 is a > 10σ margin
+            // at this run length (see ring.rs window test rationale)
+            assert!(
+                max - min < delta + 20.0,
+                "{topo:?} row {row}: spread {}",
+                max - min
+            );
+        }
+    }
 }
 
 /// Determinism: the same seed replays the same trajectory.

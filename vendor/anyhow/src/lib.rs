@@ -1,0 +1,159 @@
+//! Offline vendored shim of the `anyhow` error-handling API.
+//!
+//! The build environment has no crates.io access, so the workspace carries
+//! this minimal re-implementation of the exact surface the code uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait, and the
+//! `anyhow!` / `bail!` / `ensure!` macros.  Errors are flattened to their
+//! display string at conversion time (no source-chain preservation), which
+//! is sufficient for the diagnostics this workspace emits.
+
+use std::fmt;
+
+/// A flattened, message-carrying error value.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            msg: message.to_string(),
+        }
+    }
+
+    /// Prepend a context layer (most recent first, as anyhow prints it).
+    fn wrap<C: fmt::Display>(mut self, context: C) -> Self {
+        self.msg = format!("{context}: {}", self.msg);
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`: that keeps this blanket conversion coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod private {
+    /// Anything convertible into [`crate::Error`]: real error types, plus
+    /// `Error` itself (so `.context()` chains on `anyhow::Result`).
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> crate::Error {
+            crate::Error::msg(self.to_string())
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error with a lazily built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: private::IntoError> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().wrap(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::other("disk on fire"));
+        Ok(r?)
+    }
+
+    #[test]
+    fn conversion_and_context() {
+        let e = io_fail().context("writing table").unwrap_err();
+        assert_eq!(format!("{e}"), "writing table: disk on fire");
+        // context on an already-anyhow error chains too
+        let e2: Result<()> = Err(e);
+        let e2 = e2.with_context(|| format!("figure {}", 5)).unwrap_err();
+        assert_eq!(format!("{e2:?}"), "figure 5: writing table: disk on fire");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 10 {
+                bail!("too large: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(format!("{}", f(-1).unwrap_err()).contains("negative input -1"));
+        assert!(format!("{}", f(11).unwrap_err()).contains("too large: 11"));
+        let e = anyhow!("plain {}", "message");
+        assert_eq!(e.to_string(), "plain message");
+    }
+}
