@@ -1,23 +1,70 @@
-//! Microbenchmarks of the hot paths, used by the §Perf iteration loop
-//! (own harness — criterion is unavailable offline).
+//! Microbenchmarks of the hot paths, used by the §Perf iteration loop and
+//! the CI regression gate (own harness — criterion is unavailable offline).
 //!
 //! Reported throughput unit: PE-steps/second (one PE-step = one update
 //! attempt of one processing element).
+//!
+//! Flags:
+//! * `--quick`            CI-friendly budgets;
+//! * `--json <path>`      write the machine-readable report (the schema of
+//!                        the committed `BENCH_2.json` baseline);
+//! * `--compare <path>`   compare against a baseline JSON and exit
+//!                        non-zero on a throughput regression beyond
+//!                        `BENCH_TOLERANCE` (default 0.30 = 30 %).
+//!
+//! The canonical regression-gate grid is `batch_step/ring_L{l}_NV1_B{b}`
+//! for B ∈ {1, 8, 64} × L ∈ {1000, 10000}, windowed at Δ = 10 (the
+//! paper's measurement-phase configuration), plus the fused-vs-split
+//! measurement pairs `measure_fused/...` / `measure_split/...` over the
+//! same grid — the fused path must win at every (B, L).
 
+use std::path::PathBuf;
 use std::time::Duration;
 
-use repro::bench::Bencher;
+use repro::bench::{compare_against_baseline, BenchReport, Bencher};
 use repro::pdes::{BatchPdes, InstrumentedRing, LatticePdes, Mode, RingPdes, Topology, VolumeLoad};
 use repro::rng::Rng;
-use repro::stats::horizon_frame;
+use repro::stats::{horizon_frame, horizon_frame_fused, StepStats};
+
+/// Value of `--flag <value>` in argv, if present.
+fn flag_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+/// Resolve a `--json`/`--compare` path: absolute paths pass through;
+/// relative ones resolve against the *workspace root* (the committed
+/// `BENCH_2.json` lives there, while `cargo bench` sets the binary's CWD
+/// to the package dir `rust/`).
+fn resolve(path: &str) -> PathBuf {
+    let p = PathBuf::from(path);
+    if p.is_absolute() {
+        p
+    } else {
+        // rust/ -> workspace root
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("package dir has a parent")
+            .join(p)
+    }
+}
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = flag_value(&args, "--json");
+    let compare_path = flag_value(&args, "--compare");
     let b = if quick {
         Bencher::quick()
     } else {
         Bencher::new(Duration::from_millis(200), Duration::from_secs(1), 7)
     };
+    let mut report = BenchReport::new(
+        "hotpath",
+        if quick { "quick run" } else { "full run" },
+    );
 
     println!("# hotpath microbenches (items = PE-steps unless noted)");
 
@@ -51,34 +98,83 @@ fn main() {
         for _ in 0..500 {
             sim.step(); // reach steady state so branch mix is realistic
         }
-        b.report(name, l as f64, || {
+        let m = b.report(name, l as f64, || {
             std::hint::black_box(sim.step());
         });
+        report.push(name, l as f64, m);
     }
 
-    // ring vs batch: the acceptance bar is batched per-step-per-PE
-    // throughput at parity or better than the serial ring for B >= 8
-    // (items = B * L PE-steps per batched step)
-    for rows in [1usize, 8, 32] {
-        let mut sim = BatchPdes::with_streams(
-            Topology::Ring { l: 1000 },
-            VolumeLoad::Sites(1),
-            Mode::Conservative,
-            rows,
-            1,
-            0,
-        );
-        for _ in 0..500 {
-            sim.step();
-        }
-        b.report(
-            &format!("batch_step/ring_L1000_NV1_B{rows}"),
-            (1000 * rows) as f64,
-            || {
+    // The regression-gate grid: windowed Δ = 10 ring batches (the paper's
+    // measurement-phase configuration) over B × L.  The acceptance case
+    // of the fused-hot-path PR is batch_step/ring_L1000_NV1_B8.
+    for &l in &[1000usize, 10_000] {
+        for &rows in &[1usize, 8, 64] {
+            let mut sim = BatchPdes::with_streams(
+                Topology::Ring { l },
+                VolumeLoad::Sites(1),
+                Mode::Windowed { delta: 10.0 },
+                rows,
+                1,
+                0,
+            );
+            let warm = if l >= 10_000 { 150 } else { 500 };
+            for _ in 0..warm {
+                sim.step();
+            }
+            let name = format!("batch_step/ring_L{l}_NV1_B{rows}");
+            let items = (l * rows) as f64;
+            let m = b.report(&name, items, || {
                 sim.step();
                 std::hint::black_box(sim.counts()[0]);
-            },
-        );
+            });
+            report.push(&name, items, m);
+        }
+    }
+
+    // Fused measurement (step pass emits StepStats; one deviation pass
+    // per row) vs the split legacy shape (step, then two-pass
+    // horizon_frame per row).  Same sim drives both of a pair so the
+    // branch mix matches; the fused path must win at every (B, L).
+    for &l in &[1000usize, 10_000] {
+        for &rows in &[1usize, 8, 64] {
+            let mut sim = BatchPdes::with_streams(
+                Topology::Ring { l },
+                VolumeLoad::Sites(1),
+                Mode::Windowed { delta: 10.0 },
+                rows,
+                2,
+                0,
+            );
+            let warm = if l >= 10_000 { 150 } else { 500 };
+            for _ in 0..warm {
+                sim.step();
+            }
+            let items = (l * rows) as f64;
+
+            let name = format!("measure_fused/ring_L{l}_B{rows}");
+            let m = b.report(&name, items, || {
+                sim.step();
+                for row in 0..rows {
+                    std::hint::black_box(horizon_frame_fused(
+                        sim.tau_row(row),
+                        &sim.step_stats_row(row),
+                    ));
+                }
+            });
+            report.push(&name, items, m);
+
+            let name = format!("measure_split/ring_L{l}_B{rows}");
+            let m = b.report(&name, items, || {
+                sim.step();
+                for row in 0..rows {
+                    std::hint::black_box(horizon_frame(
+                        sim.tau_row(row),
+                        sim.counts()[row] as usize,
+                    ));
+                }
+            });
+            report.push(&name, items, m);
+        }
     }
 
     // per-topology step throughput at B = 8 (items = B * L PE-steps)
@@ -100,14 +196,13 @@ fn main() {
         for _ in 0..300 {
             sim.step();
         }
-        b.report(
-            &format!("batch_step/{name}_B8"),
-            (topo.len() * 8) as f64,
-            || {
-                sim.step();
-                std::hint::black_box(sim.counts()[0]);
-            },
-        );
+        let full = format!("batch_step/{name}_B8");
+        let items = (topo.len() * 8) as f64;
+        let m = b.report(&full, items, || {
+            sim.step();
+            std::hint::black_box(sim.counts()[0]);
+        });
+        report.push(&full, items, m);
     }
 
     // instrumented ring (mean-field counters) — the overhead must be known
@@ -120,9 +215,10 @@ fn main() {
     for _ in 0..500 {
         inst.step();
     }
-    b.report("ring_step/instrumented_L1000_NV10_d10", 1000.0, || {
+    let m = b.report("ring_step/instrumented_L1000_NV10_d10", 1000.0, || {
         std::hint::black_box(inst.step());
     });
+    report.push("ring_step/instrumented_L1000_NV10_d10", 1000.0, m);
 
     // 2-d lattice
     let mut lat = LatticePdes::new(
@@ -133,22 +229,70 @@ fn main() {
     for _ in 0..500 {
         lat.step();
     }
-    b.report("lattice_step/square32_conservative", 1024.0, || {
+    let m = b.report("lattice_step/square32_conservative", 1024.0, || {
         std::hint::black_box(lat.step());
     });
+    report.push("lattice_step/square32_conservative", 1024.0, m);
 
-    // statistics frame (per-PE cost of the measurement pipeline)
+    // statistics frames (per-PE cost of the measurement pipeline, outside
+    // the stepper): classic two-pass vs fused one-pass given a pre-pass
     let tau: Vec<f64> = (0..1000).map(|i| ((i * 37) % 101) as f64 * 0.1).collect();
-    b.report("stats/horizon_frame_L1000", 1000.0, || {
+    let m = b.report("stats/horizon_frame_L1000", 1000.0, || {
         std::hint::black_box(horizon_frame(&tau, 250));
     });
+    report.push("stats/horizon_frame_L1000", 1000.0, m);
+    let pre = StepStats::measure(&tau, 250);
+    let m = b.report("stats/horizon_frame_fused_L1000", 1000.0, || {
+        std::hint::black_box(horizon_frame_fused(&tau, &pre));
+    });
+    report.push("stats/horizon_frame_fused_L1000", 1000.0, m);
 
     // rng draws (items = draws)
     let mut rng = Rng::for_stream(4, 0);
-    b.report("rng/uniform", 1.0, || {
+    let m = b.report("rng/uniform", 1.0, || {
         std::hint::black_box(rng.uniform());
     });
-    b.report("rng/exponential", 1.0, || {
+    report.push("rng/uniform", 1.0, m);
+    let m = b.report("rng/exponential", 1.0, || {
         std::hint::black_box(rng.exponential());
     });
+    report.push("rng/exponential", 1.0, m);
+
+    // fused-beats-split summary (the PR's acceptance bar at every (B, L))
+    for &l in &[1000usize, 10_000] {
+        for &rows in &[1usize, 8, 64] {
+            let fused = report.throughput_of(&format!("measure_fused/ring_L{l}_B{rows}"));
+            let split = report.throughput_of(&format!("measure_split/ring_L{l}_B{rows}"));
+            if let (Some(f), Some(s)) = (fused, split) {
+                println!(
+                    "# measure fused/split L{l} B{rows}: x{:.2} {}",
+                    f / s,
+                    if f >= s { "(fused wins)" } else { "(SPLIT WINS — investigate)" }
+                );
+            }
+        }
+    }
+
+    // write the artifact first so CI uploads it even when the gate fails
+    if let Some(path) = json_path {
+        let path = resolve(&path);
+        report.write_json(&path).expect("write bench JSON");
+        println!("# wrote {}", path.display());
+    }
+    if let Some(path) = compare_path {
+        let path = resolve(&path);
+        let tolerance = std::env::var("BENCH_TOLERANCE")
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .unwrap_or(0.30);
+        let baseline = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("cannot read baseline {}: {e}", path.display()));
+        match compare_against_baseline(&baseline, &report, tolerance) {
+            Ok(table) => println!("{table}"),
+            Err(table) => {
+                eprintln!("{table}");
+                std::process::exit(1);
+            }
+        }
+    }
 }

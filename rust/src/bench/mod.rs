@@ -1,11 +1,18 @@
 //! From-scratch benchmark harness (criterion is unavailable offline).
 //!
 //! Measures wall-clock over adaptive iteration counts with warmup, reports
-//! median / mean / min over samples, and throughput in items/second.
-//! Timings are carried as f64 seconds so sub-nanosecond per-iteration costs
-//! (possible for inlined RNG draws in release builds) do not round to zero.
-//! Used by `rust/benches/*.rs` (built with `harness = false`) and by the
-//! §Perf iteration loop.
+//! median-of-samples *with spread* (min..max over samples — a single
+//! number cannot distinguish a regression from scheduler noise on shared
+//! runners), and throughput in items/second.  Timings are carried as f64
+//! seconds so sub-nanosecond per-iteration costs (possible for inlined RNG
+//! draws in release builds) do not round to zero.
+//!
+//! [`BenchReport`] collects named measurements and serializes them to the
+//! machine-readable JSON consumed by the CI regression gate
+//! (`BENCH_2.json` at the repo root is the committed baseline;
+//! [`compare_against_baseline`] fails on throughput regressions beyond a
+//! tolerance).  Used by `rust/benches/*.rs` (built with `harness = false`)
+//! and by the §Perf iteration loop.
 
 use std::time::{Duration, Instant};
 
@@ -18,6 +25,8 @@ pub struct Measurement {
     pub mean_s: f64,
     /// Fastest sample, seconds.
     pub min_s: f64,
+    /// Slowest sample, seconds (the other end of the spread).
+    pub max_s: f64,
     /// Iterations per sample used.
     pub iters: u64,
     /// Number of samples taken.
@@ -33,6 +42,18 @@ impl Measurement {
     /// Median as a `Duration` (display convenience).
     pub fn median(&self) -> Duration {
         Duration::from_secs_f64(self.median_s)
+    }
+
+    /// Sample spread (max − min), seconds.
+    pub fn spread_s(&self) -> f64 {
+        self.max_s - self.min_s
+    }
+
+    /// Relative spread (max − min) / median — the noise indicator the
+    /// regression gate's tolerance must dominate for a verdict to mean
+    /// anything.
+    pub fn rel_spread(&self) -> f64 {
+        self.spread_s() / self.median_s
     }
 }
 
@@ -96,19 +117,22 @@ impl Bencher {
             median_s: times[times.len() / 2],
             mean_s: times.iter().sum::<f64>() / times.len() as f64,
             min_s: times[0],
+            max_s: times[times.len() - 1],
             iters,
             samples: self.samples,
         }
     }
 
-    /// Measure and print one line in the harness's standard format.
+    /// Measure and print one line in the harness's standard format
+    /// (median with relative spread, then the spread ends).
     pub fn report<F: FnMut()>(&self, name: &str, items_per_iter: f64, f: F) -> Measurement {
         let m = self.measure(f);
         println!(
-            "bench {name:<44} median {:>12} mean {:>12} min {:>12}  {:>12.3e} items/s",
+            "bench {name:<44} median {:>12} ±{:>5.1}% min {:>12} max {:>12}  {:>12.3e} items/s",
             fmt_secs(m.median_s),
-            fmt_secs(m.mean_s),
+            100.0 * m.rel_spread(),
             fmt_secs(m.min_s),
+            fmt_secs(m.max_s),
             m.throughput(items_per_iter),
         );
         m
@@ -128,6 +152,225 @@ pub fn fmt_secs(s: f64) -> String {
     }
 }
 
+/// One named case inside a [`BenchReport`].
+#[derive(Clone, Debug)]
+pub struct BenchCase {
+    /// Case name (must not contain `"` — the minimal JSON writer/parser
+    /// below does not escape strings).
+    pub name: String,
+    /// Items processed per iteration (PE-steps for the engine benches).
+    pub items_per_iter: f64,
+    /// The measurement.
+    pub m: Measurement,
+}
+
+/// A machine-readable collection of benchmark results.
+///
+/// The JSON schema is intentionally tiny and self-produced: one object per
+/// case with `"name"` first and `"throughput"` (items/s at the median)
+/// last, which is exactly the pair [`parse_case_throughputs`] scans for.
+#[derive(Clone, Debug, Default)]
+pub struct BenchReport {
+    /// Bench binary tag (e.g. "hotpath").
+    pub bench: String,
+    /// Free-form provenance note carried into the JSON (host, commit...).
+    pub provenance: String,
+    /// All recorded cases, in run order.
+    pub cases: Vec<BenchCase>,
+}
+
+impl BenchReport {
+    /// An empty report for bench binary `bench`.
+    pub fn new(bench: &str, provenance: &str) -> Self {
+        // same rule as case names: the minimal JSON writer does not
+        // escape strings, so quotes/backslashes would corrupt the output
+        for s in [bench, provenance] {
+            assert!(
+                !s.contains('"') && !s.contains('\\'),
+                "bench/provenance strings must not contain quotes or backslashes"
+            );
+        }
+        Self {
+            bench: bench.to_string(),
+            provenance: provenance.to_string(),
+            cases: Vec::new(),
+        }
+    }
+
+    /// Record one measured case.
+    pub fn push(&mut self, name: &str, items_per_iter: f64, m: Measurement) {
+        assert!(
+            !name.contains('"') && !name.contains('\\'),
+            "case names must not contain quotes or backslashes"
+        );
+        self.cases.push(BenchCase {
+            name: name.to_string(),
+            items_per_iter,
+            m,
+        });
+    }
+
+    /// Throughput of a case by name, if present.
+    pub fn throughput_of(&self, name: &str) -> Option<f64> {
+        self.cases
+            .iter()
+            .find(|c| c.name == name)
+            .map(|c| c.m.throughput(c.items_per_iter))
+    }
+
+    /// Serialize to the harness's JSON schema.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str("  \"schema\": 2,\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", self.bench));
+        out.push_str("  \"unit\": \"items_per_second\",\n");
+        out.push_str(&format!("  \"provenance\": \"{}\",\n", self.provenance));
+        out.push_str("  \"cases\": [\n");
+        for (i, c) in self.cases.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"items_per_iter\": {:e}, \"median_s\": {:e}, \
+                 \"mean_s\": {:e}, \"min_s\": {:e}, \"max_s\": {:e}, \"samples\": {}, \
+                 \"iters\": {}, \"throughput\": {:e}}}{}\n",
+                c.name,
+                c.items_per_iter,
+                c.m.median_s,
+                c.m.mean_s,
+                c.m.min_s,
+                c.m.max_s,
+                c.m.samples,
+                c.m.iters,
+                c.m.throughput(c.items_per_iter),
+                if i + 1 == self.cases.len() { "" } else { "," },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the JSON to `path`.
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+/// Extract `(name, throughput)` pairs from JSON produced by
+/// [`BenchReport::to_json`] (or a hand-maintained baseline in the same
+/// shape).  Minimal scanner, not a general JSON parser: it relies on
+/// `"name"` preceding `"throughput"` within each case object and on names
+/// containing no escapes — both guaranteed by the writer.
+pub fn parse_case_throughputs(json: &str) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    let mut rest = json;
+    while let Some(i) = rest.find("\"name\":") {
+        let Some(stripped) = rest[i + 7..].trim_start().strip_prefix('"') else {
+            break;
+        };
+        rest = stripped;
+        let Some(end) = rest.find('"') else { break };
+        let name = rest[..end].to_string();
+        rest = &rest[end + 1..];
+        let Some(j) = rest.find("\"throughput\":") else {
+            break;
+        };
+        let num = rest[j + 13..].trim_start();
+        let stop = num
+            .find(|c: char| !(c.is_ascii_digit() || matches!(c, '+' | '-' | '.' | 'e' | 'E')))
+            .unwrap_or(num.len());
+        if let Ok(v) = num[..stop].parse::<f64>() {
+            out.push((name, v));
+        }
+        rest = &num[stop..];
+    }
+    out
+}
+
+/// True when `json` carries a deliberately empty `"cases"` array — the
+/// bootstrap baseline shape, as opposed to a corrupt/unparseable file.
+fn is_bootstrap_baseline(json: &str) -> bool {
+    let Some(i) = json.find("\"cases\"") else {
+        return false;
+    };
+    let Some(j) = json[i..].find('[') else {
+        return false;
+    };
+    // empty array: the first non-whitespace char after '[' is ']'
+    matches!(json[i + j + 1..].trim_start().chars().next(), Some(']'))
+}
+
+/// Compare a fresh report against a committed baseline JSON.
+///
+/// For every baseline case also present in `current`, the throughput
+/// ratio `now / baseline` must stay above `1 − tolerance` (tolerance 0.30
+/// = "fail on >30 % regression" — deliberately generous: it must dominate
+/// shared-runner noise, which the per-case spread column quantifies).
+/// Baseline cases missing from the run and vice versa are reported but
+/// never fail.  A *bootstrap* baseline (an explicitly empty `"cases": []`
+/// array) passes with a notice so the gate can be armed by committing the
+/// first measured JSON; a baseline that parses to zero cases any other
+/// way is treated as corrupt and FAILS — a silent parse failure must not
+/// masquerade as bootstrap and disarm the gate.
+///
+/// Returns the human-readable comparison table: `Ok` when no case
+/// regressed beyond tolerance, `Err` otherwise.
+pub fn compare_against_baseline(
+    baseline_json: &str,
+    current: &BenchReport,
+    tolerance: f64,
+) -> Result<String, String> {
+    let baseline = parse_case_throughputs(baseline_json);
+    if baseline.is_empty() {
+        if is_bootstrap_baseline(baseline_json) {
+            return Ok(
+                "bench-compare: baseline holds no cases yet (bootstrap) — nothing to gate; \
+                 commit a measured JSON (cargo bench --bench hotpath -- --json BENCH_2.json) \
+                 to arm the regression gate"
+                    .to_string(),
+            );
+        }
+        return Err(
+            "bench-compare: baseline parsed to zero cases but is not the bootstrap shape \
+             (\"cases\": []) — corrupt or schema-drifted baseline; regenerate it with \
+             cargo bench --bench hotpath -- --json BENCH_2.json"
+                .to_string(),
+        );
+    }
+    let mut table = format!(
+        "bench-compare vs baseline ({} cases, tolerance {:.0}%):\n",
+        baseline.len(),
+        tolerance * 100.0
+    );
+    let mut failed = false;
+    for (name, base) in &baseline {
+        match current.throughput_of(name) {
+            None => table.push_str(&format!("  {name:<44} missing from this run (skipped)\n")),
+            Some(now) if *base > 0.0 => {
+                let ratio = now / base;
+                let verdict = if ratio < 1.0 - tolerance {
+                    failed = true;
+                    "REGRESSION"
+                } else {
+                    "ok"
+                };
+                table.push_str(&format!(
+                    "  {name:<44} base {base:>10.3e}  now {now:>10.3e}  x{ratio:<5.2} {verdict}\n"
+                ));
+            }
+            Some(_) => table.push_str(&format!("  {name:<44} non-positive baseline (skipped)\n")),
+        }
+    }
+    for c in &current.cases {
+        if !baseline.iter().any(|(n, _)| n == &c.name) {
+            table.push_str(&format!("  {:<44} new case (not in baseline)\n", c.name));
+        }
+    }
+    if failed {
+        Err(table)
+    } else {
+        Ok(table)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,21 +384,30 @@ mod tests {
         });
         assert!(m.iters >= 1);
         assert!(m.min_s <= m.median_s);
+        assert!(m.median_s <= m.max_s);
         assert!(m.median_s > 0.0);
+        assert!(m.spread_s() >= 0.0);
+        assert!(m.rel_spread() >= 0.0);
         assert!(m.throughput(1.0).is_finite());
+    }
+
+    fn meas(median: f64) -> Measurement {
+        Measurement {
+            median_s: median,
+            mean_s: median,
+            min_s: median * 0.9,
+            max_s: median * 1.2,
+            iters: 10,
+            samples: 5,
+        }
     }
 
     #[test]
     fn throughput_scales() {
-        let m = Measurement {
-            median_s: 0.01,
-            mean_s: 0.01,
-            min_s: 0.01,
-            iters: 1,
-            samples: 1,
-        };
+        let m = meas(0.01);
         assert!((m.throughput(100.0) - 10_000.0).abs() < 1e-9);
         assert_eq!(m.median(), Duration::from_millis(10));
+        assert!((m.rel_spread() - 0.3).abs() < 1e-9);
     }
 
     #[test]
@@ -163,5 +415,80 @@ mod tests {
         assert_eq!(fmt_secs(5e-10), "0.50 ns");
         assert_eq!(fmt_secs(1.5e-3), "1.50 ms");
         assert_eq!(fmt_secs(2.0), "2.000 s");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut r = BenchReport::new("hotpath", "unit test");
+        r.push("batch_step/ring_L1000_NV1_B8", 8000.0, meas(1e-5));
+        r.push("measure_fused/ring_L1000_B1", 1000.0, meas(2e-6));
+        let json = r.to_json();
+        let parsed = parse_case_throughputs(&json);
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0].0, "batch_step/ring_L1000_NV1_B8");
+        let expect = 8000.0 / 1e-5;
+        assert!(
+            (parsed[0].1 - expect).abs() < 1e-6 * expect,
+            "{} != {expect}",
+            parsed[0].1
+        );
+        assert_eq!(parsed[1].0, "measure_fused/ring_L1000_B1");
+    }
+
+    #[test]
+    fn compare_passes_within_tolerance_and_fails_beyond() {
+        let mut base = BenchReport::new("hotpath", "baseline");
+        base.push("a", 1000.0, meas(1e-5)); // 1e8 items/s
+        base.push("b", 1000.0, meas(1e-5));
+        let json = base.to_json();
+
+        // 20% slower on "a": inside a 30% tolerance
+        let mut ok_run = BenchReport::new("hotpath", "run");
+        ok_run.push("a", 1000.0, meas(1.25e-5));
+        ok_run.push("b", 1000.0, meas(1e-5));
+        assert!(compare_against_baseline(&json, &ok_run, 0.30).is_ok());
+
+        // 2x slower on "b": regression
+        let mut bad_run = BenchReport::new("hotpath", "run");
+        bad_run.push("a", 1000.0, meas(1e-5));
+        bad_run.push("b", 1000.0, meas(2e-5));
+        let err = compare_against_baseline(&json, &bad_run, 0.30).unwrap_err();
+        assert!(err.contains("REGRESSION"), "{err}");
+        assert!(err.contains('b'), "{err}");
+    }
+
+    #[test]
+    fn compare_bootstrap_and_missing_cases_never_fail() {
+        let empty = BenchReport::new("hotpath", "bootstrap").to_json();
+        let mut run = BenchReport::new("hotpath", "run");
+        run.push("a", 1.0, meas(1e-6));
+        let note = compare_against_baseline(&empty, &run, 0.30).unwrap();
+        assert!(note.contains("bootstrap"), "{note}");
+
+        // baseline has a case the run lacks, and vice versa: reported, not fatal
+        let mut base = BenchReport::new("hotpath", "baseline");
+        base.push("gone", 1.0, meas(1e-6));
+        let table = compare_against_baseline(&base.to_json(), &run, 0.30).unwrap();
+        assert!(table.contains("missing from this run"), "{table}");
+        assert!(table.contains("new case"), "{table}");
+    }
+
+    #[test]
+    fn compare_rejects_corrupt_baseline() {
+        // zero parsed cases WITHOUT the explicit empty-cases bootstrap
+        // shape must fail, not silently disarm the gate
+        let mut run = BenchReport::new("hotpath", "run");
+        run.push("a", 1.0, meas(1e-6));
+        for corrupt in [
+            "",
+            "{ not json at all",
+            "{\"schema\": 2, \"cases\": [{\"nam\": \"a\"}]}", // drifted key
+        ] {
+            let err = compare_against_baseline(corrupt, &run, 0.30).unwrap_err();
+            assert!(err.contains("corrupt"), "{corrupt:?} -> {err}");
+        }
+        // the committed bootstrap shape itself still passes
+        let shape = "{\"schema\": 2, \"cases\": [\n  ]\n}\n";
+        assert!(compare_against_baseline(shape, &run, 0.30).is_ok());
     }
 }

@@ -10,7 +10,7 @@
 //! accumulation order) and independent of worker scheduling.
 
 use crate::pdes::{BatchPdes, Mode, Topology, VolumeLoad};
-use crate::stats::{horizon_frame, EnsembleSeries, OnlineMoments};
+use crate::stats::{horizon_frame_fused, EnsembleSeries, OnlineMoments};
 
 use super::pool::map_shards;
 
@@ -63,7 +63,11 @@ pub fn run_topology_ensemble(topology: Topology, spec: &RunSpec) -> EnsembleSeri
                 );
                 for t in 0..spec.steps {
                     sim.step();
-                    series.push_batch_rows(t, sim.tau(), sim.pes(), sim.counts());
+                    // fused measurement: the step pass already produced
+                    // each row's sum/min/max, so only the deviation pass
+                    // per row remains (§Perf) — bit-identical frames to
+                    // the step-then-horizon_frame path it replaced
+                    series.push_batch_stats(t, sim.tau(), sim.pes(), sim.step_stats());
                 }
                 start += rows as u64;
             }
@@ -137,6 +141,7 @@ pub fn steady_state_topology(
                 for _ in 0..warm {
                     sim.step();
                 }
+                // tracked GVT: an O(1) read per row, no rescan
                 let gvt0: Vec<f64> = (0..rows).map(|r| sim.global_virtual_time_row(r)).collect();
                 let mut su = vec![0.0f64; rows];
                 let mut sw = vec![0.0f64; rows];
@@ -144,7 +149,8 @@ pub fn steady_state_topology(
                 for _ in 0..measure {
                     sim.step();
                     for row in 0..rows {
-                        let f = horizon_frame(sim.tau_row(row), sim.counts()[row] as usize);
+                        let f =
+                            horizon_frame_fused(sim.tau_row(row), &sim.step_stats_row(row));
                         su[row] += f.u;
                         sw[row] += f.w();
                         swa[row] += f.wa;

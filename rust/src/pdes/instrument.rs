@@ -124,6 +124,11 @@ impl MeanFieldCounters {
 /// branch-lean; the instrumented loop pays for episode tracking.  Event
 /// semantics match `RingPdes`: pending events persist until executed, with
 /// one-sided border checks for N_V > 1 (see ring.rs module docs).
+///
+/// This type deliberately keeps the textbook double-buffered step (frozen
+/// `tau`, scratch `next`, swap): it is the *independent reference* the
+/// engine's fused single-buffer hot path is asserted bit-identical against
+/// in `tests/properties.rs`, so it must not share that path's tricks.
 pub struct InstrumentedRing {
     tau: Vec<f64>,
     next: Vec<f64>,

@@ -46,6 +46,13 @@ impl LatticePdes {
         self.inner.step();
         self.inner.counts()[0] as usize
     }
+
+    /// Fused measurement aggregates of the latest step (see
+    /// `stats::StepStats` / `stats::horizon_frame_fused`).
+    #[inline]
+    pub fn step_stats(&self) -> crate::stats::StepStats {
+        self.inner.step_stats_row(0)
+    }
 }
 
 #[cfg(test)]

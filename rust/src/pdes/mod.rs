@@ -26,7 +26,7 @@ mod mode;
 pub(crate) mod ring;
 mod topology;
 
-pub use batch::{BatchPdes, PEND_ALL, PEND_INTERIOR};
+pub use batch::{BatchPdes, GVT_RESYNC_PERIOD, PEND_ALL, PEND_INTERIOR};
 pub use instrument::{InstrumentedRing, MeanFieldCounters};
 pub use lattice::LatticePdes;
 pub use mode::{Mode, VolumeLoad};

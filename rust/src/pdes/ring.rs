@@ -3,12 +3,13 @@
 //! Since the batched-engine refactor, `RingPdes` is a thin `B = 1` ring
 //! view over [`super::BatchPdes`]: one `step()` is one *parallel step* t in
 //! which every PE simultaneously makes one update attempt against the
-//! frozen horizon τ(t), with decisions reading `tau` and writing a scratch
-//! buffer swapped in at the end of the step — exactly mirroring the
-//! synchronous-attempt semantics of the paper (and of the L1 Pallas
-//! kernel).  The view adds nothing to the hot path: it forwards to the
-//! engine's ring + N_V = 1 fast path and translates the generic pending
-//! encoding back to the ring's [`Pending`] classes.
+//! frozen horizon τ(t).  The engine realizes those synchronous-attempt
+//! semantics (the paper's, and the L1 Pallas kernel's) without a scratch
+//! buffer: decisions are fixed against frozen values — carried in
+//! registers on the ring fast path — before in-place updates land.  The
+//! view adds nothing to the hot path: it forwards to the engine's ring +
+//! N_V = 1 fused sweep and translates the generic pending encoding back
+//! to the ring's [`Pending`] classes.
 //!
 //! Event semantics (validated against the paper's own utilization data,
 //! DESIGN.md §Event-Semantics): each PE holds one *pending event* — the
@@ -132,9 +133,19 @@ impl RingPdes {
     }
 
     /// Global virtual time: min_k τ_k (the window anchor of Eq. 3).
+    /// O(1): the engine tracks it as a by-product of the step pass.
     #[inline]
     pub fn global_virtual_time(&self) -> f64 {
         self.inner.global_virtual_time_row(0)
+    }
+
+    /// Fused measurement aggregates of the latest step (min/sum/max and
+    /// the update count — see `stats::StepStats`); feed to
+    /// `stats::horizon_frame_fused` for a full observable frame at half
+    /// the measurement traffic.
+    #[inline]
+    pub fn step_stats(&self) -> crate::stats::StepStats {
+        self.inner.step_stats_row(0)
     }
 
     /// One parallel step; optionally records the per-PE update mask.

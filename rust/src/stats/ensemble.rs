@@ -1,7 +1,7 @@
 //! Ensemble aggregation: per-step observable frames from N independent
 //! trials → the ⟨·(t)⟩ curves with error bars that every figure plots.
 
-use super::{horizon_frame, HorizonFrame, OnlineMoments};
+use super::{horizon_frame, horizon_frame_fused, HorizonFrame, OnlineMoments, StepStats};
 
 /// Observable lanes tracked per step.  The first eleven match the L2
 /// artifact's `STAT_NAMES` order; `W` (the RMS width, averaged over trials
@@ -130,6 +130,20 @@ impl EnsembleSeries {
         }
     }
 
+    /// Record every replica row of one batched step through the fused
+    /// measurement path: `stats[row]` is the engine's per-row first-pass
+    /// aggregate ([`crate::pdes::BatchPdes::step_stats`]), so only the
+    /// single mean-deviation pass per row remains (§Perf).  Bit-identical
+    /// to [`Self::push_batch_rows`] because the engine's tracked aggregates
+    /// equal a fresh [`StepStats::measure`] (property-tested).
+    pub fn push_batch_stats(&mut self, t: usize, tau: &[f64], pes: usize, stats: &[StepStats]) {
+        assert_eq!(tau.len(), pes * stats.len(), "tau is not a (B, L) block");
+        for (row, pre) in stats.iter().enumerate() {
+            let frame = horizon_frame_fused(&tau[row * pes..(row + 1) * pes], pre);
+            self.push_frame(t, &frame);
+        }
+    }
+
     /// Record a raw 11-lane stats row from the L2 artifact (one trial, one
     /// step); the W lane is derived from the W2 entry.
     pub fn push_artifact_row(&mut self, t: usize, stats: &[f64]) {
@@ -234,6 +248,26 @@ mod tests {
         assert_eq!(batched.trials(), 2);
         for lane in ALL_LANES {
             assert_eq!(batched.mean(0, lane), serial.mean(0, lane), "{lane:?}");
+        }
+    }
+
+    #[test]
+    fn batch_stats_equal_batch_rows() {
+        // the fused entry point must accumulate exactly like the classic
+        // one when the pre-pass matches a fresh measure of each row
+        let tau = [0.0, 1.0, 2.0, 4.0, 4.5, 4.0];
+        let counts = [2u32, 3];
+        let stats: Vec<StepStats> = (0..2)
+            .map(|r| StepStats::measure(&tau[r * 3..(r + 1) * 3], counts[r]))
+            .collect();
+        let mut fused = EnsembleSeries::new(1);
+        fused.push_batch_stats(0, &tau, 3, &stats);
+        let mut classic = EnsembleSeries::new(1);
+        classic.push_batch_rows(0, &tau, 3, &counts);
+        assert_eq!(fused.trials(), 2);
+        for lane in ALL_LANES {
+            assert_eq!(fused.mean(0, lane), classic.mean(0, lane), "{lane:?}");
+            assert_eq!(fused.stderr(0, lane), classic.stderr(0, lane), "{lane:?}");
         }
     }
 

@@ -3,6 +3,17 @@
 //! Mirrors the L2 `step_stats` lanes exactly (python/compile/model.py), plus
 //! the RMS width w = sqrt(w²) which the paper averages per trial (Eq. 4's
 //! ⟨w(t)⟩ is the ensemble mean of sqrt of the per-trial variance).
+//!
+//! Two entry points (§Perf, DESIGN.md):
+//! * [`horizon_frame`] — standalone, two passes over the snapshot;
+//! * [`horizon_frame_fused`] — one pass, given a [`StepStats`] pre-pass that
+//!   the stepping engine produces as a by-product of its update sweep.
+//!
+//! `horizon_frame` is implemented as `StepStats::measure` +
+//! `horizon_frame_fused`, so the two paths are bit-identical whenever the
+//! supplied pre-pass equals a fresh [`StepStats::measure`] of the snapshot
+//! (which the engine guarantees; see `pdes::BatchPdes` and the
+//! tracked-vs-rescan property tests).
 
 /// All per-step observables for one trial.
 #[derive(Clone, Copy, Debug, Default)]
@@ -39,24 +50,91 @@ impl HorizonFrame {
     }
 }
 
+/// First-pass aggregates of one parallel step: the quantities a single
+/// sweep over the horizon yields without knowing the mean.
+///
+/// The stepping engine maintains one `StepStats` per replica row as a
+/// by-product of its fused update pass (`pdes::BatchPdes::step_stats`), so
+/// the windowed-GVT rescan and the first of `horizon_frame`'s two passes
+/// both disappear from the per-step cost.  The aggregates are recomputed
+/// from the row on every pass (index order, no cross-step accumulation),
+/// so they are bit-identical to a fresh [`StepStats::measure`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepStats {
+    /// PEs that updated in the step that produced this snapshot.
+    pub n_updated: u32,
+    /// Σ_k τ_k, accumulated in PE index order.
+    pub sum: f64,
+    /// min_k τ_k — the global virtual time (window anchor, Eq. 3).
+    pub min: f64,
+    /// max_k τ_k — the leading edge.
+    pub max: f64,
+}
+
+impl StepStats {
+    /// One standalone sweep over a horizon snapshot (the reference the
+    /// engine's tracked aggregates are resynced — and property-tested —
+    /// against).
+    pub fn measure(tau: &[f64], n_updated: u32) -> Self {
+        let mut sum = 0.0;
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for &t in tau {
+            sum += t;
+            min = min.min(t);
+            max = max.max(t);
+        }
+        Self {
+            n_updated,
+            sum,
+            min,
+            max,
+        }
+    }
+
+    /// Global virtual time min_k τ_k.
+    #[inline]
+    pub fn gvt(&self) -> f64 {
+        self.min
+    }
+
+    /// Horizon spread max − min.
+    #[inline]
+    pub fn spread(&self) -> f64 {
+        self.max - self.min
+    }
+
+    /// Mean virtual time τ̄ for a row of `l` PEs.
+    #[inline]
+    pub fn mean(&self, l: usize) -> f64 {
+        self.sum / l as f64
+    }
+
+    /// Utilization u = n_updated / L for a row of `l` PEs.
+    #[inline]
+    pub fn utilization(&self, l: usize) -> f64 {
+        self.n_updated as f64 / l as f64
+    }
+}
+
 /// Compute the full observable frame from a horizon snapshot.
 ///
 /// `n_updated` is the number of PEs that updated in the step that produced
 /// this snapshot (u = n_updated / L, as in the paper's per-step counting).
 pub fn horizon_frame(tau: &[f64], n_updated: usize) -> HorizonFrame {
+    horizon_frame_fused(tau, &StepStats::measure(tau, n_updated as u32))
+}
+
+/// [`horizon_frame`] with the first pass already done: `pre` carries the
+/// sum/min/max (and update count) of `tau`, so only the single
+/// mean-deviation pass remains.  This is the fused-measurement hot path:
+/// the engine's step pass produces `pre` for free, halving the measurement
+/// traffic and removing the separate GVT rescan (§Perf, DESIGN.md).
+pub fn horizon_frame_fused(tau: &[f64], pre: &StepStats) -> HorizonFrame {
     let l = tau.len();
     assert!(l > 0);
     let lf = l as f64;
-
-    let mut sum = 0.0;
-    let mut min = f64::INFINITY;
-    let mut max = f64::NEG_INFINITY;
-    for &t in tau {
-        sum += t;
-        min = min.min(t);
-        max = max.max(t);
-    }
-    let mean = sum / lf;
+    let mean = pre.sum / lf;
 
     // §Perf note: this two-sided if/else accumulation measured fastest of
     // three variants (branchless mask-multiply: -7%; slow-side-only with
@@ -86,12 +164,12 @@ pub fn horizon_frame(tau: &[f64], n_updated: usize) -> HorizonFrame {
     let safe_f = n_f.max(1) as f64;
 
     HorizonFrame {
-        u: n_updated as f64 / lf,
+        u: pre.n_updated as f64 / lf,
         mean,
         w2: w2 / lf,
         wa: wa / lf,
-        min,
-        max,
+        min: pre.min,
+        max: pre.max,
         f_s: n_s as f64 / lf,
         w2_s: w2_s / safe_s,
         wa_s: wa_s / safe_s,
@@ -146,5 +224,41 @@ mod tests {
         let tau = [1.0, 4.0, 2.0, 8.0, 3.0];
         let f = horizon_frame(&tau, 0);
         assert!(f.wa <= f.w() + 1e-15);
+    }
+
+    #[test]
+    fn step_stats_measure_known_values() {
+        let s = StepStats::measure(&[3.0, 1.0, 4.0, 1.5], 2);
+        assert_eq!(s.n_updated, 2);
+        assert_eq!(s.sum, 9.5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.gvt(), 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.spread(), 3.0);
+        assert_eq!(s.mean(4), 2.375);
+        assert_eq!(s.utilization(4), 0.5);
+    }
+
+    #[test]
+    fn fused_frame_is_bit_identical_to_standalone() {
+        // the contract the campaign's fused measurement path rests on:
+        // given a pre-pass equal to StepStats::measure, every lane of the
+        // fused frame equals the classic two-pass frame exactly
+        let tau: Vec<f64> = (0..97).map(|i| ((i * 41) % 89) as f64 * 0.137).collect();
+        for n in [0usize, 13, 97] {
+            let classic = horizon_frame(&tau, n);
+            let fused = horizon_frame_fused(&tau, &StepStats::measure(&tau, n as u32));
+            assert_eq!(classic.u, fused.u);
+            assert_eq!(classic.mean, fused.mean);
+            assert_eq!(classic.w2, fused.w2);
+            assert_eq!(classic.wa, fused.wa);
+            assert_eq!(classic.min, fused.min);
+            assert_eq!(classic.max, fused.max);
+            assert_eq!(classic.f_s, fused.f_s);
+            assert_eq!(classic.w2_s, fused.w2_s);
+            assert_eq!(classic.wa_s, fused.wa_s);
+            assert_eq!(classic.w2_f, fused.w2_f);
+            assert_eq!(classic.wa_f, fused.wa_f);
+        }
     }
 }

@@ -11,6 +11,6 @@ mod moments;
 mod steady;
 
 pub use ensemble::{EnsembleSeries, Lane, ALL_LANES, N_LANES};
-pub use horizon::{horizon_frame, HorizonFrame};
+pub use horizon::{horizon_frame, horizon_frame_fused, HorizonFrame, StepStats};
 pub use moments::OnlineMoments;
 pub use steady::{steady_estimate, SteadyEstimate};

@@ -6,7 +6,7 @@ mod prop;
 use prop::{check, PdesCase};
 use repro::pdes::{BatchPdes, InstrumentedRing, Mode, RingPdes, Topology, VolumeLoad};
 use repro::rng::Rng;
-use repro::stats::horizon_frame;
+use repro::stats::{horizon_frame, StepStats};
 
 const CASES: u64 = 60;
 
@@ -376,6 +376,58 @@ fn window_spread_bounded_per_topology() {
                 "{topo:?} row {row}: spread {}",
                 max - min
             );
+        }
+    }
+}
+
+/// Incremental GVT: after *every* step, each row's tracked aggregates
+/// (min — the O(1) `global_virtual_time_row` — plus sum, max and the
+/// update count) equal a fresh O(L) rescan of the row, bit for bit,
+/// across all five topologies, all four modes, and N_V ∈ {1, 10, ∞}.
+/// This is the invariant that lets the engine drop the per-step GVT
+/// rescan and feed `horizon_frame_fused` straight from the step pass.
+#[test]
+fn tracked_row_stats_equal_fresh_rescan() {
+    let topologies = [
+        Topology::Ring { l: 24 },
+        Topology::KRing { l: 24, k: 2 },
+        Topology::SmallWorld { l: 24, extra: 8, seed: 5 },
+        Topology::Square { side: 5 },
+        Topology::Cubic { side: 3 },
+    ];
+    let modes = [
+        Mode::Conservative,
+        Mode::Windowed { delta: 2.0 },
+        Mode::Rd,
+        Mode::WindowedRd { delta: 2.0 },
+    ];
+    let loads = [
+        VolumeLoad::Sites(1),
+        VolumeLoad::Sites(10),
+        VolumeLoad::Infinite,
+    ];
+    let rows = 2usize;
+    for topo in topologies {
+        for mode in modes {
+            for load in loads {
+                let mut sim = BatchPdes::with_streams(topo, load, mode, rows, 31, 0);
+                for step in 0..80 {
+                    sim.step();
+                    for row in 0..rows {
+                        let fresh = StepStats::measure(sim.tau_row(row), sim.counts()[row]);
+                        let tracked = sim.step_stats_row(row);
+                        assert_eq!(
+                            tracked, fresh,
+                            "{topo:?} {mode:?} {load:?} step {step} row {row}"
+                        );
+                        assert_eq!(
+                            sim.global_virtual_time_row(row).to_bits(),
+                            fresh.min.to_bits(),
+                            "{topo:?} {mode:?} {load:?} step {step} row {row}: GVT"
+                        );
+                    }
+                }
+            }
         }
     }
 }
