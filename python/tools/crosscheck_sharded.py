@@ -1,0 +1,654 @@
+#!/usr/bin/env python3
+"""Independent cross-check of the sharded PDES engine + golden-fixture generator.
+
+The authoring container for this repository ships no Rust toolchain, so
+bit-level verification of engine refactors is done the same way PR 2 did
+it: this file is a meticulous Python port of the RNG stack
+(``rust/src/rng``: SplitMix64 -> xoshiro256++ -> ziggurat) and of the
+batched engine semantics (``rust/src/pdes/batch.rs``), validated against
+the pinned vectors in ``rust/tests/rng_golden.rs``.  On top of the
+single-threaded reference it implements the *sharded* step algorithm of
+``rust/src/pdes/sharded.rs`` — frozen-horizon block decisions (ring halo
+kernel / generic block kernel) followed by the per-row PE-order update
+sweep — and checks, configuration by configuration, that the sharded
+trajectories are bit-identical to the single-threaded ones for every
+topology x mode x N_V x worker count.
+
+It also emits the committed golden-trajectory fixture
+(``rust/tests/fixtures/golden_tau.txt``) consumed by
+``rust/tests/golden_trajectory.rs``.  Float values are written with
+``repr`` (shortest round-trip), so Rust's correctly rounded ``f64``
+parser restores the exact bits; the Rust test compares tau to 1e-9
+relative tolerance (ziggurat draws go through libm ``exp``/``ln``, where
+a 1-ulp platform difference is possible — same rationale as
+``rng_golden.rs``) and the integer lanes (pend checksum, update counts)
+exactly.
+
+Usage:
+    python3 python/tools/crosscheck_sharded.py            # verify only
+    python3 python/tools/crosscheck_sharded.py --fixture  # verify + rewrite fixture
+"""
+
+import math
+import os
+import sys
+
+MASK64 = (1 << 64) - 1
+
+# ---------------------------------------------------------------- RNG stack
+
+
+class SplitMix64:
+    def __init__(self, seed):
+        self.state = seed & MASK64
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK64
+
+
+class Rng:
+    """xoshiro256++ seeded through SplitMix64 (rust/src/rng)."""
+
+    def __init__(self, s):
+        self.s = list(s)
+
+    @classmethod
+    def for_stream(cls, seed, stream_id):
+        sm = SplitMix64(seed ^ ((stream_id * 0x9E3779B97F4A7C15) & MASK64))
+        s = [sm.next_u64() for _ in range(4)]
+        if s == [0, 0, 0, 0]:
+            s = [1, 2, 3, 4]
+        return cls(s)
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & MASK64, 23) + s[0]) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def uniform(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        return (self.next_u64() * n) >> 64
+
+    def exponential(self):
+        return exponential_ziggurat(self)
+
+
+# Ziggurat tables (rust/src/rng/ziggurat.rs), N = 256.
+ZN = 256
+ZR = 7.697117470131487
+ZV = float("0.0039496598225815571993")
+_ZX = [0.0] * (ZN + 1)
+_ZF = [0.0] * (ZN + 1)
+_ZX[1] = ZR
+_ZF[1] = math.exp(-ZR)
+_ZX[0] = ZV / _ZF[1]
+_ZF[0] = 1.0
+for _i in range(1, ZN):
+    _ZF[_i + 1] = _ZF[_i] + ZV / _ZX[_i]
+    _ZX[_i + 1] = 0.0 if _ZF[_i + 1] >= 1.0 else -math.log(_ZF[_i + 1])
+
+
+def exponential_ziggurat(rng):
+    while True:
+        j = rng.next_u64()
+        i = j & (ZN - 1)
+        u = (j >> 11) * (1.0 / (1 << 53))
+        x = u * _ZX[i]
+        if x < _ZX[i + 1]:
+            return x
+        if i == 0:
+            u2 = (rng.next_u64() >> 11) * (1.0 / (1 << 53))
+            return ZR - math.log(1.0 - u2)
+        u2 = (rng.next_u64() >> 11) * (1.0 / (1 << 53))
+        y = _ZF[i] + u2 * (_ZF[i + 1] - _ZF[i])
+        if y < math.exp(-x):
+            return x
+
+
+def verify_rng_golden():
+    """Replay the pinned vectors of rust/tests/rng_golden.rs."""
+    sm = SplitMix64(0xDEADBEEF)
+    assert [sm.next_u64() for _ in range(4)] == [
+        0x4ADFB90F68C9EB9B,
+        0xDE586A3141A10922,
+        0x021FBC2F8E1CFC1D,
+        0x7466CE737BE16790,
+    ], "SplitMix64 golden mismatch"
+
+    r = Rng.for_stream(42, 7)
+    assert [r.next_u64() for _ in range(4)] == [
+        0xC137D56B218F3423,
+        0xE455B444E70C3C37,
+        0x3B6D4AE7F849DFFB,
+        0xD8E9E718096AC38B,
+    ], "for_stream golden mismatch"
+
+    r = Rng.for_stream(1, 0)
+    assert r.uniform() == 0.8116121588818848
+    assert r.uniform() == 0.7471047161582187
+
+    r = Rng.for_stream(3, 1)
+    assert [r.below(10) for _ in range(6)] == [9, 5, 9, 1, 0, 2]
+
+    r = Rng.for_stream(2, 5)
+    pinned = [
+        0.30797521498174457,
+        1.8491914032382402,
+        1.8358118819524005,
+        3.055254488320628,
+        0.2933403528687034,
+        0.036916302092870674,
+    ]
+    for k, e in enumerate(pinned):
+        g = r.exponential()
+        assert abs(g - e) <= 1e-9 * max(abs(e), 1e-12), f"exp draw {k}: {g} vs {e}"
+
+
+# ------------------------------------------------------------- topologies
+
+LINK_STREAM = 0x544F504F  # "TOPO"
+
+
+def ring_table(l, k):
+    return [
+        [v for d in range(1, k + 1) for v in ((p + l - d) % l, (p + d) % l)]
+        for p in range(l)
+    ]
+
+
+def small_world_table(l, extra, seed):
+    lists = [[(p + l - 1) % l, (p + 1) % l] for p in range(l)]
+    rng = Rng.for_stream(seed, LINK_STREAM)
+    added, attempts = 0, 0
+    budget = 100 * extra + 100
+    while added < extra and attempts < budget:
+        attempts += 1
+        a = rng.below(l)
+        b = rng.below(l)
+        if a == b or b in lists[a]:
+            continue
+        lists[a].append(b)
+        lists[b].append(a)
+        added += 1
+    return lists
+
+
+def square_table(side):
+    def idx(x, y):
+        return y * side + x
+
+    return [
+        [
+            idx((x + side - 1) % side, y),
+            idx((x + 1) % side, y),
+            idx(x, (y + side - 1) % side),
+            idx(x, (y + 1) % side),
+        ]
+        for y in range(side)
+        for x in range(side)
+    ]
+
+
+def cubic_table(side):
+    def idx(x, y, z):
+        return (z * side + y) * side + x
+
+    return [
+        [
+            idx((x + side - 1) % side, y, z),
+            idx((x + 1) % side, y, z),
+            idx(x, (y + side - 1) % side, z),
+            idx(x, (y + 1) % side, z),
+            idx(x, y, (z + side - 1) % side),
+            idx(x, y, (z + 1) % side),
+        ]
+        for z in range(side)
+        for y in range(side)
+        for x in range(side)
+    ]
+
+
+def topology_table(topo):
+    kind = topo[0]
+    if kind == "ring":
+        return ring_table(topo[1], 1)
+    if kind == "kring":
+        return ring_table(topo[1], topo[2])
+    if kind == "smallworld":
+        return small_world_table(topo[1], topo[2], topo[3])
+    if kind == "square":
+        return square_table(topo[1])
+    if kind == "cubic":
+        return cubic_table(topo[1])
+    raise ValueError(kind)
+
+
+def is_honest_ring(topo, table):
+    if topo[0] != "ring":
+        return False
+    l = len(table)
+    return all(table[k] == [(k + l - 1) % l, (k + 1) % l] for k in range(l))
+
+
+def lattice_shardable(topo):
+    # mirror of ShardedPdes: contiguous-block halo exchange is defined for
+    # the ring family; other graphs fall back to a single lattice shard
+    return topo[0] in ("ring", "kring")
+
+
+# ------------------------------------------------------ engine (reference)
+
+PEND_INTERIOR = 0
+PEND_ALL = 255
+
+
+def draw_pending_slot(rng, p_side, nv1, z):
+    if nv1:
+        return PEND_ALL
+    if p_side <= 0.0:
+        return PEND_INTERIOR
+    u = rng.uniform()
+    if z == 2:
+        if u < p_side:
+            return 1
+        if u < 2.0 * p_side:
+            return 2
+        return PEND_INTERIOR
+    border = min(z * p_side, 1.0)
+    if u < border:
+        return min(int((u / border) * z), z - 1) + 1
+    return PEND_INTERIOR
+
+
+class Mode:
+    def __init__(self, nn, delta):
+        self.nn = nn  # enforce Eq. 1
+        self.delta = delta  # window width (inf = Eq. 3 off)
+
+    @property
+    def window(self):
+        return math.isfinite(self.delta)
+
+
+MODES = {
+    "conservative": Mode(True, math.inf),
+    "windowed2": Mode(True, 2.0),
+    "rd": Mode(False, math.inf),
+    "windowed_rd1.5": Mode(False, 1.5),
+}
+
+
+class Stats:
+    __slots__ = ("n", "sum", "min", "max")
+
+    def __init__(self, n=0, s=0.0, mn=0.0, mx=0.0):
+        self.n, self.sum, self.min, self.max = n, s, mn, mx
+
+    def key(self):
+        return (self.n, self.sum, self.min, self.max)
+
+
+class Batch:
+    """Python port of BatchPdes (split decide/update reference form —
+    bit-identical to the fused Rust paths by the in-place-safety argument
+    pinned in DESIGN.md §Perf)."""
+
+    def __init__(self, topo, load, mode, rows, seed, first=0):
+        self.table = topology_table(topo)
+        self.pes = len(self.table)
+        self.rows = rows
+        self.mode = mode
+        if load == "inf":
+            self.p_side, self.nv1 = 0.0, False
+        elif load == 1:
+            self.p_side, self.nv1 = 1.0, True
+        else:
+            self.p_side, self.nv1 = 1.0 / load, False
+        self.rngs = [Rng.for_stream(seed, first + i) for i in range(rows)]
+        self.tau = [[0.0] * self.pes for _ in range(rows)]
+        self.pend = [[PEND_INTERIOR] * self.pes for _ in range(rows)]
+        if mode.nn:
+            for row in range(rows):
+                rng = self.rngs[row]
+                self.pend[row] = [
+                    draw_pending_slot(rng, self.p_side, self.nv1, len(self.table[k]))
+                    for k in range(self.pes)
+                ]
+        self.stats = [Stats() for _ in range(rows)]
+        self.counts = [0] * rows
+
+    def decide_row(self, row, edge):
+        tau, pend = self.tau[row], self.pend[row]
+        ok = [False] * self.pes
+        if not self.mode.nn:
+            for k in range(self.pes):
+                ok[k] = tau[k] <= edge
+            return ok
+        for k in range(self.pes):
+            tk, pd = tau[k], pend[k]
+            if pd == PEND_INTERIOR:
+                nn_ok = True
+            elif pd == PEND_ALL:
+                nn_ok = all(tk <= tau[j] for j in self.table[k])
+            else:
+                nn_ok = tk <= tau[self.table[k][pd - 1]]
+            ok[k] = nn_ok and tk <= edge
+        return ok
+
+    def update_row(self, row, ok):
+        """PE-order update sweep + PE-order stats (mirrors
+        update_row_generic / the fused sweeps)."""
+        tau, pend, rng = self.tau[row], self.pend[row], self.rngs[row]
+        redraw = self.mode.nn and not self.nv1
+        n_up = 0
+        mn, mx, sm = math.inf, -math.inf, 0.0
+        for k in range(self.pes):
+            x = tau[k]
+            if ok[k]:
+                n_up += 1
+                if redraw:
+                    pend[k] = draw_pending_slot(
+                        rng, self.p_side, False, len(self.table[k])
+                    )
+                x += rng.exponential()
+                tau[k] = x
+            mn = min(mn, x)
+            mx = max(mx, x)
+            sm += x
+        return Stats(n_up, sm, mn, mx)
+
+    def edge_row(self, row):
+        return (
+            self.mode.delta + self.stats[row].min if self.mode.window else math.inf
+        )
+
+    def step(self):
+        for row in range(self.rows):
+            edge = self.edge_row(row)
+            ok = self.decide_row(row, edge)
+            s = self.update_row(row, ok)
+            self.stats[row] = s
+            self.counts[row] = s.n
+        return None
+
+
+# ------------------------------------------------------- sharded algorithm
+
+
+def shard_lattice(l, workers):
+    """Contiguous PE blocks, sizes differing by at most one (the
+    shard_trials split, usize flavour).  l = 0 yields no blocks."""
+    if l == 0:
+        return []
+    workers = max(1, min(workers, l))
+    base, extra = divmod(l, workers)
+    out, start = [], 0
+    for w in range(workers):
+        ln = base + (1 if w < extra else 0)
+        out.append((start, start + ln))
+        start += ln
+    return out
+
+
+def decide_block_ring(tau, pend, start, end, l, edge, nn):
+    """Ring halo kernel: the only remote reads are the two halo taus."""
+    left_halo = tau[(start + l - 1) % l]
+    right_halo = tau[end % l]
+    ok = []
+    for i, k in enumerate(range(start, end)):
+        cur = tau[k]
+        if not nn:
+            ok.append(cur <= edge)
+            continue
+        left = left_halo if i == 0 else tau[k - 1]
+        right = right_halo if k + 1 == end else tau[k + 1]
+        pd = pend[k]
+        if pd == PEND_INTERIOR:
+            nn_ok = True
+        elif pd == PEND_ALL:
+            nn_ok = cur <= left and cur <= right
+        elif pd == 1:
+            nn_ok = cur <= left
+        else:
+            nn_ok = cur <= right
+        ok.append(nn_ok and cur <= edge)
+    return ok
+
+
+class Sharded(Batch):
+    """The sharded step: phase A (frozen-horizon block decisions, any tile
+    order) -> barrier -> phase B (per-row PE-order update sweep)."""
+
+    def __init__(self, topo, load, mode, rows, seed, workers, first=0):
+        super().__init__(topo, load, mode, rows, seed, first)
+        self.honest_ring = is_honest_ring(topo, self.table)
+        if lattice_shardable(topo):
+            self.plan = shard_lattice(self.pes, workers)
+        else:
+            self.plan = [(0, self.pes)]
+        self.shard_stats = [
+            [Stats() for _ in self.plan] for _ in range(rows)
+        ]
+
+    def step(self):
+        rows, pes = self.rows, self.pes
+        edges = [self.edge_row(r) for r in range(rows)]
+        # phase A: decide every (row, block) tile against the frozen
+        # horizon; process tiles in REVERSED order to model arbitrary
+        # worker scheduling (decisions must be order-independent)
+        ok_all = [[False] * pes for _ in range(rows)]
+        tiles = [(r, b) for r in range(rows) for b in range(len(self.plan))]
+        for r, b in reversed(tiles):
+            start, end = self.plan[b]
+            tau, pend = self.tau[r], self.pend[r]
+            if self.honest_ring:
+                blk = decide_block_ring(
+                    tau, pend, start, end, pes, edges[r], self.mode.nn
+                )
+            else:
+                full = self.decide_row_frozen(r, edges[r])
+                blk = full[start:end]
+            ok_all[r][start:end] = blk
+        # barrier, then phase B: per-row serial update sweep (the RNG is
+        # per-row, so draws must replay in PE order), with per-shard
+        # partial stats as a by-product
+        for r in range(rows):
+            s = self.update_row_sharded(r, ok_all[r])
+            self.stats[r] = s
+            self.counts[r] = s.n
+
+    def decide_row_frozen(self, row, edge):
+        return super().decide_row(row, edge)
+
+    def update_row_sharded(self, row, ok):
+        tau, pend, rng = self.tau[row], self.pend[row], self.rngs[row]
+        redraw = self.mode.nn and not self.nv1
+        n_up = 0
+        mn, mx, sm = math.inf, -math.inf, 0.0
+        for b, (start, end) in enumerate(self.plan):
+            bn, bmn, bmx, bsm = 0, math.inf, -math.inf, 0.0
+            for k in range(start, end):
+                x = tau[k]
+                if ok[k]:
+                    n_up += 1
+                    bn += 1
+                    if redraw:
+                        pend[k] = draw_pending_slot(
+                            rng, self.p_side, False, len(self.table[k])
+                        )
+                    x += rng.exponential()
+                    tau[k] = x
+                mn = min(mn, x)
+                mx = max(mx, x)
+                sm += x
+                bmn = min(bmn, x)
+                bmx = max(bmx, x)
+                bsm += x
+            self.shard_stats[row][b] = Stats(bn, bsm, bmn, bmx)
+        return Stats(n_up, sm, mn, mx)
+
+
+# ------------------------------------------------------------ verification
+
+GRID_TOPOLOGIES = [
+    ("ring", 12),
+    ("kring", 12, 2),
+    ("smallworld", 12, 4, 7),
+    ("square", 4),
+    ("cubic", 3),
+]
+GRID_LOADS = [1, 10, "inf"]
+GRID_WORKERS = [1, 2, 3, 7]
+GRID_STEPS = 60
+
+
+def state_key(sim):
+    return (
+        tuple(tuple(row) for row in sim.tau),
+        tuple(tuple(row) for row in sim.pend),
+        tuple(sim.counts),
+        tuple(s.key() for s in sim.stats),
+    )
+
+
+def verify_sharded_equals_batch():
+    checked = 0
+    for topo in GRID_TOPOLOGIES:
+        for mode_name, mode in MODES.items():
+            for load in GRID_LOADS:
+                ref = Batch(topo, load, mode, 2, 20020601)
+                sharded = [
+                    Sharded(topo, load, mode, 2, 20020601, w) for w in GRID_WORKERS
+                ]
+                for step in range(GRID_STEPS):
+                    ref.step()
+                    want = state_key(ref)
+                    for w, sim in zip(GRID_WORKERS, sharded):
+                        sim.step()
+                        got = state_key(sim)
+                        assert got == want, (
+                            f"divergence: {topo} {mode_name} NV={load} "
+                            f"workers={w} step={step}"
+                        )
+                        # shard-order merge: min/max/count combine exactly
+                        for r in range(2):
+                            parts = sim.shard_stats[r]
+                            assert min(p.min for p in parts) == sim.stats[r].min
+                            assert max(p.max for p in parts) == sim.stats[r].max
+                            assert sum(p.n for p in parts) == sim.stats[r].n
+                checked += 1
+    return checked
+
+
+def verify_degenerate_plans():
+    # planner-level degenerate geometries
+    assert shard_lattice(0, 4) == []
+    assert shard_lattice(1, 4) == [(0, 1)]
+    assert shard_lattice(3, 7) == [(0, 1), (1, 2), (2, 3)]  # L < workers
+    assert shard_lattice(5, 5) == [(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]
+    for l, w in [(12, 5), (100, 8), (7, 3), (12, 12), (12, 40)]:
+        plan = shard_lattice(l, w)
+        assert plan[0][0] == 0 and plan[-1][1] == l
+        assert all(a < b for a, b in plan), f"empty block in {plan}"
+        assert all(plan[i][1] == plan[i + 1][0] for i in range(len(plan) - 1))
+    # engine-level: block size 1 (halo == whole shard) and workers > L
+    mode = MODES["windowed2"]
+    ref = Batch(("ring", 5), 1, mode, 1, 99)
+    for w in [5, 40]:
+        sim = Sharded(("ring", 5), 1, mode, 1, 99, w)
+        r2 = Batch(("ring", 5), 1, mode, 1, 99)
+        for _ in range(40):
+            sim.step()
+            r2.step()
+            assert state_key(sim) == state_key(r2), f"L=5 workers={w}"
+
+
+# ---------------------------------------------------------- golden fixture
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+
+
+def fnv1a(data):
+    h = FNV_OFFSET
+    for byte in data:
+        h ^= byte
+        h = (h * FNV_PRIME) & MASK64
+    return h
+
+
+FIXTURE_CONFIGS = [
+    # (tag, topo, load, mode_name, rows, seed)
+    ("ring12_nv1_win2", ("ring", 12), 1, "windowed2", 2, 20020601),
+    ("kring12_2_nv10_cons", ("kring", 12, 2), 10, "conservative", 1, 7),
+    ("sw12_4_nvinf_rdwin1.5", ("smallworld", 12, 4, 7), "inf", "windowed_rd1.5", 1, 11),
+]
+FIXTURE_STEPS = [1, 16, 256]
+
+
+def fixture_lines():
+    lines = [
+        "# Golden trajectories for the batched/sharded PDES engines.",
+        "# Generated by python/tools/crosscheck_sharded.py — do not edit by hand;",
+        "# regenerate with:  python3 python/tools/crosscheck_sharded.py --fixture",
+        "# Format: tag step row pend_fnv1a_hex n_updated tau...  (tau = full row,",
+        "# shortest round-trip decimal; Rust parses back to the exact f64 bits).",
+    ]
+    for tag, topo, load, mode_name, rows, seed in FIXTURE_CONFIGS:
+        sim = Batch(topo, load, MODES[mode_name], rows, seed)
+        done = 0
+        for target in FIXTURE_STEPS:
+            while done < target:
+                sim.step()
+                done += 1
+            for row in range(rows):
+                pend_fnv = fnv1a(bytes(sim.pend[row]))
+                taus = " ".join(repr(v) for v in sim.tau[row])
+                lines.append(
+                    f"{tag} {target} {row} {pend_fnv:016x} "
+                    f"{sim.counts[row]} {taus}"
+                )
+    return lines
+
+
+def main():
+    verify_rng_golden()
+    print("rng golden vectors: OK (splitmix / for_stream / uniform / below / ziggurat)")
+    verify_degenerate_plans()
+    print("degenerate shard plans: OK")
+    n = verify_sharded_equals_batch()
+    print(
+        f"sharded == batch bit-identical: OK over {n} configs "
+        f"(5 topologies x 4 modes x 3 N_V) x workers {GRID_WORKERS}, "
+        f"{GRID_STEPS} steps, 2 rows"
+    )
+    if "--fixture" in sys.argv:
+        here = os.path.dirname(os.path.abspath(__file__))
+        path = os.path.normpath(
+            os.path.join(here, "..", "..", "rust", "tests", "fixtures", "golden_tau.txt")
+        )
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as fh:
+            fh.write("\n".join(fixture_lines()) + "\n")
+        print(f"wrote fixture: {path}")
+
+
+if __name__ == "__main__":
+    main()

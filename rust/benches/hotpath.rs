@@ -22,7 +22,9 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use repro::bench::{compare_against_baseline, BenchReport, Bencher};
-use repro::pdes::{BatchPdes, InstrumentedRing, LatticePdes, Mode, RingPdes, Topology, VolumeLoad};
+use repro::pdes::{
+    BatchPdes, InstrumentedRing, LatticePdes, Mode, RingPdes, ShardedPdes, Topology, VolumeLoad,
+};
 use repro::rng::Rng;
 use repro::stats::{horizon_frame, horizon_frame_fused, StepStats};
 
@@ -123,6 +125,44 @@ fn main() {
             }
             let name = format!("batch_step/ring_L{l}_NV1_B{rows}");
             let items = (l * rows) as f64;
+            let m = b.report(&name, items, || {
+                sim.step();
+                std::hint::black_box(sim.counts()[0]);
+            });
+            report.push(&name, items, m);
+        }
+    }
+
+    // Sharded scaling grid (PR 3): the domain-decomposed engine over
+    // workers x L, windowed Δ = 10 ring at N_V = 1, B = 4 rows (so phase B
+    // has row-level parallelism too).  W1 is the sharded engine's overhead
+    // floor against batch_step; the W{2,4,8} columns are the scaling
+    // claim.  Expectations on a multi-core host: spawn overhead dominates
+    // at L = 1e3 (honest cost of the scope-per-step barrier), phase-A
+    // decision parallelism + row-parallel updates pay off by L = 1e5.
+    for &l in &[1_000usize, 10_000, 100_000] {
+        for &workers in &[1usize, 2, 4, 8] {
+            let mut sim = ShardedPdes::with_streams(
+                Topology::Ring { l },
+                VolumeLoad::Sites(1),
+                Mode::Windowed { delta: 10.0 },
+                4,
+                5,
+                0,
+                workers,
+            );
+            let warm = if l >= 100_000 {
+                30
+            } else if l >= 10_000 {
+                150
+            } else {
+                500
+            };
+            for _ in 0..warm {
+                sim.step();
+            }
+            let name = format!("sharded_step/ring_L{l}_NV1_B4_W{workers}");
+            let items = (l * 4) as f64;
             let m = b.report(&name, items, || {
                 sim.step();
                 std::hint::black_box(sim.counts()[0]);
@@ -257,6 +297,17 @@ fn main() {
         std::hint::black_box(rng.exponential());
     });
     report.push("rng/exponential", 1.0, m);
+
+    // sharded scaling summary: speedup of W{2,4,8} over W1 per L
+    for &l in &[1_000usize, 10_000, 100_000] {
+        let base = report.throughput_of(&format!("sharded_step/ring_L{l}_NV1_B4_W1"));
+        for &workers in &[2usize, 4, 8] {
+            let t = report.throughput_of(&format!("sharded_step/ring_L{l}_NV1_B4_W{workers}"));
+            if let (Some(b1), Some(tw)) = (base, t) {
+                println!("# sharded scaling L{l} W{workers}: x{:.2} vs W1", tw / b1);
+            }
+        }
+    }
 
     // fused-beats-split summary (the PR's acceptance bar at every (B, L))
     for &l in &[1000usize, 10_000] {

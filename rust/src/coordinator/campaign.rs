@@ -9,15 +9,147 @@
 //! path (bit-identical per trial; ensemble moments up to floating-point
 //! accumulation order) and independent of worker scheduling.
 
-use crate::pdes::{BatchPdes, Mode, Topology, VolumeLoad};
+use anyhow::{bail, Result};
+
+use crate::pdes::{BatchPdes, Mode, NeighbourTable, ShardedPdes, Topology, VolumeLoad};
+use crate::rng::Rng;
 use crate::stats::{horizon_frame_fused, EnsembleSeries, OnlineMoments};
 
-use super::pool::map_shards;
+use super::pool::{map_shards_with, worker_count};
 
 /// Replica rows advanced per `BatchPdes` struct: big enough to amortize
 /// the per-step pass, small enough that a (B, L) block of the largest
 /// campaign rings stays cache-resident.
 pub const BATCH_ROWS: usize = 64;
+
+/// How a campaign point's work is decomposed across OS threads — the
+/// `workers=` spec key (see `configs/` and `CampaignSpec`).
+///
+/// Per-trial trajectories are bit-identical under every strategy (the
+/// sharded engine's contract), so the choice only moves *where* the
+/// parallelism lives: across trials (ensemble throughput), across PE
+/// blocks of each lattice (latency of one big-L simulation), or both.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardStrategy {
+    /// Contiguous trial-id ranges, one per pool worker (the historical
+    /// default; lattice walks stay single-threaded).
+    Trials,
+    /// Every simulation advances on a lattice-sharded [`ShardedPdes`]
+    /// with this many block workers; trial batches run in sequence.
+    Lattice { workers: usize },
+    /// trials × blocks: trial shards in parallel, each advancing its
+    /// batches on a lattice-sharded engine.
+    Both {
+        trial_workers: usize,
+        lattice_workers: usize,
+    },
+}
+
+impl ShardStrategy {
+    /// Resolve a `workers=` spec value (`"trials"` | `"lattice"` |
+    /// `"both"`) plus an optional explicit lattice worker count
+    /// (`lattice_workers=`, 0 = auto) against the pool's worker budget
+    /// ([`worker_count`], `REPRO_WORKERS`-aware).
+    pub fn from_spec(mode: &str, lattice_workers: usize) -> Result<Self> {
+        let budget = worker_count();
+        if lattice_workers > ShardedPdes::MAX_WORKERS {
+            bail!(
+                "lattice_workers = {lattice_workers} exceeds the engine ceiling of {} \
+                 (per-step thread spawns must stay bounded)",
+                ShardedPdes::MAX_WORKERS
+            );
+        }
+        Ok(match mode {
+            "trials" => ShardStrategy::Trials,
+            "lattice" => ShardStrategy::Lattice {
+                workers: if lattice_workers == 0 {
+                    budget
+                } else {
+                    lattice_workers
+                },
+            },
+            "both" => {
+                // default split: two block workers per simulation, the
+                // rest of the budget across trials
+                let lw = if lattice_workers == 0 {
+                    2.clamp(1, budget)
+                } else {
+                    lattice_workers
+                };
+                ShardStrategy::Both {
+                    trial_workers: (budget / lw).max(1),
+                    lattice_workers: lw,
+                }
+            }
+            other => bail!("unknown workers= strategy {other:?} (trials|lattice|both)"),
+        })
+    }
+
+    /// Workers the trial loop fans out over.
+    fn trial_workers(self) -> usize {
+        match self {
+            ShardStrategy::Trials => worker_count(),
+            ShardStrategy::Lattice { .. } => 1,
+            ShardStrategy::Both { trial_workers, .. } => trial_workers,
+        }
+    }
+
+    /// Block workers each simulation steps with (1 = plain `BatchPdes`).
+    fn lattice_workers(self) -> usize {
+        match self {
+            ShardStrategy::Trials => 1,
+            ShardStrategy::Lattice { workers } => workers,
+            ShardStrategy::Both {
+                lattice_workers, ..
+            } => lattice_workers,
+        }
+    }
+}
+
+/// One trial batch on either stepping engine.  [`ShardedPdes`] derefs to
+/// [`BatchPdes`], so all measurement reads go through [`Engine::batch`].
+enum Engine {
+    Single(BatchPdes),
+    Sharded(ShardedPdes),
+}
+
+impl Engine {
+    fn new(
+        topology: Topology,
+        nbr: NeighbourTable,
+        load: VolumeLoad,
+        mode: Mode,
+        rngs: Vec<Rng>,
+        lattice_workers: usize,
+    ) -> Self {
+        if lattice_workers > 1 {
+            Engine::Sharded(ShardedPdes::with_table(
+                topology,
+                nbr,
+                load,
+                mode,
+                rngs,
+                lattice_workers,
+            ))
+        } else {
+            Engine::Single(BatchPdes::with_table(topology, nbr, load, mode, rngs))
+        }
+    }
+
+    fn step(&mut self) {
+        match self {
+            Engine::Single(sim) => sim.step(),
+            Engine::Sharded(sim) => sim.step(),
+        }
+    }
+
+    fn batch(&self) -> &BatchPdes {
+        match self {
+            Engine::Single(sim) => sim,
+            Engine::Sharded(sim) => sim,
+        }
+    }
+}
 
 /// One campaign parameter point.
 #[derive(Clone, Copy, Debug)]
@@ -44,22 +176,38 @@ pub fn run_ensemble(spec: &RunSpec) -> EnsembleSeries {
 
 /// Run the ensemble on an arbitrary topology and collect ⟨·(t)⟩ curves.
 pub fn run_topology_ensemble(topology: Topology, spec: &RunSpec) -> EnsembleSeries {
+    run_topology_ensemble_with(topology, spec, ShardStrategy::Trials)
+}
+
+/// [`run_topology_ensemble`] under an explicit [`ShardStrategy`].
+///
+/// Per-trial trajectories are bit-identical across strategies; ensemble
+/// means agree up to floating-point merge order, which depends only on
+/// the trial decomposition (never on lattice workers).
+pub fn run_topology_ensemble_with(
+    topology: Topology,
+    spec: &RunSpec,
+    strategy: ShardStrategy,
+) -> EnsembleSeries {
     assert_eq!(topology.len(), spec.l, "RunSpec.l must match the topology");
     // built once per parameter point; shared (read-only) by every batch
     let nbr = topology.neighbour_table();
-    map_shards(
+    let lattice_workers = strategy.lattice_workers();
+    map_shards_with(
         spec.trials,
+        strategy.trial_workers(),
         |range| {
             let mut series = EnsembleSeries::new(spec.steps);
             let mut start = range.start;
             while start < range.end {
                 let rows = ((range.end - start) as usize).min(BATCH_ROWS);
-                let mut sim = BatchPdes::with_table(
+                let mut sim = Engine::new(
                     topology,
                     nbr.clone(),
                     spec.load,
                     spec.mode,
                     BatchPdes::trial_streams(spec.seed, start, rows),
+                    lattice_workers,
                 );
                 for t in 0..spec.steps {
                     sim.step();
@@ -67,7 +215,8 @@ pub fn run_topology_ensemble(topology: Topology, spec: &RunSpec) -> EnsembleSeri
                     // each row's sum/min/max, so only the deviation pass
                     // per row remains (§Perf) — bit-identical frames to
                     // the step-then-horizon_frame path it replaced
-                    series.push_batch_stats(t, sim.tau(), sim.pes(), sim.step_stats());
+                    let b = sim.batch();
+                    series.push_batch_stats(t, b.tau(), b.pes(), b.step_stats());
                 }
                 start += rows as u64;
             }
@@ -117,11 +266,25 @@ pub fn steady_state_topology(
     warm: usize,
     measure: usize,
 ) -> SteadyStats {
+    steady_state_topology_with(topology, spec, warm, measure, ShardStrategy::Trials)
+}
+
+/// [`steady_state_topology`] under an explicit [`ShardStrategy`]
+/// (trial-sharding, lattice-sharding, or trials × blocks).
+pub fn steady_state_topology_with(
+    topology: Topology,
+    spec: &RunSpec,
+    warm: usize,
+    measure: usize,
+    strategy: ShardStrategy,
+) -> SteadyStats {
     assert_eq!(topology.len(), spec.l, "RunSpec.l must match the topology");
     // built once per parameter point; shared (read-only) by every batch
     let nbr = topology.neighbour_table();
-    let acc = map_shards(
+    let lattice_workers = strategy.lattice_workers();
+    let acc = map_shards_with(
         spec.trials,
+        strategy.trial_workers(),
         |range| {
             // per-shard: moments over per-trial time averages
             let mut u = OnlineMoments::new();
@@ -131,23 +294,27 @@ pub fn steady_state_topology(
             let mut start = range.start;
             while start < range.end {
                 let rows = ((range.end - start) as usize).min(BATCH_ROWS);
-                let mut sim = BatchPdes::with_table(
+                let mut engine = Engine::new(
                     topology,
                     nbr.clone(),
                     spec.load,
                     spec.mode,
                     BatchPdes::trial_streams(spec.seed, start, rows),
+                    lattice_workers,
                 );
                 for _ in 0..warm {
-                    sim.step();
+                    engine.step();
                 }
                 // tracked GVT: an O(1) read per row, no rescan
-                let gvt0: Vec<f64> = (0..rows).map(|r| sim.global_virtual_time_row(r)).collect();
+                let gvt0: Vec<f64> = (0..rows)
+                    .map(|r| engine.batch().global_virtual_time_row(r))
+                    .collect();
                 let mut su = vec![0.0f64; rows];
                 let mut sw = vec![0.0f64; rows];
                 let mut swa = vec![0.0f64; rows];
                 for _ in 0..measure {
-                    sim.step();
+                    engine.step();
+                    let sim = engine.batch();
                     for row in 0..rows {
                         let f =
                             horizon_frame_fused(sim.tau_row(row), &sim.step_stats_row(row));
@@ -157,6 +324,7 @@ pub fn steady_state_topology(
                     }
                 }
                 let m = measure as f64;
+                let sim = engine.batch();
                 for row in 0..rows {
                     u.push(su[row] / m);
                     w.push(sw[row] / m);
@@ -189,6 +357,7 @@ pub fn steady_state_topology(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::pool::map_shards;
     use crate::stats::Lane;
 
     fn spec(l: usize, mode: Mode, trials: u64, steps: usize) -> RunSpec {
@@ -305,6 +474,108 @@ mod tests {
         let tight = steady_state(&spec(64, Mode::Windowed { delta: 0.5 }, 8, 0), 500, 500);
         assert!(tight.u < open.u, "{} !< {}", tight.u, open.u);
         assert!(tight.w < open.w);
+    }
+
+    #[test]
+    fn shard_strategies_agree_on_steady_state() {
+        // per-trial trajectories are bit-identical across strategies, so
+        // with the SAME trial decomposition (one trial worker here) the
+        // moment folds are identical arithmetic — exact equality, no
+        // tolerance.  Lattice workers must be trajectory-invisible.
+        let s = spec(24, Mode::Windowed { delta: 3.0 }, 6, 0);
+        let trials_1w = steady_state_topology_with(
+            Topology::Ring { l: 24 },
+            &s,
+            200,
+            300,
+            ShardStrategy::Both {
+                trial_workers: 1,
+                lattice_workers: 1,
+            },
+        );
+        for lattice_workers in [2usize, 3] {
+            let lat = steady_state_topology_with(
+                Topology::Ring { l: 24 },
+                &s,
+                200,
+                300,
+                ShardStrategy::Both {
+                    trial_workers: 1,
+                    lattice_workers,
+                },
+            );
+            assert_eq!(trials_1w.u.to_bits(), lat.u.to_bits(), "lw = {lattice_workers}");
+            assert_eq!(trials_1w.w.to_bits(), lat.w.to_bits(), "lw = {lattice_workers}");
+            assert_eq!(
+                trials_1w.gvt_rate.to_bits(),
+                lat.gvt_rate.to_bits(),
+                "lw = {lattice_workers}"
+            );
+        }
+        // trials × blocks: merge order follows the trial decomposition, so
+        // only fp accumulation order may differ
+        let both = steady_state_topology_with(
+            Topology::Ring { l: 24 },
+            &s,
+            200,
+            300,
+            ShardStrategy::Both {
+                trial_workers: 3,
+                lattice_workers: 2,
+            },
+        );
+        assert!((both.u - trials_1w.u).abs() < 1e-12);
+        assert!((both.w - trials_1w.w).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shard_strategies_agree_on_ensemble_curves() {
+        let s = spec(16, Mode::Conservative, 5, 25);
+        let run = |strategy| {
+            let series = run_topology_ensemble_with(Topology::Ring { l: 16 }, &s, strategy);
+            (series.mean(24, Lane::U), series.mean(24, Lane::W2))
+        };
+        let single = run(ShardStrategy::Both {
+            trial_workers: 1,
+            lattice_workers: 1,
+        });
+        let lattice = run(ShardStrategy::Both {
+            trial_workers: 1,
+            lattice_workers: 3,
+        });
+        assert_eq!(single.0.to_bits(), lattice.0.to_bits());
+        assert_eq!(single.1.to_bits(), lattice.1.to_bits());
+    }
+
+    #[test]
+    fn strategy_spec_parsing() {
+        assert_eq!(ShardStrategy::from_spec("trials", 0).unwrap(), ShardStrategy::Trials);
+        assert_eq!(
+            ShardStrategy::from_spec("lattice", 3).unwrap(),
+            ShardStrategy::Lattice { workers: 3 }
+        );
+        match ShardStrategy::from_spec("both", 2).unwrap() {
+            ShardStrategy::Both {
+                trial_workers,
+                lattice_workers,
+            } => {
+                assert_eq!(lattice_workers, 2);
+                assert!(trial_workers >= 1);
+            }
+            other => panic!("unexpected strategy {other:?}"),
+        }
+        // auto lattice workers resolve against the pool budget
+        match ShardStrategy::from_spec("lattice", 0).unwrap() {
+            ShardStrategy::Lattice { workers } => assert!(workers >= 1),
+            other => panic!("unexpected strategy {other:?}"),
+        }
+        assert!(ShardStrategy::from_spec("bogus", 0).is_err());
+        // absurd worker counts fail at parse time, not as a mid-sweep
+        // thread-spawn panic
+        assert!(
+            ShardStrategy::from_spec("lattice", ShardedPdes::MAX_WORKERS + 1).is_err()
+        );
+        assert!(ShardStrategy::from_spec("lattice", ShardedPdes::MAX_WORKERS).is_ok());
     }
 
     #[test]

@@ -17,9 +17,10 @@ pub mod pool;
 mod spec;
 
 pub use campaign::{
-    run_ensemble, run_topology_ensemble, steady_state, steady_state_topology, RunSpec,
-    SteadyStats, BATCH_ROWS,
+    run_ensemble, run_topology_ensemble, run_topology_ensemble_with, steady_state,
+    steady_state_topology, steady_state_topology_with, RunSpec, ShardStrategy, SteadyStats,
+    BATCH_ROWS,
 };
 pub use jax::{run_artifact_ensemble, run_with_executor as run_with_executor_bench, JaxRunSpec};
-pub use pool::{shard_trials, worker_count};
+pub use pool::{shard_lattice, shard_trials, worker_count};
 pub use spec::CampaignSpec;

@@ -16,15 +16,47 @@ pub fn worker_count() -> usize {
 }
 
 /// Split `trials` into per-worker contiguous id ranges (first shards take
-/// the remainder so sizes differ by at most one).
+/// the remainder so sizes differ by at most one).  Zero trials yields no
+/// shards at all, and no shard is ever empty — the degenerate-geometry
+/// audit of the lattice planner below surfaced that this split used to
+/// hand out a single `0..0` range at `trials = 0`.
 pub fn shard_trials(trials: u64, workers: usize) -> Vec<std::ops::Range<u64>> {
-    let workers = workers.clamp(1, trials.max(1) as usize);
+    if trials == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, trials.min(usize::MAX as u64) as usize);
     let base = trials / workers as u64;
     let extra = trials % workers as u64;
     let mut out = Vec::with_capacity(workers);
     let mut start = 0;
     for w in 0..workers as u64 {
         let len = base + if w < extra { 1 } else { 0 };
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Split an L-PE lattice into contiguous per-worker PE blocks — the
+/// [`shard_trials`] split in its `usize` flavour, used by
+/// [`crate::pdes::ShardedPdes`] as its domain-decomposition plan.
+///
+/// Guarantees (pinned by the degenerate-geometry tests below): blocks are
+/// contiguous, cover `0..l` exactly, sizes differ by at most one, there
+/// are never more blocks than PEs (`L < workers` clamps to L one-PE
+/// blocks, for which the halo *is* the whole shard), and no block is
+/// empty.  `l = 0` yields no blocks.
+pub fn shard_lattice(l: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
+    if l == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, l);
+    let base = l / workers;
+    let extra = l % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let len = base + usize::from(w < extra);
         out.push(start..start + len);
         start += len;
     }
@@ -99,6 +131,51 @@ mod tests {
         )
         .unwrap();
         assert_eq!(total, 4950);
+    }
+
+    #[test]
+    fn trial_shards_are_never_empty() {
+        for trials in [0u64, 1, 7, 64] {
+            for workers in [1usize, 2, 3, 8, 100] {
+                for r in shard_trials(trials, workers) {
+                    assert!(r.start < r.end, "empty shard {r:?} (trials={trials}, workers={workers})");
+                }
+            }
+        }
+        assert!(shard_trials(0, 4).is_empty());
+    }
+
+    #[test]
+    fn lattice_shards_cover_exactly_and_are_never_empty() {
+        for l in [1usize, 2, 3, 5, 7, 12, 100, 1000] {
+            for workers in [1usize, 2, 3, 7, 8, 64, 1000] {
+                let plan = shard_lattice(l, workers);
+                assert!(plan.len() <= l, "more blocks than PEs (l={l}, w={workers})");
+                assert_eq!(plan.len(), workers.clamp(1, l));
+                let mut expect = 0;
+                for r in &plan {
+                    assert_eq!(r.start, expect, "gap in plan (l={l}, w={workers})");
+                    assert!(r.start < r.end, "empty block {r:?} (l={l}, w={workers})");
+                    expect = r.end;
+                }
+                assert_eq!(expect, l, "plan does not cover the lattice");
+                // sizes differ by at most one
+                let sizes: Vec<usize> = plan.iter().map(|r| r.end - r.start).collect();
+                let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(mx - mn <= 1, "unbalanced plan {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn lattice_degenerate_geometries() {
+        // the degenerate cases the sharded engine must survive: L = 1,
+        // L < workers, and block size 1 (halo == whole shard)
+        assert!(shard_lattice(0, 4).is_empty());
+        assert_eq!(shard_lattice(1, 4), vec![0..1]);
+        assert_eq!(shard_lattice(3, 7), vec![0..1, 1..2, 2..3]);
+        assert_eq!(shard_lattice(5, 5), vec![0..1, 1..2, 2..3, 3..4, 4..5]);
+        assert_eq!(shard_lattice(5, 2), vec![0..3, 3..5]);
     }
 
     #[test]

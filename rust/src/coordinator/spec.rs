@@ -7,7 +7,7 @@ use crate::config::Config;
 use crate::output::Table;
 use crate::pdes::{Mode, Topology, VolumeLoad};
 
-use super::campaign::{steady_state_topology, RunSpec};
+use super::campaign::{steady_state_topology_with, RunSpec, ShardStrategy};
 
 /// A parsed campaign: the cartesian grid of (L, N_V, Δ) points.
 #[derive(Clone, Debug)]
@@ -36,6 +36,12 @@ pub struct CampaignSpec {
     pub measure: usize,
     /// Master seed.
     pub seed: u64,
+    /// Worker decomposition: "trials" (default) | "lattice" | "both"
+    /// (trials × PE blocks; see `coordinator::ShardStrategy`).
+    pub workers: String,
+    /// Explicit PE-block workers per simulation for "lattice"/"both"
+    /// (0 = resolve against the pool budget).
+    pub lattice_workers: usize,
 }
 
 impl CampaignSpec {
@@ -55,6 +61,8 @@ impl CampaignSpec {
             warm: cfg.integer(s, "warm", 2000) as usize,
             measure: cfg.integer(s, "measure", 2000) as usize,
             seed: cfg.integer(s, "seed", 20020601),
+            workers: cfg.text(s, "workers", "trials"),
+            lattice_workers: cfg.integer(s, "lattice_workers", 0) as usize,
         };
         if spec.ls.is_empty() {
             bail!("campaign: `l` list is required");
@@ -71,7 +79,15 @@ impl CampaignSpec {
             "ring" | "kring" | "smallworld" => {}
             t => bail!("campaign: unknown topology {t:?} (ring|kring|smallworld)"),
         }
+        // fail at parse time, not mid-sweep
+        ShardStrategy::from_spec(&spec.workers, spec.lattice_workers)?;
         Ok(spec)
+    }
+
+    /// The resolved worker decomposition of this campaign.
+    pub fn strategy(&self) -> ShardStrategy {
+        ShardStrategy::from_spec(&self.workers, self.lattice_workers)
+            .expect("validated in from_config")
     }
 
     /// The PE graph for ring size `l` (links are seeded from the campaign
@@ -123,11 +139,12 @@ impl CampaignSpec {
         } else {
             &self.deltas
         };
+        let strategy = self.strategy();
         for &l in &self.ls {
             for &nv in nvs {
                 for &delta in deltas {
                     let (mode, load) = self.point(nv, delta);
-                    let st = steady_state_topology(
+                    let st = steady_state_topology_with(
                         self.topology_for(l),
                         &RunSpec {
                             l,
@@ -139,6 +156,7 @@ impl CampaignSpec {
                         },
                         self.warm,
                         self.measure,
+                        strategy,
                     );
                     table.push(vec![
                         l as f64, nv as f64, delta, st.u, st.u_err, st.w, st.wa, st.gvt_rate,
@@ -198,6 +216,48 @@ measure = 50
         assert_eq!(table.len(), 1);
         assert!(table.rows()[0][3] > 0.0 && table.rows()[0][3] <= 1.0);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn workers_key_parses_and_executes() {
+        let cfg = Config::parse(
+            "[campaign]\nmode = \"windowed\"\nworkers = \"both\"\nlattice_workers = 2\n\
+             l = [12]\nnv = [1]\ndeltas = [3]\ntrials = 4\nwarm = 30\nmeasure = 30",
+        )
+        .unwrap();
+        let spec = CampaignSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.workers, "both");
+        assert_eq!(spec.lattice_workers, 2);
+        match spec.strategy() {
+            ShardStrategy::Both {
+                trial_workers,
+                lattice_workers,
+            } => {
+                assert_eq!(lattice_workers, 2);
+                assert!(trial_workers >= 1);
+            }
+            other => panic!("unexpected strategy {other:?}"),
+        }
+        let dir = std::env::temp_dir().join("repro_campaign_workers_test");
+        let table = spec.execute(&dir).unwrap();
+        assert_eq!(table.len(), 1);
+        assert!(table.rows()[0][3] > 0.0 && table.rows()[0][3] <= 1.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn default_workers_is_trials() {
+        let cfg = Config::parse("[campaign]\nl = [8]\nnv = [1]").unwrap();
+        let spec = CampaignSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.workers, "trials");
+        assert_eq!(spec.strategy(), ShardStrategy::Trials);
+    }
+
+    #[test]
+    fn bad_workers_rejected() {
+        let cfg =
+            Config::parse("[campaign]\nworkers = \"threads\"\nl = [8]\nnv = [1]").unwrap();
+        assert!(CampaignSpec::from_config(&cfg).is_err());
     }
 
     #[test]

@@ -128,8 +128,11 @@ pub struct BatchPdes {
     /// One independent generator per replica row.
     rngs: Vec<Rng>,
     t: u64,
-    /// Fast-path flag: ring topology at N_V = 1 (every check two-sided).
-    ring_nv1: bool,
+    /// Honest two-neighbour ring: the topology tag *and* the supplied
+    /// table agree on `[left, right]` ring adjacency.  Precondition of the
+    /// fused two-sided fast path (at N_V = 1) and of the sharded engine's
+    /// halo decision kernel (`pdes::sharded`).
+    ring2: bool,
     /// Exact-rescan period for the tracked aggregates (steps).
     resync_period: u64,
 }
@@ -177,12 +180,12 @@ impl BatchPdes {
                 }
             }
         }
-        // The two-sided fast path hard-codes ring adjacency, so it must be
-        // earned from the *table* actually supplied, not just the enum —
-        // a custom table paired with a Ring tag falls back to the generic
-        // (table-honouring) pass instead of silently using the wrong graph.
-        let ring_nv1 = nv1
-            && matches!(topology, Topology::Ring { .. })
+        // The two-sided fast path and the sharded halo kernel hard-code
+        // ring adjacency, so it must be earned from the *table* actually
+        // supplied, not just the enum — a custom table paired with a Ring
+        // tag falls back to the generic (table-honouring) pass instead of
+        // silently using the wrong graph.
+        let ring2 = matches!(topology, Topology::Ring { .. })
             && (0..pes).all(|k| {
                 let nb = nbr.neighbours(k);
                 nb.len() == 2
@@ -206,7 +209,7 @@ impl BatchPdes {
             nv1,
             rngs,
             t: 0,
-            ring_nv1,
+            ring2,
             resync_period: GVT_RESYNC_PERIOD,
         }
     }
@@ -389,7 +392,7 @@ impl BatchPdes {
         };
         // the two-sided fast path only applies when Eq. 1 is enforced at
         // all — RD modes at N_V = 1 must skip the neighbour check entirely
-        let ring_fast = enforce_nn && self.ring_nv1;
+        let ring_fast = enforce_nn && self.nv1 && self.ring2;
 
         let Self {
             tau,
@@ -449,6 +452,56 @@ impl BatchPdes {
     pub fn step(&mut self) {
         self.step_masked(None);
     }
+
+    /// Destructured mutable access to the step state for the sharded
+    /// engine ([`super::ShardedPdes`]), which drives these same buffers
+    /// from its two-phase (decide ∥, then update) parallel step.  Keeping
+    /// the state owned here means a sharded simulation *is* a batch
+    /// simulation — the two engines can even be interleaved on one
+    /// trajectory (tested in `sharded.rs`).
+    pub(crate) fn sharded_parts(&mut self) -> StepParts<'_> {
+        StepParts {
+            rows: self.rows,
+            pes: self.pes,
+            mode: self.mode,
+            p_side: self.p_side,
+            nv1: self.nv1,
+            ring2: self.ring2,
+            tau: &mut self.tau,
+            pend: &mut self.pend,
+            rngs: &mut self.rngs,
+            counts: &mut self.counts,
+            stats: &mut self.stats,
+            nbr: &self.nbr,
+        }
+    }
+
+    /// Close one sharded step: advance t and run the periodic exact-rescan
+    /// drift guard, exactly as [`Self::step_masked`] does at step end.
+    pub(crate) fn finish_sharded_step(&mut self) {
+        self.t += 1;
+        if self.t % self.resync_period == 0 {
+            self.resync_row_stats();
+        }
+    }
+}
+
+/// Borrowed step state of a [`BatchPdes`], handed to the sharded engine
+/// (field-disjoint, so phase A can read `tau`/`pend` shared while the
+/// decision buffer fills, and phase B can split the rows mutably).
+pub(crate) struct StepParts<'a> {
+    pub rows: usize,
+    pub pes: usize,
+    pub mode: Mode,
+    pub p_side: f64,
+    pub nv1: bool,
+    pub ring2: bool,
+    pub tau: &'a mut [f64],
+    pub pend: &'a mut [u8],
+    pub rngs: &'a mut [Rng],
+    pub counts: &'a mut [u32],
+    pub stats: &'a mut [StepStats],
+    pub nbr: &'a NeighbourTable,
 }
 
 /// Fused decide + update + measure sweep for the ring + N_V = 1 fast path

@@ -14,6 +14,9 @@
 //!   as a flat CSR neighbour table;
 //! * [`BatchPdes`] — the engine: B independent replicas in one `(B, L)`
 //!   struct-of-arrays pass (the L2 artifact layout, natively);
+//! * [`ShardedPdes`] — the same engine stepped by a worker-per-block
+//!   domain decomposition (halo-exchange decisions, per-step barrier),
+//!   bit-identical to [`BatchPdes`] for every worker count;
 //! * [`RingPdes`] / [`LatticePdes`] — thin `B = 1` views kept for the
 //!   paper-facing API and for cross-validation;
 //! * [`InstrumentedRing`] — an independent serial implementation with
@@ -24,6 +27,7 @@ mod instrument;
 mod lattice;
 mod mode;
 pub(crate) mod ring;
+mod sharded;
 mod topology;
 
 pub use batch::{BatchPdes, GVT_RESYNC_PERIOD, PEND_ALL, PEND_INTERIOR};
@@ -31,4 +35,5 @@ pub use instrument::{InstrumentedRing, MeanFieldCounters};
 pub use lattice::LatticePdes;
 pub use mode::{Mode, VolumeLoad};
 pub use ring::{Pending, RingPdes, StepOutcome};
+pub use sharded::ShardedPdes;
 pub use topology::{NeighbourTable, Topology};

@@ -1,0 +1,850 @@
+//! Domain-decomposed multi-threaded stepping: the simulated parallelism,
+//! made real.
+//!
+//! The paper's subject is L PEs advancing *concurrently* under the
+//! conservative causality rule (Eq. 1) plus the moving Δ-window (Eq. 3),
+//! yet [`BatchPdes`] walks each replica's lattice serially on one thread
+//! (the coordinator's pool only shards *trials*).  [`ShardedPdes`] splits
+//! each (B, L) batch into contiguous PE blocks — one shard per worker
+//! thread, the worker-per-block arrangement whose scalability the paper
+//! (and cond-mat/0112103, cond-mat/0304617) is about — while keeping every
+//! trajectory **bit-identical** to the single-threaded engine for every
+//! topology × mode × N_V, independent of the worker count.
+//!
+//! ## The two-phase step (DESIGN.md §Sharding)
+//!
+//! 1. **Decide (parallel)** — every (row, block) tile computes its PEs'
+//!    update verdicts against the *frozen* horizon τ(t), exactly the
+//!    horizon `BatchPdes::step_masked` decides against.  On the honest
+//!    ring the kernel reads only its block plus one halo τ per side (the
+//!    literal nearest-neighbour halo exchange; k-rings widen the halo to
+//!    k, realized through the shared frozen row); non-ring graphs fall
+//!    back to a single lattice shard (long-range links make a contiguous
+//!    halo unbounded), which still leaves rows to decide in parallel.
+//!    Decisions are pure reads + disjoint writes into the `ok` buffer, so
+//!    tile scheduling cannot affect them.
+//! 2. **Barrier** — the scoped-thread join.  No τ write happens anywhere
+//!    until *all* decisions of the step are fixed, which is the same
+//!    frozen-horizon argument that made `BatchPdes` single-buffered
+//!    (§Perf in-place safety), extended across threads.
+//! 3. **Update (parallel over rows)** — each row's update sweep runs on
+//!    one worker in PE index order, because the row's RNG stream is
+//!    serial by contract: draws (pending redraw, then exponential,
+//!    updaters only, PE order) must replay exactly for bit-identity with
+//!    `BatchPdes` — and with the paper's serial-reference semantics.  The
+//!    sweep also produces the row's tracked [`StepStats`] in PE order
+//!    (bit-identical to the single-threaded aggregates) *and* per-shard
+//!    partial aggregates, whose shard-order merge reproduces min/max/
+//!    count exactly (see [`StepStats::merge`] for the sum caveat).
+//!
+//! The determinism harness (`tests/properties.rs`,
+//! `tests/golden_trajectory.rs`, and the cross-check port
+//! `python/tools/crosscheck_sharded.py`) pins the bit-identity contract;
+//! any future rework of this engine — e.g. a persistent worker pool, or
+//! per-PE RNG streams that would unlock within-row parallel updates at
+//! the price of a new trajectory family — must keep it green or
+//! regenerate the goldens deliberately.
+
+use std::ops::{Deref, DerefMut, Range};
+use std::thread;
+
+use super::batch::{draw_pending_slot, BatchPdes, PEND_ALL, PEND_INTERIOR};
+use super::topology::{NeighbourTable, Topology};
+use super::{Mode, VolumeLoad};
+use crate::coordinator::pool::{shard_lattice, worker_count};
+use crate::rng::Rng;
+use crate::stats::StepStats;
+
+/// A [`BatchPdes`] whose parallel step is executed by a worker-per-block
+/// domain decomposition.  Dereferences to the underlying [`BatchPdes`]
+/// for the whole read API (`tau_row`, `step_stats`, `counts`, ...).
+pub struct ShardedPdes {
+    inner: BatchPdes,
+    /// Requested worker count (threads per phase are additionally capped
+    /// by the number of available tiles / rows).
+    workers: usize,
+    /// Contiguous PE blocks of the lattice decomposition (single block =
+    /// the non-ring fallback).
+    plan: Vec<Range<usize>>,
+    /// Whether the plan actually decomposes the lattice (ring family) or
+    /// is the single-shard fallback.
+    lattice_sharded: bool,
+    /// (rows × pes) decision buffer, filled by phase A against the frozen
+    /// horizon; the barrier guarantees it is complete before any write.
+    ok: Vec<bool>,
+    /// (rows × blocks) per-shard partial aggregates of the latest step,
+    /// row-major in shard order.
+    shard_stats: Vec<StepStats>,
+    /// Reusable per-row window-edge scratch (Δ + tracked GVT), refilled
+    /// each step — keeps the per-step path free of avoidable allocation.
+    edges: Vec<f64>,
+}
+
+impl ShardedPdes {
+    /// Hard ceiling on the per-simulation worker count.  Requests beyond
+    /// it clamp (constructors) or fail validation (`workers=` spec
+    /// parsing) instead of letting a config drive `thread::scope` into
+    /// tens of thousands of per-step OS spawns, where thread-creation
+    /// failure (EAGAIN) would panic mid-sweep.  Far above any real
+    /// machine's core count; the plan itself is additionally capped at
+    /// one block per PE.
+    pub const MAX_WORKERS: usize = 1024;
+
+    /// Sharded twin of [`BatchPdes::new`].
+    pub fn new(
+        topology: Topology,
+        load: VolumeLoad,
+        mode: Mode,
+        rngs: Vec<Rng>,
+        workers: usize,
+    ) -> Self {
+        Self::from_batch(BatchPdes::new(topology, load, mode, rngs), workers)
+    }
+
+    /// Sharded twin of [`BatchPdes::with_table`].
+    pub fn with_table(
+        topology: Topology,
+        nbr: NeighbourTable,
+        load: VolumeLoad,
+        mode: Mode,
+        rngs: Vec<Rng>,
+        workers: usize,
+    ) -> Self {
+        Self::from_batch(BatchPdes::with_table(topology, nbr, load, mode, rngs), workers)
+    }
+
+    /// Sharded twin of [`BatchPdes::with_streams`].
+    pub fn with_streams(
+        topology: Topology,
+        load: VolumeLoad,
+        mode: Mode,
+        rows: usize,
+        seed: u64,
+        first: u64,
+        workers: usize,
+    ) -> Self {
+        Self::new(
+            topology,
+            load,
+            mode,
+            BatchPdes::trial_streams(seed, first, rows),
+            workers,
+        )
+    }
+
+    /// [`Self::with_streams`] with the pool's worker budget
+    /// (`REPRO_WORKERS`-aware via [`worker_count`]).
+    pub fn with_env_workers(
+        topology: Topology,
+        load: VolumeLoad,
+        mode: Mode,
+        rows: usize,
+        seed: u64,
+        first: u64,
+    ) -> Self {
+        Self::with_streams(topology, load, mode, rows, seed, first, worker_count())
+    }
+
+    /// Wrap an existing batch mid-trajectory.  Because the sharded step is
+    /// bit-identical to the single-threaded one, this changes *how* the
+    /// trajectory is computed, never the trajectory itself.
+    pub fn from_batch(batch: BatchPdes, workers: usize) -> Self {
+        let workers = workers.clamp(1, Self::MAX_WORKERS);
+        let pes = batch.pes();
+        let rows = batch.rows();
+        let lattice_sharded = matches!(
+            batch.topology(),
+            Topology::Ring { .. } | Topology::KRing { .. }
+        );
+        let plan = if lattice_sharded {
+            shard_lattice(pes, workers)
+        } else {
+            vec![0..pes]
+        };
+        let blocks = plan.len();
+        let mut sharded = Self {
+            inner: batch,
+            workers,
+            plan,
+            lattice_sharded,
+            ok: vec![false; rows * pes],
+            shard_stats: vec![StepStats::identity(); rows * blocks],
+            edges: Vec::with_capacity(rows),
+        };
+        sharded.refresh_shard_stats();
+        sharded
+    }
+
+    /// Re-plan the decomposition for a different worker count, preserving
+    /// the trajectory (bit-identity is worker-count-independent).
+    pub fn re_shard(self, workers: usize) -> Self {
+        Self::from_batch(self.inner, workers)
+    }
+
+    /// Unwrap the underlying batch engine.
+    pub fn into_batch(self) -> BatchPdes {
+        self.inner
+    }
+
+    /// The underlying single-threaded engine (also available via deref).
+    pub fn batch(&self) -> &BatchPdes {
+        &self.inner
+    }
+
+    /// Requested worker count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The contiguous PE blocks of the decomposition, in lattice order.
+    pub fn plan(&self) -> &[Range<usize>] {
+        &self.plan
+    }
+
+    /// True when the plan decomposes the lattice (ring family); false for
+    /// the single-shard fallback of long-range topologies.
+    pub fn lattice_sharded(&self) -> bool {
+        self.lattice_sharded
+    }
+
+    /// Per-shard partial aggregates of one row's latest step, in shard
+    /// order (`plan()[b]` produced element `b`).
+    pub fn shard_stats_row(&self, row: usize) -> &[StepStats] {
+        let blocks = self.plan.len();
+        &self.shard_stats[row * blocks..(row + 1) * blocks]
+    }
+
+    /// Shard-order merge of one row's partials.  `min`/`max`/`n_updated`
+    /// are bit-equal to the tracked row aggregates (tested); `sum` agrees
+    /// up to floating-point association (see [`StepStats::merge`]).
+    pub fn merged_shard_stats_row(&self, row: usize) -> StepStats {
+        self.shard_stats_row(row)
+            .iter()
+            .fold(StepStats::identity(), |acc, s| acc.merge(s))
+    }
+
+    /// Global virtual time of one row read from the shard partials —
+    /// O(blocks) ≤ O(workers), bit-equal to the O(1) tracked
+    /// [`BatchPdes::global_virtual_time_row`] because IEEE min merges
+    /// exactly under any bracketing.
+    pub fn gvt_from_shards_row(&self, row: usize) -> f64 {
+        self.shard_stats_row(row)
+            .iter()
+            .fold(f64::INFINITY, |m, s| m.min(s.min))
+    }
+
+    /// Recompute the per-shard partials from the current horizon (used at
+    /// construction / re-sharding; each step rewrites them anyway).
+    fn refresh_shard_stats(&mut self) {
+        let blocks = self.plan.len();
+        for row in 0..self.inner.rows() {
+            let tau = self.inner.tau_row(row);
+            for (b, blk) in self.plan.iter().enumerate() {
+                self.shard_stats[row * blocks + b] =
+                    StepStats::measure(&tau[blk.start..blk.end], 0);
+            }
+        }
+    }
+
+    /// One parallel step of every row; optionally records the `(B, L)`
+    /// per-PE update mask.  Bit-identical to
+    /// [`BatchPdes::step_masked`] for any worker count (the determinism
+    /// suite's acceptance bar).
+    pub fn step_masked(&mut self, mut mask: Option<&mut [bool]>) {
+        let blocks = self.plan.len();
+        let workers = self.workers;
+        {
+            let p = self.inner.sharded_parts();
+            let (rows, pes) = (p.rows, p.pes);
+            if let Some(m) = mask.as_deref_mut() {
+                assert_eq!(m.len(), rows * pes);
+            }
+            let enforce_nn = p.mode.enforces_nn();
+            let enforce_win = p.mode.enforces_window();
+            let delta = p.mode.delta();
+            let redraw = if enforce_nn && !p.nv1 {
+                Some(p.p_side)
+            } else {
+                None
+            };
+            let kind = if !enforce_nn {
+                DecideKind::Local
+            } else if p.ring2 {
+                DecideKind::RingHalo
+            } else {
+                DecideKind::Generic
+            };
+            // Window edges against the frozen horizon: Δ + the tracked GVT
+            // of the *previous* step, exactly as `BatchPdes::step_masked`
+            // (reusable scratch — no per-step allocation).
+            self.edges.clear();
+            self.edges.extend(
+                p.stats
+                    .iter()
+                    .map(|s| if enforce_win { delta + s.min } else { f64::INFINITY }),
+            );
+
+            // ---- phase A: frozen-horizon decisions, one tile per
+            // (row, block), contiguous tile chunks per worker.
+            {
+                let tau: &[f64] = p.tau;
+                let pend: &[u8] = p.pend;
+                let nbr = p.nbr;
+                let edges: &[f64] = &self.edges;
+                let mut tiles: Vec<DecideTile<'_>> = Vec::with_capacity(rows * blocks);
+                for (row, ok_row) in self.ok.chunks_mut(pes).enumerate() {
+                    let mut rest = ok_row;
+                    for blk in &self.plan {
+                        let (head, tail) = rest.split_at_mut(blk.end - blk.start);
+                        tiles.push(DecideTile {
+                            row,
+                            start: blk.start,
+                            ok: head,
+                        });
+                        rest = tail;
+                    }
+                }
+                let threads = workers.clamp(1, tiles.len().max(1));
+                if threads == 1 {
+                    run_decide_tiles(&mut tiles, tau, pend, nbr, edges, pes, kind);
+                } else {
+                    let per = tiles.len().div_ceil(threads);
+                    // the scope join below is the step's decision barrier:
+                    // no τ write can happen before it
+                    thread::scope(|s| {
+                        let mut chunks = tiles.chunks_mut(per);
+                        let mine = chunks.next().unwrap();
+                        for chunk in chunks {
+                            s.spawn(move || {
+                                run_decide_tiles(chunk, tau, pend, nbr, edges, pes, kind);
+                            });
+                        }
+                        run_decide_tiles(mine, tau, pend, nbr, edges, pes, kind);
+                    });
+                }
+            }
+
+            // ---- barrier passed: every decision of the step is frozen.
+            if let Some(m) = mask {
+                m.copy_from_slice(&self.ok);
+            }
+
+            // ---- phase B: per-row update sweeps (PE order — the row RNG
+            // stream is serial by contract), rows distributed over workers.
+            {
+                let plan: &[Range<usize>] = &self.plan;
+                let ok_all: &[bool] = &self.ok;
+                let nbr = p.nbr;
+                let mut jobs: Vec<RowJob<'_>> = Vec::with_capacity(rows);
+                {
+                    let mut tau_it = p.tau.chunks_mut(pes);
+                    let mut pend_it = p.pend.chunks_mut(pes);
+                    let mut rng_it = p.rngs.iter_mut();
+                    let mut count_it = p.counts.iter_mut();
+                    let mut stat_it = p.stats.iter_mut();
+                    let mut shard_it = self.shard_stats.chunks_mut(blocks);
+                    for row in 0..rows {
+                        jobs.push(RowJob {
+                            tau: tau_it.next().unwrap(),
+                            pend: pend_it.next().unwrap(),
+                            rng: rng_it.next().unwrap(),
+                            count: count_it.next().unwrap(),
+                            stat: stat_it.next().unwrap(),
+                            shard_stats: shard_it.next().unwrap(),
+                            ok: &ok_all[row * pes..(row + 1) * pes],
+                        });
+                    }
+                }
+                let threads = workers.clamp(1, jobs.len().max(1));
+                if threads == 1 {
+                    run_update_rows(&mut jobs, nbr, plan, redraw);
+                } else {
+                    let per = jobs.len().div_ceil(threads);
+                    thread::scope(|s| {
+                        let mut chunks = jobs.chunks_mut(per);
+                        let mine = chunks.next().unwrap();
+                        for chunk in chunks {
+                            s.spawn(move || {
+                                run_update_rows(chunk, nbr, plan, redraw);
+                            });
+                        }
+                        run_update_rows(mine, nbr, plan, redraw);
+                    });
+                }
+            }
+        }
+        self.inner.finish_sharded_step();
+    }
+
+    /// One parallel step (no mask capture).
+    #[inline]
+    pub fn step(&mut self) {
+        self.step_masked(None);
+    }
+}
+
+impl Deref for ShardedPdes {
+    type Target = BatchPdes;
+
+    fn deref(&self) -> &BatchPdes {
+        &self.inner
+    }
+}
+
+/// Mutable access to the underlying batch engine.  Stepping it directly
+/// (`BatchPdes::step*`) is sound — it advances the *same* trajectory the
+/// sharded step would, just single-threaded (tested) — but the per-shard
+/// partials only refresh on the next sharded step.
+impl DerefMut for ShardedPdes {
+    fn deref_mut(&mut self) -> &mut BatchPdes {
+        &mut self.inner
+    }
+}
+
+/// Which decision kernel phase A runs (fixed per step by mode/topology).
+#[derive(Clone, Copy)]
+enum DecideKind {
+    /// No Eq. 1 (RD families): the verdict is `τ_k ≤ edge`, purely local.
+    Local,
+    /// Honest two-neighbour ring: block + one halo τ per side.
+    RingHalo,
+    /// Arbitrary graph: gather neighbours through the CSR table (the
+    /// shared frozen row is the degenerate whole-row halo).
+    Generic,
+}
+
+/// One phase-A work item: the decision slice of one (row, block) tile.
+struct DecideTile<'a> {
+    row: usize,
+    start: usize,
+    ok: &'a mut [bool],
+}
+
+/// One phase-B work item: everything one row's update sweep touches.
+struct RowJob<'a> {
+    tau: &'a mut [f64],
+    pend: &'a mut [u8],
+    rng: &'a mut Rng,
+    count: &'a mut u32,
+    stat: &'a mut StepStats,
+    shard_stats: &'a mut [StepStats],
+    ok: &'a [bool],
+}
+
+fn run_decide_tiles(
+    tiles: &mut [DecideTile<'_>],
+    tau: &[f64],
+    pend: &[u8],
+    nbr: &NeighbourTable,
+    edges: &[f64],
+    pes: usize,
+    kind: DecideKind,
+) {
+    for tile in tiles.iter_mut() {
+        let row_tau = &tau[tile.row * pes..(tile.row + 1) * pes];
+        let row_pend = &pend[tile.row * pes..(tile.row + 1) * pes];
+        let edge = edges[tile.row];
+        match kind {
+            DecideKind::Local => decide_block_local(row_tau, tile.start, edge, tile.ok),
+            DecideKind::RingHalo => decide_block_ring(row_tau, row_pend, tile.start, edge, tile.ok),
+            DecideKind::Generic => {
+                decide_block_generic(row_tau, row_pend, nbr, tile.start, edge, tile.ok)
+            }
+        }
+    }
+}
+
+/// Local decision kernel (RD families): no neighbour reads at all.
+fn decide_block_local(row_tau: &[f64], start: usize, edge: f64, ok: &mut [bool]) {
+    for (i, okk) in ok.iter_mut().enumerate() {
+        *okk = row_tau[start + i] <= edge;
+    }
+}
+
+/// Ring halo kernel: PE k in the block checks its frozen left/right
+/// neighbours; the only values read outside `[start, start + len)` are the
+/// two halo τ's — the literal halo exchange of the paper's worker-per-
+/// block arrangement.  A one-PE block reads only halos (halo == shard).
+fn decide_block_ring(row_tau: &[f64], row_pend: &[u8], start: usize, edge: f64, ok: &mut [bool]) {
+    let pes = row_tau.len();
+    let len = ok.len();
+    let left_halo = row_tau[(start + pes - 1) % pes];
+    let right_halo = row_tau[(start + len) % pes];
+    for (i, okk) in ok.iter_mut().enumerate() {
+        let k = start + i;
+        let cur = row_tau[k];
+        let left = if i == 0 { left_halo } else { row_tau[k - 1] };
+        let right = if i + 1 == len { right_halo } else { row_tau[k + 1] };
+        let nn_ok = match row_pend[k] {
+            PEND_INTERIOR => true,
+            PEND_ALL => cur <= left && cur <= right,
+            1 => cur <= left,
+            _ => cur <= right, // slot 2: ring tables list [left, right]
+        };
+        *okk = nn_ok && cur <= edge;
+    }
+}
+
+/// Generic-topology block kernel: same verdicts as the single-threaded
+/// `decide_row_generic`, restricted to one block (neighbour gathers go
+/// through the shared frozen row).
+fn decide_block_generic(
+    row_tau: &[f64],
+    row_pend: &[u8],
+    nbr: &NeighbourTable,
+    start: usize,
+    edge: f64,
+    ok: &mut [bool],
+) {
+    for (i, okk) in ok.iter_mut().enumerate() {
+        let k = start + i;
+        let tk = row_tau[k];
+        let nn_ok = match row_pend[k] {
+            PEND_INTERIOR => true,
+            PEND_ALL => nbr.neighbours(k).iter().all(|&j| tk <= row_tau[j as usize]),
+            slot => tk <= row_tau[nbr.neighbours(k)[(slot - 1) as usize] as usize],
+        };
+        *okk = nn_ok && tk <= edge;
+    }
+}
+
+fn run_update_rows(
+    jobs: &mut [RowJob<'_>],
+    nbr: &NeighbourTable,
+    plan: &[Range<usize>],
+    redraw: Option<f64>,
+) {
+    for job in jobs.iter_mut() {
+        update_row(job, nbr, plan, redraw);
+    }
+}
+
+/// One row's update sweep: draws and in-place writes in PE index order
+/// (identical arithmetic and RNG consumption to `update_row_generic` and
+/// the fused sweeps of `BatchPdes`), accumulating the canonical row
+/// [`StepStats`] in PE order *and* per-shard partials as a by-product.
+fn update_row(
+    job: &mut RowJob<'_>,
+    nbr: &NeighbourTable,
+    plan: &[Range<usize>],
+    redraw: Option<f64>,
+) {
+    let mut n_up = 0u32;
+    let (mut mn, mut mx, mut sum) = (f64::INFINITY, f64::NEG_INFINITY, 0.0);
+    for (block, blk) in plan.iter().enumerate() {
+        let mut bn = 0u32;
+        let (mut bmn, mut bmx, mut bsum) = (f64::INFINITY, f64::NEG_INFINITY, 0.0);
+        for k in blk.clone() {
+            let mut x = job.tau[k];
+            if job.ok[k] {
+                n_up += 1;
+                bn += 1;
+                if let Some(p_side) = redraw {
+                    job.pend[k] = draw_pending_slot(job.rng, p_side, false, nbr.degree(k));
+                }
+                x += job.rng.exponential();
+                job.tau[k] = x;
+            }
+            mn = mn.min(x);
+            mx = mx.max(x);
+            sum += x;
+            bmn = bmn.min(x);
+            bmx = bmx.max(x);
+            bsum += x;
+        }
+        job.shard_stats[block] = StepStats {
+            n_updated: bn,
+            sum: bsum,
+            min: bmn,
+            max: bmx,
+        };
+    }
+    *job.stat = StepStats {
+        n_updated: n_up,
+        sum,
+        min: mn,
+        max: mx,
+    };
+    *job.count = n_up;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pdes::{Mode, Topology, VolumeLoad};
+
+    fn assert_rows_bit_identical(a: &BatchPdes, b: &BatchPdes, what: &str) {
+        assert_eq!(a.rows(), b.rows());
+        for row in 0..a.rows() {
+            for (k, (x, y)) in a.tau_row(row).iter().zip(b.tau_row(row)).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what}: tau row {row} PE {k}");
+            }
+            assert_eq!(a.pending_row(row), b.pending_row(row), "{what}: pend row {row}");
+            assert_eq!(a.counts()[row], b.counts()[row], "{what}: count row {row}");
+            let (s, t) = (a.step_stats_row(row), b.step_stats_row(row));
+            assert_eq!(s.n_updated, t.n_updated, "{what}: stats.n row {row}");
+            assert_eq!(s.sum.to_bits(), t.sum.to_bits(), "{what}: stats.sum row {row}");
+            assert_eq!(s.min.to_bits(), t.min.to_bits(), "{what}: stats.min row {row}");
+            assert_eq!(s.max.to_bits(), t.max.to_bits(), "{what}: stats.max row {row}");
+        }
+    }
+
+    #[test]
+    fn sharded_ring_matches_batch_for_every_worker_count() {
+        for workers in [1usize, 2, 3, 5, 16, 40] {
+            let mut reference = BatchPdes::with_streams(
+                Topology::Ring { l: 32 },
+                VolumeLoad::Sites(1),
+                Mode::Windowed { delta: 2.0 },
+                2,
+                41,
+                0,
+            );
+            let mut sharded = ShardedPdes::with_streams(
+                Topology::Ring { l: 32 },
+                VolumeLoad::Sites(1),
+                Mode::Windowed { delta: 2.0 },
+                2,
+                41,
+                0,
+                workers,
+            );
+            for step in 0..80 {
+                reference.step();
+                sharded.step();
+                assert_rows_bit_identical(
+                    &reference,
+                    &sharded,
+                    &format!("workers {workers} step {step}"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_mask_equals_batch_mask() {
+        let mk = || {
+            (
+                BatchPdes::with_streams(
+                    Topology::KRing { l: 18, k: 2 },
+                    VolumeLoad::Sites(6),
+                    Mode::Windowed { delta: 3.0 },
+                    2,
+                    8,
+                    0,
+                ),
+                ShardedPdes::with_streams(
+                    Topology::KRing { l: 18, k: 2 },
+                    VolumeLoad::Sites(6),
+                    Mode::Windowed { delta: 3.0 },
+                    2,
+                    8,
+                    0,
+                    3,
+                ),
+            )
+        };
+        let (mut reference, mut sharded) = mk();
+        let mut ma = vec![false; 36];
+        let mut mb = vec![false; 36];
+        for step in 0..60 {
+            reference.step_masked(Some(&mut ma));
+            sharded.step_masked(Some(&mut mb));
+            assert_eq!(ma, mb, "step {step}");
+        }
+    }
+
+    #[test]
+    fn non_ring_topologies_fall_back_to_single_lattice_shard() {
+        for topo in [
+            Topology::SmallWorld { l: 16, extra: 5, seed: 3 },
+            Topology::Square { side: 4 },
+            Topology::Cubic { side: 3 },
+        ] {
+            let sim = ShardedPdes::with_streams(
+                topo,
+                VolumeLoad::Sites(1),
+                Mode::Conservative,
+                2,
+                5,
+                0,
+                4,
+            );
+            assert!(!sim.lattice_sharded(), "{topo:?}");
+            assert_eq!(sim.plan().len(), 1, "{topo:?}");
+            assert_eq!(sim.plan()[0], 0..topo.len(), "{topo:?}");
+        }
+        let ring = ShardedPdes::with_streams(
+            Topology::Ring { l: 16 },
+            VolumeLoad::Sites(1),
+            Mode::Conservative,
+            2,
+            5,
+            0,
+            4,
+        );
+        assert!(ring.lattice_sharded());
+        assert_eq!(ring.plan().len(), 4);
+    }
+
+    #[test]
+    fn degenerate_geometries_step_without_panicking() {
+        // workers ≫ L forces one-PE blocks (halo == whole shard); L = 3 is
+        // the smallest legal ring
+        for (l, workers) in [(3usize, 7usize), (5, 5), (5, 40), (4, 2)] {
+            let mut reference = BatchPdes::with_streams(
+                Topology::Ring { l },
+                VolumeLoad::Sites(1),
+                Mode::Windowed { delta: 1.0 },
+                1,
+                13,
+                0,
+            );
+            let mut sharded = ShardedPdes::with_streams(
+                Topology::Ring { l },
+                VolumeLoad::Sites(1),
+                Mode::Windowed { delta: 1.0 },
+                1,
+                13,
+                0,
+                workers,
+            );
+            assert!(sharded.plan().len() <= l);
+            for step in 0..50 {
+                reference.step();
+                sharded.step();
+                assert_rows_bit_identical(
+                    &reference,
+                    &sharded,
+                    &format!("L {l} workers {workers} step {step}"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shard_merge_reproduces_tracked_row_stats() {
+        let mut sim = ShardedPdes::with_streams(
+            Topology::Ring { l: 24 },
+            VolumeLoad::Sites(4),
+            Mode::Windowed { delta: 2.0 },
+            2,
+            19,
+            0,
+            5,
+        );
+        for _ in 0..60 {
+            sim.step();
+            for row in 0..2 {
+                let tracked = sim.step_stats_row(row);
+                let merged = sim.merged_shard_stats_row(row);
+                assert_eq!(merged.n_updated, tracked.n_updated);
+                assert_eq!(merged.min.to_bits(), tracked.min.to_bits());
+                assert_eq!(merged.max.to_bits(), tracked.max.to_bits());
+                assert_eq!(
+                    sim.gvt_from_shards_row(row).to_bits(),
+                    sim.global_virtual_time_row(row).to_bits()
+                );
+                // the sum lane agrees up to fp association only
+                assert!((merged.sum - tracked.sum).abs() <= 1e-9 * tracked.sum.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn interleaving_engines_preserves_the_trajectory() {
+        // the sharded engine owns a plain BatchPdes: stepping either engine
+        // advances the same trajectory, so alternating them must replay the
+        // pure single-threaded run bit for bit
+        let mut reference = BatchPdes::with_streams(
+            Topology::Ring { l: 20 },
+            VolumeLoad::Sites(3),
+            Mode::Windowed { delta: 4.0 },
+            2,
+            23,
+            0,
+        );
+        let mut sharded = ShardedPdes::with_streams(
+            Topology::Ring { l: 20 },
+            VolumeLoad::Sites(3),
+            Mode::Windowed { delta: 4.0 },
+            2,
+            23,
+            0,
+            3,
+        );
+        for step in 0..60 {
+            reference.step();
+            if step % 2 == 0 {
+                sharded.step();
+            } else {
+                // DerefMut: drive the inner single-threaded engine directly
+                sharded.deref_mut().step();
+            }
+            assert_rows_bit_identical(&reference, &sharded, &format!("step {step}"));
+        }
+    }
+
+    #[test]
+    fn re_sharding_mid_run_preserves_the_trajectory() {
+        let mut reference = BatchPdes::with_streams(
+            Topology::KRing { l: 21, k: 2 },
+            VolumeLoad::Sites(10),
+            Mode::Conservative,
+            2,
+            31,
+            0,
+        );
+        let mut sharded = ShardedPdes::with_streams(
+            Topology::KRing { l: 21, k: 2 },
+            VolumeLoad::Sites(10),
+            Mode::Conservative,
+            2,
+            31,
+            0,
+            2,
+        );
+        for _ in 0..30 {
+            reference.step();
+            sharded.step();
+        }
+        let mut sharded = sharded.re_shard(5);
+        assert_eq!(sharded.plan().len(), 5);
+        for step in 0..30 {
+            reference.step();
+            sharded.step();
+            assert_rows_bit_identical(&reference, &sharded, &format!("post-reshard step {step}"));
+        }
+    }
+
+    #[test]
+    fn worker_requests_clamp_to_the_engine_ceiling() {
+        let sim = ShardedPdes::with_streams(
+            Topology::Ring { l: 8 },
+            VolumeLoad::Sites(1),
+            Mode::Conservative,
+            1,
+            1,
+            0,
+            ShardedPdes::MAX_WORKERS * 10,
+        );
+        assert_eq!(sim.workers(), ShardedPdes::MAX_WORKERS);
+        // the plan is additionally capped at one block per PE
+        assert_eq!(sim.plan().len(), 8);
+    }
+
+    #[test]
+    fn env_workers_constructor_steps() {
+        let mut sim = ShardedPdes::with_env_workers(
+            Topology::Ring { l: 12 },
+            VolumeLoad::Sites(1),
+            Mode::Conservative,
+            1,
+            3,
+            0,
+        );
+        sim.step();
+        assert_eq!(sim.counts()[0] as usize, 12);
+        assert!(sim.workers() >= 1);
+    }
+}

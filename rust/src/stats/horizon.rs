@@ -92,6 +92,38 @@ impl StepStats {
         }
     }
 
+    /// Identity element of [`Self::merge`]: the aggregates of an *empty*
+    /// PE block (neutral under min/max/sum/count combination).
+    pub fn identity() -> Self {
+        Self {
+            n_updated: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Combine the aggregates of two *disjoint, adjacent* PE blocks.
+    ///
+    /// `n_updated`, `min` and `max` combine exactly under any bracketing
+    /// (integer addition; IEEE min/max are associative on the non-NaN
+    /// values the engine produces), so a shard-order fold of per-block
+    /// partials is bit-equal to one serial sweep for those lanes.  `sum`
+    /// is floating-point addition, whose bits depend on the association:
+    /// merge partials in a **fixed shard order** for results that are
+    /// reproducible across worker counts, and use a single PE-index-order
+    /// accumulation where bit-compatibility with a serial sweep is
+    /// required — the rule the sharded engine follows (DESIGN.md
+    /// §Sharding).
+    pub fn merge(&self, other: &Self) -> Self {
+        Self {
+            n_updated: self.n_updated + other.n_updated,
+            sum: self.sum + other.sum,
+            min: self.min.min(other.min),
+            max: self.max.max(other.max),
+        }
+    }
+
     /// Global virtual time min_k τ_k.
     #[inline]
     pub fn gvt(&self) -> f64 {
@@ -237,6 +269,47 @@ mod tests {
         assert_eq!(s.spread(), 3.0);
         assert_eq!(s.mean(4), 2.375);
         assert_eq!(s.utilization(4), 0.5);
+    }
+
+    #[test]
+    fn merge_of_block_partials_matches_serial_measure_exactly_for_min_max_count() {
+        // the shard-order merge rule: per-block partials folded in block
+        // order must reproduce the serial sweep exactly on the integer and
+        // min/max lanes, and up to association on the sum
+        let tau: Vec<f64> = (0..53).map(|i| ((i * 97) % 41) as f64 * 0.313).collect();
+        let serial = StepStats::measure(&tau, 17);
+        for blocks in [1usize, 2, 3, 7, 53] {
+            let size = tau.len().div_ceil(blocks);
+            let mut merged = StepStats::identity();
+            let mut n_left = 17u32;
+            for chunk in tau.chunks(size) {
+                let n = n_left.min(chunk.len() as u32); // arbitrary split of the count
+                n_left -= n;
+                merged = merged.merge(&StepStats::measure(chunk, n));
+            }
+            assert_eq!(merged.n_updated, serial.n_updated, "blocks = {blocks}");
+            assert_eq!(merged.min.to_bits(), serial.min.to_bits(), "blocks = {blocks}");
+            assert_eq!(merged.max.to_bits(), serial.max.to_bits(), "blocks = {blocks}");
+            // sum: same value up to fp association, not necessarily same bits
+            assert!(
+                (merged.sum - serial.sum).abs() <= 1e-9 * serial.sum.abs().max(1.0),
+                "blocks = {blocks}: {} vs {}",
+                merged.sum,
+                serial.sum
+            );
+        }
+    }
+
+    #[test]
+    fn merge_identity_is_neutral() {
+        let s = StepStats::measure(&[2.0, 0.5, 3.25], 2);
+        let id = StepStats::identity();
+        for m in [id.merge(&s), s.merge(&id)] {
+            assert_eq!(m.n_updated, s.n_updated);
+            assert_eq!(m.sum.to_bits(), s.sum.to_bits());
+            assert_eq!(m.min.to_bits(), s.min.to_bits());
+            assert_eq!(m.max.to_bits(), s.max.to_bits());
+        }
     }
 
     #[test]

@@ -4,7 +4,7 @@
 mod prop;
 
 use prop::{check, PdesCase};
-use repro::pdes::{BatchPdes, InstrumentedRing, Mode, RingPdes, Topology, VolumeLoad};
+use repro::pdes::{BatchPdes, InstrumentedRing, Mode, RingPdes, ShardedPdes, Topology, VolumeLoad};
 use repro::rng::Rng;
 use repro::stats::{horizon_frame, StepStats};
 
@@ -427,6 +427,119 @@ fn tracked_row_stats_equal_fresh_rescan() {
                         );
                     }
                 }
+            }
+        }
+    }
+}
+
+/// THE determinism harness of the domain-decomposed engine (the sharded
+/// PR's acceptance bar): for every topology × mode × N_V in the grid and
+/// every worker count in {1, 2, 3, 7}, `ShardedPdes` must produce — at
+/// *every* step — exactly the bits `BatchPdes` produces: the τ horizon,
+/// the pending-event bytes, the per-row update counts, and the tracked
+/// `StepStats` (n/sum/min/max).  This is what pins the halo-exchange
+/// decision kernels, the per-step barrier placement, and the PE-order
+/// update/measurement sweep against any future rework (persistent worker
+/// pools, wider halos, ...): a scheduling-dependent read or a reordered
+/// RNG draw anywhere shows up here as a bit flip.
+#[test]
+fn sharded_engine_equals_batch_bit_identical() {
+    let topologies = [
+        Topology::Ring { l: 24 },
+        Topology::KRing { l: 24, k: 2 },
+        Topology::SmallWorld { l: 24, extra: 8, seed: 5 },
+        Topology::Square { side: 5 },
+        Topology::Cubic { side: 3 },
+    ];
+    let modes = [
+        Mode::Conservative,
+        Mode::Windowed { delta: 2.0 },
+        Mode::Rd,
+        Mode::WindowedRd { delta: 2.0 },
+    ];
+    let loads = [
+        VolumeLoad::Sites(1),
+        VolumeLoad::Sites(10),
+        VolumeLoad::Infinite,
+    ];
+    let worker_grid = [1usize, 2, 3, 7];
+    let rows = 2usize;
+    for topo in topologies {
+        for mode in modes {
+            for load in loads {
+                let mut reference =
+                    BatchPdes::with_streams(topo, load, mode, rows, 20020601, 0);
+                let mut sharded: Vec<ShardedPdes> = worker_grid
+                    .iter()
+                    .map(|&w| ShardedPdes::with_streams(topo, load, mode, rows, 20020601, 0, w))
+                    .collect();
+                for step in 0..60 {
+                    reference.step();
+                    for (&workers, sim) in worker_grid.iter().zip(sharded.iter_mut()) {
+                        sim.step();
+                        for row in 0..rows {
+                            let ctx = format!(
+                                "{topo:?} {mode:?} {load:?} workers {workers} step {step} row {row}"
+                            );
+                            for (k, (a, b)) in reference
+                                .tau_row(row)
+                                .iter()
+                                .zip(sim.tau_row(row))
+                                .enumerate()
+                            {
+                                assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: tau PE {k}");
+                            }
+                            assert_eq!(
+                                reference.pending_row(row),
+                                sim.pending_row(row),
+                                "{ctx}: pend"
+                            );
+                            assert_eq!(
+                                reference.counts()[row], sim.counts()[row],
+                                "{ctx}: counts"
+                            );
+                            let (s, t) =
+                                (reference.step_stats_row(row), sim.step_stats_row(row));
+                            assert_eq!(s.n_updated, t.n_updated, "{ctx}: stats.n");
+                            assert_eq!(s.sum.to_bits(), t.sum.to_bits(), "{ctx}: stats.sum");
+                            assert_eq!(s.min.to_bits(), t.min.to_bits(), "{ctx}: stats.min");
+                            assert_eq!(s.max.to_bits(), t.max.to_bits(), "{ctx}: stats.max");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The sharded engine's per-shard partials must merge (in shard order) to
+/// the tracked row aggregates exactly on the min/max/count lanes — the
+/// rule that keeps `global_virtual_time_row` consistent whether it is
+/// read O(1) from the row stats or O(workers) from the shard partials.
+#[test]
+fn sharded_shard_merge_consistent_with_tracked_gvt() {
+    for workers in [2usize, 5] {
+        let mut sim = ShardedPdes::with_streams(
+            Topology::KRing { l: 30, k: 2 },
+            VolumeLoad::Sites(4),
+            Mode::Windowed { delta: 3.0 },
+            3,
+            77,
+            0,
+            workers,
+        );
+        for _ in 0..50 {
+            sim.step();
+            for row in 0..3 {
+                let merged = sim.merged_shard_stats_row(row);
+                let tracked = sim.step_stats_row(row);
+                assert_eq!(merged.n_updated, tracked.n_updated);
+                assert_eq!(merged.min.to_bits(), tracked.min.to_bits());
+                assert_eq!(merged.max.to_bits(), tracked.max.to_bits());
+                assert_eq!(
+                    sim.gvt_from_shards_row(row).to_bits(),
+                    sim.global_virtual_time_row(row).to_bits()
+                );
             }
         }
     }
