@@ -1,0 +1,316 @@
+#!/usr/bin/env python3
+"""Generate EXPERIMENTS.md from the sweep-plan definitions.
+
+This is a line-exact mirror of ``experiments::experiments_md()`` in
+``rust/src/experiments/mod.rs`` (the authoring container has no Rust
+toolchain, so the committed EXPERIMENTS.md is produced here; the Rust
+unit test ``experiments_md_matches_committed_file`` then asserts the two
+generators agree byte-for-byte, which pins this mirror against drift in
+either direction).
+
+Usage:
+    python3 python/tools/gen_experiments_md.py            # rewrite EXPERIMENTS.md
+    python3 python/tools/gen_experiments_md.py --stdout   # print instead
+"""
+
+import sys
+from pathlib import Path
+
+INF = float("inf")
+DEFAULT_SEED = 20020601
+
+# ---------------------------------------------------------------- profile
+
+
+def p_trials(full, quick):
+    return max(full // 8, 4) if quick else full
+
+
+def p_steps(full, quick):
+    return max(full // 10, 50) if quick else full
+
+
+def pick(quick, full_v, quick_v):
+    return quick_v if quick else full_v
+
+
+def canon_f64(v):
+    """Mirror of pdes::canon_f64 for the value ranges the plans use."""
+    if v == INF:
+        return "inf"
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return repr(v)
+
+
+# ------------------------------------------------------------------ plans
+#
+# Each builder returns (title, [point]) where a point is a dict with keys
+# kind, trials, l, nv ('inf' for the RD limit), delta (float, INF when the
+# window is off), steps/warm/measure (int or None) — exactly the fields
+# md_row() summarizes, in the same per-plan point order as the Rust
+# builders (order is irrelevant to the summary, but kept for sanity).
+
+
+def curves(trials, l, nv, delta, steps):
+    return dict(kind="curves", trials=trials, l=l, nv=nv, delta=delta,
+                steps=steps, warm=None, measure=None)
+
+
+def steady(trials, l, nv, delta, warm, measure):
+    return dict(kind="steady", trials=trials, l=l, nv=nv, delta=delta,
+                steps=None, warm=warm, measure=measure)
+
+
+def snapshot(l, nv, delta, last_at):
+    return dict(kind="snapshot", trials=1, l=l, nv=nv, delta=delta,
+                steps=last_at, warm=None, measure=None)
+
+
+def counters(l, nv, delta, warm, steps):
+    return dict(kind="counters", trials=1, l=l, nv=nv, delta=delta,
+                steps=steps, warm=warm, measure=None)
+
+
+def lattice_u(trials, l, warm, measure):
+    return dict(kind="lattice-u", trials=trials, l=l, nv=1, delta=INF,
+                steps=None, warm=warm, measure=measure)
+
+
+def fig2(q):
+    ls = pick(q, [10, 100, 1000], [10, 100])
+    st, tr = p_steps(1000, q), p_trials(256, q)
+    pts = [curves(tr, l, nv, INF, st) for l in ls for nv in [1, 10, 100]]
+    return "utilization evolution, unconstrained (Fig. 2)", pts
+
+
+def fig3(q):
+    return "unconstrained horizon snapshots (Fig. 3)", [snapshot(100, 1, INF, 100)]
+
+
+def fig4(q):
+    ls = pick(q, [10, 100, 1000], [10, 100])
+    tr = p_trials(96, q)
+
+    def steps_for(l):
+        full = 2000 if l <= 10 else (20000 if l <= 100 else 40000)
+        return p_steps(full, q)
+
+    pts = [curves(tr, l, nv, INF, steps_for(l))
+           for _, nv in [("a", 1), ("b", 10)] for l in ls]
+    return "width evolution, unconstrained (Fig. 4)", pts
+
+
+def fig5(q):
+    ls = pick(q, [10, 18, 32, 56, 100, 178, 316, 1000], [10, 32, 100])
+    tr, w, m = p_trials(32, q), p_steps(3000, q), p_steps(3000, q)
+    pts = []
+    for d in [10.0, 100.0]:
+        for l in ls:
+            for nv in [1, 10, 100]:
+                pts.append(steady(tr, l, nv, d, w, m))
+            pts.append(steady(tr, l, "inf", d, w, m))
+    return "steady utilization vs system size, windowed (Fig. 5)", pts
+
+
+def fig6(q):
+    deltas = pick(q, [1.0, 5.0, 10.0, 100.0, INF], [1.0, 10.0, INF])
+    nvs = pick(q, [1, 10, 100, 1000], [1, 10, 100])
+    ls = pick(q, [10, 32, 100, 316], [10, 32, 100])
+    tr, w, m = p_trials(24, q), p_steps(3000, q), p_steps(3000, q)
+    pts = [steady(tr, l, nv, d, w, m) for nv in nvs for d in deltas for l in ls]
+    pts += [steady(tr, l, "inf", d, w, m) for d in deltas for l in ls]
+    return "extrapolated utilization surface u_inf(NV, delta) (Fig. 6)", pts
+
+
+def fig7(q):
+    t = p_steps(1000, q)
+    return "constrained vs unconstrained horizon (Fig. 7)", [
+        snapshot(100, 1, INF, t),
+        snapshot(100, 1, 5.0, t),
+    ]
+
+
+def fig8(q):
+    ls = pick(q, [100, 1000], [100])
+    st, tr = p_steps(2000, q), p_trials(96, q)
+    pts = [curves(tr, l, nv, 10.0, st) for l in ls for nv in [1, 10, 100, 1000]]
+    return "width evolution under the window (Fig. 8)", pts
+
+
+def fig9(q):
+    deltas = pick(q, [100.0, 10.0, 5.0, 1.0], [10.0, 1.0])
+    ls = pick(q, [10, 32, 100, 316, 1000], [10, 32, 100])
+    tr, m = p_trials(32, q), p_steps(3000, q)
+    pts = []
+    for d in deltas:
+        w = p_steps(8000 if d >= 100.0 else 3000, q)
+        for l in ls:
+            for nv in [1, 10, 100]:
+                pts.append(steady(tr, l, nv, d, w, m))
+            pts.append(steady(tr, l, "inf", d, w, m))
+    return "steady width vs system size, windowed (Fig. 9)", pts
+
+
+def fig10(q):
+    l = pick(q, 2000, 500)
+    return "slow/fast group decomposition (Fig. 10)", [
+        curves(p_trials(96, q), l, 1000, 10.0, p_steps(500, q))
+    ]
+
+
+def fig11(q):
+    deltas = pick(q, [1.0, 5.0, 10.0, 100.0], [1.0, 10.0])
+    nvs = pick(q, [1, 10, 100, 1000], [1, 10, 100])
+    ls = pick(q, [10, 32, 100, 316], [10, 32, 100])
+    tr, w, m = p_trials(24, q), p_steps(3000, q), p_steps(3000, q)
+    pts = [steady(tr, l, nv, INF, w, m) for nv in nvs for l in ls]
+    pts += [steady(tr, l, nv, d, w, m) for nv in nvs for d in deltas for l in ls]
+    return "utilization curve family y_delta(x) (Fig. 11)", pts
+
+
+def eq8(q):
+    ls = pick(q, [10, 18, 32, 56, 100, 178, 316, 562, 1000], [10, 32, 100])
+    tr, w, m = p_trials(32, q), p_steps(4000, q), p_steps(4000, q)
+    pts = [steady(tr, l, 1, INF, w, m) for l in ls]
+    return "Krug-Meakin extrapolation at NV=1 (Eq. 8)", pts
+
+
+def kpz(q):
+    l_grow = pick(q, 4096, 512)
+    pts = [curves(p_trials(32, q), l_grow, 1, INF, p_steps(3000, q))]
+    sat_tr = p_trials(16, q)
+    for l in pick(q, [16, 32, 64, 128, 256, 512], [10, 16, 24]):
+        t_x = float(l) ** 1.5
+        st = p_steps(min(max(int(t_x * 5.0), 2000), 60000), q)
+        pts.append(curves(sat_tr, l, 1, INF, st))
+    return "KPZ universality check: beta, alpha, z", pts
+
+
+def meanfield(q):
+    l, w, st = pick(q, 512, 128), p_steps(2000, q), p_steps(6000, q)
+    pts = [counters(l, nv, INF, w, st) for nv in [3, 10, 30, 100]]
+    pts += [counters(l, nv, d, w, st) for nv in [10, 100] for d in [10.0, 100.0]]
+    return "mean-field waiting analysis (Eqs. 13-14)", pts
+
+
+def appendix(q):
+    ls = pick(q, [10, 32, 100, 316], [10, 32, 100])
+    tr, w, m = p_trials(24, q), p_steps(3000, q), p_steps(3000, q)
+    pts = []
+    for d in pick(q, [1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0], [1.0, 5.0, 20.0]):
+        pts += [steady(tr, l, "inf", d, w, m) for l in ls]
+    for nv in pick(q, [1, 3, 10, 30, 100, 300, 1000], [1, 10, 100]):
+        pts += [steady(tr, l, nv, INF, w, m) for l in ls]
+    for nv in pick(q, [1, 10, 100, 1000], [1, 100]):
+        for d in pick(q, [1.0, 5.0, 10.0, 100.0], [5.0, 100.0]):
+            pts += [steady(tr, l, nv, d, w, m) for l in ls]
+    return "appendix fits A.1/A.2 and the Eq. 12 surface", pts
+
+
+def dims(q):
+    tr, w, m = p_trials(16, q), p_steps(2000, q), p_steps(2000, q)
+    pts = []
+    for side in pick(q, [6, 10, 16, 24], [6, 10]):
+        pts.append(lattice_u(tr, side * side, w, m))
+    for side in pick(q, [4, 6, 8, 10], [4, 6]):
+        pts.append(lattice_u(tr, side * side * side, w, m))
+    return "2-d/3-d conservative lattices (Section III A)", pts
+
+
+def topology(q):
+    l = pick(q, 256, 64)
+    warm = pick(q, 2000, 300)
+    tr = p_trials(32, q)
+    deltas = pick(q, [0.5, 1.0, 2.0, 5.0, 10.0, INF], [1.0, 5.0, INF])
+    pts = [steady(tr, l, 1, d, warm, warm) for _ in range(5) for d in deltas]
+    return "topology sweep: window vs network control", pts
+
+
+ALL = [
+    ("fig2", fig2), ("fig3", fig3), ("fig4", fig4), ("fig5", fig5),
+    ("fig6", fig6), ("fig7", fig7), ("fig8", fig8), ("fig9", fig9),
+    ("fig10", fig10), ("fig11", fig11), ("eq8", eq8), ("kpz", kpz),
+    ("meanfield", meanfield), ("appendix", appendix), ("dims", dims),
+    ("topology", topology),
+]
+
+# -------------------------------------------------------------- rendering
+
+PREAMBLE = """# EXPERIMENTS
+
+Generated from the `SweepPlan` definitions in `rust/src/experiments/` -- do
+not edit by hand.  Regenerate with
+`python3 python/tools/gen_experiments_md.py` (a unit test asserts this file
+matches the plans, so it cannot drift).
+
+Full-fidelity vs `--quick` parameters per figure driver.  Columns list the
+distinct values across the plan's points: system sizes L, volume loads N_V,
+window widths delta, measured steps, warm-up steps and measurement windows.
+`points` is the sweep-grid size; `trials` the per-point ensemble sizes.
+Every trial stream derives from the master seed (default 20020601), so any
+row is reproducible in isolation; `repro plan <name>` prints the exact
+point-by-point grid with cache keys.
+"""
+
+
+def md_row(profile, pts):
+    kinds = sorted({p["kind"] for p in pts})
+    trials = sorted({p["trials"] for p in pts})
+    ls = sorted({p["l"] for p in pts})
+    nv_key = lambda v: (1 << 64) if v == "inf" else v  # noqa: E731
+    nvs = sorted({nv_key(p["nv"]) for p in pts})
+    deltas = []
+    for p in pts:
+        if p["delta"] not in deltas:
+            deltas.append(p["delta"])
+    deltas.sort()
+    steps = sorted({p["steps"] for p in pts if p["steps"] is not None})
+    warm = sorted({p["warm"] for p in pts if p["warm"] is not None})
+    measure = sorted({p["measure"] for p in pts if p["measure"] is not None})
+
+    def join(items):
+        items = list(items)
+        return ", ".join(items) if items else "-"
+
+    return "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n".format(
+        profile,
+        len(pts),
+        join(kinds),
+        join(str(t) for t in trials),
+        join(str(l) for l in ls),
+        join("inf" if v == (1 << 64) else str(v) for v in nvs),
+        join(canon_f64(d) for d in deltas),
+        join(str(s) for s in steps),
+        join(str(w) for w in warm),
+        join(str(m) for m in measure),
+    )
+
+
+def render():
+    out = [PREAMBLE]
+    for name, builder in ALL:
+        title_full, pts_full = builder(False)
+        _, pts_quick = builder(True)
+        out.append("\n## {} -- {}\n\n".format(name, title_full))
+        out.append(
+            "| profile | points | sampling | trials | L | N_V | delta | steps | warm | measure |\n"
+        )
+        out.append("|---|---|---|---|---|---|---|---|---|---|\n")
+        out.append(md_row("full", pts_full))
+        out.append(md_row("quick", pts_quick))
+    return "".join(out)
+
+
+def main():
+    text = render()
+    if "--stdout" in sys.argv:
+        sys.stdout.write(text)
+        return
+    root = Path(__file__).resolve().parents[2]
+    (root / "EXPERIMENTS.md").write_text(text)
+    print("wrote", root / "EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,12 +16,15 @@
 //! for B ∈ {1, 8, 64} × L ∈ {1000, 10000}, windowed at Δ = 10 (the
 //! paper's measurement-phase configuration), plus the fused-vs-split
 //! measurement pairs `measure_fused/...` / `measure_split/...` over the
-//! same grid — the fused path must win at every (B, L).
+//! same grid — the fused path must win at every (B, L) — plus (since the
+//! declarative-campaign PR) the scheduler-throughput grid
+//! `campaign/points_W{1,2,4}` (items = sweep points through `run_plan`).
 
 use std::path::PathBuf;
 use std::time::Duration;
 
 use repro::bench::{compare_against_baseline, BenchReport, Bencher};
+use repro::coordinator::{run_plan, CampaignOpts, RunSpec, SweepPlan, SweepPoint};
 use repro::pdes::{
     BatchPdes, InstrumentedRing, LatticePdes, Mode, RingPdes, ShardedPdes, Topology, VolumeLoad,
 };
@@ -287,6 +290,46 @@ fn main() {
     });
     report.push("stats/horizon_frame_fused_L1000", 1000.0, m);
 
+    // campaign-scheduler throughput (items = sweep points): a small
+    // steady plan dispatched through run_plan at point-level workers
+    // W ∈ {1, 2, 4}.  Measures the declarative layer's overhead and its
+    // point-level scaling; per-point results are bitwise identical across
+    // W (the scheduler contract), so only wall-clock moves.
+    {
+        let mut plan = SweepPlan::new("bench", "campaign throughput plan");
+        for i in 0..8usize {
+            let l = 32 + 4 * i;
+            plan.push(SweepPoint::steady(
+                format!("L{l}"),
+                Topology::Ring { l },
+                RunSpec {
+                    l,
+                    load: VolumeLoad::Sites(1),
+                    mode: Mode::Windowed { delta: 5.0 },
+                    trials: 4,
+                    steps: 0,
+                    seed: 11,
+                },
+                60,
+                60,
+            ));
+        }
+        let items = plan.len() as f64;
+        for &workers in &[1usize, 2, 4] {
+            let opts = CampaignOpts {
+                workers,
+                quiet: true,
+                ..Default::default()
+            };
+            let name = format!("campaign/points_W{workers}");
+            let m = b.report(&name, items, || {
+                let (results, _) = run_plan(&plan, &opts).expect("bench plan");
+                std::hint::black_box(results.len());
+            });
+            report.push(&name, items, m);
+        }
+    }
+
     // rng draws (items = draws)
     let mut rng = Rng::for_stream(4, 0);
     let m = b.report("rng/uniform", 1.0, || {
@@ -297,6 +340,15 @@ fn main() {
         std::hint::black_box(rng.exponential());
     });
     report.push("rng/exponential", 1.0, m);
+
+    // campaign scaling summary: points/sec speedup over W1
+    if let Some(base) = report.throughput_of("campaign/points_W1") {
+        for &workers in &[2usize, 4] {
+            if let Some(t) = report.throughput_of(&format!("campaign/points_W{workers}")) {
+                println!("# campaign scaling W{workers}: x{:.2} vs W1", t / base);
+            }
+        }
+    }
 
     // sharded scaling summary: speedup of W{2,4,8} over W1 per L
     for &l in &[1_000usize, 10_000, 100_000] {

@@ -219,12 +219,30 @@ impl BenchReport {
     }
 
     /// Serialize to the harness's JSON schema.
+    ///
+    /// Schema 3 adds the `"pool"` object — the worker-pool shape the run
+    /// executed under (`REPRO_WORKERS` and the host parallelism).  The
+    /// campaign-throughput cases (`campaign/points_W*`) only mean
+    /// something relative to that shape, so a baseline records it.
+    /// Readers scan `"name"`/`"throughput"` pairs only, so schema 2
+    /// baselines still parse.
     pub fn to_json(&self) -> String {
         let mut out = String::new();
         out.push_str("{\n");
-        out.push_str("  \"schema\": 2,\n");
+        out.push_str("  \"schema\": 3,\n");
         out.push_str(&format!("  \"bench\": \"{}\",\n", self.bench));
         out.push_str("  \"unit\": \"items_per_second\",\n");
+        let host = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let env = std::env::var("REPRO_WORKERS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .map(|v| v.to_string())
+            .unwrap_or_else(|| "null".to_string());
+        out.push_str(&format!(
+            "  \"pool\": {{\"available_parallelism\": {host}, \"repro_workers_env\": {env}}},\n"
+        ));
         out.push_str(&format!("  \"provenance\": \"{}\",\n", self.provenance));
         out.push_str("  \"cases\": [\n");
         for (i, c) in self.cases.iter().enumerate() {
@@ -423,6 +441,9 @@ mod tests {
         r.push("batch_step/ring_L1000_NV1_B8", 8000.0, meas(1e-5));
         r.push("measure_fused/ring_L1000_B1", 1000.0, meas(2e-6));
         let json = r.to_json();
+        // schema 3 carries the pool shape the run executed under
+        assert!(json.contains("\"schema\": 3"), "{json}");
+        assert!(json.contains("\"pool\": {\"available_parallelism\": "), "{json}");
         let parsed = parse_case_throughputs(&json);
         assert_eq!(parsed.len(), 2);
         assert_eq!(parsed[0].0, "batch_step/ring_L1000_NV1_B8");

@@ -9,12 +9,21 @@
 //! path (bit-identical per trial; ensemble moments up to floating-point
 //! accumulation order) and independent of worker scheduling.
 
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
 use anyhow::{bail, Result};
 
-use crate::pdes::{BatchPdes, Mode, NeighbourTable, ShardedPdes, Topology, VolumeLoad};
+use crate::pdes::{
+    BatchPdes, InstrumentedRing, LatticePdes, Mode, NeighbourTable, ShardedPdes, Topology,
+    VolumeLoad,
+};
 use crate::rng::Rng;
+use crate::runtime::ResultCache;
 use crate::stats::{horizon_frame_fused, EnsembleSeries, OnlineMoments};
 
+use super::plan::{PointResult, Sampling, SweepPlan, SweepPoint};
 use super::pool::{map_shards_with, worker_count};
 
 /// Replica rows advanced per `BatchPdes` struct: big enough to amortize
@@ -86,7 +95,7 @@ impl ShardStrategy {
     }
 
     /// Workers the trial loop fans out over.
-    fn trial_workers(self) -> usize {
+    pub fn trial_workers(self) -> usize {
         match self {
             ShardStrategy::Trials => worker_count(),
             ShardStrategy::Lattice { .. } => 1,
@@ -95,7 +104,7 @@ impl ShardStrategy {
     }
 
     /// Block workers each simulation steps with (1 = plain `BatchPdes`).
-    fn lattice_workers(self) -> usize {
+    pub fn lattice_workers(self) -> usize {
         match self {
             ShardStrategy::Trials => 1,
             ShardStrategy::Lattice { workers } => workers,
@@ -152,7 +161,7 @@ impl Engine {
 }
 
 /// One campaign parameter point.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RunSpec {
     /// Ring size L.
     pub l: usize,
@@ -167,6 +176,79 @@ pub struct RunSpec {
     /// Master seed; trial k uses stream (seed, k) so results are
     /// scheduling-independent.
     pub seed: u64,
+}
+
+/// `RunSpec` is `Eq` because [`Mode`] is (window widths are never NaN),
+/// so specs can key the campaign result cache.
+impl Eq for RunSpec {}
+
+impl RunSpec {
+    /// Canonical, stable spec string — the run component of a campaign
+    /// cache key (see `coordinator::plan` and DESIGN.md §Campaigns).
+    ///
+    /// Grammar (v1, frozen): `l=<L>;load=<load>;mode=<mode>;trials=<N>;`
+    /// `steps=<T>;seed=<S>` with the sub-specs rendered by
+    /// [`VolumeLoad::spec_string`] / [`Mode::spec_string`].  The emission
+    /// order is keyed, fixed and independent of the struct's field order,
+    /// so reordering `RunSpec`'s fields in code can never change a cache
+    /// key (the cache hashes and byte-compares this string).
+    /// [`RunSpec::parse_spec`] is the tolerant reader for tooling: it
+    /// accepts the six `key=value` fields in any order (round-trip
+    /// tested) — but note the cache itself never parses; it matches the
+    /// canonical emission byte-for-byte.
+    pub fn spec_string(&self) -> String {
+        format!(
+            "l={};load={};mode={};trials={};steps={};seed={}",
+            self.l,
+            self.load.spec_string(),
+            self.mode.spec_string(),
+            self.trials,
+            self.steps,
+            self.seed
+        )
+    }
+
+    /// Parse a [`RunSpec::spec_string`] rendering: all six fields
+    /// required, any order, unknown keys rejected.
+    pub fn parse_spec(s: &str) -> Result<RunSpec> {
+        let (mut l, mut load, mut mode) = (None, None, None);
+        let (mut trials, mut steps, mut seed) = (None, None, None);
+        for field in s.split(';') {
+            let Some((k, v)) = field.split_once('=') else {
+                bail!("bad run-spec field {field:?} in {s:?}");
+            };
+            match k {
+                "l" => l = Some(v.parse::<usize>().map_err(|_| anyhow::anyhow!("bad l={v:?}"))?),
+                "load" => load = Some(VolumeLoad::parse_spec(v)?),
+                "mode" => mode = Some(Mode::parse_spec(v)?),
+                "trials" => {
+                    trials =
+                        Some(v.parse::<u64>().map_err(|_| anyhow::anyhow!("bad trials={v:?}"))?)
+                }
+                "steps" => {
+                    steps =
+                        Some(v.parse::<usize>().map_err(|_| anyhow::anyhow!("bad steps={v:?}"))?)
+                }
+                "seed" => {
+                    seed = Some(v.parse::<u64>().map_err(|_| anyhow::anyhow!("bad seed={v:?}"))?)
+                }
+                _ => bail!("unknown run-spec key {k:?} in {s:?}"),
+            }
+        }
+        match (l, load, mode, trials, steps, seed) {
+            (Some(l), Some(load), Some(mode), Some(trials), Some(steps), Some(seed)) => {
+                Ok(RunSpec {
+                    l,
+                    load,
+                    mode,
+                    trials,
+                    steps,
+                    seed,
+                })
+            }
+            _ => bail!("run spec {s:?} is missing required fields"),
+        }
+    }
 }
 
 /// Run the ensemble on the paper's ring and collect full ⟨·(t)⟩ curves.
@@ -351,6 +433,235 @@ pub fn steady_state_topology_with(
         w_err: acc.1.stderr(),
         wa: acc.2.mean(),
         gvt_rate: acc.3.mean(),
+    }
+}
+
+/// Execution options for a [`SweepPlan`] campaign.
+#[derive(Clone, Debug)]
+pub struct CampaignOpts {
+    /// Point-level fan-out across the worker pool (0 = the pool budget,
+    /// [`worker_count`]).  Outputs are byte-identical for every value —
+    /// the scheduler parallelizes across points, never inside a point's
+    /// trial fold.
+    pub workers: usize,
+    /// PE-block workers *inside* each simulation (`ShardedPdes` domain
+    /// decomposition; 1 = plain engine).  Trajectory-invisible by the
+    /// sharded-engine contract, so this composes freely with `workers`.
+    pub lattice_workers: usize,
+    /// Skip points whose cache entry resolves (requires `cache_dir`).
+    pub resume: bool,
+    /// Content-addressed result cache directory; `None` disables both
+    /// streaming stores and resume.
+    pub cache_dir: Option<PathBuf>,
+    /// Suppress per-point and summary log lines (benchmark harnesses).
+    pub quiet: bool,
+}
+
+impl Default for CampaignOpts {
+    fn default() -> Self {
+        Self {
+            workers: 0,
+            lattice_workers: 1,
+            resume: false,
+            cache_dir: None,
+            quiet: false,
+        }
+    }
+}
+
+/// What a campaign run did — surfaced in the scheduler log line (the CI
+/// resume smoke asserts `executed=0` on a warm cache).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CampaignReport {
+    /// Total points in the plan.
+    pub points: usize,
+    /// Points restored from the result cache.
+    pub cache_hits: usize,
+    /// Points actually executed this run.
+    pub executed: usize,
+    /// Point-level workers used.
+    pub workers: usize,
+}
+
+/// Execute every point of `plan` and return the results in plan order,
+/// plus the run report.
+///
+/// The scheduler fans independent points across `opts.workers` threads
+/// pulling from a shared queue; each completed point's payload streams to
+/// the result cache as it lands (kill-safe: rename-published entries),
+/// and `opts.resume` restores completed points instead of re-running
+/// them.  Results are placed by point index, so the returned order — and
+/// every downstream TSV byte — is independent of worker count and of
+/// which points came from the cache (see the determinism contract in
+/// `coordinator::plan`).
+pub fn run_plan(plan: &SweepPlan, opts: &CampaignOpts) -> Result<(Vec<PointResult>, CampaignReport)> {
+    let cache = match &opts.cache_dir {
+        Some(dir) => Some(ResultCache::open(dir)?),
+        None => None,
+    };
+    let n = plan.points.len();
+    let workers = if opts.workers == 0 {
+        worker_count()
+    } else {
+        opts.workers
+    }
+    .clamp(1, n.max(1));
+    let next = AtomicUsize::new(0);
+    let hits = AtomicUsize::new(0);
+    let ran = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<PointResult>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let point = &plan.points[i];
+                let spec = point.spec();
+                let cached = if opts.resume {
+                    cache
+                        .as_ref()
+                        .and_then(|c| c.load(&spec))
+                        .and_then(|payload| PointResult::from_cache_text(&payload).ok())
+                } else {
+                    None
+                };
+                let (result, hit) = match cached {
+                    Some(r) => (r, true),
+                    None => (execute_point(point, opts.lattice_workers), false),
+                };
+                if hit {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    ran.fetch_add(1, Ordering::Relaxed);
+                    if let Some(c) = &cache {
+                        // stream the completed point to disk as it lands
+                        if let Err(e) = c.store(&spec, &result.to_cache_text()) {
+                            eprintln!("warning: cache store failed for {}: {e}", point.label);
+                        }
+                    }
+                }
+                if !opts.quiet {
+                    println!(
+                        "  point {}/{n} {} [{}]",
+                        i + 1,
+                        point.label,
+                        if hit { "cache" } else { "run" }
+                    );
+                }
+                *slots[i].lock().unwrap() = Some(result);
+            });
+        }
+    });
+    let results: Vec<PointResult> = slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, slot)| {
+            slot.into_inner()
+                .unwrap()
+                .unwrap_or_else(|| panic!("point {i} was never computed"))
+        })
+        .collect();
+    let report = CampaignReport {
+        points: n,
+        cache_hits: hits.into_inner(),
+        executed: ran.into_inner(),
+        workers,
+    };
+    if !opts.quiet {
+        println!(
+            "campaign {}: {} points, cache_hits={} executed={} workers={}",
+            plan.name, report.points, report.cache_hits, report.executed, report.workers
+        );
+    }
+    Ok((results, report))
+}
+
+/// Execute one sweep point with the canonical serial trial fold
+/// (trial-order ascending, one accumulator — bit-identical to the
+/// pre-scheduler single-worker path), optionally lattice-sharded.
+pub fn execute_point(point: &SweepPoint, lattice_workers: usize) -> PointResult {
+    let strategy = ShardStrategy::Both {
+        trial_workers: 1,
+        lattice_workers: lattice_workers.max(1),
+    };
+    match &point.sampling {
+        Sampling::Curves { .. } => PointResult::Curves(run_topology_ensemble_with(
+            point.topology,
+            &point.run,
+            strategy,
+        )),
+        Sampling::Steady { warm, measure } => PointResult::Steady(steady_state_topology_with(
+            point.topology,
+            &point.run,
+            *warm,
+            *measure,
+            strategy,
+        )),
+        Sampling::Snapshot { at, stream } => {
+            // single-trial surface snapshots: a B = 1 batch on the point's
+            // stream — bit-identical to the historical RingPdes drivers
+            let mut sim = BatchPdes::new(
+                point.topology,
+                point.run.load,
+                point.run.mode,
+                vec![Rng::for_stream(point.run.seed, *stream)],
+            );
+            let mut surfaces = Vec::with_capacity(at.len());
+            let mut t = 0usize;
+            for &t_snap in at {
+                while t < t_snap {
+                    sim.step();
+                    t += 1;
+                }
+                surfaces.push(sim.tau().to_vec());
+            }
+            PointResult::Surfaces(surfaces)
+        }
+        Sampling::Counters {
+            warm,
+            steps,
+            stream,
+        } => {
+            let mut sim = InstrumentedRing::new(
+                point.run.l,
+                point.run.load,
+                point.run.mode,
+                Rng::for_stream(point.run.seed, *stream),
+            );
+            for _ in 0..*warm {
+                sim.step();
+            }
+            sim.reset_counters();
+            for _ in 0..*steps {
+                sim.step();
+            }
+            PointResult::Counters(sim.counters())
+        }
+        Sampling::LatticeU { warm, measure } => {
+            let mut acc = OnlineMoments::new();
+            for trial in 0..point.run.trials {
+                let mut sim = LatticePdes::new(
+                    point.topology,
+                    point.run.mode,
+                    Rng::for_stream(point.run.seed, trial),
+                );
+                for _ in 0..*warm {
+                    sim.step();
+                }
+                let pes = sim.len() as f64;
+                let mut s = 0.0;
+                for _ in 0..*measure {
+                    s += sim.step() as f64 / pes;
+                }
+                acc.push(s / *measure as f64);
+            }
+            PointResult::LatticeU {
+                u: acc.mean(),
+                err: acc.stderr(),
+            }
+        }
     }
 }
 
@@ -579,11 +890,210 @@ mod tests {
     }
 
     #[test]
+    fn run_spec_string_pinned_and_roundtrip() {
+        let s = RunSpec {
+            l: 100,
+            load: VolumeLoad::Sites(10),
+            mode: Mode::Windowed { delta: 10.0 },
+            trials: 32,
+            steps: 500,
+            seed: crate::DEFAULT_SEED,
+        };
+        // pinned: this exact string is hashed into on-disk cache keys
+        assert_eq!(
+            s.spec_string(),
+            "l=100;load=10;mode=win:10;trials=32;steps=500;seed=20020601"
+        );
+        assert_eq!(RunSpec::parse_spec(&s.spec_string()).unwrap(), s);
+        // fields parse in any order (the reordering guarantee)
+        let reordered = "seed=20020601;mode=win:10;l=100;steps=500;trials=32;load=10";
+        assert_eq!(RunSpec::parse_spec(reordered).unwrap(), s);
+        assert!(RunSpec::parse_spec("l=100;load=10;mode=win:10").is_err());
+        assert!(RunSpec::parse_spec(
+            "l=100;load=10;mode=win:10;trials=32;steps=500;seed=1;extra=9"
+        )
+        .is_err());
+    }
+
+    #[test]
     fn topology_steady_state_orders_utilization() {
         // denser causality graphs wait more: ring > k-ring(2) at N_V = 1
         let s = spec(48, Mode::Conservative, 6, 0);
         let ring = steady_state_topology(Topology::Ring { l: 48 }, &s, 400, 600);
         let k2 = steady_state_topology(Topology::KRing { l: 48, k: 2 }, &s, 400, 600);
         assert!(ring.u > k2.u, "ring {} !> kring2 {}", ring.u, k2.u);
+    }
+
+    /// A small mixed-kind plan for the scheduler tests.
+    fn test_plan(seed: u64) -> SweepPlan {
+        let mut plan = SweepPlan::new("sched-test", "scheduler unit-test plan");
+        for l in [8usize, 12, 16] {
+            plan.push(SweepPoint::steady(
+                format!("steady_L{l}"),
+                Topology::Ring { l },
+                RunSpec {
+                    l,
+                    load: VolumeLoad::Sites(1),
+                    mode: Mode::Windowed { delta: 3.0 },
+                    trials: 4,
+                    steps: 0,
+                    seed,
+                },
+                60,
+                60,
+            ));
+        }
+        plan.push(SweepPoint::curves(
+            "curves_L10",
+            Topology::Ring { l: 10 },
+            RunSpec {
+                l: 10,
+                load: VolumeLoad::Sites(1),
+                mode: Mode::Conservative,
+                trials: 3,
+                steps: 0,
+                seed,
+            },
+            30,
+        ));
+        plan.push(SweepPoint::snapshot(
+            "snap_L10",
+            Topology::Ring { l: 10 },
+            RunSpec {
+                l: 10,
+                load: VolumeLoad::Sites(1),
+                mode: Mode::Conservative,
+                trials: 1,
+                steps: 0,
+                seed,
+            },
+            vec![2, 20],
+            0,
+        ));
+        plan
+    }
+
+    #[test]
+    fn run_plan_results_are_worker_invariant() {
+        // the whole acceptance hinges on this: point results must be
+        // bitwise identical for every point-level worker count
+        let plan = test_plan(71);
+        let run = |workers: usize| {
+            run_plan(
+                &plan,
+                &CampaignOpts {
+                    workers,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+            .0
+        };
+        let one = run(1);
+        for workers in [2usize, 4] {
+            let many = run(workers);
+            assert_eq!(one.len(), many.len());
+            for (a, b) in one.iter().zip(&many) {
+                match (a, b) {
+                    (PointResult::Steady(x), PointResult::Steady(y)) => {
+                        assert_eq!(x.u.to_bits(), y.u.to_bits(), "workers={workers}");
+                        assert_eq!(x.w.to_bits(), y.w.to_bits());
+                        assert_eq!(x.gvt_rate.to_bits(), y.gvt_rate.to_bits());
+                    }
+                    (PointResult::Curves(x), PointResult::Curves(y)) => {
+                        assert_eq!(x.raw_slots(), y.raw_slots(), "workers={workers}");
+                    }
+                    (PointResult::Surfaces(x), PointResult::Surfaces(y)) => {
+                        assert_eq!(x, y, "workers={workers}");
+                    }
+                    other => panic!("result kind drifted across workers: {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_plan_resume_skips_execution_and_is_bitwise() {
+        let dir = std::env::temp_dir().join("repro_sched_resume_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let plan = test_plan(72);
+        let opts = CampaignOpts {
+            workers: 2,
+            cache_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let (cold, rep1) = run_plan(&plan, &opts).unwrap();
+        assert_eq!(rep1.executed, plan.len());
+        assert_eq!(rep1.cache_hits, 0);
+        let (warm, rep2) = run_plan(
+            &plan,
+            &CampaignOpts {
+                resume: true,
+                ..opts
+            },
+        )
+        .unwrap();
+        assert_eq!(rep2.executed, 0, "warm cache must skip every point");
+        assert_eq!(rep2.cache_hits, plan.len());
+        for (a, b) in cold.iter().zip(&warm) {
+            match (a, b) {
+                (PointResult::Steady(x), PointResult::Steady(y)) => {
+                    assert_eq!(x.u.to_bits(), y.u.to_bits());
+                    assert_eq!(x.u_err.to_bits(), y.u_err.to_bits());
+                    assert_eq!(x.wa.to_bits(), y.wa.to_bits());
+                }
+                (PointResult::Curves(x), PointResult::Curves(y)) => {
+                    assert_eq!(x.raw_slots(), y.raw_slots());
+                }
+                (PointResult::Surfaces(x), PointResult::Surfaces(y)) => assert_eq!(x, y),
+                other => panic!("result kind drifted across resume: {other:?}"),
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn execute_point_matches_direct_calls_bitwise() {
+        // the scheduler's canonical fold is exactly Both{1, 1} — the
+        // pre-refactor single-worker arithmetic
+        let s = RunSpec {
+            l: 16,
+            load: VolumeLoad::Sites(1),
+            mode: Mode::Windowed { delta: 4.0 },
+            trials: 5,
+            steps: 0,
+            seed: 9,
+        };
+        let point = SweepPoint::steady("p", Topology::Ring { l: 16 }, s, 80, 120);
+        let direct = steady_state_topology_with(
+            Topology::Ring { l: 16 },
+            &point.run,
+            80,
+            120,
+            ShardStrategy::Both {
+                trial_workers: 1,
+                lattice_workers: 1,
+            },
+        );
+        let via = execute_point(&point, 1);
+        assert_eq!(via.steady().u.to_bits(), direct.u.to_bits());
+        assert_eq!(via.steady().w.to_bits(), direct.w.to_bits());
+
+        let mut c = s;
+        c.steps = 25;
+        let point = SweepPoint::curves("c", Topology::Ring { l: 16 }, c, 25);
+        let direct = run_topology_ensemble_with(
+            Topology::Ring { l: 16 },
+            &point.run,
+            ShardStrategy::Both {
+                trial_workers: 1,
+                lattice_workers: 1,
+            },
+        );
+        let via = execute_point(&point, 1);
+        assert_eq!(via.series().raw_slots(), direct.raw_slots());
+        // lattice sharding is trajectory-invisible here too
+        let sharded = execute_point(&point, 2);
+        assert_eq!(sharded.series().raw_slots(), direct.raw_slots());
     }
 }

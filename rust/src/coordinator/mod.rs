@@ -10,17 +10,25 @@
 //!   (arbitrary L, N_V, Δ; the instrumented and lattice variants too);
 //! * [`jax`] — the AOT JAX/Pallas artifacts streamed chunk-by-chunk through
 //!   the PJRT runtime (fixed artifact shapes; cross-validates the kernel).
+//!
+//! Since the declarative-campaign refactor the figure drivers no longer
+//! loop over these entry points themselves: they define a [`SweepPlan`]
+//! (data) and the generic scheduler [`run_plan`] executes it — points
+//! fanned across the worker pool, results cached content-addressed for
+//! `--resume`, outputs byte-identical for every worker count.
 
 mod campaign;
 mod jax;
+pub mod plan;
 pub mod pool;
 mod spec;
 
 pub use campaign::{
-    run_ensemble, run_topology_ensemble, run_topology_ensemble_with, steady_state,
-    steady_state_topology, steady_state_topology_with, RunSpec, ShardStrategy, SteadyStats,
-    BATCH_ROWS,
+    execute_point, run_ensemble, run_plan, run_topology_ensemble, run_topology_ensemble_with,
+    steady_state, steady_state_topology, steady_state_topology_with, CampaignOpts,
+    CampaignReport, RunSpec, ShardStrategy, SteadyStats, BATCH_ROWS,
 };
 pub use jax::{run_artifact_ensemble, run_with_executor as run_with_executor_bench, JaxRunSpec};
+pub use plan::{fnv1a64, PointResult, Profile, Sampling, SweepPlan, SweepPoint};
 pub use pool::{shard_lattice, shard_trials, worker_count};
 pub use spec::CampaignSpec;

@@ -1,0 +1,760 @@
+//! Declarative sweep plans: the paper's measurement phase as *data*.
+//!
+//! A [`SweepPlan`] is a named list of [`SweepPoint`]s — each one
+//! parameter point of a figure's (L, N_V, Δ) grid carrying its
+//! [`RunSpec`], PE-graph [`Topology`], and a [`Sampling`] choice (per-step
+//! curves, warm/measure steady statistics, horizon snapshots, mean-field
+//! counters, or plain lattice utilization).  The experiment drivers in
+//! `crate::experiments` *define* plans and *reduce* the per-point
+//! [`PointResult`]s into the paper's TSV tables; the generic scheduler in
+//! [`super::campaign`] executes them — in parallel across points, with
+//! content-addressed caching so interrupted campaigns resume.
+//!
+//! Determinism contract: every point is executed with the canonical
+//! serial trial fold (trial order ascending, [`super::BATCH_ROWS`]-row
+//! batches, one accumulator — exactly the pre-scheduler single-worker
+//! arithmetic), optionally lattice-sharded (trajectory-invisible by the
+//! `ShardedPdes` contract).  Point results therefore depend only on the
+//! point's spec, never on the worker pool, so campaign outputs are
+//! byte-identical for every `--workers` value and across kill/resume
+//! cycles.
+//!
+//! Identity contract: [`SweepPoint::spec`] renders a canonical, stable
+//! (v1, frozen) spec string; its FNV-1a hash ([`fnv1a64`]) is the
+//! content-addressed cache key.  Equal specs ⇒ equal results, so points
+//! shared between figures (e.g. the conservative `u_∞` L-grids of Fig. 6,
+//! Fig. 11 and the appendix) are computed once per results directory.
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::pdes::{MeanFieldCounters, Topology};
+use crate::stats::{EnsembleSeries, N_LANES};
+
+use super::campaign::{RunSpec, SteadyStats};
+
+/// FNV-1a 64-bit hash of a spec string — the campaign cache key.  Chosen
+/// for stability (the constant pair is frozen by the FNV reference) and
+/// zero dependencies; collisions are guarded by the cache verifying the
+/// full spec string stored inside each entry.
+pub fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fidelity profile of a plan: quick-mode scaling lives *here*, as data
+/// attached to the plan definition, instead of ad-hoc arithmetic inside
+/// each driver.  The scaling rules are the historical `Ctx` ones, so
+/// quick grids are unchanged by the declarative refactor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Profile {
+    /// Reduced grids/ensembles for smoke runs.
+    pub quick: bool,
+    /// Master seed every point's trial streams derive from.
+    pub seed: u64,
+}
+
+impl Profile {
+    /// Full-fidelity profile.
+    pub fn full(seed: u64) -> Self {
+        Self { quick: false, seed }
+    }
+
+    /// Quick (smoke-run) profile.
+    pub fn quick(seed: u64) -> Self {
+        Self { quick: true, seed }
+    }
+
+    /// Trials per point: `full` in full mode, `max(full/8, 4)` in quick.
+    pub fn trials(&self, full: u64) -> u64 {
+        if self.quick {
+            (full / 8).max(4)
+        } else {
+            full
+        }
+    }
+
+    /// Step counts: `full` in full mode, `max(full/10, 50)` in quick.
+    pub fn steps(&self, full: usize) -> usize {
+        if self.quick {
+            (full / 10).max(50)
+        } else {
+            full
+        }
+    }
+
+    /// Grid selector: `full` or `quick` wholesale (for the axes that
+    /// change shape, not just scale, between fidelities).
+    pub fn pick<T>(&self, full: T, quick: T) -> T {
+        if self.quick {
+            quick
+        } else {
+            full
+        }
+    }
+}
+
+/// How one sweep point samples its simulation(s).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Sampling {
+    /// Per-step ⟨·(t)⟩ ensemble curves over `steps` steps
+    /// (`run_ensemble`-style; Figs. 2, 4, 8, 10, KPZ).
+    Curves {
+        /// Measured parallel steps.
+        steps: usize,
+    },
+    /// Warm up, then time-averaged tail statistics per trial
+    /// (`steady_state`-style; Figs. 5, 6, 9, 11, Eq. 8, appendix,
+    /// topology sweep).
+    Steady {
+        /// Warm-up steps before measurement.
+        warm: usize,
+        /// Measured steps.
+        measure: usize,
+    },
+    /// Single-trial τ-surface snapshots at the given step counts
+    /// (ascending; Figs. 3, 7).
+    Snapshot {
+        /// Step counts to snapshot at, ascending.
+        at: Vec<usize>,
+        /// RNG stream id of the single trial.
+        stream: u64,
+    },
+    /// Instrumented mean-field stall counters after a warm-up
+    /// (Eqs. 13-14).
+    Counters {
+        /// Warm-up steps before the counters reset.
+        warm: usize,
+        /// Counted steps.
+        steps: usize,
+        /// RNG stream id of the single trial.
+        stream: u64,
+    },
+    /// Plain steady utilization on a d-dimensional lattice via
+    /// `LatticePdes` (the 2-d/3-d estimates).
+    LatticeU {
+        /// Warm-up steps per trial.
+        warm: usize,
+        /// Measured steps per trial.
+        measure: usize,
+    },
+}
+
+impl Sampling {
+    /// Canonical spec fragment (v1, frozen — same stability guarantee as
+    /// [`crate::pdes::Mode::spec_string`]).
+    pub fn spec_string(&self) -> String {
+        match self {
+            Sampling::Curves { steps } => format!("curves:{steps}"),
+            Sampling::Steady { warm, measure } => format!("steady:{warm}:{measure}"),
+            Sampling::Snapshot { at, stream } => {
+                let ats: Vec<String> = at.iter().map(|t| t.to_string()).collect();
+                format!("snap:{}:{stream}", ats.join(","))
+            }
+            Sampling::Counters {
+                warm,
+                steps,
+                stream,
+            } => format!("counters:{warm}:{steps}:{stream}"),
+            Sampling::LatticeU { warm, measure } => format!("latticeu:{warm}:{measure}"),
+        }
+    }
+
+    /// Short kind tag (EXPERIMENTS.md and plan listings).
+    pub fn kind_tag(&self) -> &'static str {
+        match self {
+            Sampling::Curves { .. } => "curves",
+            Sampling::Steady { .. } => "steady",
+            Sampling::Snapshot { .. } => "snapshot",
+            Sampling::Counters { .. } => "counters",
+            Sampling::LatticeU { .. } => "lattice-u",
+        }
+    }
+
+    /// Measured step count, where the notion applies.
+    pub fn steps_opt(&self) -> Option<usize> {
+        match self {
+            Sampling::Curves { steps } => Some(*steps),
+            Sampling::Counters { steps, .. } => Some(*steps),
+            Sampling::Snapshot { at, .. } => at.last().copied(),
+            _ => None,
+        }
+    }
+
+    /// Warm-up step count, where the notion applies.
+    pub fn warm_opt(&self) -> Option<usize> {
+        match self {
+            Sampling::Steady { warm, .. }
+            | Sampling::Counters { warm, .. }
+            | Sampling::LatticeU { warm, .. } => Some(*warm),
+            _ => None,
+        }
+    }
+
+    /// Measurement-window step count, where the notion applies.
+    pub fn measure_opt(&self) -> Option<usize> {
+        match self {
+            Sampling::Steady { measure, .. } | Sampling::LatticeU { measure, .. } => {
+                Some(*measure)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// One parameter point of a sweep: what to simulate and how to sample it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SweepPoint {
+    /// Human label for logs and `repro plan` listings (not part of the
+    /// cache identity).
+    pub label: String,
+    /// The PE graph.
+    pub topology: Topology,
+    /// The run parameters (trials, seed, L, load, mode).
+    pub run: RunSpec,
+    /// The sampling scheme.
+    pub sampling: Sampling,
+}
+
+impl SweepPoint {
+    fn new(label: impl Into<String>, topology: Topology, run: RunSpec, sampling: Sampling) -> Self {
+        assert_eq!(
+            topology.len(),
+            run.l,
+            "SweepPoint topology size must match RunSpec.l"
+        );
+        Self {
+            label: label.into(),
+            topology,
+            run,
+            sampling,
+        }
+    }
+
+    /// A per-step-curves point (`run.steps` is normalized to `steps`).
+    pub fn curves(
+        label: impl Into<String>,
+        topology: Topology,
+        mut run: RunSpec,
+        steps: usize,
+    ) -> Self {
+        run.steps = steps;
+        Self::new(label, topology, run, Sampling::Curves { steps })
+    }
+
+    /// A warm/measure steady-state point (`run.steps` normalized to 0).
+    pub fn steady(
+        label: impl Into<String>,
+        topology: Topology,
+        mut run: RunSpec,
+        warm: usize,
+        measure: usize,
+    ) -> Self {
+        run.steps = 0;
+        Self::new(label, topology, run, Sampling::Steady { warm, measure })
+    }
+
+    /// A single-trial snapshot point (`run.trials` normalized to 1,
+    /// `run.steps` to the last snapshot time).
+    pub fn snapshot(
+        label: impl Into<String>,
+        topology: Topology,
+        mut run: RunSpec,
+        at: Vec<usize>,
+        stream: u64,
+    ) -> Self {
+        assert!(!at.is_empty(), "snapshot point needs at least one time");
+        assert!(at.windows(2).all(|w| w[0] < w[1]), "snapshot times ascend");
+        run.trials = 1;
+        run.steps = *at.last().unwrap();
+        Self::new(label, topology, run, Sampling::Snapshot { at, stream })
+    }
+
+    /// A mean-field counters point (`run.trials` normalized to 1,
+    /// `run.steps` to 0).  Ring-only: the instrumented substrate the
+    /// executor runs (`InstrumentedRing`) has no generic-topology
+    /// variant, so a non-ring spec would mislabel the cached result.
+    pub fn counters(
+        label: impl Into<String>,
+        topology: Topology,
+        mut run: RunSpec,
+        warm: usize,
+        steps: usize,
+        stream: u64,
+    ) -> Self {
+        assert!(
+            matches!(topology, Topology::Ring { .. }),
+            "counters points require a ring topology (InstrumentedRing)"
+        );
+        run.trials = 1;
+        run.steps = 0;
+        Self::new(
+            label,
+            topology,
+            run,
+            Sampling::Counters {
+                warm,
+                steps,
+                stream,
+            },
+        )
+    }
+
+    /// A lattice steady-utilization point (`run.steps` normalized to 0,
+    /// `run.load` to N_V = 1 — `LatticePdes` is hard-wired to one site
+    /// per PE, so any other load in the spec would mislabel the cached
+    /// computation).
+    pub fn lattice_u(
+        label: impl Into<String>,
+        topology: Topology,
+        mut run: RunSpec,
+        warm: usize,
+        measure: usize,
+    ) -> Self {
+        run.steps = 0;
+        run.load = crate::pdes::VolumeLoad::Sites(1);
+        Self::new(label, topology, run, Sampling::LatticeU { warm, measure })
+    }
+
+    /// The canonical point spec (v1, frozen): topology + run + sampling.
+    /// Equal specs ⇒ bit-identical results (the determinism contract), so
+    /// this string *is* the point's cache identity; [`SweepPoint::key`]
+    /// hashes it into the content address.
+    pub fn spec(&self) -> String {
+        format!(
+            "repro/v1 topo={} run={} samp={}",
+            self.topology.spec_string(),
+            self.run.spec_string(),
+            self.sampling.spec_string()
+        )
+    }
+
+    /// Content-addressed cache key: [`fnv1a64`] of [`SweepPoint::spec`].
+    pub fn key(&self) -> u64 {
+        fnv1a64(&self.spec())
+    }
+}
+
+/// A named sweep: the declarative form of one figure's measurement grid.
+#[derive(Clone, Debug)]
+pub struct SweepPlan {
+    /// Plan name (the experiment name: "fig2", "topology", ...).
+    pub name: String,
+    /// One-line human description (EXPERIMENTS.md section title).
+    pub title: String,
+    /// The grid, in reduction order (reducers consume results by index).
+    pub points: Vec<SweepPoint>,
+}
+
+impl SweepPlan {
+    /// An empty plan.
+    pub fn new(name: impl Into<String>, title: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            title: title.into(),
+            points: Vec::new(),
+        }
+    }
+
+    /// Append a point.
+    pub fn push(&mut self, point: SweepPoint) {
+        self.points.push(point);
+    }
+
+    /// Number of points.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// True when the plan holds no points.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+/// The result of one executed [`SweepPoint`], in the shape its
+/// [`Sampling`] dictates.
+#[derive(Clone, Debug)]
+pub enum PointResult {
+    /// Full per-step ensemble series ([`Sampling::Curves`]).
+    Curves(EnsembleSeries),
+    /// Steady-state summary ([`Sampling::Steady`]).
+    Steady(SteadyStats),
+    /// τ surfaces, one per snapshot time ([`Sampling::Snapshot`]).
+    Surfaces(Vec<Vec<f64>>),
+    /// Mean-field stall counters ([`Sampling::Counters`]).
+    Counters(MeanFieldCounters),
+    /// Steady lattice utilization with standard error
+    /// ([`Sampling::LatticeU`]).
+    LatticeU {
+        /// Ensemble mean utilization.
+        u: f64,
+        /// Standard error over trials.
+        err: f64,
+    },
+}
+
+impl PointResult {
+    /// The ensemble series (panics if the point was not a curves point).
+    pub fn series(&self) -> &EnsembleSeries {
+        match self {
+            PointResult::Curves(s) => s,
+            other => panic!("expected a curves result, got {}", other.kind_tag()),
+        }
+    }
+
+    /// The steady summary (panics if the point was not a steady point).
+    pub fn steady(&self) -> &SteadyStats {
+        match self {
+            PointResult::Steady(s) => s,
+            other => panic!("expected a steady result, got {}", other.kind_tag()),
+        }
+    }
+
+    /// The snapshot surfaces (panics on kind mismatch).
+    pub fn surfaces(&self) -> &[Vec<f64>] {
+        match self {
+            PointResult::Surfaces(s) => s,
+            other => panic!("expected surfaces, got {}", other.kind_tag()),
+        }
+    }
+
+    /// The mean-field counters (panics on kind mismatch).
+    pub fn counters(&self) -> &MeanFieldCounters {
+        match self {
+            PointResult::Counters(c) => c,
+            other => panic!("expected counters, got {}", other.kind_tag()),
+        }
+    }
+
+    /// The lattice utilization pair (panics on kind mismatch).
+    pub fn lattice_u(&self) -> (f64, f64) {
+        match self {
+            PointResult::LatticeU { u, err } => (*u, *err),
+            other => panic!("expected a lattice-u result, got {}", other.kind_tag()),
+        }
+    }
+
+    /// Kind tag (mirrors [`Sampling::kind_tag`]).
+    pub fn kind_tag(&self) -> &'static str {
+        match self {
+            PointResult::Curves(_) => "curves",
+            PointResult::Steady(_) => "steady",
+            PointResult::Surfaces(_) => "snapshot",
+            PointResult::Counters(_) => "counters",
+            PointResult::LatticeU { .. } => "lattice-u",
+        }
+    }
+
+    /// Serialize to the cache payload text (v1).  All floating-point
+    /// state is rendered as raw IEEE-754 bit patterns (16 hex digits), so
+    /// a load reproduces the in-memory result *bit-for-bit* — resumed
+    /// campaigns emit byte-identical TSVs.
+    pub fn to_cache_text(&self) -> String {
+        let mut out = String::new();
+        match self {
+            PointResult::Curves(s) => {
+                out.push_str(&format!("curves {}\n", s.steps()));
+                for (n, mean, m2) in s.raw_slots() {
+                    out.push_str(&format!(
+                        "m {n} {} {}\n",
+                        hex_f64(mean),
+                        hex_f64(m2)
+                    ));
+                }
+            }
+            PointResult::Steady(s) => {
+                out.push_str(&format!(
+                    "steady {} {} {} {} {} {}\n",
+                    hex_f64(s.u),
+                    hex_f64(s.u_err),
+                    hex_f64(s.w),
+                    hex_f64(s.w_err),
+                    hex_f64(s.wa),
+                    hex_f64(s.gvt_rate)
+                ));
+            }
+            PointResult::Surfaces(surfaces) => {
+                out.push_str(&format!("surfaces {}\n", surfaces.len()));
+                for surface in surfaces {
+                    out.push('s');
+                    for &v in surface {
+                        out.push(' ');
+                        out.push_str(&hex_f64(v));
+                    }
+                    out.push('\n');
+                }
+            }
+            PointResult::Counters(c) => {
+                out.push_str(&format!(
+                    "counters {} {} {} {} {} {} {} {} {}\n",
+                    c.n_ok,
+                    c.n_w,
+                    c.n_delta,
+                    c.wait_nn_steps,
+                    c.wait_win_steps,
+                    c.border_attempts,
+                    c.border_nn_failures,
+                    c.pe_steps,
+                    c.updates
+                ));
+            }
+            PointResult::LatticeU { u, err } => {
+                out.push_str(&format!("latticeu {} {}\n", hex_f64(*u), hex_f64(*err)));
+            }
+        }
+        out
+    }
+
+    /// Parse a [`PointResult::to_cache_text`] payload (exact inverse).
+    pub fn from_cache_text(text: &str) -> Result<PointResult> {
+        let mut lines = text.lines();
+        let header = lines.next().context("empty cache payload")?;
+        let mut head = header.split_whitespace();
+        let kind = head.next().context("missing payload kind")?;
+        Ok(match kind {
+            "curves" => {
+                let steps: usize = head
+                    .next()
+                    .context("curves payload missing steps")?
+                    .parse()
+                    .context("bad curves steps")?;
+                let mut slots = Vec::with_capacity(steps * N_LANES);
+                for line in lines {
+                    let mut it = line.split_whitespace();
+                    if it.next() != Some("m") {
+                        bail!("bad curves slot line {line:?}");
+                    }
+                    let n: u64 = it
+                        .next()
+                        .context("slot missing n")?
+                        .parse()
+                        .context("bad slot n")?;
+                    let mean = parse_hex_f64(it.next().context("slot missing mean")?)?;
+                    let m2 = parse_hex_f64(it.next().context("slot missing m2")?)?;
+                    slots.push((n, mean, m2));
+                }
+                if slots.len() != steps * N_LANES {
+                    bail!(
+                        "curves payload holds {} slots, expected {}",
+                        slots.len(),
+                        steps * N_LANES
+                    );
+                }
+                PointResult::Curves(EnsembleSeries::from_raw_slots(steps, &slots))
+            }
+            "steady" => {
+                let mut f = || -> Result<f64> {
+                    parse_hex_f64(head.next().context("steady payload truncated")?)
+                };
+                PointResult::Steady(SteadyStats {
+                    u: f()?,
+                    u_err: f()?,
+                    w: f()?,
+                    w_err: f()?,
+                    wa: f()?,
+                    gvt_rate: f()?,
+                })
+            }
+            "surfaces" => {
+                let count: usize = head
+                    .next()
+                    .context("surfaces payload missing count")?
+                    .parse()
+                    .context("bad surfaces count")?;
+                let mut surfaces = Vec::with_capacity(count);
+                for line in lines {
+                    let mut it = line.split_whitespace();
+                    if it.next() != Some("s") {
+                        bail!("bad surface line {line:?}");
+                    }
+                    let surface: Result<Vec<f64>> = it.map(parse_hex_f64).collect();
+                    surfaces.push(surface?);
+                }
+                if surfaces.len() != count {
+                    bail!("surfaces payload holds {}, expected {count}", surfaces.len());
+                }
+                PointResult::Surfaces(surfaces)
+            }
+            "counters" => {
+                let mut u = || -> Result<u64> {
+                    head.next()
+                        .context("counters payload truncated")?
+                        .parse()
+                        .context("bad counter value")
+                };
+                PointResult::Counters(MeanFieldCounters {
+                    n_ok: u()?,
+                    n_w: u()?,
+                    n_delta: u()?,
+                    wait_nn_steps: u()?,
+                    wait_win_steps: u()?,
+                    border_attempts: u()?,
+                    border_nn_failures: u()?,
+                    pe_steps: u()?,
+                    updates: u()?,
+                })
+            }
+            "latticeu" => PointResult::LatticeU {
+                u: parse_hex_f64(head.next().context("latticeu payload truncated")?)?,
+                err: parse_hex_f64(head.next().context("latticeu payload truncated")?)?,
+            },
+            other => bail!("unknown cache payload kind {other:?}"),
+        })
+    }
+}
+
+/// Raw IEEE-754 bits as 16 hex digits (exact, version-independent).
+fn hex_f64(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+/// Inverse of [`hex_f64`].
+fn parse_hex_f64(s: &str) -> Result<f64> {
+    let bits = u64::from_str_radix(s, 16).context("bad f64 hex bits")?;
+    Ok(f64::from_bits(bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pdes::{Mode, VolumeLoad};
+
+    fn run(l: usize) -> RunSpec {
+        RunSpec {
+            l,
+            load: VolumeLoad::Sites(1),
+            mode: Mode::Windowed { delta: 10.0 },
+            trials: 8,
+            steps: 0,
+            seed: crate::DEFAULT_SEED,
+        }
+    }
+
+    #[test]
+    fn fnv1a64_pinned_vectors() {
+        // reference FNV-1a vectors; the cache's file names depend on them
+        assert_eq!(fnv1a64(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64("a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64("foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn point_spec_is_pinned() {
+        let p = SweepPoint::steady(
+            "L100",
+            Topology::Ring { l: 100 },
+            run(100),
+            3000,
+            3000,
+        );
+        assert_eq!(
+            p.spec(),
+            "repro/v1 topo=ring:100 run=l=100;load=1;mode=win:10;trials=8;steps=0;seed=20020601 samp=steady:3000:3000"
+        );
+        assert_eq!(p.key(), fnv1a64(&p.spec()));
+    }
+
+    #[test]
+    fn constructors_normalize_run_fields() {
+        let c = SweepPoint::curves("c", Topology::Ring { l: 10 }, run(10), 250);
+        assert_eq!(c.run.steps, 250);
+        let s = SweepPoint::snapshot("s", Topology::Ring { l: 10 }, run(10), vec![2, 100], 7);
+        assert_eq!(s.run.trials, 1);
+        assert_eq!(s.run.steps, 100);
+        assert_eq!(s.sampling.spec_string(), "snap:2,100:7");
+        let m = SweepPoint::counters("m", Topology::Ring { l: 10 }, run(10), 20, 60, 3);
+        assert_eq!(m.run.trials, 1);
+        assert_eq!(m.sampling.spec_string(), "counters:20:60:3");
+        let l = SweepPoint::lattice_u("l", Topology::Square { side: 4 }, run(16), 10, 10);
+        assert_eq!(l.sampling.spec_string(), "latticeu:10:10");
+    }
+
+    #[test]
+    #[should_panic]
+    fn topology_size_mismatch_rejected() {
+        SweepPoint::steady("x", Topology::Ring { l: 64 }, run(100), 10, 10);
+    }
+
+    #[test]
+    fn profile_scaling_matches_ctx_rules() {
+        let full = Profile::full(1);
+        let quick = Profile::quick(1);
+        assert_eq!(full.trials(128), 128);
+        assert_eq!(quick.trials(128), 16);
+        assert_eq!(quick.trials(24), 4);
+        assert_eq!(full.steps(10_000), 10_000);
+        assert_eq!(quick.steps(10_000), 1000);
+        assert_eq!(quick.steps(300), 50);
+        assert_eq!(quick.pick(1, 2), 2);
+        assert_eq!(full.pick(1, 2), 1);
+    }
+
+    #[test]
+    fn cache_text_roundtrip_is_bitwise() {
+        // curves: a tiny real series
+        let mut series = EnsembleSeries::new(2);
+        for trial in 0..3 {
+            let f = crate::stats::HorizonFrame {
+                u: 0.25 + trial as f64 * 0.1,
+                w2: 1.5 * (trial + 1) as f64,
+                ..Default::default()
+            };
+            series.push_frame(0, &f);
+            series.push_frame(1, &f);
+        }
+        let r = PointResult::Curves(series.clone());
+        let back = PointResult::from_cache_text(&r.to_cache_text()).unwrap();
+        assert_eq!(series.raw_slots(), back.series().raw_slots());
+
+        let st = SteadyStats {
+            u: 0.2465,
+            u_err: 1e-4,
+            w: 1.75,
+            w_err: 0.01,
+            wa: 1.25,
+            gvt_rate: 0.099,
+        };
+        let back = PointResult::from_cache_text(&PointResult::Steady(st).to_cache_text()).unwrap();
+        assert_eq!(back.steady().u.to_bits(), st.u.to_bits());
+        assert_eq!(back.steady().gvt_rate.to_bits(), st.gvt_rate.to_bits());
+
+        let surf = PointResult::Surfaces(vec![vec![0.0, 1.5, 2.25], vec![4.0, 4.0, 4.0]]);
+        let back = PointResult::from_cache_text(&surf.to_cache_text()).unwrap();
+        assert_eq!(back.surfaces(), surf.surfaces());
+
+        let c = MeanFieldCounters {
+            n_ok: 1,
+            n_w: 2,
+            n_delta: 3,
+            wait_nn_steps: 4,
+            wait_win_steps: 5,
+            border_attempts: 6,
+            border_nn_failures: 7,
+            pe_steps: 8,
+            updates: 9,
+        };
+        let back =
+            PointResult::from_cache_text(&PointResult::Counters(c).to_cache_text()).unwrap();
+        assert_eq!(back.counters().updates, 9);
+        assert_eq!(back.counters().n_delta, 3);
+
+        let back = PointResult::from_cache_text(
+            &PointResult::LatticeU { u: 0.12, err: 3e-3 }.to_cache_text(),
+        )
+        .unwrap();
+        assert_eq!(back.lattice_u().0.to_bits(), 0.12f64.to_bits());
+    }
+
+    #[test]
+    fn corrupt_cache_text_rejected() {
+        assert!(PointResult::from_cache_text("").is_err());
+        assert!(PointResult::from_cache_text("bogus 1\n").is_err());
+        assert!(PointResult::from_cache_text("curves 2\nm 1 0 0\n").is_err());
+        assert!(PointResult::from_cache_text("steady 00\n").is_err());
+        assert!(PointResult::from_cache_text("surfaces 2\ns 0000000000000000\n").is_err());
+    }
+}

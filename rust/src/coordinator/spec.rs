@@ -7,7 +7,8 @@ use crate::config::Config;
 use crate::output::Table;
 use crate::pdes::{Mode, Topology, VolumeLoad};
 
-use super::campaign::{steady_state_topology_with, RunSpec, ShardStrategy};
+use super::campaign::{run_plan, CampaignOpts, RunSpec, ShardStrategy};
+use super::plan::{SweepPlan, SweepPoint};
 
 /// A parsed campaign: the cartesian grid of (L, N_V, Δ) points.
 #[derive(Clone, Debug)]
@@ -36,8 +37,13 @@ pub struct CampaignSpec {
     pub measure: usize,
     /// Master seed.
     pub seed: u64,
-    /// Worker decomposition: "trials" (default) | "lattice" | "both"
-    /// (trials × PE blocks; see `coordinator::ShardStrategy`).
+    /// Worker decomposition: "trials" (default) | "lattice" | "both".
+    /// Since the declarative-campaign refactor, "trials" means *point*
+    /// fan-out across the pool (each grid cell's trial fold is the
+    /// canonical serial one, so outputs are worker-count-invariant);
+    /// "lattice"/"both" spend (part of) the budget on per-simulation PE
+    /// blocks (`ShardedPdes`), which is the lever for campaigns with few
+    /// big-L grid cells.
     pub workers: String,
     /// Explicit PE-block workers per simulation for "lattice"/"both"
     /// (0 = resolve against the pool budget).
@@ -60,12 +66,18 @@ impl CampaignSpec {
             trials: cfg.integer(s, "trials", 32),
             warm: cfg.integer(s, "warm", 2000) as usize,
             measure: cfg.integer(s, "measure", 2000) as usize,
-            seed: cfg.integer(s, "seed", 20020601),
+            seed: cfg.integer(s, "seed", crate::DEFAULT_SEED),
             workers: cfg.text(s, "workers", "trials"),
             lattice_workers: cfg.integer(s, "lattice_workers", 0) as usize,
         };
         if spec.ls.is_empty() {
             bail!("campaign: `l` list is required");
+        }
+        // NaN must die here with a config error: a NaN window would
+        // panic later inside the canonical spec renderer (cache keys
+        // cannot encode NaN) instead of reporting the bad input
+        if spec.deltas.iter().any(|d| d.is_nan()) {
+            bail!("campaign: `deltas` must not contain NaN");
         }
         if spec.nvs.is_empty() && !spec.mode.starts_with("rd") && !spec.mode.contains("windowed_rd")
         {
@@ -127,42 +139,79 @@ impl CampaignSpec {
         }
     }
 
-    /// Execute the sweep, printing and returning the results table.
-    pub fn execute(&self, out_dir: &std::path::Path) -> Result<Table> {
-        let mut table = Table::new(
-            format!("campaign {} ({} trials/point)", self.name, self.trials),
-            &["L", "NV", "delta", "u", "u_err", "w", "wa", "gvt_rate"],
-        );
+    /// The (L, N_V, Δ) grid in row order — the single source of truth
+    /// for both the plan layout and the result-table labels, so the two
+    /// can never drift apart.
+    fn grid_cells(&self) -> Vec<(usize, u64, f64)> {
         let nvs: &[u64] = if self.nvs.is_empty() { &[0] } else { &self.nvs };
         let deltas: &[f64] = if self.deltas.is_empty() {
             &[f64::INFINITY]
         } else {
             &self.deltas
         };
-        let strategy = self.strategy();
+        let mut cells = Vec::with_capacity(self.ls.len() * nvs.len() * deltas.len());
         for &l in &self.ls {
             for &nv in nvs {
                 for &delta in deltas {
-                    let (mode, load) = self.point(nv, delta);
-                    let st = steady_state_topology_with(
-                        self.topology_for(l),
-                        &RunSpec {
-                            l,
-                            load,
-                            mode,
-                            trials: self.trials,
-                            steps: 0,
-                            seed: self.seed,
-                        },
-                        self.warm,
-                        self.measure,
-                        strategy,
-                    );
-                    table.push(vec![
-                        l as f64, nv as f64, delta, st.u, st.u_err, st.w, st.wa, st.gvt_rate,
-                    ]);
+                    cells.push((l, nv, delta));
                 }
             }
+        }
+        cells
+    }
+
+    /// The declarative form of this campaign: one steady point per
+    /// (L, N_V, Δ) grid cell, in row order.
+    pub fn to_plan(&self) -> SweepPlan {
+        let mut plan = SweepPlan::new(&self.name, format!("config campaign {}", self.name));
+        for (l, nv, delta) in self.grid_cells() {
+            let (mode, load) = self.point(nv, delta);
+            plan.push(SweepPoint::steady(
+                format!("L{l}_NV{nv}_d{delta}"),
+                self.topology_for(l),
+                RunSpec {
+                    l,
+                    load,
+                    mode,
+                    trials: self.trials,
+                    steps: 0,
+                    seed: self.seed,
+                },
+                self.warm,
+                self.measure,
+            ));
+        }
+        plan
+    }
+
+    /// Execute the sweep through the generic campaign scheduler, printing
+    /// and returning the results table.  The `workers=` strategy maps onto
+    /// the scheduler: trial sharding becomes point-level fan-out, lattice
+    /// sharding becomes per-point block workers.
+    pub fn execute(&self, out_dir: &std::path::Path) -> Result<Table> {
+        let plan = self.to_plan();
+        let strategy = self.strategy();
+        let opts = CampaignOpts {
+            workers: match strategy {
+                ShardStrategy::Trials => 0, // pool budget
+                ShardStrategy::Lattice { .. } => 1,
+                ShardStrategy::Both { trial_workers, .. } => trial_workers,
+            },
+            lattice_workers: strategy.lattice_workers(),
+            resume: false,
+            cache_dir: None,
+            quiet: false,
+        };
+        let (results, _report) = run_plan(&plan, &opts)?;
+        let mut table = Table::new(
+            format!("campaign {} ({} trials/point)", self.name, self.trials),
+            &["L", "NV", "delta", "u", "u_err", "w", "wa", "gvt_rate"],
+        );
+        for ((l, nv, delta), result) in self.grid_cells().into_iter().zip(&results) {
+            let st = result.steady();
+            table.push(vec![
+                l as f64, nv as f64, delta, st.u, st.u_err, st.w, st.wa, st.gvt_rate,
+            ]);
         }
         table.write_tsv(out_dir, &self.name)?;
         Ok(table)
@@ -269,6 +318,16 @@ measure = 50
     #[test]
     fn bad_mode_rejected() {
         let cfg = Config::parse("[campaign]\nmode = \"bogus\"\nl = [8]\nnv = [1]").unwrap();
+        assert!(CampaignSpec::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn nan_delta_rejected_at_parse_time() {
+        // must be a config error, not a later canon_f64 assert panic
+        let cfg = Config::parse(
+            "[campaign]\nmode = \"windowed\"\nl = [8]\nnv = [1]\ndeltas = [nan]",
+        )
+        .unwrap();
         assert!(CampaignSpec::from_config(&cfg).is_err());
     }
 

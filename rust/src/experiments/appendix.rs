@@ -5,45 +5,117 @@
 
 use anyhow::Result;
 
-use super::fig6::u_inf;
-use super::Ctx;
+use super::fig6::push_u_inf_cell;
+use super::{Ctx, UInfCursor};
+use crate::coordinator::{PointResult, Profile, SweepPlan};
 use crate::fit::{eq12_u, fit_u_kpz, fit_u_rd};
 use crate::output::Table;
 use crate::pdes::{Mode, VolumeLoad};
 
-pub fn run(ctx: &Ctx) -> Result<()> {
-    let ls: &[usize] = if ctx.quick { &[10, 32, 100] } else { &[10, 32, 100, 316] };
-    let trials = ctx.trials(24);
-    let warm = ctx.steps(3000);
-    let measure = ctx.steps(3000);
+struct Grid {
+    ls: &'static [usize],
+    trials: u64,
+    warm: usize,
+    measure: usize,
+    a1_deltas: &'static [f64],
+    a2_nvs: &'static [f64],
+    eq12_nvs: &'static [u64],
+    eq12_deltas: &'static [f64],
+}
 
+fn grid(p: &Profile) -> Grid {
+    Grid {
+        ls: p.pick(&[10, 32, 100, 316][..], &[10, 32, 100][..]),
+        trials: p.trials(24),
+        warm: p.steps(3000),
+        measure: p.steps(3000),
+        a1_deltas: p.pick(
+            &[1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0][..],
+            &[1.0, 5.0, 20.0][..],
+        ),
+        a2_nvs: p.pick(
+            &[1.0, 3.0, 10.0, 30.0, 100.0, 300.0, 1000.0][..],
+            &[1.0, 10.0, 100.0][..],
+        ),
+        eq12_nvs: p.pick(&[1, 10, 100, 1000][..], &[1, 100][..]),
+        eq12_deltas: p.pick(&[1.0, 5.0, 10.0, 100.0][..], &[5.0, 100.0][..]),
+    }
+}
+
+pub(super) fn plan(p: &Profile) -> SweepPlan {
+    let g = grid(p);
+    let mut plan = SweepPlan::new("appendix", "appendix fits A.1/A.2 and the Eq. 12 surface");
     // --- A.1: u_RD(Δ) from Δ-constrained RD runs
-    let deltas: Vec<f64> = if ctx.quick {
-        vec![1.0, 5.0, 20.0]
-    } else {
-        vec![1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0]
-    };
-    let mut us_rd = Vec::new();
-    let mut t_rd = Table::new(
-        format!("A.1 data: u_RD(Δ), extrapolated (N={trials})"),
-        &["delta", "u_rd"],
-    );
-    for &d in &deltas {
-        let u = u_inf(
-            ctx,
+    for &d in g.a1_deltas {
+        push_u_inf_cell(
+            &mut plan,
+            &format!("a1_d{d}"),
             VolumeLoad::Infinite,
             Mode::WindowedRd { delta: d },
-            ls,
-            trials,
-            warm,
-            measure,
+            g.ls,
+            g.trials,
+            g.warm,
+            g.measure,
+            p.seed,
         );
+    }
+    // --- A.2: u_KPZ(N_V) from unconstrained runs
+    for &nv in g.a2_nvs {
+        push_u_inf_cell(
+            &mut plan,
+            &format!("a2_NV{nv}"),
+            VolumeLoad::Sites(nv as u64),
+            Mode::Conservative,
+            g.ls,
+            g.trials,
+            g.warm,
+            g.measure,
+            p.seed,
+        );
+    }
+    // --- Eq. 12 composite check on a (NV, Δ) grid
+    for &nv in g.eq12_nvs {
+        for &d in g.eq12_deltas {
+            push_u_inf_cell(
+                &mut plan,
+                &format!("eq12_NV{nv}_d{d}"),
+                VolumeLoad::Sites(nv),
+                Mode::Windowed { delta: d },
+                g.ls,
+                g.trials,
+                g.warm,
+                g.measure,
+                p.seed,
+            );
+        }
+    }
+    plan
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let plan = plan(&ctx.profile());
+    let results = ctx.schedule(&plan)?;
+    reduce(ctx, &results)
+}
+
+fn reduce(ctx: &Ctx, results: &[PointResult]) -> Result<()> {
+    let g = grid(&ctx.profile());
+    let mut cells = UInfCursor::new(g.ls, results);
+
+    // --- A.1: u_RD(Δ)
+    let mut us_rd = Vec::new();
+    let mut t_rd = Table::new(
+        format!("A.1 data: u_RD(Δ), extrapolated (N={})", g.trials),
+        &["delta", "u_rd"],
+    );
+    for &d in g.a1_deltas {
+        let u = cells.next_u_inf();
         us_rd.push(u);
         t_rd.push(vec![d, u]);
     }
     t_rd.write_tsv(&ctx.out_dir, "appendix_a1_data")?;
     println!("{}", t_rd.render());
-    let fit_rd = fit_u_rd(&deltas, &us_rd);
+    let fit_rd = fit_u_rd(g.a1_deltas, &us_rd);
     println!(
         "A.1 two-point refit: c3 = {:.3} (paper 3.47), e3 = {:.3} (paper 0.84), max rel err {:.1}%",
         fit_rd.c,
@@ -51,33 +123,20 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         fit_rd.max_rel_err * 100.0
     );
 
-    // --- A.2: u_KPZ(N_V) from unconstrained runs
-    let nvs: Vec<f64> = if ctx.quick {
-        vec![1.0, 10.0, 100.0]
-    } else {
-        vec![1.0, 3.0, 10.0, 30.0, 100.0, 300.0, 1000.0]
-    };
+    // --- A.2: u_KPZ(N_V)
     let mut us_kpz = Vec::new();
     let mut t_kpz = Table::new(
-        format!("A.2 data: u_KPZ(NV), extrapolated (N={trials})"),
+        format!("A.2 data: u_KPZ(NV), extrapolated (N={})", g.trials),
         &["NV", "u_kpz"],
     );
-    for &nv in &nvs {
-        let u = u_inf(
-            ctx,
-            VolumeLoad::Sites(nv as u64),
-            Mode::Conservative,
-            ls,
-            trials,
-            warm,
-            measure,
-        );
+    for &nv in g.a2_nvs {
+        let u = cells.next_u_inf();
         us_kpz.push(u);
         t_kpz.push(vec![nv, u]);
     }
     t_kpz.write_tsv(&ctx.out_dir, "appendix_a2_data")?;
     println!("{}", t_kpz.render());
-    let fit_kpz = fit_u_kpz(&nvs, &us_kpz);
+    let fit_kpz = fit_u_kpz(g.a2_nvs, &us_kpz);
     println!(
         "A.2 two-point refit: c1 = {:.3} (paper 3.0), e1 = {:.3} (paper 0.715), max rel err {:.1}%",
         fit_kpz.c,
@@ -86,24 +145,14 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     );
 
     // --- Eq. 12 composite check on a (NV, Δ) grid
-    let grid_nv: &[u64] = if ctx.quick { &[1, 100] } else { &[1, 10, 100, 1000] };
-    let grid_d: &[f64] = if ctx.quick { &[5.0, 100.0] } else { &[1.0, 5.0, 10.0, 100.0] };
     let mut t12 = Table::new(
         "Eq 12 check: measured u_inf vs composite fit (paper constants)",
         &["NV", "delta", "u_measured", "u_eq12", "rel_dev"],
     );
     let mut max_dev = 0.0f64;
-    for &nv in grid_nv {
-        for &d in grid_d {
-            let u = u_inf(
-                ctx,
-                VolumeLoad::Sites(nv),
-                Mode::Windowed { delta: d },
-                ls,
-                trials,
-                warm,
-                measure,
-            );
+    for &nv in g.eq12_nvs {
+        for &d in g.eq12_deltas {
+            let u = cells.next_u_inf();
             let model = eq12_u(nv as f64, d);
             let dev = (model - u).abs() / u.max(1e-12);
             max_dev = max_dev.max(dev);

@@ -5,86 +5,121 @@
 use anyhow::Result;
 
 use super::Ctx;
+use crate::coordinator::{PointResult, Profile, RunSpec, SweepPlan, SweepPoint};
 use crate::fit::extrapolate_to_zero;
 use crate::output::Table;
-use crate::pdes::{LatticePdes, Mode, Topology};
-use crate::rng::Rng;
-use crate::stats::OnlineMoments;
+use crate::pdes::{Mode, Topology, VolumeLoad};
 
-fn steady_u(topo: Topology, trials: u64, warm: usize, measure: usize, seed: u64) -> (f64, f64) {
-    let mut acc = OnlineMoments::new();
-    for trial in 0..trials {
-        let mut sim = LatticePdes::new(topo, Mode::Conservative, Rng::for_stream(seed, trial));
-        for _ in 0..warm {
-            sim.step();
-        }
-        let n = sim.len() as f64;
-        let mut s = 0.0;
-        for _ in 0..measure {
-            s += sim.step() as f64 / n;
-        }
-        acc.push(s / measure as f64);
-    }
-    (acc.mean(), acc.stderr())
+struct Case {
+    name: &'static str,
+    topos: Vec<Topology>,
+    paper_u: f64,
 }
 
-pub fn run(ctx: &Ctx) -> Result<()> {
-    let trials = ctx.trials(16);
-    let warm = ctx.steps(2000);
-    let measure = ctx.steps(2000);
-
-    let cases: &[(&str, Vec<Topology>, f64)] = &[
-        (
-            "2d",
-            if ctx.quick {
-                vec![Topology::Square { side: 6 }, Topology::Square { side: 10 }]
-            } else {
+fn cases(p: &Profile) -> Vec<Case> {
+    vec![
+        Case {
+            name: "2d",
+            topos: p.pick(
                 vec![
                     Topology::Square { side: 6 },
                     Topology::Square { side: 10 },
                     Topology::Square { side: 16 },
                     Topology::Square { side: 24 },
-                ]
-            },
-            0.12,
-        ),
-        (
-            "3d",
-            if ctx.quick {
-                vec![Topology::Cubic { side: 4 }, Topology::Cubic { side: 6 }]
-            } else {
+                ],
+                vec![Topology::Square { side: 6 }, Topology::Square { side: 10 }],
+            ),
+            paper_u: 0.12,
+        },
+        Case {
+            name: "3d",
+            topos: p.pick(
                 vec![
                     Topology::Cubic { side: 4 },
                     Topology::Cubic { side: 6 },
                     Topology::Cubic { side: 8 },
                     Topology::Cubic { side: 10 },
-                ]
-            },
-            0.075,
-        ),
-    ];
+                ],
+                vec![Topology::Cubic { side: 4 }, Topology::Cubic { side: 6 }],
+            ),
+            paper_u: 0.075,
+        },
+    ]
+}
 
-    for (name, topos, paper_u) in cases {
+struct Grid {
+    trials: u64,
+    warm: usize,
+    measure: usize,
+}
+
+fn grid(p: &Profile) -> Grid {
+    Grid {
+        trials: p.trials(16),
+        warm: p.steps(2000),
+        measure: p.steps(2000),
+    }
+}
+
+pub(super) fn plan(p: &Profile) -> SweepPlan {
+    let g = grid(p);
+    let mut plan = SweepPlan::new("dims", "2-d/3-d conservative lattices (Section III A)");
+    for case in cases(p) {
+        for topo in case.topos {
+            plan.push(SweepPoint::lattice_u(
+                format!("{}_{}", case.name, topo.tag()),
+                topo,
+                RunSpec {
+                    l: topo.len(),
+                    load: VolumeLoad::Sites(1),
+                    mode: Mode::Conservative,
+                    trials: g.trials,
+                    steps: 0,
+                    seed: p.seed,
+                },
+                g.warm,
+                g.measure,
+            ));
+        }
+    }
+    plan
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let plan = plan(&ctx.profile());
+    let results = ctx.schedule(&plan)?;
+    reduce(ctx, &results)
+}
+
+fn reduce(ctx: &Ctx, results: &[PointResult]) -> Result<()> {
+    let p = ctx.profile();
+    let g = grid(&p);
+    let mut idx = 0usize;
+
+    for case in cases(&p) {
         let mut table = Table::new(
-            format!("{name} conservative PDES, NV=1 (N={trials})"),
+            format!("{} conservative PDES, NV=1 (N={})", case.name, g.trials),
             &["n_pes", "u", "u_err"],
         );
         let mut xs = Vec::new();
         let mut ys = Vec::new();
-        for topo in topos {
-            let (u, err) = steady_u(*topo, trials, warm, measure, ctx.seed);
+        for topo in &case.topos {
+            let (u, err) = results[idx].lattice_u();
+            idx += 1;
             table.push(vec![topo.len() as f64, u, err]);
             xs.push(1.0 / topo.len() as f64);
             ys.push(u);
         }
-        table.write_tsv(&ctx.out_dir, &format!("dims_{name}"))?;
+        table.write_tsv(&ctx.out_dir, &format!("dims_{}", case.name))?;
         println!("{}", table.render());
         let u_inf = extrapolate_to_zero(&xs, &ys)
             .map(|f| f.at_zero())
             .unwrap_or(*ys.last().unwrap());
         println!(
-            "{name}: u_inf ≈ {:.3} (paper ≈ {paper_u}); largest-lattice u = {:.3}",
+            "{}: u_inf ≈ {:.3} (paper ≈ {}); largest-lattice u = {:.3}",
+            case.name,
             u_inf,
+            case.paper_u,
             ys.last().unwrap()
         );
     }

@@ -10,41 +10,70 @@
 use anyhow::Result;
 
 use super::Ctx;
-use crate::coordinator::{steady_state, RunSpec};
+use crate::coordinator::{PointResult, Profile, RunSpec, SweepPlan, SweepPoint};
 use crate::fit::{extrapolate_to_zero, krug_meakin_extrapolate};
 use crate::output::Table;
-use crate::pdes::{Mode, VolumeLoad};
+use crate::pdes::{Mode, Topology, VolumeLoad};
 use crate::scaling::kpz;
 
+struct Grid {
+    ls: &'static [usize],
+    trials: u64,
+    warm: usize,
+    measure: usize,
+}
+
+fn grid(p: &Profile) -> Grid {
+    Grid {
+        ls: p.pick(
+            &[10, 18, 32, 56, 100, 178, 316, 562, 1000][..],
+            &[10, 32, 100][..],
+        ),
+        trials: p.trials(32),
+        warm: p.steps(4000),
+        measure: p.steps(4000),
+    }
+}
+
+pub(super) fn plan(p: &Profile) -> SweepPlan {
+    let g = grid(p);
+    let mut plan = SweepPlan::new("eq8", "Krug-Meakin extrapolation at NV=1 (Eq. 8)");
+    for &l in g.ls {
+        plan.push(SweepPoint::steady(
+            format!("L{l}"),
+            Topology::Ring { l },
+            RunSpec {
+                l,
+                load: VolumeLoad::Sites(1),
+                mode: Mode::Conservative,
+                trials: g.trials,
+                steps: 0,
+                seed: p.seed,
+            },
+            g.warm,
+            g.measure,
+        ));
+    }
+    plan
+}
+
 pub fn run(ctx: &Ctx) -> Result<()> {
-    let ls: &[usize] = if ctx.quick {
-        &[10, 32, 100]
-    } else {
-        &[10, 18, 32, 56, 100, 178, 316, 562, 1000]
-    };
-    let trials = ctx.trials(32);
-    let warm = ctx.steps(4000);
-    let measure = ctx.steps(4000);
+    let plan = plan(&ctx.profile());
+    let results = ctx.schedule(&plan)?;
+    reduce(ctx, &results)
+}
+
+fn reduce(ctx: &Ctx, results: &[PointResult]) -> Result<()> {
+    let g = grid(&ctx.profile());
 
     let mut table = Table::new(
-        format!("Eq 8: steady <u_L>, NV=1, unconstrained (N={trials})"),
+        format!("Eq 8: steady <u_L>, NV=1, unconstrained (N={})", g.trials),
         &["L", "u", "u_err"],
     );
     let mut lsf = Vec::new();
     let mut us = Vec::new();
-    for &l in ls {
-        let st = steady_state(
-            &RunSpec {
-                l,
-                load: VolumeLoad::Sites(1),
-                mode: Mode::Conservative,
-                trials,
-                steps: 0,
-                seed: ctx.seed,
-            },
-            warm,
-            measure,
-        );
+    for (&l, r) in g.ls.iter().zip(results) {
+        let st = r.steady();
         table.push(vec![l as f64, st.u, st.u_err]);
         lsf.push(l as f64);
         us.push(st.u);

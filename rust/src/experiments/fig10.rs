@@ -9,24 +9,44 @@
 use anyhow::Result;
 
 use super::Ctx;
-use crate::coordinator::{run_ensemble, RunSpec};
+use crate::coordinator::{PointResult, Profile, RunSpec, SweepPlan, SweepPoint};
 use crate::output::Table;
-use crate::pdes::{Mode, VolumeLoad};
+use crate::pdes::{Mode, Topology, VolumeLoad};
 use crate::stats::Lane;
 
-pub fn run(ctx: &Ctx) -> Result<()> {
-    let l = if ctx.quick { 500 } else { 2000 };
-    let steps = ctx.steps(500);
-    let trials = ctx.trials(96);
-
-    let series = run_ensemble(&RunSpec {
-        l,
-        load: VolumeLoad::Sites(1000),
-        mode: Mode::Windowed { delta: 10.0 },
-        trials,
+pub(super) fn plan(p: &Profile) -> SweepPlan {
+    let l = p.pick(2000, 500);
+    let steps = p.steps(500);
+    let trials = p.trials(96);
+    let mut plan = SweepPlan::new("fig10", "slow/fast group decomposition (Fig. 10)");
+    plan.push(SweepPoint::curves(
+        format!("L{l}_NV1000_d10"),
+        Topology::Ring { l },
+        RunSpec {
+            l,
+            load: VolumeLoad::Sites(1000),
+            mode: Mode::Windowed { delta: 10.0 },
+            trials,
+            steps: 0,
+            seed: p.seed,
+        },
         steps,
-        seed: ctx.seed,
-    });
+    ));
+    plan
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let plan = plan(&ctx.profile());
+    let results = ctx.schedule(&plan)?;
+    reduce(ctx, &results)
+}
+
+fn reduce(ctx: &Ctx, results: &[PointResult]) -> Result<()> {
+    let p = ctx.profile();
+    let l = p.pick(2000, 500);
+    let steps = p.steps(500);
+    let trials = p.trials(96);
+    let series = results[0].series();
 
     let mut table = Table::new(
         format!("Fig 10: slow/fast decomposition, Δ=10, NV=1000, L={l} (N={trials})"),

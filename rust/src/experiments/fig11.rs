@@ -5,55 +5,93 @@
 
 use anyhow::Result;
 
-use super::fig6::u_inf;
-use super::Ctx;
+use super::fig6::push_u_inf_cell;
+use super::{Ctx, UInfCursor};
+use crate::coordinator::{PointResult, Profile, SweepPlan};
 use crate::fit::powerlaw_fit;
 use crate::output::Table;
 use crate::pdes::{Mode, VolumeLoad};
 
+struct Grid {
+    deltas: &'static [f64],
+    nvs: &'static [u64],
+    ls: &'static [usize],
+    trials: u64,
+    warm: usize,
+    measure: usize,
+}
+
+fn grid(p: &Profile) -> Grid {
+    Grid {
+        deltas: p.pick(&[1.0, 5.0, 10.0, 100.0][..], &[1.0, 10.0][..]),
+        nvs: p.pick(&[1, 10, 100, 1000][..], &[1, 10, 100][..]),
+        ls: p.pick(&[10, 32, 100, 316][..], &[10, 32, 100][..]),
+        trials: p.trials(24),
+        warm: p.steps(3000),
+        measure: p.steps(3000),
+    }
+}
+
+pub(super) fn plan(p: &Profile) -> SweepPlan {
+    let g = grid(p);
+    let mut plan = SweepPlan::new("fig11", "utilization curve family y_delta(x) (Fig. 11)");
+    // x-axis cells: u_KPZ(N_V) = u_inf at Δ = ∞
+    for &nv in g.nvs {
+        push_u_inf_cell(
+            &mut plan,
+            &format!("x_NV{nv}"),
+            VolumeLoad::Sites(nv),
+            Mode::Conservative,
+            g.ls,
+            g.trials,
+            g.warm,
+            g.measure,
+            p.seed,
+        );
+    }
+    // y cells: u_inf under each finite window
+    for &nv in g.nvs {
+        for &d in g.deltas {
+            push_u_inf_cell(
+                &mut plan,
+                &format!("y_NV{nv}_d{d}"),
+                VolumeLoad::Sites(nv),
+                Mode::Windowed { delta: d },
+                g.ls,
+                g.trials,
+                g.warm,
+                g.measure,
+                p.seed,
+            );
+        }
+    }
+    plan
+}
+
 pub fn run(ctx: &Ctx) -> Result<()> {
-    let deltas: &[f64] = if ctx.quick { &[1.0, 10.0] } else { &[1.0, 5.0, 10.0, 100.0] };
-    let nvs: &[u64] = if ctx.quick { &[1, 10, 100] } else { &[1, 10, 100, 1000] };
-    let ls: &[usize] = if ctx.quick { &[10, 32, 100] } else { &[10, 32, 100, 316] };
-    let trials = ctx.trials(24);
-    let warm = ctx.steps(3000);
-    let measure = ctx.steps(3000);
+    let plan = plan(&ctx.profile());
+    let results = ctx.schedule(&plan)?;
+    reduce(ctx, &results)
+}
+
+fn reduce(ctx: &Ctx, results: &[PointResult]) -> Result<()> {
+    let g = grid(&ctx.profile());
+    let mut cells = UInfCursor::new(g.ls, results);
 
     // x-axis: u_KPZ(N_V) = u_inf at Δ = ∞
-    let xs: Vec<f64> = nvs
-        .iter()
-        .map(|&nv| {
-            u_inf(
-                ctx,
-                VolumeLoad::Sites(nv),
-                Mode::Conservative,
-                ls,
-                trials,
-                warm,
-                measure,
-            )
-        })
-        .collect();
+    let xs: Vec<f64> = g.nvs.iter().map(|_| cells.next_u_inf()).collect();
 
     let mut headers = vec!["NV".to_string(), "x_uKPZ".to_string()];
-    for &d in deltas {
+    for &d in g.deltas {
         headers.push(format!("y_d{d}"));
     }
     let mut table = Table::with_headers("Fig 11: y_Δ(x) vs x = u_KPZ(NV)", headers);
-    let mut ys_per_delta: Vec<Vec<f64>> = vec![Vec::new(); deltas.len()];
-    for (i, &nv) in nvs.iter().enumerate() {
+    let mut ys_per_delta: Vec<Vec<f64>> = vec![Vec::new(); g.deltas.len()];
+    for (i, &nv) in g.nvs.iter().enumerate() {
         let mut row = vec![nv as f64, xs[i]];
-        for (j, &d) in deltas.iter().enumerate() {
-            let y = u_inf(
-                ctx,
-                VolumeLoad::Sites(nv),
-                Mode::Windowed { delta: d },
-                ls,
-                trials,
-                warm,
-                measure,
-            );
-            ys_per_delta[j].push(y);
+        for ys in ys_per_delta.iter_mut() {
+            let y = cells.next_u_inf();
+            ys.push(y);
             row.push(y);
         }
         table.push(row);
@@ -66,7 +104,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         "Fig 11 fits: y = a(Δ) x^p(Δ)",
         &["delta", "a", "p"],
     );
-    for (j, &d) in deltas.iter().enumerate() {
+    for (j, &d) in g.deltas.iter().enumerate() {
         if let Some(f) = powerlaw_fit(&xs, &ys_per_delta[j]) {
             fits.push(vec![d, f.c, f.p]);
         }

@@ -9,39 +9,76 @@
 use anyhow::Result;
 
 use super::{log_grid, Ctx};
-use crate::coordinator::{run_ensemble, RunSpec};
+use crate::coordinator::{PointResult, Profile, RunSpec, SweepPlan, SweepPoint};
 use crate::output::Table;
-use crate::pdes::{Mode, VolumeLoad};
+use crate::pdes::{Mode, Topology, VolumeLoad};
 use crate::stats::Lane;
 
+/// The figure's grid at one fidelity.
+struct Grid {
+    ls: &'static [usize],
+    nvs: &'static [u64],
+    steps: usize,
+    trials: u64,
+}
+
+fn grid(p: &Profile) -> Grid {
+    Grid {
+        ls: p.pick(&[10, 100, 1000][..], &[10, 100][..]),
+        nvs: &[1, 10, 100],
+        steps: p.steps(1000),
+        trials: p.trials(256),
+    }
+}
+
+pub(super) fn plan(p: &Profile) -> SweepPlan {
+    let g = grid(p);
+    let mut plan = SweepPlan::new("fig2", "utilization evolution, unconstrained (Fig. 2)");
+    for &l in g.ls {
+        for &nv in g.nvs {
+            plan.push(SweepPoint::curves(
+                format!("L{l}_NV{nv}"),
+                Topology::Ring { l },
+                RunSpec {
+                    l,
+                    load: VolumeLoad::Sites(nv),
+                    mode: Mode::Conservative,
+                    trials: g.trials,
+                    steps: g.steps,
+                    seed: p.seed,
+                },
+                g.steps,
+            ));
+        }
+    }
+    plan
+}
+
 pub fn run(ctx: &Ctx) -> Result<()> {
-    let ls: &[usize] = if ctx.quick { &[10, 100] } else { &[10, 100, 1000] };
-    let nvs: &[u64] = &[1, 10, 100];
-    let steps = ctx.steps(1000);
-    let trials = ctx.trials(256);
+    let plan = plan(&ctx.profile());
+    let results = ctx.schedule(&plan)?;
+    reduce(ctx, &results)
+}
+
+fn reduce(ctx: &Ctx, results: &[PointResult]) -> Result<()> {
+    let g = grid(&ctx.profile());
 
     let mut headers = vec!["t".to_string()];
     let mut curves = Vec::new();
-    for &l in ls {
-        for &nv in nvs {
+    let mut idx = 0usize;
+    for &l in g.ls {
+        for &nv in g.nvs {
             headers.push(format!("u_L{l}_NV{nv}"));
-            let series = run_ensemble(&RunSpec {
-                l,
-                load: VolumeLoad::Sites(nv),
-                mode: Mode::Conservative,
-                trials,
-                steps,
-                seed: ctx.seed,
-            });
-            curves.push(series.curve(Lane::U));
+            curves.push(results[idx].series().curve(Lane::U));
+            idx += 1;
         }
     }
 
     let mut table = Table::with_headers(
-        format!("Fig 2: <u(t)>, unconstrained PDES (N = {trials} trials)"),
+        format!("Fig 2: <u(t)>, unconstrained PDES (N = {} trials)", g.trials),
         headers,
     );
-    for &t in &log_grid(steps, 12) {
+    for &t in &log_grid(g.steps, 12) {
         let mut row = vec![t as f64];
         for c in &curves {
             row.push(c[t - 1]);
@@ -54,10 +91,10 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     // Steady-state summary (the plateau the paper reads off the curves).
     let mut summary = Table::new("Fig 2 summary: plateau <u>", &["L", "NV", "u_steady"]);
     let mut idx = 0;
-    for &l in ls {
-        for &nv in nvs {
-            let tail: f64 = curves[idx][steps - steps / 4..].iter().sum::<f64>()
-                / (steps / 4) as f64;
+    for &l in g.ls {
+        for &nv in g.nvs {
+            let tail: f64 = curves[idx][g.steps - g.steps / 4..].iter().sum::<f64>()
+                / (g.steps / 4) as f64;
             summary.push(vec![l as f64, nv as f64, tail]);
             idx += 1;
         }

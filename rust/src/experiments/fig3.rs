@@ -6,42 +6,53 @@
 use anyhow::Result;
 
 use super::Ctx;
+use crate::coordinator::{PointResult, Profile, RunSpec, SweepPlan, SweepPoint};
 use crate::output::Table;
-use crate::pdes::{Mode, RingPdes, VolumeLoad};
-use crate::rng::Rng;
+use crate::pdes::{Mode, Topology, VolumeLoad};
 use crate::stats::horizon_frame;
 
-pub fn run(ctx: &Ctx) -> Result<()> {
-    let l = 100;
-    let snapshots = [2usize, 100];
-    let mut sim = RingPdes::new(
-        l,
-        VolumeLoad::Sites(1),
-        Mode::Conservative,
-        Rng::for_stream(ctx.seed, 0),
-    );
+const L: usize = 100;
+const SNAPSHOTS: [usize; 2] = [2, 100];
 
-    let mut surfaces: Vec<Vec<f64>> = Vec::new();
-    let mut t_now = 0usize;
-    for &t_snap in &snapshots {
-        while t_now < t_snap {
-            sim.step();
-            t_now += 1;
-        }
-        surfaces.push(sim.tau().to_vec());
-    }
+pub(super) fn plan(p: &Profile) -> SweepPlan {
+    let mut plan = SweepPlan::new("fig3", "unconstrained horizon snapshots (Fig. 3)");
+    plan.push(SweepPoint::snapshot(
+        "L100_t2_t100",
+        Topology::Ring { l: L },
+        RunSpec {
+            l: L,
+            load: VolumeLoad::Sites(1),
+            mode: Mode::Conservative,
+            trials: 1,
+            steps: 0,
+            seed: p.seed,
+        },
+        SNAPSHOTS.to_vec(),
+        0,
+    ));
+    plan
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let plan = plan(&ctx.profile());
+    let results = ctx.schedule(&plan)?;
+    reduce(ctx, &results)
+}
+
+fn reduce(ctx: &Ctx, results: &[PointResult]) -> Result<()> {
+    let surfaces = results[0].surfaces();
 
     let mut table = Table::new(
         "Fig 3: unconstrained STH snapshots, L=100, NV=1",
         &["k", "tau_t2", "tau_t100"],
     );
-    for k in 0..l {
+    for k in 0..L {
         table.push(vec![k as f64, surfaces[0][k], surfaces[1][k]]);
     }
     table.write_tsv(&ctx.out_dir, "fig3_snapshots")?;
 
     let mut summary = Table::new("Fig 3 summary: widths", &["t", "w", "wa", "spread"]);
-    for (surface, &t) in surfaces.iter().zip(&snapshots) {
+    for (surface, &t) in surfaces.iter().zip(&SNAPSHOTS) {
         let f = horizon_frame(surface, 0);
         summary.push(vec![t as f64, f.w(), f.wa, f.max - f.min]);
     }

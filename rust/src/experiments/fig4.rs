@@ -9,44 +9,72 @@
 use anyhow::Result;
 
 use super::{log_grid, Ctx};
-use crate::coordinator::{run_ensemble, RunSpec};
+use crate::coordinator::{PointResult, Profile, RunSpec, SweepPlan, SweepPoint};
 use crate::output::Table;
-use crate::pdes::{Mode, VolumeLoad};
+use crate::pdes::{Mode, Topology, VolumeLoad};
 use crate::stats::Lane;
+
+const PANELS: [(&str, u64); 2] = [("a", 1), ("b", 10)];
+
+fn ls(p: &Profile) -> &'static [usize] {
+    p.pick(&[10, 100, 1000][..], &[10, 100][..])
+}
 
 /// Step budget per ring size (enough to saturate L ≤ 100; L = 1000 shows
 /// the growth phase plus the start of saturation, as the paper's L = 10⁴
 /// panel does).
-fn steps_for(l: usize, ctx: &Ctx) -> usize {
+fn steps_for(l: usize, p: &Profile) -> usize {
     let full = match l {
         0..=10 => 2_000,
         11..=100 => 20_000,
         _ => 40_000,
     };
-    ctx.steps(full)
+    p.steps(full)
+}
+
+pub(super) fn plan(p: &Profile) -> SweepPlan {
+    let trials = p.trials(96);
+    let mut plan = SweepPlan::new("fig4", "width evolution, unconstrained (Fig. 4)");
+    for (panel, nv) in PANELS {
+        for &l in ls(p) {
+            plan.push(SweepPoint::curves(
+                format!("{panel}_L{l}_NV{nv}"),
+                Topology::Ring { l },
+                RunSpec {
+                    l,
+                    load: VolumeLoad::Sites(nv),
+                    mode: Mode::Conservative,
+                    trials,
+                    steps: 0,
+                    seed: p.seed + nv,
+                },
+                steps_for(l, p),
+            ));
+        }
+    }
+    plan
 }
 
 pub fn run(ctx: &Ctx) -> Result<()> {
-    let ls: &[usize] = if ctx.quick { &[10, 100] } else { &[10, 100, 1000] };
-    let trials = ctx.trials(96);
+    let plan = plan(&ctx.profile());
+    let results = ctx.schedule(&plan)?;
+    reduce(ctx, &results)
+}
 
-    for (panel, nv) in [("a", 1u64), ("b", 10u64)] {
+fn reduce(ctx: &Ctx, results: &[PointResult]) -> Result<()> {
+    let p = ctx.profile();
+    let trials = p.trials(96);
+    let mut idx = 0usize;
+
+    for (panel, nv) in PANELS {
         let mut headers = vec!["t".to_string()];
         let mut curves = Vec::new();
         let mut max_steps = 0usize;
-        for &l in ls {
+        for &l in ls(&p) {
             headers.push(format!("w_L{l}"));
-            let steps = steps_for(l, ctx);
-            max_steps = max_steps.max(steps);
-            let series = run_ensemble(&RunSpec {
-                l,
-                load: VolumeLoad::Sites(nv),
-                mode: Mode::Conservative,
-                trials,
-                steps,
-                seed: ctx.seed + nv,
-            });
-            curves.push(series.curve(Lane::W));
+            max_steps = max_steps.max(steps_for(l, &p));
+            curves.push(results[idx].series().curve(Lane::W));
+            idx += 1;
         }
 
         let mut table = Table::with_headers(
@@ -67,7 +95,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
             format!("Fig 4{panel} summary: plateau <w> (tail mean)"),
             &["L", "w_plateau"],
         );
-        for (&l, c) in ls.iter().zip(&curves) {
+        for (&l, c) in ls(&p).iter().zip(&curves) {
             let tail = &c[c.len() - c.len() / 4..];
             summary.push(vec![l as f64, tail.iter().sum::<f64>() / tail.len() as f64]);
         }

@@ -8,63 +8,99 @@
 use anyhow::Result;
 
 use super::Ctx;
-use crate::coordinator::{steady_state, RunSpec};
+use crate::coordinator::{PointResult, Profile, RunSpec, SweepPlan, SweepPoint};
 use crate::output::Table;
-use crate::pdes::{Mode, VolumeLoad};
+use crate::pdes::{Mode, Topology, VolumeLoad};
+
+const DELTAS: [f64; 2] = [10.0, 100.0];
+const NVS: [u64; 3] = [1, 10, 100];
+
+struct Grid {
+    ls: &'static [usize],
+    trials: u64,
+    warm: usize,
+    measure: usize,
+}
+
+fn grid(p: &Profile) -> Grid {
+    Grid {
+        ls: p.pick(&[10, 18, 32, 56, 100, 178, 316, 1000][..], &[10, 32, 100][..]),
+        trials: p.trials(32),
+        warm: p.steps(3000),
+        measure: p.steps(3000),
+    }
+}
+
+pub(super) fn plan(p: &Profile) -> SweepPlan {
+    let g = grid(p);
+    let mut plan = SweepPlan::new("fig5", "steady utilization vs system size, windowed (Fig. 5)");
+    for delta in DELTAS {
+        for &l in g.ls {
+            for &nv in NVS {
+                plan.push(SweepPoint::steady(
+                    format!("d{delta}_L{l}_NV{nv}"),
+                    Topology::Ring { l },
+                    RunSpec {
+                        l,
+                        load: VolumeLoad::Sites(nv),
+                        mode: Mode::Windowed { delta },
+                        trials: g.trials,
+                        steps: 0,
+                        seed: p.seed,
+                    },
+                    g.warm,
+                    g.measure,
+                ));
+            }
+            // the RD limit: window condition alone (N_V → ∞)
+            plan.push(SweepPoint::steady(
+                format!("d{delta}_L{l}_RD"),
+                Topology::Ring { l },
+                RunSpec {
+                    l,
+                    load: VolumeLoad::Infinite,
+                    mode: Mode::WindowedRd { delta },
+                    trials: g.trials,
+                    steps: 0,
+                    seed: p.seed,
+                },
+                g.warm,
+                g.measure,
+            ));
+        }
+    }
+    plan
+}
 
 pub fn run(ctx: &Ctx) -> Result<()> {
-    let ls: &[usize] = if ctx.quick {
-        &[10, 32, 100]
-    } else {
-        &[10, 18, 32, 56, 100, 178, 316, 1000]
-    };
-    let nvs: &[u64] = &[1, 10, 100];
-    let trials = ctx.trials(32);
-    let warm = ctx.steps(3000);
-    let measure = ctx.steps(3000);
+    let plan = plan(&ctx.profile());
+    let results = ctx.schedule(&plan)?;
+    reduce(ctx, &results)
+}
 
-    for delta in [10.0, 100.0] {
+fn reduce(ctx: &Ctx, results: &[PointResult]) -> Result<()> {
+    let g = grid(&ctx.profile());
+    let mut idx = 0usize;
+
+    for delta in DELTAS {
         let mut headers = vec!["L".to_string()];
-        for &nv in nvs {
+        for &nv in &NVS {
             headers.push(format!("u_NV{nv}"));
         }
         headers.push("u_RD".to_string());
 
         let mut table = Table::with_headers(
-            format!("Fig 5 (Δ={delta}): steady <u> vs system size (N={trials})"),
+            format!("Fig 5 (Δ={delta}): steady <u> vs system size (N={})", g.trials),
             headers,
         );
-        for &l in ls {
+        for &l in g.ls {
             let mut row = vec![l as f64];
-            for &nv in nvs {
-                let st = steady_state(
-                    &RunSpec {
-                        l,
-                        load: VolumeLoad::Sites(nv),
-                        mode: Mode::Windowed { delta },
-                        trials,
-                        steps: 0,
-                        seed: ctx.seed,
-                    },
-                    warm,
-                    measure,
-                );
-                row.push(st.u);
+            for _ in &NVS {
+                row.push(results[idx].steady().u);
+                idx += 1;
             }
-            // the RD limit: window condition alone (N_V → ∞)
-            let st = steady_state(
-                &RunSpec {
-                    l,
-                    load: VolumeLoad::Infinite,
-                    mode: Mode::WindowedRd { delta },
-                    trials,
-                    steps: 0,
-                    seed: ctx.seed,
-                },
-                warm,
-                measure,
-            );
-            row.push(st.u);
+            row.push(results[idx].steady().u); // RD column
+            idx += 1;
             table.push(row);
         }
         table.write_tsv(&ctx.out_dir, &format!("fig5_delta{delta}"))?;

@@ -9,46 +9,29 @@
 
 use anyhow::Result;
 
-use super::Ctx;
-use crate::coordinator::{steady_state, RunSpec};
-use crate::fit::{eq12_u, extrapolate_to_zero};
+use super::{Ctx, UInfCursor};
+use crate::coordinator::{PointResult, Profile, RunSpec, SweepPlan, SweepPoint};
+use crate::fit::eq12_u;
 use crate::output::Table;
-use crate::pdes::{Mode, VolumeLoad};
+use crate::pdes::{Mode, Topology, VolumeLoad};
 
-/// Measure ⟨u_L⟩ over an L-grid and extrapolate to L → ∞ (Eq. 10/11).
-///
-/// Falls back to the largest-L measurement if the rational fit rejects
-/// every candidate model (possible with very noisy quick-mode data).
-pub(super) fn u_inf(
-    ctx: &Ctx,
-    load: VolumeLoad,
-    mode: Mode,
-    ls: &[usize],
-    trials: u64,
-    warm: usize,
-    measure: usize,
-) -> f64 {
-    let mut xs = Vec::with_capacity(ls.len());
-    let mut ys = Vec::with_capacity(ls.len());
-    for &l in ls {
-        let st = steady_state(
-            &RunSpec {
-                l,
-                load,
-                mode,
-                trials,
-                steps: 0,
-                seed: ctx.seed,
-            },
-            warm,
-            measure,
-        );
-        xs.push(1.0 / l as f64);
-        ys.push(st.u);
-    }
-    match extrapolate_to_zero(&xs, &ys) {
-        Some(fit) => fit.at_zero(),
-        None => *ys.last().unwrap(),
+pub(super) struct Grid {
+    pub deltas: &'static [f64],
+    pub nvs: &'static [u64],
+    pub ls: &'static [usize],
+    pub trials: u64,
+    pub warm: usize,
+    pub measure: usize,
+}
+
+fn grid(p: &Profile) -> Grid {
+    Grid {
+        deltas: p.pick(&[1.0, 5.0, 10.0, 100.0, f64::INFINITY][..], &[1.0, 10.0, f64::INFINITY][..]),
+        nvs: p.pick(&[1, 10, 100, 1000][..], &[1, 10, 100][..]),
+        ls: p.pick(&[10, 32, 100, 316][..], &[10, 32, 100][..]),
+        trials: p.trials(24),
+        warm: p.steps(3000),
+        measure: p.steps(3000),
     }
 }
 
@@ -70,28 +53,86 @@ fn windowed_rd(delta: f64) -> Mode {
     }
 }
 
+/// Append the L-grid of one (load, mode) extrapolation cell.
+// the argument list mirrors the historical `u_inf` helper signature —
+// a params struct would just rename the same nine knobs
+#[allow(clippy::too_many_arguments)]
+pub(super) fn push_u_inf_cell(
+    plan: &mut SweepPlan,
+    tag: &str,
+    load: VolumeLoad,
+    mode: Mode,
+    ls: &[usize],
+    trials: u64,
+    warm: usize,
+    measure: usize,
+    seed: u64,
+) {
+    for &l in ls {
+        plan.push(SweepPoint::steady(
+            format!("{tag}_L{l}"),
+            Topology::Ring { l },
+            RunSpec {
+                l,
+                load,
+                mode,
+                trials,
+                steps: 0,
+                seed,
+            },
+            warm,
+            measure,
+        ));
+    }
+}
+
+pub(super) fn plan(p: &Profile) -> SweepPlan {
+    let g = grid(p);
+    let mut plan = SweepPlan::new("fig6", "extrapolated utilization surface u_inf(NV, delta) (Fig. 6)");
+    for &nv in g.nvs {
+        for &d in g.deltas {
+            push_u_inf_cell(
+                &mut plan,
+                &format!("NV{nv}_d{d}"),
+                VolumeLoad::Sites(nv),
+                windowed(d),
+                g.ls,
+                g.trials,
+                g.warm,
+                g.measure,
+                p.seed,
+            );
+        }
+    }
+    // the constrained-RD row (the paper's N_V = 10^8 points)
+    for &d in g.deltas {
+        push_u_inf_cell(
+            &mut plan,
+            &format!("RD_d{d}"),
+            VolumeLoad::Infinite,
+            windowed_rd(d),
+            g.ls,
+            g.trials,
+            g.warm,
+            g.measure,
+            p.seed,
+        );
+    }
+    plan
+}
+
 pub fn run(ctx: &Ctx) -> Result<()> {
-    let deltas: &[f64] = if ctx.quick {
-        &[1.0, 10.0, f64::INFINITY]
-    } else {
-        &[1.0, 5.0, 10.0, 100.0, f64::INFINITY]
-    };
-    let nvs: &[u64] = if ctx.quick {
-        &[1, 10, 100]
-    } else {
-        &[1, 10, 100, 1000]
-    };
-    let ls: &[usize] = if ctx.quick {
-        &[10, 32, 100]
-    } else {
-        &[10, 32, 100, 316]
-    };
-    let trials = ctx.trials(24);
-    let warm = ctx.steps(3000);
-    let measure = ctx.steps(3000);
+    let plan = plan(&ctx.profile());
+    let results = ctx.schedule(&plan)?;
+    reduce(ctx, &results)
+}
+
+fn reduce(ctx: &Ctx, results: &[PointResult]) -> Result<()> {
+    let g = grid(&ctx.profile());
+    let mut cells = UInfCursor::new(g.ls, results);
 
     let mut headers = vec!["NV".to_string()];
-    for &d in deltas {
+    for &d in g.deltas {
         headers.push(if d.is_infinite() {
             "u_dINF".into()
         } else {
@@ -104,40 +145,22 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         });
     }
     let mut table = Table::with_headers(
-        format!("Fig 6: <u_inf> vs NV and Δ (extrapolated; N={trials})"),
+        format!("Fig 6: <u_inf> vs NV and Δ (extrapolated; N={})", g.trials),
         headers,
     );
 
-    for &nv in nvs {
+    for &nv in g.nvs {
         let mut row = vec![nv as f64];
-        for &d in deltas {
-            let u = u_inf(
-                ctx,
-                VolumeLoad::Sites(nv),
-                windowed(d),
-                ls,
-                trials,
-                warm,
-                measure,
-            );
-            row.push(u);
+        for &d in g.deltas {
+            row.push(cells.next_u_inf());
             row.push(eq12_u(nv as f64, d));
         }
         table.push(row);
     }
     // the constrained-RD row (the paper's N_V = 10^8 points)
     let mut row = vec![f64::INFINITY];
-    for &d in deltas {
-        let u = u_inf(
-            ctx,
-            VolumeLoad::Infinite,
-            windowed_rd(d),
-            ls,
-            trials,
-            warm,
-            measure,
-        );
-        row.push(u);
+    for &d in g.deltas {
+        row.push(cells.next_u_inf());
         row.push(eq12_u(f64::INFINITY, d));
     }
     table.push(row);

@@ -6,29 +6,49 @@
 use anyhow::Result;
 
 use super::Ctx;
+use crate::coordinator::{PointResult, Profile, RunSpec, SweepPlan, SweepPoint};
 use crate::output::Table;
-use crate::pdes::{Mode, RingPdes, VolumeLoad};
-use crate::rng::Rng;
+use crate::pdes::{Mode, Topology, VolumeLoad};
 use crate::stats::horizon_frame;
 
-pub fn run(ctx: &Ctx) -> Result<()> {
-    let l = 100;
-    let t_snap = ctx.steps(1000);
-    let delta = 5.0;
+const L: usize = 100;
+const DELTA: f64 = 5.0;
 
-    let mut surfaces = Vec::new();
-    for mode in [Mode::Conservative, Mode::Windowed { delta }] {
-        let mut sim = RingPdes::new(
-            l,
-            VolumeLoad::Sites(1),
-            mode,
-            Rng::for_stream(ctx.seed, 1),
-        );
-        for _ in 0..t_snap {
-            sim.step();
-        }
-        surfaces.push(sim.tau().to_vec());
+fn modes() -> [Mode; 2] {
+    [Mode::Conservative, Mode::Windowed { delta: DELTA }]
+}
+
+pub(super) fn plan(p: &Profile) -> SweepPlan {
+    let t_snap = p.steps(1000);
+    let mut plan = SweepPlan::new("fig7", "constrained vs unconstrained horizon (Fig. 7)");
+    for mode in modes() {
+        plan.push(SweepPoint::snapshot(
+            format!("L{L}_{}", mode.tag()),
+            Topology::Ring { l: L },
+            RunSpec {
+                l: L,
+                load: VolumeLoad::Sites(1),
+                mode,
+                trials: 1,
+                steps: 0,
+                seed: p.seed,
+            },
+            vec![t_snap],
+            1,
+        ));
     }
+    plan
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let plan = plan(&ctx.profile());
+    let results = ctx.schedule(&plan)?;
+    reduce(ctx, &results)
+}
+
+fn reduce(ctx: &Ctx, results: &[PointResult]) -> Result<()> {
+    let t_snap = ctx.steps(1000);
+    let surfaces: Vec<&Vec<f64>> = results.iter().map(|r| &r.surfaces()[0]).collect();
 
     let mut table = Table::new(
         format!("Fig 7: STH at t={t_snap}, L=100: Δ=INF vs Δ=5 (relative to own mean)"),
@@ -36,9 +56,9 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     );
     let means: Vec<f64> = surfaces
         .iter()
-        .map(|s| s.iter().sum::<f64>() / l as f64)
+        .map(|s| s.iter().sum::<f64>() / L as f64)
         .collect();
-    for k in 0..l {
+    for k in 0..L {
         table.push(vec![
             k as f64,
             surfaces[0][k] - means[0],
@@ -51,8 +71,8 @@ pub fn run(ctx: &Ctx) -> Result<()> {
         "Fig 7 summary",
         &["delta", "w", "wa", "spread"],
     );
-    for (i, d) in [f64::INFINITY, delta].iter().enumerate() {
-        let f = horizon_frame(&surfaces[i], 0);
+    for (i, d) in [f64::INFINITY, DELTA].iter().enumerate() {
+        let f = horizon_frame(surfaces[i], 0);
         summary.push(vec![*d, f.w(), f.wa, f.max - f.min]);
     }
     summary.write_tsv(&ctx.out_dir, "fig7_summary")?;

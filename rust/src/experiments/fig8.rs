@@ -6,36 +6,65 @@
 use anyhow::Result;
 
 use super::{log_grid, Ctx};
-use crate::coordinator::{run_ensemble, RunSpec};
+use crate::coordinator::{PointResult, Profile, RunSpec, SweepPlan, SweepPoint};
 use crate::output::Table;
-use crate::pdes::{Mode, VolumeLoad};
+use crate::pdes::{Mode, Topology, VolumeLoad};
 use crate::stats::Lane;
 
-pub fn run(ctx: &Ctx) -> Result<()> {
-    let delta = 10.0;
-    let ls: &[usize] = if ctx.quick { &[100] } else { &[100, 1000] };
-    let nvs: &[u64] = &[1, 10, 100, 1000];
-    let steps = ctx.steps(2000);
-    let trials = ctx.trials(96);
+const DELTA: f64 = 10.0;
+const NVS: [u64; 4] = [1, 10, 100, 1000];
 
-    for &l in ls {
+fn ls(p: &Profile) -> &'static [usize] {
+    p.pick(&[100, 1000][..], &[100][..])
+}
+
+pub(super) fn plan(p: &Profile) -> SweepPlan {
+    let steps = p.steps(2000);
+    let trials = p.trials(96);
+    let mut plan = SweepPlan::new("fig8", "width evolution under the window (Fig. 8)");
+    for &l in ls(p) {
+        for &nv in NVS.iter() {
+            plan.push(SweepPoint::curves(
+                format!("L{l}_NV{nv}"),
+                Topology::Ring { l },
+                RunSpec {
+                    l,
+                    load: VolumeLoad::Sites(nv),
+                    mode: Mode::Windowed { delta: DELTA },
+                    trials,
+                    steps: 0,
+                    seed: p.seed + nv,
+                },
+                steps,
+            ));
+        }
+    }
+    plan
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let plan = plan(&ctx.profile());
+    let results = ctx.schedule(&plan)?;
+    reduce(ctx, &results)
+}
+
+fn reduce(ctx: &Ctx, results: &[PointResult]) -> Result<()> {
+    let p = ctx.profile();
+    let steps = p.steps(2000);
+    let trials = p.trials(96);
+    let mut idx = 0usize;
+
+    for &l in ls(&p) {
         let mut headers = vec!["t".to_string()];
         let mut curves = Vec::new();
-        for &nv in nvs {
+        for &nv in NVS.iter() {
             headers.push(format!("w_NV{nv}"));
-            let series = run_ensemble(&RunSpec {
-                l,
-                load: VolumeLoad::Sites(nv),
-                mode: Mode::Windowed { delta },
-                trials,
-                steps,
-                seed: ctx.seed + nv,
-            });
-            curves.push(series.curve(Lane::W));
+            curves.push(results[idx].series().curve(Lane::W));
+            idx += 1;
         }
 
         let mut table = Table::with_headers(
-            format!("Fig 8 (L={l}): <w(t)> with Δ={delta} (N={trials})"),
+            format!("Fig 8 (L={l}): <w(t)> with Δ={DELTA} (N={trials})"),
             headers,
         );
         for &t in &log_grid(steps, 12) {
@@ -53,7 +82,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
             format!("Fig 8 summary (L={l}): bump and plateau"),
             &["NV", "w_peak", "t_peak", "w_plateau"],
         );
-        for (&nv, c) in nvs.iter().zip(&curves) {
+        for (&nv, c) in NVS.iter().zip(&curves) {
             let (t_peak, w_peak) = c
                 .iter()
                 .enumerate()

@@ -6,69 +6,102 @@
 use anyhow::Result;
 
 use super::Ctx;
-use crate::coordinator::{steady_state, RunSpec};
+use crate::coordinator::{PointResult, Profile, RunSpec, SweepPlan, SweepPoint};
 use crate::output::Table;
-use crate::pdes::{Mode, VolumeLoad};
+use crate::pdes::{Mode, Topology, VolumeLoad};
+
+const NVS: [u64; 3] = [1, 10, 100];
+
+struct Grid {
+    deltas: &'static [f64],
+    ls: &'static [usize],
+    trials: u64,
+}
+
+fn grid(p: &Profile) -> Grid {
+    Grid {
+        deltas: p.pick(&[100.0, 10.0, 5.0, 1.0][..], &[10.0, 1.0][..]),
+        ls: p.pick(&[10, 32, 100, 316, 1000][..], &[10, 32, 100][..]),
+        trials: p.trials(32),
+    }
+}
+
+/// Wider windows relax more slowly (t_p grows with Δ).
+fn warm_for(delta: f64, p: &Profile) -> usize {
+    p.steps(if delta >= 100.0 { 8000 } else { 3000 })
+}
+
+pub(super) fn plan(p: &Profile) -> SweepPlan {
+    let g = grid(p);
+    let measure = p.steps(3000);
+    let mut plan = SweepPlan::new("fig9", "steady width vs system size, windowed (Fig. 9)");
+    for &delta in g.deltas {
+        let warm = warm_for(delta, p);
+        for &l in g.ls {
+            for &nv in NVS.iter() {
+                plan.push(SweepPoint::steady(
+                    format!("d{delta}_L{l}_NV{nv}"),
+                    Topology::Ring { l },
+                    RunSpec {
+                        l,
+                        load: VolumeLoad::Sites(nv),
+                        mode: Mode::Windowed { delta },
+                        trials: g.trials,
+                        steps: 0,
+                        seed: p.seed,
+                    },
+                    warm,
+                    measure,
+                ));
+            }
+            plan.push(SweepPoint::steady(
+                format!("d{delta}_L{l}_RD"),
+                Topology::Ring { l },
+                RunSpec {
+                    l,
+                    load: VolumeLoad::Infinite,
+                    mode: Mode::WindowedRd { delta },
+                    trials: g.trials,
+                    steps: 0,
+                    seed: p.seed,
+                },
+                warm,
+                measure,
+            ));
+        }
+    }
+    plan
+}
 
 pub fn run(ctx: &Ctx) -> Result<()> {
-    let deltas: &[f64] = if ctx.quick {
-        &[10.0, 1.0]
-    } else {
-        &[100.0, 10.0, 5.0, 1.0]
-    };
-    let ls: &[usize] = if ctx.quick {
-        &[10, 32, 100]
-    } else {
-        &[10, 32, 100, 316, 1000]
-    };
-    let nvs: &[u64] = &[1, 10, 100];
-    let trials = ctx.trials(32);
+    let plan = plan(&ctx.profile());
+    let results = ctx.schedule(&plan)?;
+    reduce(ctx, &results)
+}
 
-    for &delta in deltas {
-        // wider windows relax more slowly (t_p grows with Δ)
-        let warm = ctx.steps(if delta >= 100.0 { 8000 } else { 3000 });
-        let measure = ctx.steps(3000);
+fn reduce(ctx: &Ctx, results: &[PointResult]) -> Result<()> {
+    let g = grid(&ctx.profile());
+    let mut idx = 0usize;
 
+    for &delta in g.deltas {
         let mut headers = vec!["L".to_string()];
-        for &nv in nvs {
+        for &nv in NVS.iter() {
             headers.push(format!("w_NV{nv}"));
         }
         headers.push("w_RD".to_string());
 
         let mut table = Table::with_headers(
-            format!("Fig 9 (Δ={delta}): steady <w> vs system size (N={trials})"),
+            format!("Fig 9 (Δ={delta}): steady <w> vs system size (N={})", g.trials),
             headers,
         );
-        for &l in ls {
+        for &l in g.ls {
             let mut row = vec![l as f64];
-            for &nv in nvs {
-                let st = steady_state(
-                    &RunSpec {
-                        l,
-                        load: VolumeLoad::Sites(nv),
-                        mode: Mode::Windowed { delta },
-                        trials,
-                        steps: 0,
-                        seed: ctx.seed,
-                    },
-                    warm,
-                    measure,
-                );
-                row.push(st.w);
+            for _ in NVS.iter() {
+                row.push(results[idx].steady().w);
+                idx += 1;
             }
-            let st = steady_state(
-                &RunSpec {
-                    l,
-                    load: VolumeLoad::Infinite,
-                    mode: Mode::WindowedRd { delta },
-                    trials,
-                    steps: 0,
-                    seed: ctx.seed,
-                },
-                warm,
-                measure,
-            );
-            row.push(st.w);
+            row.push(results[idx].steady().w); // RD column
+            idx += 1;
             table.push(row);
         }
         table.write_tsv(&ctx.out_dir, &format!("fig9_delta{delta}"))?;

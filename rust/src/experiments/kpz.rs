@@ -11,12 +11,75 @@
 use anyhow::Result;
 
 use super::Ctx;
-use crate::coordinator::{run_ensemble, RunSpec};
+use crate::coordinator::{PointResult, Profile, RunSpec, SweepPlan, SweepPoint};
 use crate::fit::{nelder_mead, powerlaw_fit};
 use crate::output::Table;
-use crate::pdes::{Mode, VolumeLoad};
+use crate::pdes::{Mode, Topology, VolumeLoad};
 use crate::scaling::{growth_exponent, kpz};
 use crate::stats::Lane;
+
+struct Grid {
+    l_grow: usize,
+    grow_steps: usize,
+    trials: u64,
+    ls_sat: &'static [usize],
+    sat_trials: u64,
+}
+
+fn grid(p: &Profile) -> Grid {
+    Grid {
+        l_grow: p.pick(4096, 512),
+        grow_steps: p.steps(3000),
+        trials: p.trials(32),
+        // the *effective* saturation time is ~L^1.5/5 (broad KPZ crossover),
+        // so 5·L^1.5 leaves a clean plateau tail even at L = 512
+        ls_sat: p.pick(&[16, 32, 64, 128, 256, 512][..], &[10, 16, 24][..]),
+        sat_trials: p.trials(16),
+    }
+}
+
+/// Step budget of one saturation ring.
+fn sat_steps(l: usize, p: &Profile) -> usize {
+    let t_x = (l as f64).powf(1.5);
+    p.steps(((t_x * 5.0) as usize).clamp(2000, 60_000))
+}
+
+pub(super) fn plan(p: &Profile) -> SweepPlan {
+    let g = grid(p);
+    let mut plan = SweepPlan::new("kpz", "KPZ universality check: beta, alpha, z");
+    // --- beta from the growth phase of a large ring (no saturation
+    //     pollution: the effective crossover is well below L^1.5)
+    plan.push(SweepPoint::curves(
+        format!("grow_L{}", g.l_grow),
+        Topology::Ring { l: g.l_grow },
+        RunSpec {
+            l: g.l_grow,
+            load: VolumeLoad::Sites(1),
+            mode: Mode::Conservative,
+            trials: g.trials,
+            steps: 0,
+            seed: p.seed,
+        },
+        g.grow_steps,
+    ));
+    // --- alpha from saturated widths over an L grid
+    for &l in g.ls_sat {
+        plan.push(SweepPoint::curves(
+            format!("sat_L{l}"),
+            Topology::Ring { l },
+            RunSpec {
+                l,
+                load: VolumeLoad::Sites(1),
+                mode: Mode::Conservative,
+                trials: g.sat_trials,
+                steps: 0,
+                seed: p.seed + l as u64,
+            },
+            sat_steps(l, p),
+        ));
+    }
+    plan
+}
 
 /// Fit w² = a + b x^{2e} over (x, w²) samples; returns (a, b, e).
 fn offset_powerlaw(xs: &[f64], w2: &[f64], e0: f64) -> (f64, f64, f64) {
@@ -38,21 +101,18 @@ fn offset_powerlaw(xs: &[f64], w2: &[f64], e0: f64) -> (f64, f64, f64) {
 }
 
 pub fn run(ctx: &Ctx) -> Result<()> {
-    let trials = ctx.trials(32);
+    let plan = plan(&ctx.profile());
+    let results = ctx.schedule(&plan)?;
+    reduce(ctx, &results)
+}
 
-    // --- β from the growth phase of a large ring (no saturation pollution:
-    //     the effective crossover for this model is well below L^1.5, so a
-    //     4096-ring keeps t ≤ 3000 safely inside the growth regime)
-    let l_grow = if ctx.quick { 512 } else { 4096 };
-    let steps = ctx.steps(3000);
-    let series = run_ensemble(&RunSpec {
-        l: l_grow,
-        load: VolumeLoad::Sites(1),
-        mode: Mode::Conservative,
-        trials,
-        steps,
-        seed: ctx.seed,
-    });
+fn reduce(ctx: &Ctx, results: &[PointResult]) -> Result<()> {
+    let p = ctx.profile();
+    let g = grid(&p);
+    let steps = g.grow_steps;
+
+    // --- β from the growth-phase point
+    let series = results[0].series();
     let w2_curve = series.curve(Lane::W2);
     let w_curve = series.curve(Lane::W);
     // plain log-log slope (for the table) over the late growth window
@@ -63,32 +123,16 @@ pub fn run(ctx: &Ctx) -> Result<()> {
     let (_a, _b, beta) = offset_powerlaw(&ts, &ys, 0.33);
 
     // --- α from saturated widths (offset form removes the intrinsic width)
-    let ls_sat: &[usize] = if ctx.quick {
-        &[10, 16, 24]
-    } else {
-        // the *effective* saturation time is ~L^1.5/5 (broad KPZ crossover),
-        // so 5·L^1.5 leaves a clean plateau tail even at L = 512
-        &[16, 32, 64, 128, 256, 512]
-    };
-    let sat_trials = ctx.trials(16);
     let mut lsf = Vec::new();
     let mut w2sat = Vec::new();
     let mut wsat = Vec::new();
     let mut table = Table::new(
-        format!("KPZ check: saturated widths (N={sat_trials})"),
+        format!("KPZ check: saturated widths (N={})", g.sat_trials),
         &["L", "w_sat", "w2_sat", "t_x_scale"],
     );
-    for &l in ls_sat {
+    for (i, &l) in g.ls_sat.iter().enumerate() {
         let t_x = (l as f64).powf(1.5);
-        let steps = ctx.steps(((t_x * 5.0) as usize).clamp(2000, 60_000));
-        let s = run_ensemble(&RunSpec {
-            l,
-            load: VolumeLoad::Sites(1),
-            mode: Mode::Conservative,
-            trials: sat_trials,
-            steps,
-            seed: ctx.seed + l as u64,
-        });
+        let s = results[1 + i].series();
         let w2s = s.tail_mean(Lane::W2, 0.25);
         let ws = s.tail_mean(Lane::W, 0.25);
         table.push(vec![l as f64, ws, w2s, t_x]);

@@ -7,54 +7,85 @@
 use anyhow::Result;
 
 use super::Ctx;
+use crate::coordinator::{PointResult, Profile, RunSpec, SweepPlan, SweepPoint};
 use crate::output::Table;
-use crate::pdes::{InstrumentedRing, Mode, VolumeLoad};
-use crate::rng::Rng;
+use crate::pdes::{Mode, Topology, VolumeLoad};
 
-struct Point {
-    nv: u64,
-    delta: f64,
-    c: crate::pdes::MeanFieldCounters,
+const EQ13_NVS: [u64; 4] = [3, 10, 30, 100];
+const EQ14_NVS: [u64; 2] = [10, 100];
+const EQ14_DELTAS: [f64; 2] = [10.0, 100.0];
+
+struct Grid {
+    l: usize,
+    warm: usize,
+    steps: usize,
 }
 
-fn measure(ctx: &Ctx, l: usize, nv: u64, mode: Mode, warm: usize, steps: usize) -> Point {
-    let mut sim = InstrumentedRing::new(
-        l,
-        VolumeLoad::Sites(nv),
-        mode,
-        Rng::for_stream(ctx.seed, nv ^ mode.delta().to_bits()),
-    );
-    for _ in 0..warm {
-        sim.step();
+fn grid(p: &Profile) -> Grid {
+    Grid {
+        l: p.pick(512, 128),
+        warm: p.steps(2000),
+        steps: p.steps(6000),
     }
-    sim.reset_counters();
-    for _ in 0..steps {
-        sim.step();
+}
+
+fn push_point(plan: &mut SweepPlan, g: &Grid, seed: u64, nv: u64, mode: Mode) {
+    // historical stream derivation, kept bit-for-bit: nv ^ delta bits
+    let stream = nv ^ mode.delta().to_bits();
+    plan.push(SweepPoint::counters(
+        format!("L{}_NV{nv}_{}", g.l, mode.tag()),
+        Topology::Ring { l: g.l },
+        RunSpec {
+            l: g.l,
+            load: VolumeLoad::Sites(nv),
+            mode,
+            trials: 1,
+            steps: 0,
+            seed,
+        },
+        g.warm,
+        g.steps,
+        stream,
+    ));
+}
+
+pub(super) fn plan(p: &Profile) -> SweepPlan {
+    let g = grid(p);
+    let mut plan = SweepPlan::new("meanfield", "mean-field waiting analysis (Eqs. 13-14)");
+    for &nv in &EQ13_NVS {
+        push_point(&mut plan, &g, p.seed, nv, Mode::Conservative);
     }
-    Point {
-        nv,
-        delta: mode.delta(),
-        c: sim.counters(),
+    for &nv in &EQ14_NVS {
+        for &d in &EQ14_DELTAS {
+            push_point(&mut plan, &g, p.seed, nv, Mode::Windowed { delta: d });
+        }
     }
+    plan
 }
 
 pub fn run(ctx: &Ctx) -> Result<()> {
-    let l = if ctx.quick { 128 } else { 512 };
-    let warm = ctx.steps(2000);
-    let steps = ctx.steps(6000);
+    let plan = plan(&ctx.profile());
+    let results = ctx.schedule(&plan)?;
+    reduce(ctx, &results)
+}
+
+fn reduce(ctx: &Ctx, results: &[PointResult]) -> Result<()> {
+    let g = grid(&ctx.profile());
+    let mut idx = 0usize;
 
     // --- Eq. 13 regime: unconstrained, N_V >= 3
     let mut t13 = Table::new(
-        format!("Eq 13 (unconstrained, L={l}): mean-field vs measured"),
+        format!("Eq 13 (unconstrained, L={}): mean-field vs measured", g.l),
         &["NV", "p_w_border", "delta_wait", "u_pred", "u_meas", "rel_err"],
     );
-    for &nv in &[3u64, 10, 30, 100] {
-        let p = measure(ctx, l, nv, Mode::Conservative, warm, steps);
-        let (u_pred, u_meas) = (p.c.predicted_utilization(), p.c.measured_utilization());
+    for &nv in &EQ13_NVS {
+        let c = results[idx].counters();
+        idx += 1;
+        let (u_pred, u_meas) = (c.predicted_utilization(), c.measured_utilization());
         t13.push(vec![
             nv as f64,
-            p.c.p_wait_given_border(),
-            p.c.delta_wait(),
+            c.p_wait_given_border(),
+            c.delta_wait(),
             u_pred,
             u_meas,
             (u_pred - u_meas).abs() / u_meas,
@@ -65,25 +96,26 @@ pub fn run(ctx: &Ctx) -> Result<()> {
 
     // --- Eq. 14 regime: windowed
     let mut t14 = Table::new(
-        format!("Eq 14 (Δ-window, L={l}): mean-field vs measured"),
+        format!("Eq 14 (Δ-window, L={}): mean-field vs measured", g.l),
         &[
             "NV", "delta", "p_w", "p_delta", "delta_wait", "kappa_wait", "u_pred", "u_meas",
             "rel_err",
         ],
     );
-    for &nv in &[10u64, 100] {
-        for &d in &[10.0, 100.0] {
-            let p = measure(ctx, l, nv, Mode::Windowed { delta: d }, warm, steps);
-            let (p_ok, p_w, p_d) = p.c.probabilities();
+    for &nv in &EQ14_NVS {
+        for &d in &EQ14_DELTAS {
+            let c = results[idx].counters();
+            idx += 1;
+            let (p_ok, p_w, p_d) = c.probabilities();
             let _ = p_ok;
-            let (u_pred, u_meas) = (p.c.predicted_utilization(), p.c.measured_utilization());
+            let (u_pred, u_meas) = (c.predicted_utilization(), c.measured_utilization());
             t14.push(vec![
-                p.nv as f64,
-                p.delta,
+                nv as f64,
+                d,
                 p_w,
                 p_d,
-                p.c.delta_wait(),
-                p.c.kappa_wait(),
+                c.delta_wait(),
+                c.kappa_wait(),
                 u_pred,
                 u_meas,
                 (u_pred - u_meas).abs() / u_meas,

@@ -1,10 +1,16 @@
 //! One driver per paper figure/table (DESIGN.md §4).
 //!
-//! Every driver prints the same rows/series the paper plots and writes TSV
-//! files under the output directory.  `--quick` shrinks ensembles and grids
-//! for smoke runs; full mode uses the scaled-down-but-faithful parameters
-//! recorded in EXPERIMENTS.md (this testbed is one CPU core; the paper used
-//! NERSC — shapes are preserved, error bars are larger).
+//! Since the declarative-campaign refactor every driver is a *plan
+//! definition* plus a thin *reducer*: `plan(profile)` renders the
+//! figure's (L, N_V, Δ) grid as a [`SweepPlan`] (data, listable with
+//! `repro plan <name>`), the generic scheduler executes it (parallel
+//! across points, cached for `--resume` — see `coordinator::campaign`),
+//! and `reduce` performs only the TSV post-processing the paper plots.
+//! `--quick` shrinks ensembles and grids through the plan's [`Profile`];
+//! full mode uses the scaled-down-but-faithful parameters recorded in
+//! EXPERIMENTS.md, which is generated from these same plan definitions
+//! (this testbed is one CPU core; the paper used NERSC — shapes are
+//! preserved, error bars are larger).
 
 mod appendix;
 mod dims;
@@ -27,7 +33,11 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-/// Shared experiment context.
+use crate::coordinator::{run_plan, CampaignOpts, PointResult, Profile, SweepPlan};
+use crate::fit::extrapolate_to_zero;
+
+/// Shared experiment context: where to write, at what fidelity, and how
+/// the scheduler should run the plans.
 #[derive(Clone, Debug)]
 pub struct Ctx {
     /// Output directory for TSV series.
@@ -36,34 +46,65 @@ pub struct Ctx {
     pub quick: bool,
     /// Master seed (every campaign derives trial streams from it).
     pub seed: u64,
+    /// Point-level scheduler workers (0 = the pool budget).
+    pub workers: usize,
+    /// PE-block workers inside each simulation (1 = plain engine).
+    pub lattice_workers: usize,
+    /// Skip sweep points already present in the result cache.
+    pub resume: bool,
 }
 
 impl Ctx {
-    /// Context writing under `out_dir`.
+    /// Context writing under `out_dir` with default scheduling (pool
+    /// budget, no resume).
     pub fn new(out_dir: impl Into<PathBuf>, quick: bool) -> Self {
         Self {
             out_dir: out_dir.into(),
             quick,
-            seed: 20020601, // cs.DC submission year/month as default seed
+            seed: crate::DEFAULT_SEED,
+            workers: 0,
+            lattice_workers: 1,
+            resume: false,
         }
     }
 
-    /// Trials helper: `full` in full mode, a reduced count in quick mode.
+    /// The fidelity profile plans are built from.
+    pub fn profile(&self) -> Profile {
+        Profile {
+            quick: self.quick,
+            seed: self.seed,
+        }
+    }
+
+    /// Scheduler options: point fan-out per this context, result cache
+    /// under `<out_dir>/.cache` (shared by every figure, so under
+    /// `--resume` grids common to several figures are computed once).
+    pub fn campaign_opts(&self) -> CampaignOpts {
+        CampaignOpts {
+            workers: self.workers,
+            lattice_workers: self.lattice_workers,
+            resume: self.resume,
+            cache_dir: Some(self.out_dir.join(".cache")),
+            quiet: false,
+        }
+    }
+
+    /// Execute a plan through the generic scheduler, returning results in
+    /// plan order.
+    pub fn schedule(&self, plan: &SweepPlan) -> Result<Vec<PointResult>> {
+        let (results, _report) = run_plan(plan, &self.campaign_opts())?;
+        Ok(results)
+    }
+
+    /// Trials helper: `full` in full mode, a reduced count in quick mode
+    /// (delegates to [`Profile::trials`] — one scaling rule, not two).
     pub fn trials(&self, full: u64) -> u64 {
-        if self.quick {
-            (full / 8).max(4)
-        } else {
-            full
-        }
+        self.profile().trials(full)
     }
 
-    /// Steps helper.
+    /// Steps helper (delegates to [`Profile::steps`]).
     pub fn steps(&self, full: usize) -> usize {
-        if self.quick {
-            (full / 10).max(50)
-        } else {
-            full
-        }
+        self.profile().steps(full)
     }
 }
 
@@ -72,6 +113,31 @@ pub const ALL: &[&str] = &[
     "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "eq8",
     "kpz", "meanfield", "appendix", "dims", "topology",
 ];
+
+/// The declarative sweep plan of one experiment at one fidelity, or
+/// `None` for unknown names.  This registry is the single source the
+/// scheduler, `repro plan` and the generated EXPERIMENTS.md all read.
+pub fn plan_for(name: &str, profile: &Profile) -> Option<SweepPlan> {
+    Some(match name {
+        "fig2" => fig2::plan(profile),
+        "fig3" => fig3::plan(profile),
+        "fig4" => fig4::plan(profile),
+        "fig5" => fig5::plan(profile),
+        "fig6" => fig6::plan(profile),
+        "fig7" => fig7::plan(profile),
+        "fig8" => fig8::plan(profile),
+        "fig9" => fig9::plan(profile),
+        "fig10" => fig10::plan(profile),
+        "fig11" => fig11::plan(profile),
+        "eq8" => eq8::plan(profile),
+        "kpz" => kpz::plan(profile),
+        "meanfield" => meanfield::plan(profile),
+        "appendix" => appendix::plan(profile),
+        "dims" => dims::plan(profile),
+        "topology" => topology::plan(profile),
+        _ => return None,
+    })
+}
 
 /// Run one experiment by name.
 pub fn run(name: &str, ctx: &Ctx) -> Result<()> {
@@ -122,6 +188,148 @@ pub(crate) fn log_grid(max: usize, per_decade: usize) -> Vec<usize> {
     out
 }
 
+/// The L → ∞ extrapolation step shared by the Fig. 6 / Fig. 11 /
+/// appendix reducers: rational fit over 1/L (Eqs. 10-11), falling back to
+/// the largest-L measurement when the fit rejects every candidate model
+/// (possible with very noisy quick-mode data).  `points` is a plan-order
+/// slice of steady results, one per entry of `ls`.
+pub(crate) fn u_inf_from(ls: &[usize], points: &[PointResult]) -> f64 {
+    assert_eq!(ls.len(), points.len(), "one steady point per L expected");
+    let xs: Vec<f64> = ls.iter().map(|&l| 1.0 / l as f64).collect();
+    let ys: Vec<f64> = points.iter().map(|p| p.steady().u).collect();
+    match extrapolate_to_zero(&xs, &ys) {
+        Some(fit) => fit.at_zero(),
+        None => *ys.last().unwrap(),
+    }
+}
+
+/// Plan-order cursor over L-grid extrapolation cells — the one
+/// consumption protocol the Fig. 6 / Fig. 11 / appendix reducers share:
+/// every [`UInfCursor::next_u_inf`] call consumes the next `ls.len()`
+/// steady results (one cell, in the exact order the matching
+/// `push_u_inf_cell` calls appended them) and extrapolates to L → ∞.
+pub(crate) struct UInfCursor<'a> {
+    ls: &'a [usize],
+    results: &'a [PointResult],
+    idx: usize,
+}
+
+impl<'a> UInfCursor<'a> {
+    /// Cursor at the start of `results` (the plan's first cell).
+    pub(crate) fn new(ls: &'a [usize], results: &'a [PointResult]) -> Self {
+        Self {
+            ls,
+            results,
+            idx: 0,
+        }
+    }
+
+    /// Extrapolate the next cell.
+    pub(crate) fn next_u_inf(&mut self) -> f64 {
+        let u = u_inf_from(self.ls, &self.results[self.idx..self.idx + self.ls.len()]);
+        self.idx += self.ls.len();
+        u
+    }
+}
+
+/// Generate EXPERIMENTS.md from the plan registry: full-vs-quick
+/// parameters per figure, straight from the [`SweepPlan`] definitions so
+/// the document cannot drift from the code (a test compares the committed
+/// file against this string; `python/tools/gen_experiments_md.py` is the
+/// byte-identical mirror that writes it).
+pub fn experiments_md() -> String {
+    let mut out = String::new();
+    out.push_str("# EXPERIMENTS\n");
+    out.push('\n');
+    out.push_str("Generated from the `SweepPlan` definitions in `rust/src/experiments/` -- do\n");
+    out.push_str("not edit by hand.  Regenerate with\n");
+    out.push_str("`python3 python/tools/gen_experiments_md.py` (a unit test asserts this file\n");
+    out.push_str("matches the plans, so it cannot drift).\n");
+    out.push('\n');
+    out.push_str("Full-fidelity vs `--quick` parameters per figure driver.  Columns list the\n");
+    out.push_str("distinct values across the plan's points: system sizes L, volume loads N_V,\n");
+    out.push_str("window widths delta, measured steps, warm-up steps and measurement windows.\n");
+    out.push_str("`points` is the sweep-grid size; `trials` the per-point ensemble sizes.\n");
+    out.push_str("Every trial stream derives from the master seed (default 20020601), so any\n");
+    out.push_str("row is reproducible in isolation; `repro plan <name>` prints the exact\n");
+    out.push_str("point-by-point grid with cache keys.\n");
+    for name in ALL {
+        let full = plan_for(name, &Profile::full(crate::DEFAULT_SEED)).expect("registered plan");
+        let quick = plan_for(name, &Profile::quick(crate::DEFAULT_SEED)).expect("registered plan");
+        out.push('\n');
+        out.push_str(&format!("## {name} -- {}\n", full.title));
+        out.push('\n');
+        out.push_str(
+            "| profile | points | sampling | trials | L | N_V | delta | steps | warm | measure |\n",
+        );
+        out.push_str("|---|---|---|---|---|---|---|---|---|---|\n");
+        out.push_str(&md_row("full", &full));
+        out.push_str(&md_row("quick", &quick));
+    }
+    out
+}
+
+/// One EXPERIMENTS.md table row: the distinct parameter values of a plan.
+fn md_row(profile: &str, plan: &SweepPlan) -> String {
+    use std::collections::BTreeSet;
+    use crate::pdes::{canon_f64, VolumeLoad};
+
+    let mut kinds: BTreeSet<&'static str> = BTreeSet::new();
+    let mut trials: BTreeSet<u64> = BTreeSet::new();
+    let mut ls: BTreeSet<usize> = BTreeSet::new();
+    let mut nvs: BTreeSet<u64> = BTreeSet::new(); // u64::MAX encodes inf
+    let mut deltas: Vec<f64> = Vec::new();
+    let mut steps: BTreeSet<usize> = BTreeSet::new();
+    let mut warm: BTreeSet<usize> = BTreeSet::new();
+    let mut measure: BTreeSet<usize> = BTreeSet::new();
+    for p in &plan.points {
+        kinds.insert(p.sampling.kind_tag());
+        trials.insert(p.run.trials);
+        ls.insert(p.run.l);
+        nvs.insert(match p.run.load {
+            VolumeLoad::Sites(nv) => nv,
+            VolumeLoad::Infinite => u64::MAX,
+        });
+        let d = p.run.mode.delta();
+        if !deltas.iter().any(|&x| x == d) {
+            deltas.push(d);
+        }
+        if let Some(v) = p.sampling.steps_opt() {
+            steps.insert(v);
+        }
+        if let Some(v) = p.sampling.warm_opt() {
+            warm.insert(v);
+        }
+        if let Some(v) = p.sampling.measure_opt() {
+            measure.insert(v);
+        }
+    }
+    deltas.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let join = |items: Vec<String>| -> String {
+        if items.is_empty() {
+            "-".to_string()
+        } else {
+            items.join(", ")
+        }
+    };
+    format!(
+        "| {profile} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n",
+        plan.points.len(),
+        join(kinds.iter().map(|k| k.to_string()).collect()),
+        join(trials.iter().map(|t| t.to_string()).collect()),
+        join(ls.iter().map(|l| l.to_string()).collect()),
+        join(
+            nvs.iter()
+                .map(|&nv| if nv == u64::MAX { "inf".to_string() } else { nv.to_string() })
+                .collect()
+        ),
+        join(deltas.iter().map(|&d| canon_f64(d)).collect()),
+        join(steps.iter().map(|s| s.to_string()).collect()),
+        join(warm.iter().map(|w| w.to_string()).collect()),
+        join(measure.iter().map(|m| m.to_string()).collect()),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,5 +356,52 @@ mod tests {
     fn unknown_experiment_rejected() {
         let ctx = Ctx::new(std::env::temp_dir().join("repro_exp_test"), true);
         assert!(run("nope", &ctx).is_err());
+    }
+
+    #[test]
+    fn every_experiment_has_a_plan() {
+        for name in ALL {
+            for profile in [Profile::full(1), Profile::quick(1)] {
+                let plan = plan_for(name, &profile)
+                    .unwrap_or_else(|| panic!("{name} missing from the plan registry"));
+                assert_eq!(&plan.name, name);
+                assert!(!plan.is_empty(), "{name} plan has no points");
+                // every point's spec round-trips through its own grammar
+                for p in &plan.points {
+                    assert!(p.spec().starts_with("repro/v1 "), "{}", p.spec());
+                }
+            }
+        }
+        assert!(plan_for("nope", &Profile::full(1)).is_none());
+    }
+
+    #[test]
+    fn plan_grid_sizes_are_pinned() {
+        // the documented grid sizes (EXPERIMENTS.md) — changing a grid is
+        // fine, but must be a conscious act that regenerates the doc
+        let count = |name: &str, quick: bool| {
+            plan_for(name, &Profile { quick, seed: 1 }).unwrap().len()
+        };
+        for (name, full, quick) in [
+            ("fig2", 9, 6),
+            ("fig3", 1, 1),
+            ("fig4", 6, 4),
+            ("fig5", 64, 24),
+            ("fig6", 100, 36),
+            ("fig7", 2, 2),
+            ("fig8", 8, 4),
+            ("fig9", 80, 24),
+            ("fig10", 1, 1),
+            ("fig11", 80, 27),
+            ("eq8", 9, 3),
+            ("kpz", 7, 4),
+            ("meanfield", 8, 8),
+            ("appendix", 120, 30),
+            ("dims", 8, 4),
+            ("topology", 30, 15),
+        ] {
+            assert_eq!(count(name, false), full, "{name} full grid");
+            assert_eq!(count(name, true), quick, "{name} quick grid");
+        }
     }
 }

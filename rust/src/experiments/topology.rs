@@ -12,13 +12,13 @@
 use anyhow::Result;
 
 use super::Ctx;
-use crate::coordinator::{steady_state_topology, RunSpec};
+use crate::coordinator::{PointResult, Profile, RunSpec, SweepPlan, SweepPoint};
 use crate::output::Table;
 use crate::pdes::{Mode, Topology, VolumeLoad};
 
 /// The topology grid for ring size `l`: the paper baseline first, then
 /// denser k-rings, then sparse and dense small-worlds.
-fn grid(l: usize, seed: u64) -> Vec<Topology> {
+fn topo_grid(l: usize, seed: u64) -> Vec<Topology> {
     vec![
         Topology::Ring { l },
         Topology::KRing { l, k: 2 },
@@ -28,46 +28,84 @@ fn grid(l: usize, seed: u64) -> Vec<Topology> {
     ]
 }
 
-pub fn run(ctx: &Ctx) -> Result<()> {
-    let l = if ctx.quick { 64 } else { 256 };
-    let trials = ctx.trials(32);
-    let warm = if ctx.quick { 300 } else { 2000 };
-    let measure = warm;
-    let deltas: &[f64] = if ctx.quick {
-        &[1.0, 5.0, f64::INFINITY]
-    } else {
-        &[0.5, 1.0, 2.0, 5.0, 10.0, f64::INFINITY]
-    };
+struct Grid {
+    l: usize,
+    trials: u64,
+    warm: usize,
+    measure: usize,
+    deltas: &'static [f64],
+}
 
-    let topologies = grid(l, ctx.seed);
+fn grid(p: &Profile) -> Grid {
+    let warm = p.pick(2000, 300);
+    Grid {
+        l: p.pick(256, 64),
+        trials: p.trials(32),
+        warm,
+        measure: warm,
+        deltas: p.pick(
+            &[0.5, 1.0, 2.0, 5.0, 10.0, f64::INFINITY][..],
+            &[1.0, 5.0, f64::INFINITY][..],
+        ),
+    }
+}
+
+pub(super) fn plan(p: &Profile) -> SweepPlan {
+    let g = grid(p);
+    let mut plan = SweepPlan::new("topology", "topology sweep: window vs network control");
+    for topo in topo_grid(g.l, p.seed) {
+        for &delta in g.deltas {
+            let mode = if delta.is_finite() {
+                Mode::Windowed { delta }
+            } else {
+                Mode::Conservative
+            };
+            plan.push(SweepPoint::steady(
+                format!("{}_d{delta}", topo.tag()),
+                topo,
+                RunSpec {
+                    l: g.l,
+                    load: VolumeLoad::Sites(1),
+                    mode,
+                    trials: g.trials,
+                    steps: 0,
+                    seed: p.seed,
+                },
+                g.warm,
+                g.measure,
+            ));
+        }
+    }
+    plan
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let plan = plan(&ctx.profile());
+    let results = ctx.schedule(&plan)?;
+    reduce(ctx, &results)
+}
+
+fn reduce(ctx: &Ctx, results: &[PointResult]) -> Result<()> {
+    let p = ctx.profile();
+    let g = grid(&p);
+    let topologies = topo_grid(g.l, p.seed);
+
     let mut table = Table::new(
-        format!("topology sweep: u and width vs Δ (L = {l}, N_V = 1, {trials} trials)"),
+        format!(
+            "topology sweep: u and width vs Δ (L = {}, N_V = 1, {} trials)",
+            g.l, g.trials
+        ),
         &["topo", "coord", "delta", "u", "u_err", "w", "wa", "gvt_rate"],
     );
     println!("topology index legend:");
     for (ti, topo) in topologies.iter().enumerate() {
         println!("  {ti}: {} ({:?})", topo.tag(), topo);
     }
+    let mut idx = 0usize;
     for (ti, topo) in topologies.iter().enumerate() {
-        for &delta in deltas {
-            let mode = if delta.is_finite() {
-                Mode::Windowed { delta }
-            } else {
-                Mode::Conservative
-            };
-            let st = steady_state_topology(
-                *topo,
-                &RunSpec {
-                    l,
-                    load: VolumeLoad::Sites(1),
-                    mode,
-                    trials,
-                    steps: 0,
-                    seed: ctx.seed,
-                },
-                warm,
-                measure,
-            );
+        for &delta in g.deltas {
+            let st = results[idx].steady();
+            idx += 1;
             table.push(vec![
                 ti as f64,
                 topo.coordination() as f64,
@@ -92,6 +130,7 @@ mod tests {
     #[test]
     fn quick_sweep_produces_full_grid() {
         let out = std::env::temp_dir().join("repro_topology_exp_test");
+        std::fs::remove_dir_all(&out).ok();
         let ctx = Ctx::new(&out, true);
         run(&ctx).unwrap();
         let text = std::fs::read_to_string(out.join("topology_sweep.tsv")).unwrap();

@@ -20,6 +20,14 @@
 //! * [`rng`], [`cli`], [`config`], [`output`], [`bench`] — the
 //!   dependency-free substrate required by the offline toolchain.
 
+/// Default master seed for every campaign and experiment: the paper's
+/// cs.DC submission year/month.  One constant so the CLI defaults, the
+/// experiment context and the config-campaign default can never drift;
+/// every sweep point derives its per-trial RNG streams `(seed, trial)`
+/// from the plan seed, so a whole campaign is reproducible from this one
+/// number.
+pub const DEFAULT_SEED: u64 = 20020601;
+
 pub mod bench;
 pub mod cli;
 pub mod config;

@@ -2,8 +2,13 @@
 //!
 //! Subcommands:
 //! * `repro fig2 .. fig11 | eq8 | kpz | meanfield | appendix | dims |
-//!   topology | all` — regenerate a paper figure/table (§4 of DESIGN.md);
-//!   `--quick` for smoke runs, `--out DIR` for the TSV directory.
+//!   topology | all` — regenerate a paper figure/table (§4 of DESIGN.md)
+//!   through the declarative campaign scheduler; `--quick` for smoke
+//!   runs, `--out DIR` for the TSV directory, `--workers N` for the
+//!   point-level fan-out (outputs are byte-identical for every N),
+//!   `--resume` to skip sweep points already in `DIR/.cache`.
+//! * `repro plan <name>|all [--quick] [--seed S]` — print a plan's grid
+//!   (labels, cache keys, canonical specs) without running anything.
 //! * `repro run --l L --nv NV --delta D [--trials N] [--steps T]
 //!   [--topology ring|kring|smallworld]` — one native campaign point on
 //!   any PE graph, printing the ⟨u⟩/⟨w⟩ summary.
@@ -14,11 +19,14 @@
 use anyhow::Result;
 
 use repro::cli::Args;
-use repro::coordinator::{run_artifact_ensemble, run_topology_ensemble, JaxRunSpec, RunSpec};
+use repro::coordinator::{
+    run_artifact_ensemble, run_topology_ensemble, JaxRunSpec, Profile, RunSpec,
+};
 use repro::experiments::{self, Ctx};
 use repro::pdes::{Mode, Topology, VolumeLoad};
 use repro::runtime::PdesRuntime;
 use repro::stats::Lane;
+use repro::DEFAULT_SEED;
 
 fn mode_from(args: &Args) -> Result<Mode> {
     let delta = args.opt_f64("delta", f64::INFINITY)?;
@@ -42,7 +50,7 @@ fn topology_from(args: &Args, l: usize) -> Result<Topology> {
         "smallworld" => Topology::SmallWorld {
             l,
             extra: args.opt_u64("links", (l / 4) as u64)? as usize,
-            seed: args.opt_u64("seed", 20020601)?,
+            seed: args.opt_u64("seed", DEFAULT_SEED)?,
         },
         other => anyhow::bail!("--topology {other:?}: expected ring|kring|smallworld"),
     })
@@ -76,7 +84,10 @@ fn main() -> Result<()> {
     match args.command.as_str() {
         "" | "help" => {
             println!(
-                "usage: repro <fig2..fig11|eq8|kpz|meanfield|appendix|dims|topology|all> [--quick] [--out DIR]\n\
+                "usage: repro <fig2..fig11|eq8|kpz|meanfield|appendix|dims|topology|all>\n\
+                 \x20                 [--quick] [--out DIR] [--seed S] [--workers N]\n\
+                 \x20                 [--lattice-workers N] [--resume]\n\
+                 \x20      repro plan <name|all> [--quick] [--seed S]\n\
                  \x20      repro run  --l L --nv NV --delta D [--rd] [--trials N] [--steps T] [--seed S]\n\
                  \x20                 [--topology ring|kring|smallworld] [--k K] [--links N]\n\
                  \x20      repro jax  --l L --nv NV --delta D [--trials N] [--steps T] [--artifacts DIR]\n\
@@ -96,15 +107,55 @@ fn main() -> Result<()> {
             }
             Ok(())
         }
+        "plan" => {
+            let name = args
+                .positional
+                .first()
+                .cloned()
+                .unwrap_or_else(|| "all".to_string());
+            let profile = Profile {
+                quick: args.has_flag("quick"),
+                seed: args.opt_u64("seed", DEFAULT_SEED)?,
+            };
+            let names: Vec<&str> = if name == "all" {
+                experiments::ALL.to_vec()
+            } else {
+                vec![name.as_str()]
+            };
+            for n in names {
+                let Some(plan) = experiments::plan_for(n, &profile) else {
+                    anyhow::bail!(
+                        "unknown plan {n:?}; known: {:?} or `all`",
+                        experiments::ALL
+                    );
+                };
+                println!(
+                    "plan {} — {} ({} points, {})",
+                    plan.name,
+                    plan.title,
+                    plan.len(),
+                    if profile.quick { "quick" } else { "full" }
+                );
+                for (i, point) in plan.points.iter().enumerate() {
+                    println!(
+                        "  [{i:4}] {:<32} key={:016x} {}",
+                        point.label,
+                        point.key(),
+                        point.spec()
+                    );
+                }
+            }
+            Ok(())
+        }
         "campaign" => {
             let path = std::path::PathBuf::from(args.opt("config", "configs/sweep_window.toml"));
             let cfg = repro::config::Config::load(&path)?;
             let spec = repro::coordinator::CampaignSpec::from_config(&cfg)?;
-            println!("campaign {:?}: {} grid points", spec.name, {
-                let d = if spec.deltas.is_empty() { 1 } else { spec.deltas.len() };
-                let n = if spec.nvs.is_empty() { 1 } else { spec.nvs.len() };
-                spec.ls.len() * n * d
-            });
+            println!(
+                "campaign {:?}: {} grid points",
+                spec.name,
+                spec.to_plan().len()
+            );
             let out = std::path::PathBuf::from(args.opt("out", "results"));
             let table = spec.execute(&out)?;
             println!("{}", table.render());
@@ -117,7 +168,7 @@ fn main() -> Result<()> {
                 mode: mode_from(&args)?,
                 trials: args.opt_u64("trials", 32)?,
                 steps: args.opt_u64("steps", 1000)? as usize,
-                seed: args.opt_u64("seed", 20020601)?,
+                seed: args.opt_u64("seed", DEFAULT_SEED)?,
             };
             let topology = topology_from(&args, spec.l)?;
             println!("native campaign on {}: {spec:?}", topology.tag());
@@ -134,7 +185,7 @@ fn main() -> Result<()> {
                 mode: mode_from(&args)?,
                 trials: args.opt_u64("trials", 32)?,
                 steps: args.opt_u64("steps", 256)? as usize,
-                seed: args.opt_u64("seed", 20020601)?,
+                seed: args.opt_u64("seed", DEFAULT_SEED)?,
             };
             println!("artifact campaign on {}: {spec:?}", rt.platform());
             let series = run_artifact_ensemble(&mut rt, &spec)?;
@@ -145,7 +196,10 @@ fn main() -> Result<()> {
             let ctx = Ctx {
                 out_dir: args.opt("out", "results").into(),
                 quick: args.has_flag("quick"),
-                seed: args.opt_u64("seed", 20020601)?,
+                seed: args.opt_u64("seed", DEFAULT_SEED)?,
+                workers: args.opt_u64("workers", 0)? as usize,
+                lattice_workers: args.opt_u64("lattice-workers", 1)? as usize,
+                resume: args.has_flag("resume"),
             };
             experiments::run(name, &ctx)
         }

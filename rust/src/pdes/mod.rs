@@ -33,7 +33,7 @@ mod topology;
 pub use batch::{BatchPdes, GVT_RESYNC_PERIOD, PEND_ALL, PEND_INTERIOR};
 pub use instrument::{InstrumentedRing, MeanFieldCounters};
 pub use lattice::LatticePdes;
-pub use mode::{Mode, VolumeLoad};
+pub use mode::{canon_f64, parse_canon_f64, Mode, VolumeLoad};
 pub use ring::{Pending, RingPdes, StepOutcome};
 pub use sharded::ShardedPdes;
 pub use topology::{NeighbourTable, Topology};

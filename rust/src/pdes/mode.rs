@@ -1,4 +1,39 @@
-//! Update-rule modes and volume loads of the paper's model.
+//! Update-rule modes and volume loads of the paper's model, plus their
+//! canonical spec strings (the stable identity used for campaign cache
+//! keys — see `coordinator::plan`).
+
+use anyhow::{bail, Result};
+
+/// Render an f64 in the canonical spec grammar: `inf` for +∞, a bare
+/// integer when the value is integral, otherwise the shortest decimal
+/// that round-trips (Rust's `Display` guarantee).  NaN is rejected —
+/// no mode or window in this codebase ever carries one, and a NaN key
+/// could never be matched on resume.
+pub fn canon_f64(v: f64) -> String {
+    assert!(!v.is_nan(), "canonical spec strings cannot encode NaN");
+    if v.is_infinite() {
+        return if v > 0.0 { "inf".into() } else { "-inf".into() };
+    }
+    if v == v.trunc() && v.abs() < 1e15 {
+        return format!("{}", v as i64);
+    }
+    format!("{v}")
+}
+
+/// Parse a [`canon_f64`] rendering back to the identical f64.  NaN is
+/// rejected (the grammar cannot emit it, and accepting it would produce
+/// a [`Mode`] that breaks the `Eq` reflexivity the cache keying relies
+/// on).
+pub fn parse_canon_f64(s: &str) -> Result<f64> {
+    match s {
+        "inf" => Ok(f64::INFINITY),
+        "-inf" => Ok(f64::NEG_INFINITY),
+        _ => match s.parse::<f64>() {
+            Ok(v) if !v.is_nan() => Ok(v),
+            _ => bail!("not a canonical f64: {s:?}"),
+        },
+    }
+}
 
 /// The four update-rule variants of the paper (DESIGN.md §1).
 ///
@@ -49,14 +84,56 @@ impl Mode {
             Mode::WindowedRd { delta } => format!("rd_d{delta}"),
         }
     }
+
+    /// Canonical, stable spec string — the mode component of a campaign
+    /// cache key.
+    ///
+    /// Grammar (v1, frozen — see DESIGN.md §Campaigns): `cons` | `rd` |
+    /// `win:<delta>` | `rdwin:<delta>`, with `<delta>` rendered by
+    /// [`canon_f64`].  **Stability guarantee:** this rendering is part of
+    /// the on-disk resume protocol; variants may be *added* but existing
+    /// renderings must never change, so cache keys written by one build
+    /// resolve under every later one.  [`Mode::parse_spec`] is the exact
+    /// inverse (round-trip tested).
+    pub fn spec_string(self) -> String {
+        match self {
+            Mode::Conservative => "cons".into(),
+            Mode::Windowed { delta } => format!("win:{}", canon_f64(delta)),
+            Mode::Rd => "rd".into(),
+            Mode::WindowedRd { delta } => format!("rdwin:{}", canon_f64(delta)),
+        }
+    }
+
+    /// Parse a [`Mode::spec_string`] rendering (exact inverse).
+    pub fn parse_spec(s: &str) -> Result<Mode> {
+        Ok(match s {
+            "cons" => Mode::Conservative,
+            "rd" => Mode::Rd,
+            _ => match s.split_once(':') {
+                Some(("win", d)) => Mode::Windowed {
+                    delta: parse_canon_f64(d)?,
+                },
+                Some(("rdwin", d)) => Mode::WindowedRd {
+                    delta: parse_canon_f64(d)?,
+                },
+                _ => bail!("unknown mode spec {s:?} (cons|rd|win:<d>|rdwin:<d>)"),
+            },
+        })
+    }
 }
+
+/// `Mode` is `Eq`: window widths are finite-or-infinite but never NaN
+/// (the constructors and the spec grammar both reject NaN), so the
+/// derived `PartialEq` is reflexive in practice and cache keys built on
+/// it are stable.
+impl Eq for Mode {}
 
 /// Number of volume elements (lattice sites) per PE.
 ///
 /// Only the *border-site probability* `min(2/N_V, 1)` enters the dynamics
 /// (interior sites always update; Section II of the paper), so the RD limit
 /// N_V → ∞ is representable exactly.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum VolumeLoad {
     /// Finite N_V ≥ 1.
     Sites(u64),
@@ -65,6 +142,23 @@ pub enum VolumeLoad {
 }
 
 impl VolumeLoad {
+    /// Canonical spec string: the bare N_V (`"1"`, `"100"`) or `"inf"`.
+    /// Same v1 stability guarantee as [`Mode::spec_string`].
+    pub fn spec_string(self) -> String {
+        self.tag()
+    }
+
+    /// Parse a [`VolumeLoad::spec_string`] rendering (exact inverse).
+    pub fn parse_spec(s: &str) -> Result<VolumeLoad> {
+        if s == "inf" {
+            return Ok(VolumeLoad::Infinite);
+        }
+        match s.parse::<u64>() {
+            Ok(nv) if nv >= 1 => Ok(VolumeLoad::Sites(nv)),
+            _ => bail!("bad volume-load spec {s:?} (positive integer or `inf`)"),
+        }
+    }
+
     /// Probability that the randomly chosen site is a border site.
     #[inline]
     pub fn p_border(self) -> f64 {
@@ -121,5 +215,65 @@ mod tests {
     fn tags() {
         assert_eq!(Mode::Windowed { delta: 10.0 }.tag(), "windowed_d10");
         assert_eq!(VolumeLoad::Infinite.tag(), "inf");
+    }
+
+    #[test]
+    fn mode_spec_strings_are_pinned() {
+        // the v1 grammar is frozen: these exact renderings are on-disk
+        // cache keys, so changing any of them breaks `--resume`
+        assert_eq!(Mode::Conservative.spec_string(), "cons");
+        assert_eq!(Mode::Rd.spec_string(), "rd");
+        assert_eq!(Mode::Windowed { delta: 10.0 }.spec_string(), "win:10");
+        assert_eq!(Mode::Windowed { delta: 0.5 }.spec_string(), "win:0.5");
+        assert_eq!(Mode::WindowedRd { delta: 100.0 }.spec_string(), "rdwin:100");
+        assert_eq!(
+            Mode::Windowed {
+                delta: f64::INFINITY
+            }
+            .spec_string(),
+            "win:inf"
+        );
+        assert_eq!(VolumeLoad::Sites(1).spec_string(), "1");
+        assert_eq!(VolumeLoad::Infinite.spec_string(), "inf");
+    }
+
+    #[test]
+    fn mode_spec_roundtrip() {
+        for mode in [
+            Mode::Conservative,
+            Mode::Rd,
+            Mode::Windowed { delta: 0.5 },
+            Mode::Windowed { delta: 10.0 },
+            Mode::Windowed {
+                delta: f64::INFINITY,
+            },
+            Mode::WindowedRd { delta: 1.0 },
+            Mode::WindowedRd { delta: 3.25 },
+        ] {
+            let s = mode.spec_string();
+            assert_eq!(Mode::parse_spec(&s).unwrap(), mode, "{s}");
+        }
+        for load in [VolumeLoad::Sites(1), VolumeLoad::Sites(1000), VolumeLoad::Infinite] {
+            let s = load.spec_string();
+            assert_eq!(VolumeLoad::parse_spec(&s).unwrap(), load, "{s}");
+        }
+        assert!(Mode::parse_spec("windowed").is_err());
+        assert!(Mode::parse_spec("win:abc").is_err());
+        // NaN must be a parse error, never a Mode that breaks Eq
+        assert!(Mode::parse_spec("win:NaN").is_err());
+        assert!(parse_canon_f64("nan").is_err());
+        assert!(VolumeLoad::parse_spec("0").is_err());
+        assert!(VolumeLoad::parse_spec("-3").is_err());
+    }
+
+    #[test]
+    fn canon_f64_roundtrip() {
+        for v in [0.0, 0.5, 1.0, 3.25, 10.0, 100.0, 0.1, f64::INFINITY] {
+            let s = canon_f64(v);
+            assert_eq!(parse_canon_f64(&s).unwrap().to_bits(), v.to_bits(), "{s}");
+        }
+        assert_eq!(canon_f64(10.0), "10");
+        assert_eq!(canon_f64(0.5), "0.5");
+        assert_eq!(canon_f64(f64::INFINITY), "inf");
     }
 }

@@ -78,6 +78,48 @@ impl Topology {
         }
     }
 
+    /// Canonical, stable spec string — the topology component of a
+    /// campaign cache key.  Grammar (v1, frozen — same stability guarantee
+    /// as [`super::Mode::spec_string`]): `ring:<l>` | `kring:<l>:<k>` |
+    /// `sw:<l>:<extra>:<seed>` | `square:<side>` | `cubic:<side>`.
+    pub fn spec_string(self) -> String {
+        match self {
+            Topology::Ring { l } => format!("ring:{l}"),
+            Topology::KRing { l, k } => format!("kring:{l}:{k}"),
+            Topology::SmallWorld { l, extra, seed } => format!("sw:{l}:{extra}:{seed}"),
+            Topology::Square { side } => format!("square:{side}"),
+            Topology::Cubic { side } => format!("cubic:{side}"),
+        }
+    }
+
+    /// Parse a [`Topology::spec_string`] rendering (exact inverse).
+    pub fn parse_spec(s: &str) -> anyhow::Result<Topology> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let num = |i: usize| -> anyhow::Result<usize> {
+            parts
+                .get(i)
+                .and_then(|p| p.parse::<usize>().ok())
+                .ok_or_else(|| anyhow::anyhow!("bad topology spec {s:?}"))
+        };
+        Ok(match (parts.first().copied(), parts.len()) {
+            (Some("ring"), 2) => Topology::Ring { l: num(1)? },
+            (Some("kring"), 3) => Topology::KRing {
+                l: num(1)?,
+                k: num(2)?,
+            },
+            (Some("sw"), 4) => Topology::SmallWorld {
+                l: num(1)?,
+                extra: num(2)?,
+                seed: parts[3]
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("bad topology seed in {s:?}"))?,
+            },
+            (Some("square"), 2) => Topology::Square { side: num(1)? },
+            (Some("cubic"), 2) => Topology::Cubic { side: num(1)? },
+            _ => anyhow::bail!("unknown topology spec {s:?}"),
+        })
+    }
+
     /// Build the CSR neighbour table every causality check reads.
     ///
     /// Neighbour order is part of the event semantics (a pending border
@@ -371,5 +413,27 @@ mod tests {
     #[should_panic]
     fn kring_too_dense_rejected() {
         Topology::KRing { l: 6, k: 3 }.neighbour_table();
+    }
+
+    #[test]
+    fn spec_strings_are_pinned_and_roundtrip() {
+        // v1 grammar is frozen: these renderings are on-disk cache keys
+        let cases = [
+            (Topology::Ring { l: 100 }, "ring:100"),
+            (Topology::KRing { l: 256, k: 3 }, "kring:256:3"),
+            (
+                Topology::SmallWorld { l: 64, extra: 16, seed: 20020601 },
+                "sw:64:16:20020601",
+            ),
+            (Topology::Square { side: 16 }, "square:16"),
+            (Topology::Cubic { side: 8 }, "cubic:8"),
+        ];
+        for (topo, spec) in cases {
+            assert_eq!(topo.spec_string(), spec);
+            assert_eq!(Topology::parse_spec(spec).unwrap(), topo);
+        }
+        assert!(Topology::parse_spec("torus:8").is_err());
+        assert!(Topology::parse_spec("ring:8:9").is_err());
+        assert!(Topology::parse_spec("ring:x").is_err());
     }
 }

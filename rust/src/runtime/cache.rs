@@ -1,0 +1,163 @@
+//! Content-addressed campaign result cache: the resume substrate.
+//!
+//! Each completed sweep point's payload is stored under the FNV-1a hash
+//! of its canonical spec string (`coordinator::plan::SweepPoint::spec`),
+//! one file per point, streamed to disk as points land.  Under
+//! `repro --resume` every point whose key resolves is skipped — a killed
+//! `repro all` picks up where it died, and grids shared between figures
+//! (the `u_∞` L-grids of Figs. 6/11 and the appendix) are served from
+//! one computation.  Without `--resume` the cache is write-only: a plain
+//! run always recomputes, so entries written by an older binary can
+//! never silently stand in for what the current code would produce (the
+//! spec string pins the *parameters*, not the engine version).
+//!
+//! Integrity rules:
+//! * every entry embeds its *full* spec string and [`ResultCache::load`]
+//!   verifies it — a hash collision or corrupt file degrades to a cache
+//!   miss (recompute), never to wrong data;
+//! * stores write a temporary file and `rename` it into place, so a kill
+//!   mid-write leaves no half-entry behind (rename is atomic within the
+//!   cache directory);
+//! * payloads carry raw IEEE-754 bit patterns (see
+//!   `PointResult::to_cache_text`), so resumed campaigns are
+//!   byte-identical to uninterrupted ones.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{Context, Result};
+
+/// Format tag on every cache entry; bump on any layout change so stale
+/// entries degrade to misses instead of parse errors.
+const MAGIC: &str = "# repro point cache v1";
+
+/// Monotonic discriminator for temporary file names (several scheduler
+/// workers may store entries concurrently).
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A directory of content-addressed point results.
+#[derive(Clone, Debug)]
+pub struct ResultCache {
+    dir: PathBuf,
+}
+
+impl ResultCache {
+    /// Open (creating if needed) a cache directory.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        Ok(Self { dir })
+    }
+
+    /// The cache directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Entry path for a spec string.
+    pub fn path_for(&self, spec: &str) -> PathBuf {
+        self.dir
+            .join(format!("{:016x}.point", crate::coordinator::fnv1a64(spec)))
+    }
+
+    /// Load the payload stored for `spec`, if present and intact.  Any
+    /// mismatch (absent file, wrong magic, spec collision, truncation)
+    /// returns `None`: a miss, never an error the sweep has to handle.
+    pub fn load(&self, spec: &str) -> Option<String> {
+        let text = fs::read_to_string(self.path_for(spec)).ok()?;
+        let rest = text.strip_prefix(MAGIC)?.strip_prefix('\n')?;
+        let rest = rest.strip_prefix("spec ")?;
+        let (stored_spec, payload) = rest.split_once('\n')?;
+        if stored_spec != spec {
+            return None; // hash collision or tampering: recompute
+        }
+        Some(payload.to_string())
+    }
+
+    /// Store `payload` for `spec` (write-temporary-then-rename, so
+    /// concurrent writers and kills can never leave a torn entry; the
+    /// temporary name carries the process id plus a per-process sequence
+    /// number, so two `repro` processes sharing a cache directory cannot
+    /// collide on it either).
+    pub fn store(&self, spec: &str, payload: &str) -> Result<()> {
+        let path = self.path_for(spec);
+        let tmp = self.dir.join(format!(
+            "{:016x}.tmp{}-{}",
+            crate::coordinator::fnv1a64(spec),
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let text = format!("{MAGIC}\nspec {spec}\n{payload}");
+        fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing {}", path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_cache(tag: &str) -> ResultCache {
+        let dir = std::env::temp_dir().join(format!("repro_cache_test_{tag}"));
+        std::fs::remove_dir_all(&dir).ok();
+        ResultCache::open(&dir).unwrap()
+    }
+
+    #[test]
+    fn store_load_roundtrip() {
+        let c = tmp_cache("roundtrip");
+        let spec = "repro/v1 topo=ring:10 run=l=10;load=1;mode=cons;trials=4;steps=50;seed=1 samp=curves:50";
+        assert!(c.load(spec).is_none());
+        c.store(spec, "curves 1\nm 4 0000000000000000 0000000000000000\n")
+            .unwrap();
+        let payload = c.load(spec).unwrap();
+        assert!(payload.starts_with("curves 1\n"));
+        // payload round-trips byte-for-byte
+        assert_eq!(payload, "curves 1\nm 4 0000000000000000 0000000000000000\n");
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn spec_mismatch_is_a_miss() {
+        let c = tmp_cache("mismatch");
+        let spec = "repro/v1 topo=ring:10 run=x samp=y";
+        c.store(spec, "latticeu 0 0\n").unwrap();
+        // simulate a collision: another spec hashed to the same file
+        let path = c.path_for(spec);
+        let other = c.path_for("different spec");
+        std::fs::rename(&path, &other).ok();
+        assert!(c.load("different spec").is_none(), "stored spec must be verified");
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn corrupt_entries_are_misses() {
+        let c = tmp_cache("corrupt");
+        let spec = "repro/v1 corrupt-case";
+        c.store(spec, "steady 0 0 0 0 0 0\n").unwrap();
+        std::fs::write(c.path_for(spec), "garbage").unwrap();
+        assert!(c.load(spec).is_none());
+        std::fs::write(c.path_for(spec), format!("{MAGIC}\nspec other\nx\n")).unwrap();
+        assert!(c.load(spec).is_none());
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn no_tmp_files_left_behind() {
+        let c = tmp_cache("tmpclean");
+        for i in 0..5 {
+            c.store(&format!("spec {i}"), "latticeu 0 0\n").unwrap();
+        }
+        let leftovers: Vec<_> = std::fs::read_dir(c.dir())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+}

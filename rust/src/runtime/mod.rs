@@ -2,11 +2,17 @@
 //! them from the Rust hot path.  Python is never invoked here — the HLO
 //! text in `artifacts/` is the entire interface (see DESIGN.md §2 and
 //! python/compile/aot.py).
+//!
+//! The runtime also owns the campaign persistence substrate: the
+//! content-addressed [`ResultCache`] that `repro --resume` reads
+//! completed sweep points back from.
 
 mod artifact;
+mod cache;
 mod executor;
 
 pub use artifact::{ArtifactInfo, Manifest};
+pub use cache::ResultCache;
 pub use executor::{ChunkExecutor, ChunkResult, PdesRuntime, N_ARTIFACT_STATS};
 
 /// The Δ value the AOT path uses to encode an infinite window (must match

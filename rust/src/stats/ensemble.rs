@@ -75,7 +75,7 @@ impl Lane {
 }
 
 /// Per-step ensemble accumulators for every lane.
-#[derive(Clone)]
+#[derive(Clone, Debug)]
 pub struct EnsembleSeries {
     steps: usize,
     acc: Vec<OnlineMoments>, // steps * N_LANES, row-major by step
@@ -176,6 +176,27 @@ impl EnsembleSeries {
     /// Full mean curve for one lane.
     pub fn curve(&self, lane: Lane) -> Vec<f64> {
         (0..self.steps).map(|t| self.mean(t, lane)).collect()
+    }
+
+    /// Raw Welford state of every `(step, lane)` slot, in slot order —
+    /// cache/serialization support.  [`EnsembleSeries::from_raw_slots`]
+    /// rebuilds the series bit-for-bit (the campaign resume protocol
+    /// depends on exact round-trips).
+    pub fn raw_slots(&self) -> Vec<(u64, f64, f64)> {
+        self.acc.iter().map(|m| m.raw()).collect()
+    }
+
+    /// Rebuild a series from [`EnsembleSeries::raw_slots`] state
+    /// (`slots.len()` must equal `steps * N_LANES`).
+    pub fn from_raw_slots(steps: usize, slots: &[(u64, f64, f64)]) -> Self {
+        assert_eq!(slots.len(), steps * N_LANES, "raw slot count mismatch");
+        Self {
+            steps,
+            acc: slots
+                .iter()
+                .map(|&(n, mean, m2)| OnlineMoments::from_raw(n, mean, m2))
+                .collect(),
+        }
     }
 
     /// Mean of a lane over the tail `frac` of the series (steady estimate

@@ -71,6 +71,19 @@ impl OnlineMoments {
             (self.variance() / self.n as f64).sqrt()
         }
     }
+
+    /// Raw Welford state `(n, mean, m2)` — cache/serialization support.
+    /// Round-tripping through [`OnlineMoments::from_raw`] reproduces the
+    /// accumulator bit-for-bit, which the campaign resume protocol relies
+    /// on (resumed outputs must be byte-identical to uninterrupted runs).
+    pub fn raw(&self) -> (u64, f64, f64) {
+        (self.n, self.mean, self.m2)
+    }
+
+    /// Rebuild an accumulator from [`OnlineMoments::raw`] state.
+    pub fn from_raw(n: u64, mean: f64, m2: f64) -> Self {
+        Self { n, mean, m2 }
+    }
 }
 
 #[cfg(test)]

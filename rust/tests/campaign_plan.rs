@@ -1,0 +1,181 @@
+//! Integration tests of the declarative campaign layer: worker-count
+//! invariance of every figure TSV, kill/resume byte-identity, pinned
+//! cache keys, and the EXPERIMENTS.md drift gate.
+//!
+//! The determinism contract under test (see `coordinator::plan`): every
+//! sweep point is executed with the canonical serial trial fold, so TSV
+//! outputs depend only on the plan — never on `--workers`, never on which
+//! points were restored from the cache.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use repro::coordinator::{run_plan, CampaignOpts, Profile, SweepPlan};
+use repro::experiments::{self, Ctx};
+use repro::DEFAULT_SEED;
+
+/// All TSV files under `dir` (not the cache), sorted by name.
+fn tsv_files(dir: &Path) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    for entry in fs::read_dir(dir).unwrap() {
+        let entry = entry.unwrap();
+        let name = entry.file_name().to_string_lossy().to_string();
+        if name.ends_with(".tsv") {
+            out.push((name, fs::read_to_string(entry.path()).unwrap()));
+        }
+    }
+    out.sort();
+    assert!(!out.is_empty(), "no TSV output under {}", dir.display());
+    out
+}
+
+/// Run one figure driver quick into a fresh directory with the given
+/// point-level worker count; return its TSV bytes.
+fn run_quick(name: &str, workers: usize, tag: &str) -> Vec<(String, String)> {
+    let out = std::env::temp_dir().join(format!("repro_cplan_{name}_{tag}"));
+    fs::remove_dir_all(&out).ok();
+    let mut ctx = Ctx::new(&out, true);
+    ctx.workers = workers;
+    experiments::run(name, &ctx).unwrap();
+    let files = tsv_files(&out);
+    fs::remove_dir_all(&out).ok();
+    files
+}
+
+#[test]
+fn figure_tsv_bytes_are_worker_invariant() {
+    // one run_ensemble-style figure, one steady_state-style figure, one
+    // topology sweep — the three execution shapes of the paper's grids
+    for name in ["fig2", "fig9", "topology"] {
+        let one = run_quick(name, 1, "w1");
+        let four = run_quick(name, 4, "w4");
+        assert_eq!(
+            one.len(),
+            four.len(),
+            "{name}: file sets differ between worker counts"
+        );
+        for ((n1, b1), (n4, b4)) in one.iter().zip(&four) {
+            assert_eq!(n1, n4, "{name}: file name drift");
+            assert_eq!(b1, b4, "{name}/{n1}: bytes differ between workers 1 and 4");
+        }
+    }
+}
+
+#[test]
+fn kill_and_resume_reproduces_bytes_and_skips_completed_points() {
+    let profile = Profile::quick(DEFAULT_SEED);
+    let full_plan = experiments::plan_for("fig2", &profile).unwrap();
+
+    // reference: one uninterrupted quick run
+    let reference = run_quick("fig2", 2, "ref");
+
+    // "killed" run: execute only the first half of the plan, then drop
+    // the scheduler with the cache directory left behind
+    let out = std::env::temp_dir().join("repro_cplan_fig2_resume");
+    fs::remove_dir_all(&out).ok();
+    let cache_dir: PathBuf = out.join(".cache");
+    let mut half = SweepPlan::new("fig2", "first half (simulated kill)");
+    for p in &full_plan.points[..full_plan.len() / 2] {
+        half.push(p.clone());
+    }
+    let opts = CampaignOpts {
+        workers: 2,
+        cache_dir: Some(cache_dir.clone()),
+        ..Default::default()
+    };
+    let (_, rep) = run_plan(&half, &opts).unwrap();
+    assert_eq!(rep.executed, half.len());
+
+    // resume: the full driver against the same output directory must
+    // restore the completed half from the cache...
+    let mut ctx = Ctx::new(&out, true);
+    ctx.workers = 2;
+    ctx.resume = true;
+    experiments::run("fig2", &ctx).unwrap();
+    // ...and produce byte-identical TSVs
+    let resumed = tsv_files(&out);
+    assert_eq!(reference, resumed, "resumed TSVs differ from an uninterrupted run");
+
+    // a second resume pass re-executes nothing at all
+    let (_, rep) = run_plan(
+        &full_plan,
+        &CampaignOpts {
+            workers: 2,
+            resume: true,
+            cache_dir: Some(cache_dir),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(rep.executed, 0, "warm cache must satisfy every point");
+    assert_eq!(rep.cache_hits, full_plan.len());
+    fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn cache_keys_are_pinned() {
+    // frozen v1 identities: these exact spec strings and FNV-1a keys are
+    // the on-disk resume protocol — a change here invalidates every
+    // existing cache and must be deliberate (bump the spec version)
+    let plan = experiments::plan_for("fig2", &Profile::quick(DEFAULT_SEED)).unwrap();
+    assert_eq!(
+        plan.points[0].spec(),
+        "repro/v1 topo=ring:10 run=l=10;load=1;mode=cons;trials=32;steps=100;seed=20020601 samp=curves:100"
+    );
+    assert_eq!(plan.points[0].key(), 0x82e3a9d57c768ed5);
+
+    let plan = experiments::plan_for("topology", &Profile::quick(DEFAULT_SEED)).unwrap();
+    assert_eq!(
+        plan.points[0].spec(),
+        "repro/v1 topo=ring:64 run=l=64;load=1;mode=win:1;trials=4;steps=0;seed=20020601 samp=steady:300:300"
+    );
+    assert_eq!(plan.points[0].key(), 0x576df342a203e67c);
+}
+
+#[test]
+fn shared_grids_share_cache_entries_across_figures() {
+    // content addressing: fig6's Δ = ∞ column and fig11's x-axis measure
+    // the same conservative u_∞ cells, so their specs must collide ON
+    // PURPOSE (under --resume one computation serves both figures)
+    let p = Profile::quick(DEFAULT_SEED);
+    let fig6 = experiments::plan_for("fig6", &p).unwrap();
+    let fig11 = experiments::plan_for("fig11", &p).unwrap();
+    let fig6_specs: std::collections::BTreeSet<String> =
+        fig6.points.iter().map(|pt| pt.spec()).collect();
+    let shared = fig11
+        .points
+        .iter()
+        .filter(|pt| fig6_specs.contains(&pt.spec()))
+        .count();
+    assert!(
+        shared >= 9,
+        "expected the conservative u_inf L-grids to be shared, got {shared}"
+    );
+}
+
+#[test]
+fn experiments_md_matches_committed_file() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("workspace root");
+    let committed = fs::read_to_string(root.join("EXPERIMENTS.md"))
+        .expect("EXPERIMENTS.md must exist at the workspace root");
+    let generated = repro::experiments::experiments_md();
+    if committed != generated {
+        for (i, (a, b)) in committed.lines().zip(generated.lines()).enumerate() {
+            assert_eq!(
+                a,
+                b,
+                "EXPERIMENTS.md line {} drifted from the plan definitions — \
+                 regenerate with `python3 python/tools/gen_experiments_md.py`",
+                i + 1
+            );
+        }
+        panic!(
+            "EXPERIMENTS.md length drifted ({} vs {} bytes) — regenerate with \
+             `python3 python/tools/gen_experiments_md.py`",
+            committed.len(),
+            generated.len()
+        );
+    }
+}

@@ -91,6 +91,19 @@ impl<T, E: private::IntoError> Context<T> for Result<T, E> {
     }
 }
 
+// Real anyhow also lets `.context(..)` turn an `Option` into a `Result`
+// (`None` becomes the context message itself); the campaign cache parser
+// relies on it.
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
 /// Construct an [`Error`] from format arguments.
 #[macro_export]
 macro_rules! anyhow {
