@@ -24,9 +24,20 @@ a 1-ulp platform difference is possible — same rationale as
 ``rng_golden.rs``) and the integer lanes (pend checksum, update counts)
 exactly.
 
+Since the model-payload PR it also ports the ``pdes::model`` layer
+(kinetic Ising Glauber payload + SiteCounter update statistics, with the
+pinned draw-order contract: pend redraw -> apply_event -> exponential)
+and verifies payload state (spins, histograms) stays bit-identical
+between the batched and sharded engines for every worker count; the
+``--fixture`` flag additionally writes the Ising golden fixture
+(``rust/tests/fixtures/golden_ising.txt``) and ``--physics`` replays the
+exact configurations of ``rust/tests/ising_physics.rs`` to validate its
+documented tolerance ahead of the real ``cargo test``.
+
 Usage:
     python3 python/tools/crosscheck_sharded.py            # verify only
-    python3 python/tools/crosscheck_sharded.py --fixture  # verify + rewrite fixture
+    python3 python/tools/crosscheck_sharded.py --fixture  # verify + rewrite fixtures
+    python3 python/tools/crosscheck_sharded.py --physics  # + slow Ising energy replay
 """
 
 import math
@@ -295,6 +306,88 @@ MODES = {
 }
 
 
+# -------------------------------------------------- model payloads (port of
+# rust/src/pdes/model.rs; the draw-order contract is: pend redraw ->
+# apply_event -> exponential, per updating PE in PE index order)
+
+INTERVAL_BINS = 64
+INTERVAL_BIN_WIDTH = 0.25
+IDLE_BINS = 64
+
+
+class Ising:
+    """Port of pdes::model::Ising1d (one uniform draw per event)."""
+
+    def __init__(self, pes, beta, coupling=1.0):
+        self.beta = beta
+        self.j = coupling
+        self.spins = [1] * pes
+
+    def apply_event(self, k, t, tau, nbrs, rng):
+        h = 0
+        for jj in nbrs:
+            h += self.spins[jj]
+        d_e = 2.0 * self.j * self.spins[k] * h
+        p_flip = 1.0 / (1.0 + math.exp(self.beta * d_e))
+        if rng.uniform() < p_flip:
+            self.spins[k] = -self.spins[k]
+
+    def bond_sum(self, table):
+        bond2 = 0
+        for k, nb in enumerate(table):
+            s = self.spins[k]
+            for jj in nb:
+                bond2 += s * self.spins[jj]
+        return bond2
+
+    def energy(self, table):
+        return -self.j * self.bond_sum(table) / (2.0 * len(self.spins))
+
+    def key(self):
+        return tuple(self.spins)
+
+
+class SiteCounter:
+    """Port of pdes::model::SiteCounter (no draws)."""
+
+    def __init__(self, pes):
+        self.last_tau = [0.0] * pes
+        self.last_step = [-1] * pes
+        self.reset()
+
+    def reset(self):
+        self.events = 0
+        self.interval_sum = 0.0
+        self.interval_bins = [0] * INTERVAL_BINS
+        self.idle_bins = [0] * IDLE_BINS
+
+    def apply_event(self, k, t, tau, nbrs, rng):
+        dt = tau - self.last_tau[k]
+        self.interval_bins[min(int(dt / INTERVAL_BIN_WIDTH), INTERVAL_BINS - 1)] += 1
+        self.interval_sum += dt
+        idle = max(t - self.last_step[k] - 1, 0)
+        self.idle_bins[min(idle, IDLE_BINS - 1)] += 1
+        self.events += 1
+        self.last_tau[k] = tau
+        self.last_step[k] = t
+
+    def key(self):
+        return (
+            self.events,
+            self.interval_sum,
+            tuple(self.interval_bins),
+            tuple(self.idle_bins),
+        )
+
+
+MODEL_FACTORIES = {
+    None: None,
+    "ising0.7": lambda pes: Ising(pes, 0.7, 1.0),
+    "ising0.4": lambda pes: Ising(pes, 0.4, 1.0),
+    "sitecounter": lambda pes: SiteCounter(pes),
+}
+
+
 class Stats:
     __slots__ = ("n", "sum", "min", "max")
 
@@ -310,7 +403,7 @@ class Batch:
     bit-identical to the fused Rust paths by the in-place-safety argument
     pinned in DESIGN.md §Perf)."""
 
-    def __init__(self, topo, load, mode, rows, seed, first=0):
+    def __init__(self, topo, load, mode, rows, seed, first=0, model=None):
         self.table = topology_table(topo)
         self.pes = len(self.table)
         self.rows = rows
@@ -333,6 +426,12 @@ class Batch:
                 ]
         self.stats = [Stats() for _ in range(rows)]
         self.counts = [0] * rows
+        # model payloads: one instance per replica row (None = payload-
+        # free — no draws or state anywhere, identical to the historical
+        # port), plus the parallel-step counter payload events stamp
+        factory = MODEL_FACTORIES[model]
+        self.models = [factory(self.pes) for _ in range(rows)] if factory else None
+        self.t = 0
 
     def decide_row(self, row, edge):
         tau, pend = self.tau[row], self.pend[row]
@@ -354,8 +453,9 @@ class Batch:
 
     def update_row(self, row, ok):
         """PE-order update sweep + PE-order stats (mirrors
-        update_row_generic / the fused sweeps)."""
+        update_row_generic / the fused sweeps / update_row_model)."""
         tau, pend, rng = self.tau[row], self.pend[row], self.rngs[row]
+        model = self.models[row] if self.models else None
         redraw = self.mode.nn and not self.nv1
         n_up = 0
         mn, mx, sm = math.inf, -math.inf, 0.0
@@ -367,6 +467,8 @@ class Batch:
                     pend[k] = draw_pending_slot(
                         rng, self.p_side, False, len(self.table[k])
                     )
+                if model is not None:
+                    model.apply_event(k, self.t, x, self.table[k], rng)
                 x += rng.exponential()
                 tau[k] = x
             mn = min(mn, x)
@@ -386,6 +488,7 @@ class Batch:
             s = self.update_row(row, ok)
             self.stats[row] = s
             self.counts[row] = s.n
+        self.t += 1
         return None
 
 
@@ -436,8 +539,8 @@ class Sharded(Batch):
     """The sharded step: phase A (frozen-horizon block decisions, any tile
     order) -> barrier -> phase B (per-row PE-order update sweep)."""
 
-    def __init__(self, topo, load, mode, rows, seed, workers, first=0):
-        super().__init__(topo, load, mode, rows, seed, first)
+    def __init__(self, topo, load, mode, rows, seed, workers, first=0, model=None):
+        super().__init__(topo, load, mode, rows, seed, first, model)
         self.honest_ring = is_honest_ring(topo, self.table)
         if lattice_shardable(topo):
             self.plan = shard_lattice(self.pes, workers)
@@ -473,12 +576,14 @@ class Sharded(Batch):
             s = self.update_row_sharded(r, ok_all[r])
             self.stats[r] = s
             self.counts[r] = s.n
+        self.t += 1
 
     def decide_row_frozen(self, row, edge):
         return super().decide_row(row, edge)
 
     def update_row_sharded(self, row, ok):
         tau, pend, rng = self.tau[row], self.pend[row], self.rngs[row]
+        model = self.models[row] if self.models else None
         redraw = self.mode.nn and not self.nv1
         n_up = 0
         mn, mx, sm = math.inf, -math.inf, 0.0
@@ -493,6 +598,8 @@ class Sharded(Batch):
                         pend[k] = draw_pending_slot(
                             rng, self.p_side, False, len(self.table[k])
                         )
+                    if model is not None:
+                        model.apply_event(k, self.t, x, self.table[k], rng)
                     x += rng.exponential()
                     tau[k] = x
                 mn = min(mn, x)
@@ -555,6 +662,70 @@ def verify_sharded_equals_batch():
                             assert sum(p.n for p in parts) == sim.stats[r].n
                 checked += 1
     return checked
+
+
+MODEL_GRID_TOPOLOGIES = [
+    ("ring", 12),
+    ("kring", 12, 2),
+    ("smallworld", 12, 4, 7),
+]
+MODEL_GRID_MODES = ["conservative", "windowed2"]
+# payload -> volume load (the Ising workload is the N_V = 1 case; the
+# counter payload also exercises the N_V > 1 pend-redraw interleaving)
+MODEL_GRID_PAYLOADS = [("ising0.7", 1), ("sitecounter", 4)]
+MODEL_GRID_STEPS = 40
+
+
+def model_state_key(sim):
+    return state_key(sim) + tuple(m.key() for m in sim.models)
+
+
+def verify_model_sharded_equals_batch():
+    """Payload twin of the determinism check: spins / histograms (and the
+    tau/pend/counts state) bit-identical between engines for every worker
+    count — the mirror of tests/properties.rs
+    model_payload_sharded_equals_batch_bit_identical."""
+    checked = 0
+    for topo in MODEL_GRID_TOPOLOGIES:
+        for mode_name in MODEL_GRID_MODES:
+            mode = MODES[mode_name]
+            for payload, load in MODEL_GRID_PAYLOADS:
+                ref = Batch(topo, load, mode, 2, 20020601, model=payload)
+                sharded = [
+                    Sharded(topo, load, mode, 2, 20020601, w, model=payload)
+                    for w in GRID_WORKERS
+                ]
+                for step in range(MODEL_GRID_STEPS):
+                    ref.step()
+                    want = model_state_key(ref)
+                    for w, sim in zip(GRID_WORKERS, sharded):
+                        sim.step()
+                        assert model_state_key(sim) == want, (
+                            f"payload divergence: {topo} {mode_name} "
+                            f"{payload} workers={w} step={step}"
+                        )
+                checked += 1
+    return checked
+
+
+def verify_drawless_payload_invisible():
+    """SiteCounter draws nothing, so its trajectories must equal the
+    payload-free engine's bit for bit (the Rust batch.rs
+    drawless_payloads_are_trajectory_invisible claim)."""
+    for topo, load, mode_name in [
+        (("ring", 16), 1, "windowed2"),
+        (("kring", 16, 2), 4, "conservative"),
+        (("smallworld", 16, 5, 3), "inf", "windowed_rd1.5"),
+    ]:
+        mode = MODES[mode_name]
+        plain = Batch(topo, load, mode, 2, 21)
+        counted = Batch(topo, load, mode, 2, 21, model="sitecounter")
+        for step in range(60):
+            plain.step()
+            counted.step()
+            assert state_key(plain) == state_key(counted), (
+                f"SiteCounter perturbed the trajectory: {topo} {mode_name} step {step}"
+            )
 
 
 def verify_degenerate_plans():
@@ -628,6 +799,79 @@ def fixture_lines():
     return lines
 
 
+ISING_FIXTURE_CONFIGS = [
+    # (tag, topo, mode_name, payload, rows, seed); all N_V = 1 (the
+    # neighbour-reading payload's causal-safety regime)
+    ("ising_ring12_win2_b0.7", ("ring", 12), "windowed2", "ising0.7", 2, 20020601),
+    ("ising_kring12_2_cons_b0.4", ("kring", 12, 2), "conservative", "ising0.4", 1, 7),
+]
+
+
+def ising_fixture_lines():
+    lines = [
+        "# Golden Ising-payload trajectories for the batched/sharded PDES engines.",
+        "# Generated by python/tools/crosscheck_sharded.py — do not edit by hand;",
+        "# regenerate with:  python3 python/tools/crosscheck_sharded.py --fixture",
+        "# Format: tag step row spin_fnv1a_hex bond_sum n_updated tau...",
+        "# (spin_fnv1a over the spin bytes, ±1 as two's-complement u8; bond_sum is",
+        "# the integer double bond sum Σ_k Σ_j s_k s_j, exact; tau = full row,",
+        "# shortest round-trip decimal, 1e-9 rel in Rust per the libm rationale).",
+    ]
+    for tag, topo, mode_name, payload, rows, seed in ISING_FIXTURE_CONFIGS:
+        sim = Batch(topo, 1, MODES[mode_name], rows, seed, model=payload)
+        done = 0
+        for target in FIXTURE_STEPS:
+            while done < target:
+                sim.step()
+                done += 1
+            for row in range(rows):
+                model = sim.models[row]
+                spin_fnv = fnv1a(bytes(s & 0xFF for s in model.spins))
+                taus = " ".join(repr(v) for v in sim.tau[row])
+                lines.append(
+                    f"{tag} {target} {row} {spin_fnv:016x} "
+                    f"{model.bond_sum(sim.table)} {sim.counts[row]} {taus}"
+                )
+    return lines
+
+
+# ------------------------------------------------------------ physics replay
+
+PHYSICS_MODES = [
+    ("conservative", Mode(True, math.inf)),
+    ("windowed_d1", Mode(True, 1.0)),
+    ("windowed_d10", Mode(True, 10.0)),
+    ("windowed_d100", Mode(True, 100.0)),
+]
+
+
+def replay_ising_physics():
+    """Exact replay of rust/tests/ising_physics.rs (L=128, rows=2,
+    seed=4242, beta=0.7, warm 1000, measure 4000): the measured energies
+    printed here are — up to libm 1-ulp effects — the values the Rust
+    test will see, so its documented tolerance can be validated before
+    cargo exists."""
+    exact = -math.tanh(0.7)
+    print(f"ising physics replay: exact e = {exact:.6f}, tolerance 0.02")
+    worst = 0.0
+    for tag, mode in PHYSICS_MODES:
+        sim = Batch(("ring", 128), 1, mode, 2, 4242, model="ising0.7")
+        for _ in range(1000):
+            sim.step()
+        acc = 0.0
+        for _ in range(4000):
+            sim.step()
+            for row in range(2):
+                acc += sim.models[row].energy(sim.table)
+        e = acc / (4000 * 2)
+        diff = abs(e - exact)
+        worst = max(worst, diff)
+        status = "OK" if diff < 0.02 else "FAIL"
+        print(f"  {tag:>16}: <e> = {e:.6f}  |diff| = {diff:.6f}  {status}")
+    assert worst < 0.02, f"physics tolerance exceeded: {worst}"
+    print(f"  worst |diff| = {worst:.6f} < 0.02 — Rust test margins validated")
+
+
 def main():
     verify_rng_golden()
     print("rng golden vectors: OK (splitmix / for_stream / uniform / below / ziggurat)")
@@ -639,15 +883,30 @@ def main():
         f"(5 topologies x 4 modes x 3 N_V) x workers {GRID_WORKERS}, "
         f"{GRID_STEPS} steps, 2 rows"
     )
+    verify_drawless_payload_invisible()
+    print("drawless payloads trajectory-invisible: OK (SiteCounter == plain, 3 configs)")
+    n = verify_model_sharded_equals_batch()
+    print(
+        f"model payloads sharded == batch bit-identical: OK over {n} configs "
+        f"(3 topologies x 2 modes x {{ising, sitecounter}}) x workers "
+        f"{GRID_WORKERS}, {MODEL_GRID_STEPS} steps, 2 rows (spins + histograms exact)"
+    )
     if "--fixture" in sys.argv:
         here = os.path.dirname(os.path.abspath(__file__))
-        path = os.path.normpath(
-            os.path.join(here, "..", "..", "rust", "tests", "fixtures", "golden_tau.txt")
+        fixtures = os.path.normpath(
+            os.path.join(here, "..", "..", "rust", "tests", "fixtures")
         )
-        os.makedirs(os.path.dirname(path), exist_ok=True)
+        os.makedirs(fixtures, exist_ok=True)
+        path = os.path.join(fixtures, "golden_tau.txt")
         with open(path, "w") as fh:
             fh.write("\n".join(fixture_lines()) + "\n")
         print(f"wrote fixture: {path}")
+        path = os.path.join(fixtures, "golden_ising.txt")
+        with open(path, "w") as fh:
+            fh.write("\n".join(ising_fixture_lines()) + "\n")
+        print(f"wrote fixture: {path}")
+    if "--physics" in sys.argv:
+        replay_ising_physics()
 
 
 if __name__ == "__main__":

@@ -77,6 +77,16 @@ def lattice_u(trials, l, warm, measure):
                 steps=None, warm=warm, measure=measure)
 
 
+def model_steady(trials, l, nv, delta, warm, measure):
+    return dict(kind="model-steady", trials=trials, l=l, nv=nv, delta=delta,
+                steps=None, warm=warm, measure=measure)
+
+
+def update_stats(trials, l, nv, delta, warm, measure):
+    return dict(kind="update-stats", trials=trials, l=l, nv=nv, delta=delta,
+                steps=None, warm=warm, measure=measure)
+
+
 def fig2(q):
     ls = pick(q, [10, 100, 1000], [10, 100])
     st, tr = p_steps(1000, q), p_trials(256, q)
@@ -227,12 +237,28 @@ def topology(q):
     return "topology sweep: window vs network control", pts
 
 
+def ising(q):
+    l = pick(q, 256, 64)
+    tr, w, m = p_trials(16, q), p_steps(2000, q), p_steps(4000, q)
+    deltas = pick(q, [0.5, 1.0, 2.0, 5.0, 10.0, 20.0, INF], [1.0, 10.0, INF])
+    pts = [model_steady(tr, l, 1, d, w, m) for _ in range(2) for d in deltas]
+    return "kinetic Ising energy + utilization vs delta", pts
+
+
+def updatestats(q):
+    l = pick(q, 256, 64)
+    tr, w, m = p_trials(16, q), p_steps(2000, q), p_steps(4000, q)
+    deltas = pick(q, [INF, 1.0, 10.0, 100.0], [INF, 10.0])
+    pts = [update_stats(tr, l, 1, d, w, m) for d in deltas]
+    return "per-PE update statistics: interval + idle-streak distributions", pts
+
+
 ALL = [
     ("fig2", fig2), ("fig3", fig3), ("fig4", fig4), ("fig5", fig5),
     ("fig6", fig6), ("fig7", fig7), ("fig8", fig8), ("fig9", fig9),
     ("fig10", fig10), ("fig11", fig11), ("eq8", eq8), ("kpz", kpz),
     ("meanfield", meanfield), ("appendix", appendix), ("dims", dims),
-    ("topology", topology),
+    ("topology", topology), ("ising", ising), ("updatestats", updatestats),
 ]
 
 # -------------------------------------------------------------- rendering

@@ -26,7 +26,8 @@ use std::time::Duration;
 use repro::bench::{compare_against_baseline, BenchReport, Bencher};
 use repro::coordinator::{run_plan, CampaignOpts, RunSpec, SweepPlan, SweepPoint};
 use repro::pdes::{
-    BatchPdes, InstrumentedRing, LatticePdes, Mode, RingPdes, ShardedPdes, Topology, VolumeLoad,
+    BatchPdes, InstrumentedRing, LatticePdes, Mode, ModelSpec, RingPdes, ShardedPdes, Topology,
+    VolumeLoad,
 };
 use repro::rng::Rng;
 use repro::stats::{horizon_frame, horizon_frame_fused, StepStats};
@@ -127,6 +128,42 @@ fn main() {
                 sim.step();
             }
             let name = format!("batch_step/ring_L{l}_NV1_B{rows}");
+            let items = (l * rows) as f64;
+            let m = b.report(&name, items, || {
+                sim.step();
+                std::hint::black_box(sim.counts()[0]);
+            });
+            report.push(&name, items, m);
+        }
+    }
+
+    // Model-payload family (the pluggable-payload PR): `none` is the
+    // engine with ModelSpec::None applied — which attaches NOTHING, so
+    // it must ride the PR 2 fused path and stay within noise of the
+    // matching batch_step/ring_L{l}_NV1_B8 case (the summary below
+    // prints the ratio; the JSON gate pins it against the baseline).
+    // `ising` adds one Glauber flip (one uniform + one exp() call) per
+    // event — the honest cost of a real dynamic Monte Carlo payload.
+    for &l in &[1000usize, 10_000] {
+        for model in [ModelSpec::None, ModelSpec::Ising { beta: 0.7, coupling: 1.0 }] {
+            let rows = 8usize;
+            let mut sim = BatchPdes::with_streams(
+                Topology::Ring { l },
+                VolumeLoad::Sites(1),
+                Mode::Windowed { delta: 10.0 },
+                rows,
+                3,
+                0,
+            );
+            let models = model.build_rows(l, rows);
+            if !models.is_empty() {
+                sim.attach_models(models);
+            }
+            let warm = if l >= 10_000 { 150 } else { 500 };
+            for _ in 0..warm {
+                sim.step();
+            }
+            let name = format!("model_step/{}_L{l}", model.tag());
             let items = (l * rows) as f64;
             let m = b.report(&name, items, || {
                 sim.step();
@@ -358,6 +395,29 @@ fn main() {
             if let (Some(b1), Some(tw)) = (base, t) {
                 println!("# sharded scaling L{l} W{workers}: x{:.2} vs W1", tw / b1);
             }
+        }
+    }
+
+    // model-payload summary: NoModel must be free (ratio ≈ 1 vs the
+    // fused batch_step at the same shape — the payload PR's bench gate),
+    // and the Ising cost is reported for the record
+    for &l in &[1000usize, 10_000] {
+        let base = report.throughput_of(&format!("batch_step/ring_L{l}_NV1_B8"));
+        let none = report.throughput_of(&format!("model_step/none_L{l}"));
+        let ising = report.throughput_of(&format!("model_step/ising_L{l}"));
+        if let (Some(b0), Some(n)) = (base, none) {
+            println!(
+                "# model none overhead L{l}: x{:.3} vs batch_step {}",
+                n / b0,
+                if n / b0 > 0.85 {
+                    "(within noise — NoModel is free)"
+                } else {
+                    "(SLOWER THAN FUSED PATH — investigate)"
+                }
+            );
+        }
+        if let (Some(n), Some(i)) = (none, ising) {
+            println!("# model ising cost L{l}: x{:.2} of payload-free throughput", i / n);
         }
     }
 

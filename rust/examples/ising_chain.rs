@@ -2,130 +2,74 @@
 //! asynchronous kinetic Ising chain (Glauber dynamics) — the class of
 //! "dynamic Monte Carlo" workloads the paper's introduction motivates.
 //!
-//! Each PE carries one spin of a periodic J > 0 chain.  When the PDES
-//! scheduler grants PE k an update (its local virtual time is a local
-//! minimum, Eq. 1, and inside the Δ-window, Eq. 3), the spin attempts a
-//! Glauber flip using its neighbours' states — which is *causally safe*
-//! precisely because Eq. 1 guarantees both neighbours' virtual times are
-//! ahead, so their states at the event's virtual time are known.
+//! Since the model-payload subsystem (`pdes::model`) this example is a
+//! thin driver over the production engines: the `Ising1d` payload rides
+//! `BatchPdes`/`ShardedPdes` through the coordinator's model-steady fold
+//! — no hand-rolled PDES loop, trial batching, lattice sharding and the
+//! campaign cache all apply to the physics workload for free (see also
+//! `repro ising`, the full Δ-sweep experiment).
 //!
-//! Validation: the time-averaged energy per spin must match the exact 1-d
-//! equilibrium value  e = -J tanh(J / k_B T),  independent of Δ — the
-//! window changes *scheduling*, not physics.
+//! Validation: the time-averaged energy per spin matches the exact 1-d
+//! equilibrium value e = −J·tanh(βJ) independent of Δ — the window
+//! changes *scheduling*, not physics (enforced with documented
+//! tolerances by `tests/ising_physics.rs`).
 //!
-//! Run with: `cargo run --release --example ising_chain [beta]`
+//! Run with: `cargo run --release --example ising_chain [--quick] [beta]`
 
-use repro::pdes::{Mode, VolumeLoad};
-use repro::rng::Rng;
-
-/// Asynchronous Ising chain driven by a conservative Δ-window PDES.
-struct IsingPdes {
-    tau: Vec<f64>,
-    next_tau: Vec<f64>,
-    spins: Vec<i8>,
-    mode: Mode,
-    beta: f64,
-    rng: Rng,
-}
-
-impl IsingPdes {
-    fn new(l: usize, beta: f64, mode: Mode, rng: Rng) -> Self {
-        Self {
-            tau: vec![0.0; l],
-            next_tau: vec![0.0; l],
-            spins: vec![1; l], // ordered start
-            mode,
-            beta,
-            rng,
-        }
-    }
-
-    /// One parallel step; returns the number of spin-update events.
-    fn step(&mut self) -> usize {
-        let l = self.tau.len();
-        let edge = if self.mode.enforces_window() {
-            self.mode.delta() + self.tau.iter().copied().fold(f64::INFINITY, f64::min)
-        } else {
-            f64::INFINITY
-        };
-        let mut events = 0;
-        for k in 0..l {
-            let tk = self.tau[k];
-            let left_i = if k == 0 { l - 1 } else { k - 1 };
-            let right_i = if k + 1 == l { 0 } else { k + 1 };
-            let ok = tk <= self.tau[left_i].min(self.tau[right_i]) && tk <= edge;
-            if ok {
-                // Glauber flip attempt at virtual time tk
-                let h = (self.spins[left_i] + self.spins[right_i]) as f64;
-                let d_e = 2.0 * self.spins[k] as f64 * h; // J = 1
-                let p_flip = 1.0 / (1.0 + (self.beta * d_e).exp());
-                if self.rng.uniform() < p_flip {
-                    self.spins[k] = -self.spins[k];
-                }
-                self.next_tau[k] = tk + self.rng.exponential();
-                events += 1;
-            } else {
-                self.next_tau[k] = tk;
-            }
-        }
-        std::mem::swap(&mut self.tau, &mut self.next_tau);
-        events
-    }
-
-    fn energy_per_spin(&self) -> f64 {
-        let l = self.spins.len();
-        let mut e = 0.0;
-        for k in 0..l {
-            e -= (self.spins[k] * self.spins[(k + 1) % l]) as f64;
-        }
-        e / l as f64
-    }
-
-    fn magnetization(&self) -> f64 {
-        self.spins.iter().map(|&s| s as f64).sum::<f64>() / self.spins.len() as f64
-    }
-}
+use repro::coordinator::{model_steady_topology, RunSpec, ShardStrategy};
+use repro::pdes::{Ising1d, Mode, ModelSpec, Topology, VolumeLoad};
 
 fn main() {
-    let beta: f64 = std::env::args()
-        .nth(1)
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let beta: f64 = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
         .and_then(|s| s.parse().ok())
         .unwrap_or(0.7);
-    let l = 512;
-    let warm = 4000;
-    let measure = 16000;
-    let exact = -(beta.tanh()); // e = -J tanh(beta J), J = 1
+    let (l, trials, warm, measure) = if quick {
+        (128usize, 2u64, 500usize, 2000usize)
+    } else {
+        (512, 8, 2000, 8000)
+    };
+    let exact = Ising1d::exact_ring_energy(beta, 1.0);
 
-    println!("asynchronous Glauber Ising chain, L = {l}, beta = {beta}");
+    println!(
+        "asynchronous Glauber Ising chain on the PDES engines: L = {l}, beta = {beta}, \
+         {trials} trials, {warm}+{measure} steps"
+    );
     println!("exact equilibrium energy/spin: {exact:.4}\n");
     println!(
         "{:>24} {:>10} {:>10} {:>10} {:>8}",
         "scheduler", "<e>", "err", "<|m|>", "u"
     );
 
-    let _ = VolumeLoad::Sites(1); // (the chain is the N_V = 1 workload)
     for (label, mode) in [
         ("unconstrained", Mode::Conservative),
         ("Δ-window (Δ = 20)", Mode::Windowed { delta: 20.0 }),
         ("Δ-window (Δ = 5)", Mode::Windowed { delta: 5.0 }),
     ] {
-        let mut sim = IsingPdes::new(l, beta, mode, Rng::for_stream(2002, 1));
-        for _ in 0..warm {
-            sim.step();
-        }
-        let (mut se, mut sm, mut su) = (0.0, 0.0, 0.0);
-        for _ in 0..measure {
-            let ev = sim.step();
-            se += sim.energy_per_spin();
-            sm += sim.magnetization().abs();
-            su += ev as f64 / l as f64;
-        }
-        let e = se / measure as f64;
+        let st = model_steady_topology(
+            Topology::Ring { l },
+            &RunSpec {
+                l,
+                load: VolumeLoad::Sites(1), // one spin per PE
+                mode,
+                trials,
+                steps: 0,
+                seed: 2002,
+            },
+            &ModelSpec::Ising { beta, coupling: 1.0 },
+            warm,
+            measure,
+            ShardStrategy::Trials,
+        );
         println!(
-            "{label:>24} {e:>10.4} {:>10.4} {:>10.4} {:>8.3}",
-            (e - exact).abs(),
-            sm / measure as f64,
-            su / measure as f64
+            "{label:>24} {:>10.4} {:>10.4} {:>10.4} {:>8.3}",
+            st.e,
+            (st.e - exact).abs(),
+            st.m_abs,
+            st.u
         );
     }
 

@@ -1,19 +1,20 @@
 //! Quickstart: simulate a ring of 100 PEs with and without the moving
 //! Δ-window constraint and print the paper's two headline observables —
 //! the utilization (simulation phase) and the STH width (measurement
-//! phase).  Run with: `cargo run --release --example quickstart`
+//! phase).  Run with: `cargo run --release --example quickstart [--quick]`
 
 use repro::coordinator::{run_ensemble, RunSpec};
 use repro::pdes::{Mode, VolumeLoad};
 use repro::stats::Lane;
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
     let base = RunSpec {
         l: 100,
         load: VolumeLoad::Sites(1),
         mode: Mode::Conservative,
-        trials: 32,
-        steps: 8000,
+        trials: if quick { 8 } else { 32 },
+        steps: if quick { 800 } else { 8000 },
         seed: 7,
     };
 

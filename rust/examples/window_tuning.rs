@@ -1,55 +1,77 @@
 //! Window tuning — the Discussion-section use case: for a fixed volume
-//! load N_V, sweep the window width Δ and locate the efficiency knee where
-//! utilization is near its unconstrained ceiling while the width (memory
-//! bound) is still small.
+//! load N_V, sweep the window width Δ and locate the efficiency knee
+//! where utilization is near its unconstrained ceiling while the width
+//! (memory bound) is still small.
 //!
-//! Run with: `cargo run --release --example window_tuning [NV]`
+//! Ported onto the declarative campaign layer: the sweep is a
+//! [`SweepPlan`] (one steady point per Δ plus the unconstrained
+//! ceiling), executed by the generic scheduler — point-level fan-out
+//! across the worker pool for free, byte-identical results for every
+//! pool size.
+//!
+//! Run with: `cargo run --release --example window_tuning [--quick] [NV]`
 
-use repro::coordinator::{steady_state, RunSpec};
-use repro::pdes::{Mode, VolumeLoad};
+use repro::coordinator::{run_plan, CampaignOpts, RunSpec, SweepPlan, SweepPoint};
+use repro::pdes::{Mode, Topology, VolumeLoad};
 
-fn main() {
-    let nv: u64 = std::env::args()
-        .nth(1)
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let nv: u64 = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
         .and_then(|s| s.parse().ok())
         .unwrap_or(100);
-    let l = 256;
-    let deltas = [0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0];
+    let (l, trials, warm) = if quick { (64usize, 8u64, 300usize) } else { (256, 32, 2000) };
+    let deltas: &[f64] = if quick {
+        &[1.0, 5.0, 20.0, 100.0]
+    } else {
+        &[0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0]
+    };
 
-    println!("Δ-window tuning at L = {l}, N_V = {nv} (32 trials, 2000+2000 steps)\n");
+    // the sweep as data: ceiling first, then one point per Δ
+    let mut plan = SweepPlan::new("window_tuning", "Δ-window tuning sweep");
+    let run_spec = |mode| RunSpec {
+        l,
+        load: VolumeLoad::Sites(nv),
+        mode,
+        trials,
+        steps: 0,
+        seed: 11,
+    };
+    plan.push(SweepPoint::steady(
+        "ceiling",
+        Topology::Ring { l },
+        run_spec(Mode::Conservative),
+        warm,
+        warm,
+    ));
+    for &delta in deltas {
+        plan.push(SweepPoint::steady(
+            format!("d{delta}"),
+            Topology::Ring { l },
+            run_spec(Mode::Windowed { delta }),
+            warm,
+            warm,
+        ));
+    }
+    let (results, _report) = run_plan(
+        &plan,
+        &CampaignOpts {
+            quiet: true,
+            ..Default::default()
+        },
+    )?;
+
+    println!("Δ-window tuning at L = {l}, N_V = {nv} ({trials} trials, {warm}+{warm} steps)\n");
     println!(
         "{:>8} {:>8} {:>8} {:>8} {:>12}",
         "delta", "<u>", "<w>", "<w_a>", "u/w (knee)"
     );
-
-    // unconstrained ceiling for reference
-    let ceiling = steady_state(
-        &RunSpec {
-            l,
-            load: VolumeLoad::Sites(nv),
-            mode: Mode::Conservative,
-            trials: 32,
-            steps: 0,
-            seed: 11,
-        },
-        2000,
-        2000,
-    );
-
+    let ceiling = results[0].steady();
     let mut best = (0.0f64, 0.0f64); // (score, delta)
-    for delta in deltas {
-        let st = steady_state(
-            &RunSpec {
-                l,
-                load: VolumeLoad::Sites(nv),
-                mode: Mode::Windowed { delta },
-                trials: 32,
-                steps: 0,
-                seed: 11,
-            },
-            2000,
-            2000,
-        );
+    for (&delta, result) in deltas.iter().zip(&results[1..]) {
+        let st = result.steady();
         // efficiency score: progress per unit memory bound
         let score = st.u / st.w.max(1e-9);
         if score > best.0 {
@@ -69,4 +91,5 @@ fn main() {
          parameter ... to optimize the utilization so as to maximize the efficiency\"",
         best.1
     );
+    Ok(())
 }

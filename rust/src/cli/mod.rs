@@ -23,7 +23,8 @@ pub struct Args {
 /// Option keys that take a value; anything else starting with `--` is a flag.
 const VALUED: &[&str] = &[
     "out", "config", "trials", "steps", "seed", "l", "nv", "delta", "mode", "artifacts",
-    "workers", "lattice-workers", "chunks", "warm", "topology", "k", "links",
+    "workers", "lattice-workers", "chunks", "warm", "topology", "k", "links", "model", "beta",
+    "coupling",
 ];
 
 impl Args {

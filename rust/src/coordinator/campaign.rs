@@ -16,8 +16,8 @@ use std::sync::Mutex;
 use anyhow::{bail, Result};
 
 use crate::pdes::{
-    BatchPdes, InstrumentedRing, LatticePdes, Mode, NeighbourTable, ShardedPdes, Topology,
-    VolumeLoad,
+    BatchPdes, InstrumentedRing, LatticePdes, Mode, Model, ModelSpec, NeighbourTable,
+    ShardedPdes, Topology, UpdateStats, VolumeLoad,
 };
 use crate::rng::Rng;
 use crate::runtime::ResultCache;
@@ -130,8 +130,11 @@ impl Engine {
         mode: Mode,
         rngs: Vec<Rng>,
         lattice_workers: usize,
+        model: &ModelSpec,
     ) -> Self {
-        if lattice_workers > 1 {
+        let pes = topology.len();
+        let rows = rngs.len();
+        let mut engine = if lattice_workers > 1 {
             Engine::Sharded(ShardedPdes::with_table(
                 topology,
                 nbr,
@@ -142,7 +145,14 @@ impl Engine {
             ))
         } else {
             Engine::Single(BatchPdes::with_table(topology, nbr, load, mode, rngs))
+        };
+        // `ModelSpec::None` builds nothing: the engine keeps its fused
+        // payload-free hot path
+        let models = model.build_rows(pes, rows);
+        if !models.is_empty() {
+            engine.batch_mut().attach_models(models);
         }
+        engine
     }
 
     fn step(&mut self) {
@@ -153,6 +163,13 @@ impl Engine {
     }
 
     fn batch(&self) -> &BatchPdes {
+        match self {
+            Engine::Single(sim) => sim,
+            Engine::Sharded(sim) => sim,
+        }
+    }
+
+    fn batch_mut(&mut self) -> &mut BatchPdes {
         match self {
             Engine::Single(sim) => sim,
             Engine::Sharded(sim) => sim,
@@ -271,6 +288,18 @@ pub fn run_topology_ensemble_with(
     spec: &RunSpec,
     strategy: ShardStrategy,
 ) -> EnsembleSeries {
+    run_topology_ensemble_model(topology, spec, &ModelSpec::None, strategy)
+}
+
+/// [`run_topology_ensemble_with`] with a model payload riding each trial
+/// (`ModelSpec::None` = the payload-free hot path, bit-identical to the
+/// historical call).
+pub fn run_topology_ensemble_model(
+    topology: Topology,
+    spec: &RunSpec,
+    model: &ModelSpec,
+    strategy: ShardStrategy,
+) -> EnsembleSeries {
     assert_eq!(topology.len(), spec.l, "RunSpec.l must match the topology");
     // built once per parameter point; shared (read-only) by every batch
     let nbr = topology.neighbour_table();
@@ -290,6 +319,7 @@ pub fn run_topology_ensemble_with(
                     spec.mode,
                     BatchPdes::trial_streams(spec.seed, start, rows),
                     lattice_workers,
+                    model,
                 );
                 for t in 0..spec.steps {
                     sim.step();
@@ -360,6 +390,18 @@ pub fn steady_state_topology_with(
     measure: usize,
     strategy: ShardStrategy,
 ) -> SteadyStats {
+    steady_state_topology_model(topology, spec, &ModelSpec::None, warm, measure, strategy)
+}
+
+/// [`steady_state_topology_with`] with a model payload riding each trial.
+pub fn steady_state_topology_model(
+    topology: Topology,
+    spec: &RunSpec,
+    model: &ModelSpec,
+    warm: usize,
+    measure: usize,
+    strategy: ShardStrategy,
+) -> SteadyStats {
     assert_eq!(topology.len(), spec.l, "RunSpec.l must match the topology");
     // built once per parameter point; shared (read-only) by every batch
     let nbr = topology.neighbour_table();
@@ -383,6 +425,7 @@ pub fn steady_state_topology_with(
                     spec.mode,
                     BatchPdes::trial_streams(spec.seed, start, rows),
                     lattice_workers,
+                    model,
                 );
                 for _ in 0..warm {
                     engine.step();
@@ -434,6 +477,191 @@ pub fn steady_state_topology_with(
         wa: acc.2.mean(),
         gvt_rate: acc.3.mean(),
     }
+}
+
+/// Steady-state summary of one model-payload campaign point: the
+/// scheduling observables plus the payload's time-averaged physics.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelSteadyStats {
+    /// Steady utilization ⟨u⟩ with standard error.
+    pub u: f64,
+    /// Standard error of u.
+    pub u_err: f64,
+    /// Time-averaged payload energy per PE ⟨e⟩ (trial mean).
+    pub e: f64,
+    /// Standard error of e over trials.
+    pub e_err: f64,
+    /// Time-averaged absolute magnetization per PE ⟨|m|⟩.
+    pub m_abs: f64,
+    /// Standard error of |m| over trials.
+    pub m_err: f64,
+    /// Mean GVT progress per step over the measurement window.
+    pub gvt_rate: f64,
+}
+
+/// Warm up, then time-average the payload observables ([`Model::observe`]
+/// — energy, |m|) and the utilization per trial, on any topology.  The
+/// physics-invariance contract under test in `tests/ising_physics.rs`:
+/// ⟨e⟩ must be independent of the Δ-window (scheduling ≠ dynamics).
+///
+/// [`Model::observe`]: crate::pdes::Model::observe
+pub fn model_steady_topology(
+    topology: Topology,
+    spec: &RunSpec,
+    model: &ModelSpec,
+    warm: usize,
+    measure: usize,
+    strategy: ShardStrategy,
+) -> ModelSteadyStats {
+    assert_eq!(topology.len(), spec.l, "RunSpec.l must match the topology");
+    assert!(
+        *model != ModelSpec::None,
+        "model-steady sampling needs a model payload"
+    );
+    let nbr = topology.neighbour_table();
+    let lattice_workers = strategy.lattice_workers();
+    let acc = map_shards_with(
+        spec.trials,
+        strategy.trial_workers(),
+        |range| {
+            let mut u = OnlineMoments::new();
+            let mut e = OnlineMoments::new();
+            let mut m = OnlineMoments::new();
+            let mut rate = OnlineMoments::new();
+            let mut start = range.start;
+            while start < range.end {
+                let rows = ((range.end - start) as usize).min(BATCH_ROWS);
+                let mut engine = Engine::new(
+                    topology,
+                    nbr.clone(),
+                    spec.load,
+                    spec.mode,
+                    BatchPdes::trial_streams(spec.seed, start, rows),
+                    lattice_workers,
+                    model,
+                );
+                for _ in 0..warm {
+                    engine.step();
+                }
+                let gvt0: Vec<f64> = (0..rows)
+                    .map(|r| engine.batch().global_virtual_time_row(r))
+                    .collect();
+                let mut su = vec![0.0f64; rows];
+                let mut se = vec![0.0f64; rows];
+                let mut sm = vec![0.0f64; rows];
+                for _ in 0..measure {
+                    engine.step();
+                    let sim = engine.batch();
+                    let pes = sim.pes() as f64;
+                    for row in 0..rows {
+                        su[row] += sim.counts()[row] as f64 / pes;
+                        let frame = sim
+                            .model_row(row)
+                            .expect("model attached")
+                            .observe(sim.neighbour_table())
+                            .expect("model-steady sampling needs an observable payload");
+                        se[row] += frame.energy;
+                        sm[row] += frame.mag_abs;
+                    }
+                }
+                let mf = measure as f64;
+                let sim = engine.batch();
+                for row in 0..rows {
+                    u.push(su[row] / mf);
+                    e.push(se[row] / mf);
+                    m.push(sm[row] / mf);
+                    rate.push((sim.global_virtual_time_row(row) - gvt0[row]) / mf);
+                }
+                start += rows as u64;
+            }
+            (u, e, m, rate)
+        },
+        |mut a, b| {
+            a.0.merge(&b.0);
+            a.1.merge(&b.1);
+            a.2.merge(&b.2);
+            a.3.merge(&b.3);
+            a
+        },
+    )
+    .expect("at least one trial required");
+    ModelSteadyStats {
+        u: acc.0.mean(),
+        u_err: acc.0.stderr(),
+        e: acc.1.mean(),
+        e_err: acc.1.stderr(),
+        m_abs: acc.2.mean(),
+        m_err: acc.2.stderr(),
+        gvt_rate: acc.3.mean(),
+    }
+}
+
+/// Warm up, reset the payload's counters, then accumulate the per-PE
+/// update statistics ([`crate::pdes::UpdateStats`]) over the measurement
+/// window, summed over every trial in trial order (the canonical serial
+/// fold keeps the fp `interval_sum` lane byte-reproducible).
+pub fn update_stats_topology(
+    topology: Topology,
+    spec: &RunSpec,
+    model: &ModelSpec,
+    warm: usize,
+    measure: usize,
+    strategy: ShardStrategy,
+) -> UpdateStats {
+    assert_eq!(topology.len(), spec.l, "RunSpec.l must match the topology");
+    let nbr = topology.neighbour_table();
+    let lattice_workers = strategy.lattice_workers();
+    map_shards_with(
+        spec.trials,
+        strategy.trial_workers(),
+        |range| {
+            let mut acc = UpdateStats::new();
+            let mut start = range.start;
+            while start < range.end {
+                let rows = ((range.end - start) as usize).min(BATCH_ROWS);
+                let mut engine = Engine::new(
+                    topology,
+                    nbr.clone(),
+                    spec.load,
+                    spec.mode,
+                    BatchPdes::trial_streams(spec.seed, start, rows),
+                    lattice_workers,
+                    model,
+                );
+                for _ in 0..warm {
+                    engine.step();
+                }
+                for row in 0..rows {
+                    engine
+                        .batch_mut()
+                        .model_row_mut(row)
+                        .expect("model attached")
+                        .reset_stats();
+                }
+                for _ in 0..measure {
+                    engine.step();
+                }
+                let sim = engine.batch();
+                for row in 0..rows {
+                    let st = sim
+                        .model_row(row)
+                        .expect("model attached")
+                        .update_stats()
+                        .expect("update-stats sampling needs a counting payload");
+                    acc.merge(&st);
+                }
+                start += rows as u64;
+            }
+            acc
+        },
+        |mut a, b| {
+            a.merge(&b);
+            a
+        },
+    )
+    // zero trials must fail loudly (like model_steady_topology), not
+    // cache an all-zero histogram whose events=0 divides to NaN rows
+    .expect("at least one trial required")
 }
 
 /// Execution options for a [`SweepPlan`] campaign.
@@ -587,18 +815,40 @@ pub fn execute_point(point: &SweepPoint, lattice_workers: usize) -> PointResult 
         lattice_workers: lattice_workers.max(1),
     };
     match &point.sampling {
-        Sampling::Curves { .. } => PointResult::Curves(run_topology_ensemble_with(
+        Sampling::Curves { .. } => PointResult::Curves(run_topology_ensemble_model(
             point.topology,
             &point.run,
+            &point.model,
             strategy,
         )),
-        Sampling::Steady { warm, measure } => PointResult::Steady(steady_state_topology_with(
+        Sampling::Steady { warm, measure } => PointResult::Steady(steady_state_topology_model(
             point.topology,
             &point.run,
+            &point.model,
             *warm,
             *measure,
             strategy,
         )),
+        Sampling::ModelSteady { warm, measure } => PointResult::ModelSteady(
+            model_steady_topology(
+                point.topology,
+                &point.run,
+                &point.model,
+                *warm,
+                *measure,
+                strategy,
+            ),
+        ),
+        Sampling::UpdateStats { warm, measure } => PointResult::UpdateStats(
+            update_stats_topology(
+                point.topology,
+                &point.run,
+                &point.model,
+                *warm,
+                *measure,
+                strategy,
+            ),
+        ),
         Sampling::Snapshot { at, stream } => {
             // single-trial surface snapshots: a B = 1 batch on the point's
             // stream — bit-identical to the historical RingPdes drivers
@@ -608,6 +858,10 @@ pub fn execute_point(point: &SweepPoint, lattice_workers: usize) -> PointResult 
                 point.run.mode,
                 vec![Rng::for_stream(point.run.seed, *stream)],
             );
+            let models = point.model.build_rows(point.topology.len(), 1);
+            if !models.is_empty() {
+                sim.attach_models(models);
+            }
             let mut surfaces = Vec::with_capacity(at.len());
             let mut t = 0usize;
             for &t_snap in at {
@@ -624,6 +878,13 @@ pub fn execute_point(point: &SweepPoint, lattice_workers: usize) -> PointResult 
             steps,
             stream,
         } => {
+            // the instrumented ring has no payload support; a model on a
+            // counters point would be silently ignored and mislabel the
+            // cached result, so refuse it loudly
+            assert!(
+                point.model == ModelSpec::None,
+                "counters points do not support model payloads"
+            );
             let mut sim = InstrumentedRing::new(
                 point.run.l,
                 point.run.load,
@@ -640,6 +901,10 @@ pub fn execute_point(point: &SweepPoint, lattice_workers: usize) -> PointResult 
             PointResult::Counters(sim.counters())
         }
         Sampling::LatticeU { warm, measure } => {
+            assert!(
+                point.model == ModelSpec::None,
+                "lattice-u points do not support model payloads"
+            );
             let mut acc = OnlineMoments::new();
             for trial in 0..point.run.trials {
                 let mut sim = LatticePdes::new(
@@ -837,6 +1102,81 @@ mod tests {
         );
         assert!((both.u - trials_1w.u).abs() < 1e-12);
         assert!((both.w - trials_1w.w).abs() < 1e-12);
+    }
+
+    #[test]
+    fn model_steady_is_lattice_worker_invariant_bitwise() {
+        // payload trajectories ride the sharded engine's bit-identity
+        // contract, so the whole model-steady fold must be exact across
+        // lattice worker counts (same trial decomposition)
+        let s = spec(24, Mode::Windowed { delta: 3.0 }, 5, 0);
+        let model = ModelSpec::Ising { beta: 0.7, coupling: 1.0 };
+        let run = |lattice_workers: usize| {
+            model_steady_topology(
+                Topology::Ring { l: 24 },
+                &s,
+                &model,
+                100,
+                200,
+                ShardStrategy::Both {
+                    trial_workers: 1,
+                    lattice_workers,
+                },
+            )
+        };
+        let one = run(1);
+        assert!(one.e.is_finite() && one.e < 0.0, "ferromagnet: e = {}", one.e);
+        assert!(one.u > 0.0 && one.u <= 1.0);
+        assert!(one.m_abs >= 0.0 && one.m_abs <= 1.0);
+        for lw in [2usize, 3] {
+            let lat = run(lw);
+            assert_eq!(one.u.to_bits(), lat.u.to_bits(), "lw = {lw}");
+            assert_eq!(one.e.to_bits(), lat.e.to_bits(), "lw = {lw}");
+            assert_eq!(one.m_abs.to_bits(), lat.m_abs.to_bits(), "lw = {lw}");
+            assert_eq!(one.gvt_rate.to_bits(), lat.gvt_rate.to_bits(), "lw = {lw}");
+        }
+    }
+
+    #[test]
+    fn update_stats_fold_counts_every_measured_event() {
+        // the counted events must equal the summed per-step update counts
+        // over the measurement window (counters reset after warm-up), and
+        // the histograms must be lattice-worker-invariant
+        let s = spec(20, Mode::Windowed { delta: 2.0 }, 3, 0);
+        let run = |lw: usize| {
+            update_stats_topology(
+                Topology::Ring { l: 20 },
+                &s,
+                &ModelSpec::SiteCounter,
+                50,
+                120,
+                ShardStrategy::Both {
+                    trial_workers: 1,
+                    lattice_workers: lw,
+                },
+            )
+        };
+        let st = run(1);
+        assert!(st.events > 0);
+        assert_eq!(st.interval_bins.iter().sum::<u64>(), st.events);
+        assert_eq!(st.idle_bins.iter().sum::<u64>(), st.events);
+        assert!(st.mean_interval() > 0.0);
+        // SiteCounter draws nothing, so the trajectory equals the plain
+        // run: events == Σ counts over the same steady measurement
+        let reference = steady_state_topology_with(
+            Topology::Ring { l: 20 },
+            &s,
+            50,
+            120,
+            ShardStrategy::Both {
+                trial_workers: 1,
+                lattice_workers: 1,
+            },
+        );
+        let expected = (reference.u * 20.0 * 120.0 * 3.0).round() as u64;
+        assert_eq!(st.events, expected, "events vs steady utilization");
+        let st2 = run(2);
+        assert_eq!(st, st2, "update stats drifted across lattice workers");
     }
 
     #[test]

@@ -27,10 +27,10 @@
 
 use anyhow::{bail, Context as _, Result};
 
-use crate::pdes::{MeanFieldCounters, Topology};
+use crate::pdes::{MeanFieldCounters, ModelSpec, Topology, UpdateStats};
 use crate::stats::{EnsembleSeries, N_LANES};
 
-use super::campaign::{RunSpec, SteadyStats};
+use super::campaign::{ModelSteadyStats, RunSpec, SteadyStats};
 
 /// FNV-1a 64-bit hash of a spec string — the campaign cache key.  Chosen
 /// for stability (the constant pair is frozen by the FNV reference) and
@@ -141,6 +141,24 @@ pub enum Sampling {
         /// Measured steps per trial.
         measure: usize,
     },
+    /// Warm up, then time-average the model payload's observables
+    /// (energy, |m|) and the utilization per trial (the `ising`
+    /// experiment; requires a payload with `Model::observe`).
+    ModelSteady {
+        /// Warm-up steps before measurement.
+        warm: usize,
+        /// Measured steps.
+        measure: usize,
+    },
+    /// Warm up, reset the payload's counters, then accumulate per-PE
+    /// update statistics over the measurement window (the `updatestats`
+    /// experiment; requires a counting payload, cond-mat/0306222).
+    UpdateStats {
+        /// Warm-up steps before the counters reset.
+        warm: usize,
+        /// Measured steps.
+        measure: usize,
+    },
 }
 
 impl Sampling {
@@ -160,6 +178,8 @@ impl Sampling {
                 stream,
             } => format!("counters:{warm}:{steps}:{stream}"),
             Sampling::LatticeU { warm, measure } => format!("latticeu:{warm}:{measure}"),
+            Sampling::ModelSteady { warm, measure } => format!("modelsteady:{warm}:{measure}"),
+            Sampling::UpdateStats { warm, measure } => format!("updstats:{warm}:{measure}"),
         }
     }
 
@@ -171,6 +191,8 @@ impl Sampling {
             Sampling::Snapshot { .. } => "snapshot",
             Sampling::Counters { .. } => "counters",
             Sampling::LatticeU { .. } => "lattice-u",
+            Sampling::ModelSteady { .. } => "model-steady",
+            Sampling::UpdateStats { .. } => "update-stats",
         }
     }
 
@@ -189,7 +211,9 @@ impl Sampling {
         match self {
             Sampling::Steady { warm, .. }
             | Sampling::Counters { warm, .. }
-            | Sampling::LatticeU { warm, .. } => Some(*warm),
+            | Sampling::LatticeU { warm, .. }
+            | Sampling::ModelSteady { warm, .. }
+            | Sampling::UpdateStats { warm, .. } => Some(*warm),
             _ => None,
         }
     }
@@ -197,9 +221,10 @@ impl Sampling {
     /// Measurement-window step count, where the notion applies.
     pub fn measure_opt(&self) -> Option<usize> {
         match self {
-            Sampling::Steady { measure, .. } | Sampling::LatticeU { measure, .. } => {
-                Some(*measure)
-            }
+            Sampling::Steady { measure, .. }
+            | Sampling::LatticeU { measure, .. }
+            | Sampling::ModelSteady { measure, .. }
+            | Sampling::UpdateStats { measure, .. } => Some(*measure),
             _ => None,
         }
     }
@@ -217,6 +242,11 @@ pub struct SweepPoint {
     pub run: RunSpec,
     /// The sampling scheme.
     pub sampling: Sampling,
+    /// Model payload riding the point's trials (`ModelSpec::None` for
+    /// the payload-free engines — the historical default, whose spec
+    /// rendering omits the field entirely so pre-existing cache keys are
+    /// unchanged).
+    pub model: ModelSpec,
 }
 
 impl SweepPoint {
@@ -231,7 +261,15 @@ impl SweepPoint {
             topology,
             run,
             sampling,
+            model: ModelSpec::None,
         }
+    }
+
+    /// Attach a model payload to this point (trajectory family and cache
+    /// identity both change — the spec gains a `model=` field).
+    pub fn with_model(mut self, model: ModelSpec) -> Self {
+        self.model = model;
+        self
     }
 
     /// A per-step-curves point (`run.steps` is normalized to `steps`).
@@ -303,6 +341,44 @@ impl SweepPoint {
         )
     }
 
+    /// A model-payload steady point (`run.steps` normalized to 0): warm
+    /// up, then time-average the payload observables per trial.  The
+    /// payload must expose `Model::observe` (e.g. [`ModelSpec::Ising`]).
+    ///
+    /// [`Model::observe`]: crate::pdes::Model::observe
+    pub fn model_steady(
+        label: impl Into<String>,
+        topology: Topology,
+        mut run: RunSpec,
+        warm: usize,
+        measure: usize,
+        model: ModelSpec,
+    ) -> Self {
+        assert!(
+            model != ModelSpec::None,
+            "model-steady point needs a model payload"
+        );
+        run.steps = 0;
+        Self::new(label, topology, run, Sampling::ModelSteady { warm, measure }).with_model(model)
+    }
+
+    /// An update-statistics point (`run.steps` normalized to 0): warm
+    /// up, reset the counters, accumulate the per-PE update statistics
+    /// over the measurement window.  Always carries the
+    /// [`ModelSpec::SiteCounter`] payload (trajectory-invisible — the
+    /// statistics describe the unperturbed scheduler).
+    pub fn update_stats(
+        label: impl Into<String>,
+        topology: Topology,
+        mut run: RunSpec,
+        warm: usize,
+        measure: usize,
+    ) -> Self {
+        run.steps = 0;
+        Self::new(label, topology, run, Sampling::UpdateStats { warm, measure })
+            .with_model(ModelSpec::SiteCounter)
+    }
+
     /// A lattice steady-utilization point (`run.steps` normalized to 0,
     /// `run.load` to N_V = 1 — `LatticePdes` is hard-wired to one site
     /// per PE, so any other load in the spec would mislabel the cached
@@ -319,17 +395,25 @@ impl SweepPoint {
         Self::new(label, topology, run, Sampling::LatticeU { warm, measure })
     }
 
-    /// The canonical point spec (v1, frozen): topology + run + sampling.
-    /// Equal specs ⇒ bit-identical results (the determinism contract), so
-    /// this string *is* the point's cache identity; [`SweepPoint::key`]
-    /// hashes it into the content address.
+    /// The canonical point spec (v1, frozen): topology + run + sampling,
+    /// plus a `model=` field when (and only when) a payload is attached —
+    /// payload-free points render exactly as before, so every
+    /// pre-existing cache key still resolves.  Equal specs ⇒
+    /// bit-identical results (the determinism contract), so this string
+    /// *is* the point's cache identity; [`SweepPoint::key`] hashes it
+    /// into the content address.
     pub fn spec(&self) -> String {
-        format!(
+        let mut s = format!(
             "repro/v1 topo={} run={} samp={}",
             self.topology.spec_string(),
             self.run.spec_string(),
             self.sampling.spec_string()
-        )
+        );
+        if self.model != ModelSpec::None {
+            s.push_str(" model=");
+            s.push_str(&self.model.spec_string());
+        }
+        s
     }
 
     /// Content-addressed cache key: [`fnv1a64`] of [`SweepPoint::spec`].
@@ -395,6 +479,10 @@ pub enum PointResult {
         /// Standard error over trials.
         err: f64,
     },
+    /// Model-payload steady summary ([`Sampling::ModelSteady`]).
+    ModelSteady(ModelSteadyStats),
+    /// Accumulated per-PE update statistics ([`Sampling::UpdateStats`]).
+    UpdateStats(UpdateStats),
 }
 
 impl PointResult {
@@ -438,6 +526,22 @@ impl PointResult {
         }
     }
 
+    /// The model-payload steady summary (panics on kind mismatch).
+    pub fn model_steady(&self) -> &ModelSteadyStats {
+        match self {
+            PointResult::ModelSteady(s) => s,
+            other => panic!("expected a model-steady result, got {}", other.kind_tag()),
+        }
+    }
+
+    /// The update statistics (panics on kind mismatch).
+    pub fn update_stats(&self) -> &UpdateStats {
+        match self {
+            PointResult::UpdateStats(s) => s,
+            other => panic!("expected an update-stats result, got {}", other.kind_tag()),
+        }
+    }
+
     /// Kind tag (mirrors [`Sampling::kind_tag`]).
     pub fn kind_tag(&self) -> &'static str {
         match self {
@@ -446,6 +550,8 @@ impl PointResult {
             PointResult::Surfaces(_) => "snapshot",
             PointResult::Counters(_) => "counters",
             PointResult::LatticeU { .. } => "lattice-u",
+            PointResult::ModelSteady(_) => "model-steady",
+            PointResult::UpdateStats(_) => "update-stats",
         }
     }
 
@@ -504,6 +610,33 @@ impl PointResult {
             }
             PointResult::LatticeU { u, err } => {
                 out.push_str(&format!("latticeu {} {}\n", hex_f64(*u), hex_f64(*err)));
+            }
+            PointResult::ModelSteady(s) => {
+                out.push_str(&format!(
+                    "modelsteady {} {} {} {} {} {} {}\n",
+                    hex_f64(s.u),
+                    hex_f64(s.u_err),
+                    hex_f64(s.e),
+                    hex_f64(s.e_err),
+                    hex_f64(s.m_abs),
+                    hex_f64(s.m_err),
+                    hex_f64(s.gvt_rate)
+                ));
+            }
+            PointResult::UpdateStats(s) => {
+                out.push_str(&format!(
+                    "updstats {} {}\n",
+                    s.events,
+                    hex_f64(s.interval_sum)
+                ));
+                let join = |bins: &[u64]| {
+                    bins.iter()
+                        .map(|b| b.to_string())
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                };
+                out.push_str(&format!("i {}\n", join(&s.interval_bins)));
+                out.push_str(&format!("d {}\n", join(&s.idle_bins)));
             }
         }
         out
@@ -602,6 +735,57 @@ impl PointResult {
                 u: parse_hex_f64(head.next().context("latticeu payload truncated")?)?,
                 err: parse_hex_f64(head.next().context("latticeu payload truncated")?)?,
             },
+            "modelsteady" => {
+                let mut f = || -> Result<f64> {
+                    parse_hex_f64(head.next().context("modelsteady payload truncated")?)
+                };
+                PointResult::ModelSteady(ModelSteadyStats {
+                    u: f()?,
+                    u_err: f()?,
+                    e: f()?,
+                    e_err: f()?,
+                    m_abs: f()?,
+                    m_err: f()?,
+                    gvt_rate: f()?,
+                })
+            }
+            "updstats" => {
+                let events: u64 = head
+                    .next()
+                    .context("updstats payload missing events")?
+                    .parse()
+                    .context("bad updstats events")?;
+                let interval_sum =
+                    parse_hex_f64(head.next().context("updstats payload truncated")?)?;
+                let mut bins = |tag: &str| -> Result<Vec<u64>> {
+                    let line = lines
+                        .next()
+                        .with_context(|| format!("updstats payload missing {tag} line"))?;
+                    let mut it = line.split_whitespace();
+                    if it.next() != Some(tag) {
+                        bail!("bad updstats histogram line {line:?} (expected {tag})");
+                    }
+                    it.map(|v| v.parse::<u64>().context("bad histogram count"))
+                        .collect()
+                };
+                let interval_bins = bins("i")?;
+                let idle_bins = bins("d")?;
+                if interval_bins.len() != crate::pdes::model::INTERVAL_BINS
+                    || idle_bins.len() != crate::pdes::model::IDLE_BINS
+                {
+                    bail!(
+                        "updstats histogram sizes {} / {} do not match the schema",
+                        interval_bins.len(),
+                        idle_bins.len()
+                    );
+                }
+                PointResult::UpdateStats(UpdateStats {
+                    events,
+                    interval_sum,
+                    interval_bins,
+                    idle_bins,
+                })
+            }
             other => bail!("unknown cache payload kind {other:?}"),
         })
     }
@@ -677,6 +861,80 @@ mod tests {
     #[should_panic]
     fn topology_size_mismatch_rejected() {
         SweepPoint::steady("x", Topology::Ring { l: 64 }, run(100), 10, 10);
+    }
+
+    #[test]
+    fn model_points_append_the_model_field_to_the_spec() {
+        // payload-free points render exactly the historical spec (no
+        // model= field), so pre-existing cache keys are untouched...
+        let plain = SweepPoint::steady("p", Topology::Ring { l: 100 }, run(100), 10, 20);
+        assert!(!plain.spec().contains("model="), "{}", plain.spec());
+        // ...and payload points append the frozen model grammar
+        let ising = SweepPoint::model_steady(
+            "i",
+            Topology::Ring { l: 100 },
+            run(100),
+            10,
+            20,
+            ModelSpec::Ising { beta: 0.7, coupling: 1.0 },
+        );
+        assert_eq!(
+            ising.spec(),
+            "repro/v1 topo=ring:100 run=l=100;load=1;mode=win:10;trials=8;steps=0;seed=20020601 \
+             samp=modelsteady:10:20 model=ising:0.7:1"
+        );
+        let stats = SweepPoint::update_stats("s", Topology::Ring { l: 100 }, run(100), 10, 20);
+        assert_eq!(stats.model, ModelSpec::SiteCounter);
+        assert!(stats.spec().ends_with("samp=updstats:10:20 model=sitecounter"));
+        // attaching a payload to a steady point changes its identity
+        let steady_ising = SweepPoint::steady("p", Topology::Ring { l: 100 }, run(100), 10, 20)
+            .with_model(ModelSpec::Ising { beta: 0.7, coupling: 1.0 });
+        assert_ne!(steady_ising.key(), plain.key());
+    }
+
+    #[test]
+    #[should_panic]
+    fn model_steady_requires_a_payload() {
+        SweepPoint::model_steady(
+            "x",
+            Topology::Ring { l: 10 },
+            run(10),
+            5,
+            5,
+            ModelSpec::None,
+        );
+    }
+
+    #[test]
+    fn model_cache_text_roundtrip_is_bitwise() {
+        let st = ModelSteadyStats {
+            u: 0.2465,
+            u_err: 1e-4,
+            e: -0.6041,
+            e_err: 3e-3,
+            m_abs: 0.125,
+            m_err: 2e-3,
+            gvt_rate: 0.099,
+        };
+        let back =
+            PointResult::from_cache_text(&PointResult::ModelSteady(st).to_cache_text()).unwrap();
+        assert_eq!(back.model_steady().e.to_bits(), st.e.to_bits());
+        assert_eq!(back.model_steady().m_abs.to_bits(), st.m_abs.to_bits());
+        assert_eq!(back.model_steady().gvt_rate.to_bits(), st.gvt_rate.to_bits());
+
+        let mut us = UpdateStats::new();
+        us.events = 41;
+        us.interval_sum = 12.375;
+        us.interval_bins[0] = 30;
+        us.interval_bins[crate::pdes::model::INTERVAL_BINS - 1] = 11;
+        us.idle_bins[3] = 41;
+        let back =
+            PointResult::from_cache_text(&PointResult::UpdateStats(us.clone()).to_cache_text())
+                .unwrap();
+        assert_eq!(back.update_stats(), &us);
+        // truncated histograms are a parse error, never wrong data
+        assert!(PointResult::from_cache_text("updstats 1 0000000000000000\ni 0 1\nd 0\n").is_err());
+        assert!(PointResult::from_cache_text("modelsteady 0000000000000000\n").is_err());
     }
 
     #[test]

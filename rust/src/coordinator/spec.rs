@@ -5,7 +5,7 @@ use anyhow::{bail, Result};
 
 use crate::config::Config;
 use crate::output::Table;
-use crate::pdes::{Mode, Topology, VolumeLoad};
+use crate::pdes::{Mode, ModelSpec, Topology, VolumeLoad};
 
 use super::campaign::{run_plan, CampaignOpts, RunSpec, ShardStrategy};
 use super::plan::{SweepPlan, SweepPoint};
@@ -37,6 +37,15 @@ pub struct CampaignSpec {
     pub measure: usize,
     /// Master seed.
     pub seed: u64,
+    /// Model payload riding every grid point: "none" (default) |
+    /// "ising" | "sitecounter" (see `pdes::model`).  The payload rides
+    /// the steady sweep's trajectories — energy reduction lives in the
+    /// dedicated `repro ising` experiment.
+    pub model: String,
+    /// Inverse temperature β of the "ising" payload.
+    pub beta: f64,
+    /// Coupling J of the "ising" payload.
+    pub coupling: f64,
     /// Worker decomposition: "trials" (default) | "lattice" | "both".
     /// Since the declarative-campaign refactor, "trials" means *point*
     /// fan-out across the pool (each grid cell's trial fold is the
@@ -67,6 +76,9 @@ impl CampaignSpec {
             warm: cfg.integer(s, "warm", 2000) as usize,
             measure: cfg.integer(s, "measure", 2000) as usize,
             seed: cfg.integer(s, "seed", crate::DEFAULT_SEED),
+            model: cfg.text(s, "model", "none"),
+            beta: cfg.number(s, "beta", crate::pdes::model::DEFAULT_BETA),
+            coupling: cfg.number(s, "coupling", crate::pdes::model::DEFAULT_COUPLING),
             workers: cfg.text(s, "workers", "trials"),
             lattice_workers: cfg.integer(s, "lattice_workers", 0) as usize,
         };
@@ -91,9 +103,33 @@ impl CampaignSpec {
             "ring" | "kring" | "smallworld" => {}
             t => bail!("campaign: unknown topology {t:?} (ring|kring|smallworld)"),
         }
+        match spec.model.as_str() {
+            "none" | "ising" | "sitecounter" => {}
+            m => bail!("campaign: unknown model {m:?} (none|ising|sitecounter)"),
+        }
+        // NaN/∞ would break the canonical model spec rendering (cache
+        // keys); reject at parse time like `deltas`
+        if !spec.beta.is_finite() || spec.beta < 0.0 {
+            bail!("campaign: `beta` must be finite and >= 0");
+        }
+        if !spec.coupling.is_finite() {
+            bail!("campaign: `coupling` must be finite");
+        }
         // fail at parse time, not mid-sweep
         ShardStrategy::from_spec(&spec.workers, spec.lattice_workers)?;
         Ok(spec)
+    }
+
+    /// The resolved model payload of this campaign.
+    pub fn model_spec(&self) -> ModelSpec {
+        match self.model.as_str() {
+            "ising" => ModelSpec::Ising {
+                beta: self.beta,
+                coupling: self.coupling,
+            },
+            "sitecounter" => ModelSpec::SiteCounter,
+            _ => ModelSpec::None,
+        }
     }
 
     /// The resolved worker decomposition of this campaign.
@@ -163,23 +199,27 @@ impl CampaignSpec {
     /// The declarative form of this campaign: one steady point per
     /// (L, N_V, Δ) grid cell, in row order.
     pub fn to_plan(&self) -> SweepPlan {
+        let model = self.model_spec();
         let mut plan = SweepPlan::new(&self.name, format!("config campaign {}", self.name));
         for (l, nv, delta) in self.grid_cells() {
             let (mode, load) = self.point(nv, delta);
-            plan.push(SweepPoint::steady(
-                format!("L{l}_NV{nv}_d{delta}"),
-                self.topology_for(l),
-                RunSpec {
-                    l,
-                    load,
-                    mode,
-                    trials: self.trials,
-                    steps: 0,
-                    seed: self.seed,
-                },
-                self.warm,
-                self.measure,
-            ));
+            plan.push(
+                SweepPoint::steady(
+                    format!("L{l}_NV{nv}_d{delta}"),
+                    self.topology_for(l),
+                    RunSpec {
+                        l,
+                        load,
+                        mode,
+                        trials: self.trials,
+                        steps: 0,
+                        seed: self.seed,
+                    },
+                    self.warm,
+                    self.measure,
+                )
+                .with_model(model),
+            );
         }
         plan
     }
@@ -306,6 +346,49 @@ measure = 50
     fn bad_workers_rejected() {
         let cfg =
             Config::parse("[campaign]\nworkers = \"threads\"\nl = [8]\nnv = [1]").unwrap();
+        assert!(CampaignSpec::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn model_key_parses_attaches_and_executes() {
+        let cfg = Config::parse(
+            "[campaign]\nmode = \"windowed\"\nmodel = \"ising\"\nbeta = 0.5\n\
+             l = [12]\nnv = [1]\ndeltas = [3]\ntrials = 4\nwarm = 30\nmeasure = 30",
+        )
+        .unwrap();
+        let spec = CampaignSpec::from_config(&cfg).unwrap();
+        assert_eq!(
+            spec.model_spec(),
+            ModelSpec::Ising { beta: 0.5, coupling: 1.0 }
+        );
+        let plan = spec.to_plan();
+        assert!(plan.points[0].spec().ends_with("model=ising:0.5:1"), "{}", plan.points[0].spec());
+        let dir = std::env::temp_dir().join("repro_campaign_model_test");
+        let table = spec.execute(&dir).unwrap();
+        assert_eq!(table.len(), 1);
+        assert!(table.rows()[0][3] > 0.0 && table.rows()[0][3] <= 1.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn default_model_is_none_and_keys_are_unchanged() {
+        let cfg = Config::parse("[campaign]\nl = [8]\nnv = [1]").unwrap();
+        let spec = CampaignSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.model_spec(), ModelSpec::None);
+        // payload-free campaign specs must render without a model= field
+        // (pre-existing cache entries keep resolving)
+        for p in &spec.to_plan().points {
+            assert!(!p.spec().contains("model="), "{}", p.spec());
+        }
+    }
+
+    #[test]
+    fn bad_model_rejected() {
+        let cfg =
+            Config::parse("[campaign]\nmodel = \"potts\"\nl = [8]\nnv = [1]").unwrap();
+        assert!(CampaignSpec::from_config(&cfg).is_err());
+        let cfg =
+            Config::parse("[campaign]\nmodel = \"ising\"\nbeta = nan\nl = [8]\nnv = [1]").unwrap();
         assert!(CampaignSpec::from_config(&cfg).is_err());
     }
 

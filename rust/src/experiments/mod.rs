@@ -25,9 +25,11 @@ mod fig6;
 mod fig7;
 mod fig8;
 mod fig9;
+mod ising;
 mod kpz;
 mod meanfield;
 mod topology;
+mod updatestats;
 
 use std::path::PathBuf;
 
@@ -52,6 +54,11 @@ pub struct Ctx {
     pub lattice_workers: usize,
     /// Skip sweep points already present in the result cache.
     pub resume: bool,
+    /// Inverse temperature β of the kinetic Ising payload (`--beta`;
+    /// only the `ising` experiment reads it).
+    pub beta: f64,
+    /// Ising coupling J (`--coupling`).
+    pub coupling: f64,
 }
 
 impl Ctx {
@@ -65,6 +72,8 @@ impl Ctx {
             workers: 0,
             lattice_workers: 1,
             resume: false,
+            beta: crate::pdes::model::DEFAULT_BETA,
+            coupling: crate::pdes::model::DEFAULT_COUPLING,
         }
     }
 
@@ -111,7 +120,7 @@ impl Ctx {
 /// All experiment names in run order.
 pub const ALL: &[&str] = &[
     "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "eq8",
-    "kpz", "meanfield", "appendix", "dims", "topology",
+    "kpz", "meanfield", "appendix", "dims", "topology", "ising", "updatestats",
 ];
 
 /// The declarative sweep plan of one experiment at one fidelity, or
@@ -135,6 +144,8 @@ pub fn plan_for(name: &str, profile: &Profile) -> Option<SweepPlan> {
         "appendix" => appendix::plan(profile),
         "dims" => dims::plan(profile),
         "topology" => topology::plan(profile),
+        "ising" => ising::plan(profile),
+        "updatestats" => updatestats::plan(profile),
         _ => return None,
     })
 }
@@ -158,6 +169,8 @@ pub fn run(name: &str, ctx: &Ctx) -> Result<()> {
         "appendix" => appendix::run(ctx),
         "dims" => dims::run(ctx),
         "topology" => topology::run(ctx),
+        "ising" => ising::run(ctx),
+        "updatestats" => updatestats::run(ctx),
         "all" => {
             for n in ALL {
                 println!("\n##### experiment {n} #####");
@@ -399,6 +412,8 @@ mod tests {
             ("appendix", 120, 30),
             ("dims", 8, 4),
             ("topology", 30, 15),
+            ("ising", 14, 6),
+            ("updatestats", 4, 2),
         ] {
             assert_eq!(count(name, false), full, "{name} full grid");
             assert_eq!(count(name, true), quick, "{name} quick grid");

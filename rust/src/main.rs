@@ -20,10 +20,12 @@ use anyhow::Result;
 
 use repro::cli::Args;
 use repro::coordinator::{
-    run_artifact_ensemble, run_topology_ensemble, JaxRunSpec, Profile, RunSpec,
+    run_artifact_ensemble, run_topology_ensemble_model, JaxRunSpec, Profile, RunSpec,
+    ShardStrategy,
 };
 use repro::experiments::{self, Ctx};
-use repro::pdes::{Mode, Topology, VolumeLoad};
+use repro::pdes::model::{DEFAULT_BETA, DEFAULT_COUPLING};
+use repro::pdes::{Mode, ModelSpec, Topology, VolumeLoad};
 use repro::runtime::PdesRuntime;
 use repro::stats::Lane;
 use repro::DEFAULT_SEED;
@@ -56,6 +58,34 @@ fn topology_from(args: &Args, l: usize) -> Result<Topology> {
     })
 }
 
+/// Parse and validate `--beta`/`--coupling` — same rules the config
+/// campaign path enforces (`spec.rs`), so bad values are a clean CLI
+/// error instead of a later canon_f64/Ising1d assert panic.
+fn ising_params_from(args: &Args) -> Result<(f64, f64)> {
+    let beta = args.opt_f64("beta", DEFAULT_BETA)?;
+    let coupling = args.opt_f64("coupling", DEFAULT_COUPLING)?;
+    if !beta.is_finite() || beta < 0.0 {
+        anyhow::bail!("--beta must be finite and >= 0, got {beta}");
+    }
+    if !coupling.is_finite() {
+        anyhow::bail!("--coupling must be finite, got {coupling}");
+    }
+    Ok((beta, coupling))
+}
+
+fn model_from(args: &Args) -> Result<ModelSpec> {
+    let name = args.opt("model", "none");
+    Ok(match name.as_str() {
+        "none" => ModelSpec::None,
+        "ising" => {
+            let (beta, coupling) = ising_params_from(args)?;
+            ModelSpec::Ising { beta, coupling }
+        }
+        "sitecounter" => ModelSpec::SiteCounter,
+        other => anyhow::bail!("--model {other:?}: expected none|ising|sitecounter"),
+    })
+}
+
 fn load_from(args: &Args) -> Result<VolumeLoad> {
     let nv = args.opt("nv", "1");
     Ok(if nv == "inf" {
@@ -84,12 +114,13 @@ fn main() -> Result<()> {
     match args.command.as_str() {
         "" | "help" => {
             println!(
-                "usage: repro <fig2..fig11|eq8|kpz|meanfield|appendix|dims|topology|all>\n\
+                "usage: repro <fig2..fig11|eq8|kpz|meanfield|appendix|dims|topology|ising|updatestats|all>\n\
                  \x20                 [--quick] [--out DIR] [--seed S] [--workers N]\n\
                  \x20                 [--lattice-workers N] [--resume]\n\
                  \x20      repro plan <name|all> [--quick] [--seed S]\n\
                  \x20      repro run  --l L --nv NV --delta D [--rd] [--trials N] [--steps T] [--seed S]\n\
                  \x20                 [--topology ring|kring|smallworld] [--k K] [--links N]\n\
+                 \x20                 [--model none|ising|sitecounter] [--beta B] [--coupling J]\n\
                  \x20      repro jax  --l L --nv NV --delta D [--trials N] [--steps T] [--artifacts DIR]\n\
                  \x20      repro campaign --config FILE [--out DIR]\n\
                  \x20      repro info [--artifacts DIR]"
@@ -171,8 +202,18 @@ fn main() -> Result<()> {
                 seed: args.opt_u64("seed", DEFAULT_SEED)?,
             };
             let topology = topology_from(&args, spec.l)?;
-            println!("native campaign on {}: {spec:?}", topology.tag());
-            let series = run_topology_ensemble(topology, &spec);
+            let model = model_from(&args)?;
+            if model == ModelSpec::None {
+                println!("native campaign on {}: {spec:?}", topology.tag());
+            } else {
+                println!(
+                    "native campaign on {} with {} payload: {spec:?}",
+                    topology.tag(),
+                    model.tag()
+                );
+            }
+            let series =
+                run_topology_ensemble_model(topology, &spec, &model, ShardStrategy::Trials);
             print_summary(&series);
             Ok(())
         }
@@ -193,6 +234,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         name => {
+            let (beta, coupling) = ising_params_from(&args)?;
             let ctx = Ctx {
                 out_dir: args.opt("out", "results").into(),
                 quick: args.has_flag("quick"),
@@ -200,6 +242,8 @@ fn main() -> Result<()> {
                 workers: args.opt_u64("workers", 0)? as usize,
                 lattice_workers: args.opt_u64("lattice-workers", 1)? as usize,
                 resume: args.has_flag("resume"),
+                beta,
+                coupling,
             };
             experiments::run(name, &ctx)
         }

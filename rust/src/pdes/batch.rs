@@ -31,6 +31,7 @@
 //! a periodic exact rescan (`gvt_resync_period`) guards the tracked
 //! aggregates against drift.
 
+use super::model::Model;
 use super::topology::{NeighbourTable, Topology};
 use super::{Mode, VolumeLoad};
 use crate::rng::Rng;
@@ -127,6 +128,10 @@ pub struct BatchPdes {
     nv1: bool,
     /// One independent generator per replica row.
     rngs: Vec<Rng>,
+    /// Model payloads, one per replica row (`pdes::model`) — empty when
+    /// no payload is attached, in which case the step runs the exact
+    /// fused hot path with no model branches anywhere in the sweep.
+    models: Vec<Box<dyn Model>>,
     t: u64,
     /// Honest two-neighbour ring: the topology tag *and* the supplied
     /// table agree on `[left, right]` ring adjacency.  Precondition of the
@@ -208,10 +213,40 @@ impl BatchPdes {
             p_side,
             nv1,
             rngs,
+            models: Vec::new(),
             t: 0,
             ring2,
             resync_period: GVT_RESYNC_PERIOD,
         }
+    }
+
+    /// Attach one model payload per replica row (see `pdes::model`).
+    /// Payload events fire inside the update sweep from the next step on;
+    /// models that draw from the row stream start a new (deterministic)
+    /// trajectory family from this point.
+    pub fn attach_models(&mut self, models: Vec<Box<dyn Model>>) {
+        assert_eq!(
+            models.len(),
+            self.rows,
+            "one model payload per replica row required"
+        );
+        self.models = models;
+    }
+
+    /// True when model payloads are attached.
+    #[inline]
+    pub fn has_models(&self) -> bool {
+        !self.models.is_empty()
+    }
+
+    /// The model payload of one row, if attached.
+    pub fn model_row(&self, row: usize) -> Option<&dyn Model> {
+        self.models.get(row).map(|m| m.as_ref())
+    }
+
+    /// Mutable model payload of one row, if attached (statistics resets).
+    pub fn model_row_mut(&mut self, row: usize) -> Option<&mut Box<dyn Model>> {
+        self.models.get_mut(row)
     }
 
     /// The per-trial RNG streams for trial ids `first .. first + rows`
@@ -402,9 +437,12 @@ impl BatchPdes {
             stats,
             rngs,
             nbr,
+            models,
             t,
             ..
         } = self;
+        let has_model = !models.is_empty();
+        let t_now = *t;
 
         for row in 0..rows {
             let base = row * pes;
@@ -420,7 +458,31 @@ impl BatchPdes {
             let row_tau = &mut tau[base..base + pes];
             let row_mask = mask.as_deref_mut().map(|m| &mut m[base..base + pes]);
 
-            let s = if ring_fast {
+            let s = if has_model {
+                // model-payload path: the split decide/update shape for
+                // every mode (decisions over the frozen row are
+                // bit-identical to the fused sweeps' — the §Perf in-place
+                // safety argument — and RD modes keep pend at
+                // PEND_INTERIOR, which the generic decision pass treats
+                // as "no neighbour check"), with the payload hook fired
+                // per updating PE between the pend redraw and the
+                // exponential draw (the pdes::model draw-order contract)
+                let row_pend = &mut pend[base..base + pes];
+                decide_row_generic(row_tau, row_pend, nbr, edge, ok);
+                if let Some(m) = row_mask {
+                    m.copy_from_slice(&ok[..]);
+                }
+                update_row_model(
+                    row_tau,
+                    row_pend,
+                    nbr,
+                    ok,
+                    redraw,
+                    rng,
+                    models[row].as_mut(),
+                    t_now,
+                )
+            } else if ring_fast {
                 step_row_ring_nv1(row_tau, edge, rng, row_mask)
             } else if enforce_nn {
                 let row_pend = &mut pend[base..base + pes];
@@ -467,11 +529,13 @@ impl BatchPdes {
             p_side: self.p_side,
             nv1: self.nv1,
             ring2: self.ring2,
+            t: self.t,
             tau: &mut self.tau,
             pend: &mut self.pend,
             rngs: &mut self.rngs,
             counts: &mut self.counts,
             stats: &mut self.stats,
+            models: &mut self.models,
             nbr: &self.nbr,
         }
     }
@@ -496,11 +560,15 @@ pub(crate) struct StepParts<'a> {
     pub p_side: f64,
     pub nv1: bool,
     pub ring2: bool,
+    /// Current parallel step index (payload events stamp it).
+    pub t: u64,
     pub tau: &'a mut [f64],
     pub pend: &'a mut [u8],
     pub rngs: &'a mut [Rng],
     pub counts: &'a mut [u32],
     pub stats: &'a mut [StepStats],
+    /// One payload per row, or empty when no model is attached.
+    pub models: &'a mut [Box<dyn Model>],
     pub nbr: &'a NeighbourTable,
 }
 
@@ -644,6 +712,54 @@ fn update_row_generic(
             if let Some(p_side) = redraw {
                 *pd = draw_pending_slot(rng, p_side, false, nb.len());
             }
+            x += rng.exponential();
+            *v = x;
+        }
+        mn = mn.min(x);
+        mx = mx.max(x);
+        sum += x;
+    }
+    StepStats {
+        n_updated: n_up,
+        sum,
+        min: mn,
+        max: mx,
+    }
+}
+
+/// [`update_row_generic`] with a model payload: identical arithmetic,
+/// draw order and aggregates, plus the payload hook fired per updating
+/// PE between the pend redraw and the exponential draw (the
+/// `pdes::model` draw-order contract — `ShardedPdes::update_row` mirrors
+/// this exactly, which is what keeps payload runs bit-identical across
+/// engines and worker counts).
+#[allow(clippy::too_many_arguments)]
+fn update_row_model(
+    row_tau: &mut [f64],
+    row_pend: &mut [u8],
+    nbr: &NeighbourTable,
+    ok: &[bool],
+    redraw: Option<f64>,
+    rng: &mut Rng,
+    model: &mut dyn Model,
+    t: u64,
+) -> StepStats {
+    let mut n_up = 0u32;
+    let (mut mn, mut mx, mut sum) = (f64::INFINITY, f64::NEG_INFINITY, 0.0);
+    for (k, (((v, pd), &up), nb)) in row_tau
+        .iter_mut()
+        .zip(row_pend.iter_mut())
+        .zip(ok)
+        .zip(nbr.lists())
+        .enumerate()
+    {
+        let mut x = *v;
+        if up {
+            n_up += 1;
+            if let Some(p_side) = redraw {
+                *pd = draw_pending_slot(rng, p_side, false, nb.len());
+            }
+            model.apply_event(k, t, x, nb, rng);
             x += rng.exponential();
             *v = x;
         }
@@ -842,6 +958,113 @@ mod tests {
             let chi2 = slot_chi_squared(z, nv, 40_000, seed);
             assert!(chi2 < 30.0, "z={z} NV={nv}: chi2 = {chi2}");
         }
+    }
+
+    #[test]
+    fn drawless_payloads_are_trajectory_invisible() {
+        // Attaching NoModel (or SiteCounter — no draws either) routes the
+        // step through the split decide/update model path, which must
+        // reproduce the fused sweeps bit for bit: this directly pins the
+        // fused-vs-split equivalence the §Perf in-place-safety argument
+        // claims, on every mode family.
+        use crate::pdes::ModelSpec;
+        for (load, mode) in [
+            (VolumeLoad::Sites(1), Mode::Windowed { delta: 2.0 }), // fused ring path
+            (VolumeLoad::Sites(4), Mode::Conservative),            // generic path
+            (VolumeLoad::Infinite, Mode::WindowedRd { delta: 1.5 }), // local path
+        ] {
+            for topo in [
+                Topology::Ring { l: 16 },
+                Topology::KRing { l: 16, k: 2 },
+                Topology::SmallWorld { l: 16, extra: 5, seed: 3 },
+            ] {
+                let mut plain = batch(topo, load, mode, 2, 21);
+                let mut no_model = batch(topo, load, mode, 2, 21);
+                no_model.attach_models(vec![
+                    Box::new(crate::pdes::NoModel),
+                    Box::new(crate::pdes::NoModel),
+                ]);
+                let mut counter = batch(topo, load, mode, 2, 21);
+                counter.attach_models(ModelSpec::SiteCounter.build_rows(topo.len(), 2));
+                for step in 0..80 {
+                    plain.step();
+                    no_model.step();
+                    counter.step();
+                    for (tagged, sim) in [("NoModel", &no_model), ("SiteCounter", &counter)] {
+                        for row in 0..2 {
+                            for (k, (a, b)) in
+                                plain.tau_row(row).iter().zip(sim.tau_row(row)).enumerate()
+                            {
+                                assert_eq!(
+                                    a.to_bits(),
+                                    b.to_bits(),
+                                    "{topo:?} {mode:?} {tagged} step {step} row {row} PE {k}"
+                                );
+                            }
+                            assert_eq!(plain.pending_row(row), sim.pending_row(row));
+                            assert_eq!(plain.counts()[row], sim.counts()[row]);
+                            assert_eq!(plain.step_stats_row(row), sim.step_stats_row(row));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn site_counter_events_match_update_counts() {
+        use crate::pdes::ModelSpec;
+        let topo = Topology::Ring { l: 20 };
+        let mut sim = batch(topo, VolumeLoad::Sites(1), Mode::Windowed { delta: 3.0 }, 2, 5);
+        sim.attach_models(ModelSpec::SiteCounter.build_rows(20, 2));
+        let mut expect = [0u64; 2];
+        for _ in 0..60 {
+            sim.step();
+            for row in 0..2 {
+                expect[row] += sim.counts()[row] as u64;
+            }
+        }
+        for row in 0..2 {
+            let st = sim.model_row(row).unwrap().update_stats().unwrap();
+            assert_eq!(st.events, expect[row], "row {row}");
+            assert_eq!(
+                st.interval_bins.iter().sum::<u64>(),
+                expect[row],
+                "row {row}: every event binned exactly once"
+            );
+            assert_eq!(st.idle_bins.iter().sum::<u64>(), expect[row]);
+        }
+    }
+
+    #[test]
+    fn ising_payload_thermalizes_toward_exact_energy() {
+        // a cheap sanity check (the full invariance test with documented
+        // tolerances lives in tests/ising_physics.rs): from the ordered
+        // start (e = −1), the payload must relax *upward* toward the
+        // β = 0.7 equilibrium −tanh(0.7) ≈ −0.604
+        use crate::pdes::ModelSpec;
+        let l = 64;
+        let topo = Topology::Ring { l };
+        let mut sim = batch(topo, VolumeLoad::Sites(1), Mode::Conservative, 2, 12);
+        sim.attach_models(ModelSpec::Ising { beta: 0.7, coupling: 1.0 }.build_rows(l, 2));
+        let nbr = topo.neighbour_table();
+        for _ in 0..400 {
+            sim.step();
+        }
+        let mut acc = 0.0;
+        let steps = 800;
+        for _ in 0..steps {
+            sim.step();
+            for row in 0..2 {
+                acc += sim.model_row(row).unwrap().observe(&nbr).unwrap().energy;
+            }
+        }
+        let e = acc / (steps as f64 * 2.0);
+        let exact = crate::pdes::Ising1d::exact_ring_energy(0.7, 1.0);
+        assert!(
+            (e - exact).abs() < 0.08,
+            "e = {e} vs exact {exact} (loose sanity bound; see tests/ising_physics.rs)"
+        );
     }
 
     #[test]

@@ -17,6 +17,9 @@
 //! * [`ShardedPdes`] — the same engine stepped by a worker-per-block
 //!   domain decomposition (halo-exchange decisions, per-step barrier),
 //!   bit-identical to [`BatchPdes`] for every worker count;
+//! * [`model`] — pluggable per-PE model payloads (kinetic Ising, update
+//!   statistics) whose events ride the update sweeps of both engines
+//!   (causally safe under Eq. 1 — see `model.rs` and DESIGN.md §Models);
 //! * [`RingPdes`] / [`LatticePdes`] — thin `B = 1` views kept for the
 //!   paper-facing API and for cross-validation;
 //! * [`InstrumentedRing`] — an independent serial implementation with
@@ -26,6 +29,7 @@ mod batch;
 mod instrument;
 mod lattice;
 mod mode;
+pub mod model;
 pub(crate) mod ring;
 mod sharded;
 mod topology;
@@ -34,6 +38,7 @@ pub use batch::{BatchPdes, GVT_RESYNC_PERIOD, PEND_ALL, PEND_INTERIOR};
 pub use instrument::{InstrumentedRing, MeanFieldCounters};
 pub use lattice::LatticePdes;
 pub use mode::{canon_f64, parse_canon_f64, Mode, VolumeLoad};
+pub use model::{Ising1d, Model, ModelFrame, ModelSpec, NoModel, SiteCounter, UpdateStats};
 pub use ring::{Pending, RingPdes, StepOutcome};
 pub use sharded::ShardedPdes;
 pub use topology::{NeighbourTable, Topology};

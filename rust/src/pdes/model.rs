@@ -1,0 +1,643 @@
+//! Pluggable model payloads: the physical system the PDES schedules.
+//!
+//! The paper's closing claim is that the Δ-window scheduler "may find
+//! numerous applications in modeling the evolution of general spatially
+//! extended short-range interacting systems with asynchronous dynamics,
+//! including dynamic Monte Carlo studies".  This module is that
+//! application surface: a [`Model`] carries per-PE *physical* state (one
+//! spin, one set of counters, ...) alongside the engine's virtual-time
+//! horizon, and its [`Model::apply_event`] hook fires exactly once per
+//! executed event — at the event's virtual time, with the PE's neighbour
+//! list and the row's RNG stream.
+//!
+//! ## Causal safety (DESIGN.md §Models)
+//!
+//! A payload event at PE k may read neighbour payload state because the
+//! conservative rule (Eq. 1) granted the event only when τ_k ≤ τ_j for
+//! every checked neighbour j: each neighbour's *next* event lies at a
+//! virtual time ≥ τ_k, so its current payload state *is* its state at the
+//! event's virtual time.  This is exactly the argument that makes the
+//! sharded halo kernel sound — phase A freezes all decisions against
+//! τ(t) before any write — so payload updates ride the existing update
+//! sweeps of both engines unchanged, including across shard boundaries.
+//! Models that read neighbour state should run at N_V = 1, where every
+//! event checks every neighbour (at N_V > 1 interior events skip the
+//! check, and a same-step in-place read can then see a neighbour state
+//! from a later virtual time).  Ties (τ_k = τ_j with both updating, e.g.
+//! the synchronized first step) resolve in PE index order — the same
+//! order in both engines, so bit-identity is unaffected.
+//!
+//! ## Draw-order contract (load-bearing for replay and bit-identity)
+//!
+//! For each *updating* PE, in PE index order: (1) the pending-event
+//! redraw (when the mode redraws, exactly as before), (2) the model's
+//! [`Model::apply_event`] — which may consume row-stream draws, a fixed
+//! count per event per model — then (3) the exponential time increment.
+//! Both `BatchPdes` and `ShardedPdes` follow this order, so payload runs
+//! stay bit-identical across engines and worker counts (pinned by the
+//! determinism suite and `python/tools/crosscheck_sharded.py`).
+//! Attaching a model that draws (e.g. [`Ising1d`], one uniform per
+//! event) shifts the row stream relative to a payload-free run — a new,
+//! equally deterministic trajectory family; [`NoModel`] and
+//! [`SiteCounter`] draw nothing and are trajectory-invisible (tested).
+//!
+//! ## Cost model under `NoModel`
+//!
+//! A payload is attached per replica row as a boxed trait object, and the
+//! engine selects its sweep once per row, not per PE: with *no* models
+//! attached (`ModelSpec::None` attaches nothing) the step runs the exact
+//! fused hot path of the §Perf PR — no extra branches, loads or
+//! allocations anywhere in the sweep.  The `model_step/none` bench family
+//! pins this against `batch_step`.
+
+use std::any::Any;
+
+use anyhow::{bail, Result};
+
+use super::mode::{canon_f64, parse_canon_f64};
+use super::topology::NeighbourTable;
+use crate::rng::Rng;
+
+/// Default inverse temperature of the kinetic Ising payload (`--beta`).
+pub const DEFAULT_BETA: f64 = 0.7;
+/// Default ferromagnetic coupling J of the Ising payload (`--coupling`).
+pub const DEFAULT_COUPLING: f64 = 1.0;
+
+/// Interval-histogram bins of [`SiteCounter`] (last bin = overflow).
+pub const INTERVAL_BINS: usize = 64;
+/// Virtual-time width of one [`SiteCounter`] interval bin.
+pub const INTERVAL_BIN_WIDTH: f64 = 0.25;
+/// Idle-streak bins of [`SiteCounter`] (last bin = overflow).
+pub const IDLE_BINS: usize = 64;
+
+/// Scalar payload observables of one replica row (what the `ising`
+/// experiment time-averages).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ModelFrame {
+    /// Energy per PE (for [`Ising1d`]: −J/2L · Σ_k Σ_{j∈nbr(k)} s_k s_j).
+    pub energy: f64,
+    /// Absolute magnetization per PE |Σ s_k| / L.
+    pub mag_abs: f64,
+}
+
+/// Per-PE update statistics of one replica row (cond-mat/0306222): the
+/// histogram of inter-update *virtual-time* intervals and of idle
+/// *parallel-step* streaks, over all PEs of the row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UpdateStats {
+    /// Executed events counted.
+    pub events: u64,
+    /// Σ of inter-update virtual-time intervals (mean = sum / events).
+    pub interval_sum: f64,
+    /// Interval histogram: bin b counts dt ∈ [b·W, (b+1)·W) for the
+    /// bin width W = [`INTERVAL_BIN_WIDTH`]; the last bin is overflow.
+    pub interval_bins: Vec<u64>,
+    /// Idle-streak histogram: bin s counts events whose PE sat blocked
+    /// for exactly s parallel steps since its previous event; the last
+    /// bin is overflow.
+    pub idle_bins: Vec<u64>,
+}
+
+impl UpdateStats {
+    /// Empty statistics.
+    pub fn new() -> Self {
+        Self {
+            events: 0,
+            interval_sum: 0.0,
+            interval_bins: vec![0; INTERVAL_BINS],
+            idle_bins: vec![0; IDLE_BINS],
+        }
+    }
+
+    /// Accumulate another row's (or trial's) statistics.  Integer lanes
+    /// merge exactly; `interval_sum` is fp addition, so fold in a fixed
+    /// (trial/row) order for reproducible bytes — the rule the canonical
+    /// serial campaign fold follows.
+    pub fn merge(&mut self, other: &Self) {
+        self.events += other.events;
+        self.interval_sum += other.interval_sum;
+        for (a, b) in self.interval_bins.iter_mut().zip(&other.interval_bins) {
+            *a += b;
+        }
+        for (a, b) in self.idle_bins.iter_mut().zip(&other.idle_bins) {
+            *a += b;
+        }
+    }
+
+    /// Mean inter-update virtual-time interval (NaN when no events).
+    pub fn mean_interval(&self) -> f64 {
+        self.interval_sum / self.events as f64
+    }
+}
+
+impl Default for UpdateStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A model payload carried by one replica row of the engine.
+///
+/// One instance per row (rows are independent replicas), so the sharded
+/// engine's row-parallel phase B hands each worker its rows' payloads
+/// without sharing.  Implementations own their per-PE state as flat
+/// arrays sized at construction ([`ModelSpec::build_rows`]).
+pub trait Model: Send {
+    /// Short tag ("ising", "sitecounter", "none") for labels and logs.
+    fn tag(&self) -> &'static str;
+
+    /// One executed event at PE `k`, parallel step `t`, virtual time
+    /// `tau` (the PE's time *before* its exponential increment).  `nbrs`
+    /// is the PE's CSR neighbour list; `rng` the row stream — any draws
+    /// here are part of the trajectory (fixed count per event).
+    fn apply_event(&mut self, k: usize, t: u64, tau: f64, nbrs: &[u32], rng: &mut Rng);
+
+    /// Scalar observables of the current payload state, if the model has
+    /// any (`None` for counter-only / trivial payloads).
+    fn observe(&self, _nbr: &NeighbourTable) -> Option<ModelFrame> {
+        None
+    }
+
+    /// Update-statistics snapshot, if the model records any.
+    fn update_stats(&self) -> Option<UpdateStats> {
+        None
+    }
+
+    /// Reset accumulated statistics (histograms/counters) without
+    /// touching the physical state — called between warm-up and
+    /// measurement.
+    fn reset_stats(&mut self) {}
+
+    /// Typed access for tests and reducers.
+    fn as_any(&self) -> &dyn Any;
+}
+
+/// The trivial payload: no state, no draws, no cost.  Attaching it is
+/// trajectory-invisible (tested) — but `ModelSpec::None` attaches
+/// *nothing at all*, which keeps the fused hot path untouched.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoModel;
+
+impl Model for NoModel {
+    fn tag(&self) -> &'static str {
+        "none"
+    }
+
+    fn apply_event(&mut self, _k: usize, _t: u64, _tau: f64, _nbrs: &[u32], _rng: &mut Rng) {}
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// Asynchronous kinetic Ising chain (Glauber dynamics) — the "dynamic
+/// Monte Carlo" workload the paper's introduction motivates, generalized
+/// from the chain to any PE graph through the CSR neighbour table.
+///
+/// Each PE carries one spin of a ferromagnetic (J > 0) system; an
+/// executed event attempts a Glauber flip against the neighbours' spins
+/// at the event's virtual time (causally safe at N_V = 1, see module
+/// docs).  Exactly ONE uniform draw per event, flip or not — a fixed
+/// draw count keeps replay trivial.
+///
+/// Ground truth: on the ring, the time-averaged energy per spin must
+/// equal the exact 1-d equilibrium value e = −J·tanh(βJ) independent of
+/// the Δ-window — the window changes *scheduling*, never physics
+/// (enforced by `tests/ising_physics.rs`).
+#[derive(Clone, Debug)]
+pub struct Ising1d {
+    beta: f64,
+    coupling: f64,
+    spins: Vec<i8>,
+    /// Incrementally tracked Σ_k s_k (exact integer arithmetic — every
+    /// mutation goes through [`Self::apply_event`]).
+    mag: i64,
+    /// Incrementally tracked change of the double bond sum relative to
+    /// the all-up start (where it equals the directed edge count).
+    /// Integer-exact, so [`Self::observe`] is O(1) instead of an
+    /// O(L·deg) rescan per measured step; the rescan [`Self::bond_sum`]
+    /// stays as the independent check (golden fixture + debug assert).
+    bond2_delta: i64,
+}
+
+impl Ising1d {
+    /// Ordered (all-up) start, matching the historical example.
+    pub fn new(pes: usize, beta: f64, coupling: f64) -> Self {
+        assert!(beta.is_finite() && beta >= 0.0, "beta must be finite and >= 0");
+        assert!(coupling.is_finite(), "coupling must be finite");
+        Self {
+            beta,
+            coupling,
+            spins: vec![1; pes],
+            mag: pes as i64,
+            bond2_delta: 0,
+        }
+    }
+
+    /// The spin configuration (±1 per PE).
+    pub fn spins(&self) -> &[i8] {
+        &self.spins
+    }
+
+    /// Inverse temperature β.
+    pub fn beta(&self) -> f64 {
+        self.beta
+    }
+
+    /// Coupling J.
+    pub fn coupling(&self) -> f64 {
+        self.coupling
+    }
+
+    /// Integer double bond sum Σ_k Σ_{j∈nbr(k)} s_k s_j (every bond
+    /// counted twice) — the exact-compare lane of the golden fixture.
+    pub fn bond_sum(&self, nbr: &NeighbourTable) -> i64 {
+        let mut bond2 = 0i64;
+        for (k, nb) in nbr.lists().enumerate() {
+            let s = self.spins[k] as i64;
+            for &j in nb {
+                bond2 += s * self.spins[j as usize] as i64;
+            }
+        }
+        bond2
+    }
+
+    /// Exact 1-d equilibrium energy per spin, e = −J·tanh(βJ) — the
+    /// ring's ground truth (not exact on k-rings / small-worlds).
+    pub fn exact_ring_energy(beta: f64, coupling: f64) -> f64 {
+        -coupling * (beta * coupling).tanh()
+    }
+}
+
+impl Model for Ising1d {
+    fn tag(&self) -> &'static str {
+        "ising"
+    }
+
+    fn apply_event(&mut self, k: usize, _t: u64, _tau: f64, nbrs: &[u32], rng: &mut Rng) {
+        let mut h = 0i64;
+        for &j in nbrs {
+            h += self.spins[j as usize] as i64;
+        }
+        let d_e = 2.0 * self.coupling * self.spins[k] as f64 * h as f64;
+        let p_flip = 1.0 / (1.0 + (self.beta * d_e).exp());
+        if rng.uniform() < p_flip {
+            self.spins[k] = -self.spins[k];
+            // keep the O(1) observables in sync (exact integer updates):
+            // Δmag = s_new − s_old = 2·s_new; Δbond2 = 2·(s_new − s_old)·h
+            let s_new = self.spins[k] as i64;
+            self.mag += 2 * s_new;
+            self.bond2_delta += 4 * s_new * h;
+        }
+    }
+
+    fn observe(&self, nbr: &NeighbourTable) -> Option<ModelFrame> {
+        let l = self.spins.len();
+        // all-up start: every directed edge contributes +1, so the
+        // current double bond sum is edges + the tracked delta — O(1)
+        // per call where the rescan is O(L·deg) (it runs every measured
+        // step of the ising experiment)
+        let bond2 = nbr.edges() as i64 + self.bond2_delta;
+        debug_assert_eq!(
+            bond2,
+            self.bond_sum(nbr),
+            "tracked bond sum drifted from the rescan"
+        );
+        debug_assert_eq!(
+            self.mag,
+            self.spins.iter().map(|&s| s as i64).sum::<i64>(),
+            "tracked magnetization drifted from the rescan"
+        );
+        Some(ModelFrame {
+            energy: -self.coupling * bond2 as f64 / (2.0 * l as f64),
+            mag_abs: (self.mag as f64 / l as f64).abs(),
+        })
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// Update-statistics payload (cond-mat/0306222): records, per executed
+/// event, the virtual-time interval since the PE's previous event and
+/// the number of parallel steps the PE sat blocked in between.  Draws
+/// nothing, so it is trajectory-invisible (tested) — the histograms
+/// describe the *scheduler's* update pattern, unperturbed.
+#[derive(Clone, Debug)]
+pub struct SiteCounter {
+    /// Virtual time of each PE's previous event (0 = the synchronized
+    /// start; the first event's interval is measured from τ = 0).
+    last_tau: Vec<f64>,
+    /// Parallel step of each PE's previous event (−1 = never updated).
+    last_step: Vec<i64>,
+    stats: UpdateStats,
+}
+
+impl SiteCounter {
+    /// Fresh counters over `pes` PEs.
+    pub fn new(pes: usize) -> Self {
+        Self {
+            last_tau: vec![0.0; pes],
+            last_step: vec![-1; pes],
+            stats: UpdateStats::new(),
+        }
+    }
+}
+
+impl Model for SiteCounter {
+    fn tag(&self) -> &'static str {
+        "sitecounter"
+    }
+
+    fn apply_event(&mut self, k: usize, t: u64, tau: f64, _nbrs: &[u32], _rng: &mut Rng) {
+        let dt = tau - self.last_tau[k];
+        let bin = ((dt / INTERVAL_BIN_WIDTH) as usize).min(INTERVAL_BINS - 1);
+        self.stats.interval_bins[bin] += 1;
+        self.stats.interval_sum += dt;
+        // a PE executes at most one event per parallel step, so
+        // t >= last_step + 1 always; the difference minus one is the
+        // blocked-streak length in steps
+        let idle = (t as i64 - self.last_step[k] - 1).max(0) as usize;
+        self.stats.idle_bins[idle.min(IDLE_BINS - 1)] += 1;
+        self.stats.events += 1;
+        self.last_tau[k] = tau;
+        self.last_step[k] = t as i64;
+    }
+
+    fn update_stats(&self) -> Option<UpdateStats> {
+        Some(self.stats.clone())
+    }
+
+    fn reset_stats(&mut self) {
+        // histograms restart; last-event state is kept so the first
+        // post-reset interval still measures a real inter-update gap
+        self.stats = UpdateStats::new();
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// Declarative payload choice — the `model=` component of specs, configs
+/// and cache keys.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ModelSpec {
+    /// No payload attached (the engine's fused hot path, untouched).
+    None,
+    /// Kinetic Ising ([`Ising1d`]) at inverse temperature β, coupling J.
+    Ising { beta: f64, coupling: f64 },
+    /// Update-statistics counters ([`SiteCounter`]).
+    SiteCounter,
+}
+
+/// `ModelSpec` is `Eq`: β and J are validated non-NaN by the constructors
+/// and the spec grammar, so the derived `PartialEq` is reflexive in
+/// practice and specs can key the campaign result cache (same rationale
+/// as [`super::Mode`]).
+impl Eq for ModelSpec {}
+
+impl ModelSpec {
+    /// Short tag for labels.
+    pub fn tag(self) -> &'static str {
+        match self {
+            ModelSpec::None => "none",
+            ModelSpec::Ising { .. } => "ising",
+            ModelSpec::SiteCounter => "sitecounter",
+        }
+    }
+
+    /// Canonical, stable spec string — the model component of a campaign
+    /// cache key.  Grammar (v1, frozen — same stability guarantee as
+    /// [`super::Mode::spec_string`]): `none` | `ising:<beta>:<coupling>`
+    /// | `sitecounter`, numbers rendered by [`canon_f64`].  Payload-free
+    /// points omit the field entirely, so every pre-existing cache key is
+    /// unchanged.
+    pub fn spec_string(self) -> String {
+        match self {
+            ModelSpec::None => "none".into(),
+            ModelSpec::Ising { beta, coupling } => {
+                format!("ising:{}:{}", canon_f64(beta), canon_f64(coupling))
+            }
+            ModelSpec::SiteCounter => "sitecounter".into(),
+        }
+    }
+
+    /// Parse a [`ModelSpec::spec_string`] rendering (exact inverse).
+    pub fn parse_spec(s: &str) -> Result<ModelSpec> {
+        Ok(match s {
+            "none" => ModelSpec::None,
+            "sitecounter" => ModelSpec::SiteCounter,
+            _ => match s.split_once(':') {
+                Some(("ising", rest)) => match rest.split_once(':') {
+                    Some((b, j)) => {
+                        let beta = parse_canon_f64(b)?;
+                        let coupling = parse_canon_f64(j)?;
+                        if !beta.is_finite() || beta < 0.0 || !coupling.is_finite() {
+                            bail!("bad ising parameters in model spec {s:?}");
+                        }
+                        ModelSpec::Ising { beta, coupling }
+                    }
+                    None => bail!("ising model spec {s:?} needs <beta>:<coupling>"),
+                },
+                _ => bail!("unknown model spec {s:?} (none|ising:<b>:<j>|sitecounter)"),
+            },
+        })
+    }
+
+    /// Build one payload instance per replica row (`rows` boxes over
+    /// `pes` PEs each); empty for [`ModelSpec::None`] — the engine treats
+    /// an empty vector as "no payload" and keeps its fused path.
+    pub fn build_rows(self, pes: usize, rows: usize) -> Vec<Box<dyn Model>> {
+        match self {
+            ModelSpec::None => Vec::new(),
+            ModelSpec::Ising { beta, coupling } => (0..rows)
+                .map(|_| Box::new(Ising1d::new(pes, beta, coupling)) as Box<dyn Model>)
+                .collect(),
+            ModelSpec::SiteCounter => (0..rows)
+                .map(|_| Box::new(SiteCounter::new(pes)) as Box<dyn Model>)
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pdes::Topology;
+
+    #[test]
+    fn model_spec_strings_are_pinned_and_roundtrip() {
+        // frozen v1 grammar: these renderings are components of on-disk
+        // cache keys, so changing any of them breaks `--resume`
+        assert_eq!(ModelSpec::None.spec_string(), "none");
+        assert_eq!(ModelSpec::SiteCounter.spec_string(), "sitecounter");
+        assert_eq!(
+            ModelSpec::Ising { beta: 0.7, coupling: 1.0 }.spec_string(),
+            "ising:0.7:1"
+        );
+        for spec in [
+            ModelSpec::None,
+            ModelSpec::SiteCounter,
+            ModelSpec::Ising { beta: 0.7, coupling: 1.0 },
+            ModelSpec::Ising { beta: 0.25, coupling: 2.0 },
+        ] {
+            let s = spec.spec_string();
+            assert_eq!(ModelSpec::parse_spec(&s).unwrap(), spec, "{s}");
+        }
+        assert!(ModelSpec::parse_spec("ising").is_err());
+        assert!(ModelSpec::parse_spec("ising:0.7").is_err());
+        assert!(ModelSpec::parse_spec("ising:NaN:1").is_err());
+        assert!(ModelSpec::parse_spec("ising:inf:1").is_err());
+        assert!(ModelSpec::parse_spec("potts:3").is_err());
+    }
+
+    #[test]
+    fn build_rows_counts_and_tags() {
+        assert!(ModelSpec::None.build_rows(8, 3).is_empty());
+        let ising = ModelSpec::Ising { beta: 0.5, coupling: 1.0 }.build_rows(8, 3);
+        assert_eq!(ising.len(), 3);
+        assert_eq!(ising[0].tag(), "ising");
+        let counters = ModelSpec::SiteCounter.build_rows(8, 2);
+        assert_eq!(counters.len(), 2);
+        assert_eq!(counters[0].tag(), "sitecounter");
+    }
+
+    #[test]
+    fn ising_ordered_start_energy_is_minus_j() {
+        // all-up spins on the ring: every bond contributes −J
+        let nbr = Topology::Ring { l: 10 }.neighbour_table();
+        let ising = Ising1d::new(10, 0.7, 1.0);
+        let f = ising.observe(&nbr).unwrap();
+        assert_eq!(f.energy, -1.0);
+        assert_eq!(f.mag_abs, 1.0);
+        assert_eq!(ising.bond_sum(&nbr), 20); // 10 bonds, counted twice
+    }
+
+    #[test]
+    fn ising_flip_probability_limits() {
+        // β → large: a flip against an aligned pair is (almost) never
+        // accepted; a flip lowering the energy (against an anti-aligned
+        // start) is (almost) always accepted.  Pin via event statistics.
+        let nbr = Topology::Ring { l: 8 }.neighbour_table();
+        let mut cold = Ising1d::new(8, 50.0, 1.0);
+        let mut rng = Rng::for_stream(9, 0);
+        for _ in 0..200 {
+            for k in 0..8 {
+                cold.apply_event(k, 0, 0.0, nbr.neighbours(k), &mut rng);
+            }
+        }
+        // the ordered state is (effectively) frozen at β = 50
+        assert_eq!(cold.observe(&nbr).unwrap().energy, -1.0);
+
+        // β = 0: p_flip = 1/2 regardless of neighbours — spins decohere
+        let mut hot = Ising1d::new(64, 0.0, 1.0);
+        let nbr = Topology::Ring { l: 64 }.neighbour_table();
+        let mut rng = Rng::for_stream(10, 0);
+        let mut flips = 0usize;
+        for t in 0..50 {
+            for k in 0..64 {
+                let before = hot.spins()[k];
+                hot.apply_event(k, t, 0.0, nbr.neighbours(k), &mut rng);
+                flips += usize::from(hot.spins()[k] != before);
+            }
+        }
+        // 3200 attempts at p = 1/2: > 6σ bands
+        assert!((1430..1770).contains(&flips), "flips = {flips}");
+    }
+
+    #[test]
+    fn ising_tracked_observables_equal_rescan_after_many_events() {
+        // the O(1) observe() path (edges + bond2_delta, tracked mag)
+        // must stay exactly equal to the O(L·deg) rescan — integer
+        // arithmetic, so equality is exact, on a non-trivial graph
+        let topo = Topology::SmallWorld { l: 48, extra: 12, seed: 9 };
+        let nbr = topo.neighbour_table();
+        let mut ising = Ising1d::new(48, 0.4, 1.0);
+        let mut rng = Rng::for_stream(77, 0);
+        for t in 0..200 {
+            for k in 0..48 {
+                ising.apply_event(k, t, 0.0, nbr.neighbours(k), &mut rng);
+            }
+            let f = ising.observe(&nbr).unwrap();
+            let bond2 = ising.bond_sum(&nbr);
+            assert_eq!(
+                f.energy,
+                -bond2 as f64 / (2.0 * 48.0),
+                "step {t}: tracked energy != rescan"
+            );
+            let mag: i64 = ising.spins().iter().map(|&s| s as i64).sum();
+            assert_eq!(f.mag_abs, (mag as f64 / 48.0).abs(), "step {t}");
+        }
+    }
+
+    #[test]
+    fn ising_consumes_exactly_one_draw_per_event() {
+        let nbr = Topology::Ring { l: 8 }.neighbour_table();
+        let mut ising = Ising1d::new(8, 0.7, 1.0);
+        let mut a = Rng::for_stream(3, 0);
+        let mut b = Rng::for_stream(3, 0);
+        for k in 0..8 {
+            ising.apply_event(k, 0, 0.0, nbr.neighbours(k), &mut a);
+            b.uniform();
+        }
+        // streams advanced identically: one uniform per event, flip or not
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn site_counter_bins_intervals_and_idle_streaks() {
+        let nbr = Topology::Ring { l: 4 }.neighbour_table();
+        let mut sc = SiteCounter::new(4);
+        let mut rng = Rng::for_stream(1, 0);
+        // PE 0 updates at t = 0 (τ 0.0) and t = 3 (τ 0.6): interval 0.6
+        // lands in bin 2, idle streak is 2 steps (t = 1, 2)
+        sc.apply_event(0, 0, 0.0, nbr.neighbours(0), &mut rng);
+        sc.apply_event(0, 3, 0.6, nbr.neighbours(0), &mut rng);
+        let st = sc.update_stats().unwrap();
+        assert_eq!(st.events, 2);
+        assert_eq!(st.interval_bins[0], 1); // the τ = 0 first event
+        assert_eq!(st.interval_bins[2], 1); // 0.6 / 0.25 → bin 2
+        assert_eq!(st.idle_bins[0], 1);
+        assert_eq!(st.idle_bins[2], 1);
+        assert!((st.mean_interval() - 0.3).abs() < 1e-15);
+        // overflow bins clamp
+        sc.apply_event(0, 200, 1e9, nbr.neighbours(0), &mut rng);
+        let st = sc.update_stats().unwrap();
+        assert_eq!(st.interval_bins[INTERVAL_BINS - 1], 1);
+        assert_eq!(st.idle_bins[IDLE_BINS - 1], 1);
+        // reset clears histograms but keeps the last-event anchors
+        sc.reset_stats();
+        assert_eq!(sc.update_stats().unwrap().events, 0);
+        sc.apply_event(0, 201, 1e9 + 0.1, nbr.neighbours(0), &mut rng);
+        let st = sc.update_stats().unwrap();
+        assert_eq!(st.events, 1);
+        assert_eq!(st.idle_bins[0], 1, "post-reset idle streak measured from the kept anchor");
+    }
+
+    #[test]
+    fn update_stats_merge_is_exact_on_integer_lanes() {
+        let mut a = UpdateStats::new();
+        a.events = 3;
+        a.interval_bins[1] = 2;
+        a.idle_bins[0] = 3;
+        a.interval_sum = 0.75;
+        let mut b = UpdateStats::new();
+        b.events = 2;
+        b.interval_bins[1] = 1;
+        b.idle_bins[5] = 2;
+        b.interval_sum = 0.5;
+        a.merge(&b);
+        assert_eq!(a.events, 5);
+        assert_eq!(a.interval_bins[1], 3);
+        assert_eq!(a.idle_bins[5], 2);
+        assert!((a.interval_sum - 1.25).abs() < 1e-15);
+    }
+
+    #[test]
+    fn exact_ring_energy_formula() {
+        assert!((Ising1d::exact_ring_energy(0.7, 1.0) + 0.7f64.tanh()).abs() < 1e-15);
+        assert_eq!(Ising1d::exact_ring_energy(0.0, 1.0), 0.0);
+    }
+}

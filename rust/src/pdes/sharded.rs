@@ -49,6 +49,7 @@ use std::ops::{Deref, DerefMut, Range};
 use std::thread;
 
 use super::batch::{draw_pending_slot, BatchPdes, PEND_ALL, PEND_INTERIOR};
+use super::model::Model;
 use super::topology::{NeighbourTable, Topology};
 use super::{Mode, VolumeLoad};
 use crate::coordinator::pool::{shard_lattice, worker_count};
@@ -331,10 +332,15 @@ impl ShardedPdes {
 
             // ---- phase B: per-row update sweeps (PE order — the row RNG
             // stream is serial by contract), rows distributed over workers.
+            // Model payloads are per-row objects, so each worker gets its
+            // rows' payloads exclusively — the hook fires at the exact
+            // point of the `pdes::model` draw-order contract, mirroring
+            // `BatchPdes`' model sweep bit for bit.
             {
                 let plan: &[Range<usize>] = &self.plan;
                 let ok_all: &[bool] = &self.ok;
                 let nbr = p.nbr;
+                let t_now = p.t;
                 let mut jobs: Vec<RowJob<'_>> = Vec::with_capacity(rows);
                 {
                     let mut tau_it = p.tau.chunks_mut(pes);
@@ -343,6 +349,7 @@ impl ShardedPdes {
                     let mut count_it = p.counts.iter_mut();
                     let mut stat_it = p.stats.iter_mut();
                     let mut shard_it = self.shard_stats.chunks_mut(blocks);
+                    let mut model_it = p.models.iter_mut();
                     for row in 0..rows {
                         jobs.push(RowJob {
                             tau: tau_it.next().unwrap(),
@@ -351,13 +358,16 @@ impl ShardedPdes {
                             count: count_it.next().unwrap(),
                             stat: stat_it.next().unwrap(),
                             shard_stats: shard_it.next().unwrap(),
+                            // yields one payload per row when attached,
+                            // None for every row otherwise (empty slice)
+                            model: model_it.next(),
                             ok: &ok_all[row * pes..(row + 1) * pes],
                         });
                     }
                 }
                 let threads = workers.clamp(1, jobs.len().max(1));
                 if threads == 1 {
-                    run_update_rows(&mut jobs, nbr, plan, redraw);
+                    run_update_rows(&mut jobs, nbr, plan, redraw, t_now);
                 } else {
                     let per = jobs.len().div_ceil(threads);
                     thread::scope(|s| {
@@ -365,10 +375,10 @@ impl ShardedPdes {
                         let mine = chunks.next().unwrap();
                         for chunk in chunks {
                             s.spawn(move || {
-                                run_update_rows(chunk, nbr, plan, redraw);
+                                run_update_rows(chunk, nbr, plan, redraw, t_now);
                             });
                         }
-                        run_update_rows(mine, nbr, plan, redraw);
+                        run_update_rows(mine, nbr, plan, redraw, t_now);
                     });
                 }
             }
@@ -428,6 +438,8 @@ struct RowJob<'a> {
     count: &'a mut u32,
     stat: &'a mut StepStats,
     shard_stats: &'a mut [StepStats],
+    /// The row's model payload, when one is attached.
+    model: Option<&'a mut Box<dyn Model>>,
     ok: &'a [bool],
 }
 
@@ -513,9 +525,10 @@ fn run_update_rows(
     nbr: &NeighbourTable,
     plan: &[Range<usize>],
     redraw: Option<f64>,
+    t: u64,
 ) {
     for job in jobs.iter_mut() {
-        update_row(job, nbr, plan, redraw);
+        update_row(job, nbr, plan, redraw, t);
     }
 }
 
@@ -523,11 +536,15 @@ fn run_update_rows(
 /// (identical arithmetic and RNG consumption to `update_row_generic` and
 /// the fused sweeps of `BatchPdes`), accumulating the canonical row
 /// [`StepStats`] in PE order *and* per-shard partials as a by-product.
+/// With a model payload attached, the hook fires per updating PE between
+/// the pend redraw and the exponential draw — the `pdes::model`
+/// draw-order contract, shared with `BatchPdes`' model sweep.
 fn update_row(
     job: &mut RowJob<'_>,
     nbr: &NeighbourTable,
     plan: &[Range<usize>],
     redraw: Option<f64>,
+    t: u64,
 ) {
     let mut n_up = 0u32;
     let (mut mn, mut mx, mut sum) = (f64::INFINITY, f64::NEG_INFINITY, 0.0);
@@ -541,6 +558,9 @@ fn update_row(
                 bn += 1;
                 if let Some(p_side) = redraw {
                     job.pend[k] = draw_pending_slot(job.rng, p_side, false, nbr.degree(k));
+                }
+                if let Some(model) = job.model.as_mut() {
+                    model.apply_event(k, t, x, nbr.neighbours(k), job.rng);
                 }
                 x += job.rng.exponential();
                 job.tau[k] = x;
@@ -814,6 +834,62 @@ mod tests {
             reference.step();
             sharded.step();
             assert_rows_bit_identical(&reference, &sharded, &format!("post-reshard step {step}"));
+        }
+    }
+
+    #[test]
+    fn ising_payload_sharded_matches_batch_bit_identically() {
+        use crate::pdes::{Ising1d, ModelSpec};
+        let topo = Topology::Ring { l: 24 };
+        let spec = ModelSpec::Ising { beta: 0.7, coupling: 1.0 };
+        for workers in [1usize, 3, 7] {
+            let mut reference = BatchPdes::with_streams(
+                topo,
+                VolumeLoad::Sites(1),
+                Mode::Windowed { delta: 2.0 },
+                2,
+                61,
+                0,
+            );
+            reference.attach_models(spec.build_rows(24, 2));
+            let mut sharded = ShardedPdes::with_streams(
+                topo,
+                VolumeLoad::Sites(1),
+                Mode::Windowed { delta: 2.0 },
+                2,
+                61,
+                0,
+                workers,
+            );
+            sharded.attach_models(spec.build_rows(24, 2));
+            for step in 0..60 {
+                reference.step();
+                sharded.step();
+                assert_rows_bit_identical(
+                    &reference,
+                    &sharded,
+                    &format!("ising workers {workers} step {step}"),
+                );
+                for row in 0..2 {
+                    let a = reference
+                        .model_row(row)
+                        .unwrap()
+                        .as_any()
+                        .downcast_ref::<Ising1d>()
+                        .unwrap();
+                    let b = sharded
+                        .model_row(row)
+                        .unwrap()
+                        .as_any()
+                        .downcast_ref::<Ising1d>()
+                        .unwrap();
+                    assert_eq!(
+                        a.spins(),
+                        b.spins(),
+                        "ising workers {workers} step {step} row {row}: spins diverged"
+                    );
+                }
+            }
         }
     }
 

@@ -15,6 +15,14 @@
 //! * every entry embeds its *full* spec string and [`ResultCache::load`]
 //!   verifies it — a hash collision or corrupt file degrades to a cache
 //!   miss (recompute), never to wrong data;
+//! * every entry embeds an FNV-1a checksum of its payload (the `sum`
+//!   line, v2) and [`ResultCache::load`] verifies it — a truncated or
+//!   bit-flipped entry (power loss, disk corruption) degrades to a miss
+//!   and is recomputed, never parsed into wrong bytes.  Payload parse
+//!   errors (`PointResult::from_cache_text`) are a second, independent
+//!   guard at the scheduler layer, but the checksum also catches flips
+//!   *inside* valid hex digits, which would otherwise round-trip
+//!   silently as a different f64;
 //! * stores write a temporary file and `rename` it into place, so a kill
 //!   mid-write leaves no half-entry behind (rename is atomic within the
 //!   cache directory);
@@ -29,8 +37,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use anyhow::{Context, Result};
 
 /// Format tag on every cache entry; bump on any layout change so stale
-/// entries degrade to misses instead of parse errors.
-const MAGIC: &str = "# repro point cache v1";
+/// entries degrade to misses instead of parse errors.  v2 added the
+/// payload checksum line — v1 entries (no checksum) miss and recompute.
+const MAGIC: &str = "# repro point cache v2";
 
 /// Monotonic discriminator for temporary file names (several scheduler
 /// workers may store entries concurrently).
@@ -63,15 +72,22 @@ impl ResultCache {
     }
 
     /// Load the payload stored for `spec`, if present and intact.  Any
-    /// mismatch (absent file, wrong magic, spec collision, truncation)
-    /// returns `None`: a miss, never an error the sweep has to handle.
+    /// mismatch (absent file, wrong magic, spec collision, truncation,
+    /// checksum failure) returns `None`: a miss, never an error the
+    /// sweep has to handle — a corrupt entry is simply recomputed.
     pub fn load(&self, spec: &str) -> Option<String> {
         let text = fs::read_to_string(self.path_for(spec)).ok()?;
         let rest = text.strip_prefix(MAGIC)?.strip_prefix('\n')?;
         let rest = rest.strip_prefix("spec ")?;
-        let (stored_spec, payload) = rest.split_once('\n')?;
+        let (stored_spec, rest) = rest.split_once('\n')?;
         if stored_spec != spec {
             return None; // hash collision or tampering: recompute
+        }
+        let rest = rest.strip_prefix("sum ")?;
+        let (sum_hex, payload) = rest.split_once('\n')?;
+        let stored_sum = u64::from_str_radix(sum_hex, 16).ok()?;
+        if stored_sum != crate::coordinator::fnv1a64(payload) {
+            return None; // truncated or bit-flipped payload: recompute
         }
         Some(payload.to_string())
     }
@@ -89,7 +105,10 @@ impl ResultCache {
             std::process::id(),
             TMP_SEQ.fetch_add(1, Ordering::Relaxed)
         ));
-        let text = format!("{MAGIC}\nspec {spec}\n{payload}");
+        let text = format!(
+            "{MAGIC}\nspec {spec}\nsum {:016x}\n{payload}",
+            crate::coordinator::fnv1a64(payload)
+        );
         fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
         fs::rename(&tmp, &path)
             .with_context(|| format!("publishing {}", path.display()))?;
@@ -142,6 +161,72 @@ mod tests {
         std::fs::write(c.path_for(spec), "garbage").unwrap();
         assert!(c.load(spec).is_none());
         std::fs::write(c.path_for(spec), format!("{MAGIC}\nspec other\nx\n")).unwrap();
+        assert!(c.load(spec).is_none());
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn bit_flipped_payloads_are_misses() {
+        // a flip INSIDE a valid hex digit would still parse as an f64 —
+        // the checksum is what catches it (the hardening this cache
+        // version exists for)
+        let c = tmp_cache("bitflip");
+        let spec = "repro/v1 bitflip-case";
+        let payload = "steady 3fcf8b588e368f08 0000000000000000 3ff0000000000000 \
+                       0000000000000000 3fe0000000000000 3fb999999999999a\n";
+        c.store(spec, payload).unwrap();
+        assert_eq!(c.load(spec).as_deref(), Some(payload));
+        let path = c.path_for(spec);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip one payload hex digit: '3' -> '2' in the first value
+        let pos = bytes
+            .windows(7)
+            .position(|w| w == b"3fcf8b5")
+            .expect("payload hex present");
+        bytes[pos] = b'2';
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(c.load(spec).is_none(), "flipped payload must miss");
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn truncated_payloads_are_misses() {
+        let c = tmp_cache("truncate");
+        let spec = "repro/v1 truncate-case";
+        let payload = "curves 2\nm 4 3fd0000000000000 0000000000000000\n\
+                       m 4 3fe0000000000000 0000000000000000\n";
+        c.store(spec, payload).unwrap();
+        let path = c.path_for(spec);
+        let bytes = std::fs::read(&path).unwrap();
+        // cut mid-payload (simulated power loss after a partial write
+        // that still managed to rename — belt and braces over the
+        // tmp+rename protocol)
+        std::fs::write(&path, &bytes[..bytes.len() - 20]).unwrap();
+        assert!(c.load(spec).is_none(), "truncated payload must miss");
+        // truncation inside the header lines must miss too
+        std::fs::write(&path, &bytes[..MAGIC.len() + 8]).unwrap();
+        assert!(c.load(spec).is_none());
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn v1_entries_without_checksum_are_misses() {
+        // entries written by the pre-checksum layout lack the sum line:
+        // they must degrade to recompute, not parse
+        let c = tmp_cache("v1");
+        let spec = "repro/v1 old-entry";
+        std::fs::write(
+            c.path_for(spec),
+            format!("# repro point cache v1\nspec {spec}\nlatticeu 0 0\n"),
+        )
+        .unwrap();
+        assert!(c.load(spec).is_none());
+        // same layout under the current magic (sum line missing) — miss
+        std::fs::write(
+            c.path_for(spec),
+            format!("{MAGIC}\nspec {spec}\nlatticeu 0 0\n"),
+        )
+        .unwrap();
         assert!(c.load(spec).is_none());
         std::fs::remove_dir_all(c.dir()).ok();
     }

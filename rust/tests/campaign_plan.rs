@@ -45,8 +45,11 @@ fn run_quick(name: &str, workers: usize, tag: &str) -> Vec<(String, String)> {
 #[test]
 fn figure_tsv_bytes_are_worker_invariant() {
     // one run_ensemble-style figure, one steady_state-style figure, one
-    // topology sweep — the three execution shapes of the paper's grids
-    for name in ["fig2", "fig9", "topology"] {
+    // topology sweep — the three execution shapes of the paper's grids —
+    // plus the two model-payload experiments (the acceptance criterion
+    // of the payload PR: `repro ising --quick` / `repro updatestats
+    // --quick` byte-identical across --workers)
+    for name in ["fig2", "fig9", "topology", "ising", "updatestats"] {
         let one = run_quick(name, 1, "w1");
         let four = run_quick(name, 4, "w4");
         assert_eq!(
@@ -130,6 +133,81 @@ fn cache_keys_are_pinned() {
         "repro/v1 topo=ring:64 run=l=64;load=1;mode=win:1;trials=4;steps=0;seed=20020601 samp=steady:300:300"
     );
     assert_eq!(plan.points[0].key(), 0x576df342a203e67c);
+
+    // model-payload points: the spec grows a trailing model= field (the
+    // keys were cross-computed with the independent Python FNV-1a)
+    let plan = experiments::plan_for("ising", &Profile::quick(DEFAULT_SEED)).unwrap();
+    assert_eq!(
+        plan.points[0].spec(),
+        "repro/v1 topo=ring:64 run=l=64;load=1;mode=win:1;trials=4;steps=0;seed=20020601 samp=modelsteady:200:400 model=ising:0.7:1"
+    );
+    assert_eq!(plan.points[0].key(), 0xc7db958b97a37ad3);
+
+    let plan = experiments::plan_for("updatestats", &Profile::quick(DEFAULT_SEED)).unwrap();
+    assert_eq!(
+        plan.points[0].spec(),
+        "repro/v1 topo=ring:64 run=l=64;load=1;mode=cons;trials=4;steps=0;seed=20020601 samp=updstats:200:400 model=sitecounter"
+    );
+    assert_eq!(plan.points[0].key(), 0x68ad75a80eaf385b);
+}
+
+#[test]
+fn corrupt_cache_entries_recompute_under_resume_with_correct_bytes() {
+    // the ResultCache hardening, end to end: bit-flip one cached entry
+    // and truncate another, then --resume — the damaged points must be
+    // recomputed (not error out, not serve wrong data) and the final
+    // TSVs must equal an uninterrupted run byte for byte
+    let reference = run_quick("ising", 2, "corrupt_ref");
+
+    let out = std::env::temp_dir().join("repro_cplan_corrupt_resume");
+    fs::remove_dir_all(&out).ok();
+    let mut ctx = Ctx::new(&out, true);
+    ctx.workers = 2;
+    experiments::run("ising", &ctx).unwrap();
+
+    let cache_dir: PathBuf = out.join(".cache");
+    let mut entries: Vec<PathBuf> = fs::read_dir(&cache_dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "point"))
+        .collect();
+    entries.sort();
+    assert!(entries.len() >= 2, "expected cached points, got {entries:?}");
+
+    // bit-flip one byte inside the first entry's payload region
+    let mut bytes = fs::read(&entries[0]).unwrap();
+    let flip_at = bytes.len() - 9;
+    bytes[flip_at] = if bytes[flip_at] == b'0' { b'1' } else { b'0' };
+    fs::write(&entries[0], &bytes).unwrap();
+    // truncate the second entry mid-payload
+    let bytes = fs::read(&entries[1]).unwrap();
+    fs::write(&entries[1], &bytes[..bytes.len() / 2]).unwrap();
+
+    let mut ctx = Ctx::new(&out, true);
+    ctx.workers = 2;
+    ctx.resume = true;
+    experiments::run("ising", &ctx).unwrap();
+    let resumed = tsv_files(&out);
+    assert_eq!(
+        reference, resumed,
+        "TSVs after corrupt-entry resume differ from an uninterrupted run"
+    );
+
+    // the damaged entries were re-stored: a further resume is all-cache
+    let plan = experiments::plan_for("ising", &Profile::quick(DEFAULT_SEED)).unwrap();
+    let (_, rep) = run_plan(
+        &plan,
+        &CampaignOpts {
+            workers: 2,
+            resume: true,
+            cache_dir: Some(cache_dir),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(rep.executed, 0, "repaired cache must satisfy every point");
+    fs::remove_dir_all(&out).ok();
 }
 
 #[test]

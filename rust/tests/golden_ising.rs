@@ -1,0 +1,192 @@
+//! Golden Ising-payload trajectories: pinned spin checksums, integer
+//! bond sums, update counts and full-precision τ rows at steps
+//! {1, 16, 256} for two fixed payload configurations, committed in
+//! `tests/fixtures/golden_ising.txt`.
+//!
+//! Purpose (mirror of `golden_trajectory.rs` for the payload layer): the
+//! batched and sharded engines are asserted equal *to each other* with
+//! payloads attached by the determinism suite, but a refactor changing
+//! both in lockstep — a moved `apply_event` call site, a reordered model
+//! draw, a changed flip rule — would slip through a relative check.
+//! The fixture anchors the payload trajectory family itself.  Values
+//! come from the independent Python port
+//! (`python/tools/crosscheck_sharded.py --fixture`).
+//!
+//! Tolerances: τ is pinned at 1e-9 relative (ziggurat exponentials route
+//! through libm, same rationale as `golden_trajectory.rs`).  The spin
+//! lanes (FNV-1a over the ±1 bytes, integer bond sum) are compared
+//! exactly — the Glauber accept draw `u < 1/(1+exp(βΔE))` crosses a
+//! libm-jitter boundary with probability ~2⁻⁵² per event, negligible
+//! over the fixture's ≲10⁴ events; if a platform ever trips it, the
+//! failure is a deliberate signal to regenerate, not noise to widen.
+
+use repro::pdes::{BatchPdes, Ising1d, Mode, Model, ModelSpec, ShardedPdes, Topology, VolumeLoad};
+
+const FIXTURE: &str = include_str!("fixtures/golden_ising.txt");
+const SAMPLED_STEPS: [u64; 3] = [1, 16, 256];
+
+/// FNV-1a over the spin bytes (±1 as two's-complement u8), mirroring the
+/// generator.
+fn fnv1a_spins(spins: &[i8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &s in spins {
+        h ^= (s as u8) as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+struct GoldenRow {
+    step: u64,
+    row: usize,
+    spin_fnv: u64,
+    bond_sum: i64,
+    n_updated: u32,
+    tau: Vec<f64>,
+}
+
+fn parse_fixture(tag: &str) -> Vec<GoldenRow> {
+    let mut out = Vec::new();
+    for line in FIXTURE.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut fields = line.split_whitespace();
+        if fields.next() != Some(tag) {
+            continue;
+        }
+        let step: u64 = fields.next().unwrap().parse().unwrap();
+        let row: usize = fields.next().unwrap().parse().unwrap();
+        let spin_fnv = u64::from_str_radix(fields.next().unwrap(), 16).unwrap();
+        let bond_sum: i64 = fields.next().unwrap().parse().unwrap();
+        let n_updated: u32 = fields.next().unwrap().parse().unwrap();
+        let tau: Vec<f64> = fields.map(|f| f.parse().unwrap()).collect();
+        out.push(GoldenRow {
+            step,
+            row,
+            spin_fnv,
+            bond_sum,
+            n_updated,
+            tau,
+        });
+    }
+    assert!(
+        !out.is_empty(),
+        "no fixture rows for tag {tag:?} — regenerate with \
+         python3 python/tools/crosscheck_sharded.py --fixture"
+    );
+    out
+}
+
+fn check_config(tag: &str, topology: Topology, mode: Mode, model: ModelSpec, rows: usize, seed: u64) {
+    let golden = parse_fixture(tag);
+    let nbr = topology.neighbour_table();
+    let mut batch = BatchPdes::with_streams(topology, VolumeLoad::Sites(1), mode, rows, seed, 0);
+    batch.attach_models(model.build_rows(topology.len(), rows));
+    // worker count chosen to exercise real multi-block plans on L = 12
+    let mut sharded =
+        ShardedPdes::with_streams(topology, VolumeLoad::Sites(1), mode, rows, seed, 0, 3);
+    sharded.attach_models(model.build_rows(topology.len(), rows));
+    let spins_of = |sim: &BatchPdes, row: usize| -> Vec<i8> {
+        sim.model_row(row)
+            .unwrap()
+            .as_any()
+            .downcast_ref::<Ising1d>()
+            .unwrap()
+            .spins()
+            .to_vec()
+    };
+    let mut done = 0u64;
+    for &target in &SAMPLED_STEPS {
+        while done < target {
+            batch.step();
+            sharded.step();
+            done += 1;
+        }
+        // sharded ≡ batch with the payload attached: in-process, exact
+        for row in 0..rows {
+            for (k, (a, b)) in batch.tau_row(row).iter().zip(sharded.tau_row(row)).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{tag} step {target} row {row} PE {k}: sharded diverged from batch"
+                );
+            }
+            assert_eq!(
+                spins_of(&batch, row),
+                spins_of(&sharded, row),
+                "{tag} step {target} row {row}: payload state diverged across engines"
+            );
+        }
+        // batch vs the committed golden values
+        for g in golden.iter().filter(|g| g.step == target) {
+            let spins = spins_of(&batch, g.row);
+            assert_eq!(
+                fnv1a_spins(&spins),
+                g.spin_fnv,
+                "{tag} step {target} row {}: spin checksum",
+                g.row
+            );
+            let ising = batch
+                .model_row(g.row)
+                .unwrap()
+                .as_any()
+                .downcast_ref::<Ising1d>()
+                .unwrap();
+            assert_eq!(
+                ising.bond_sum(&nbr),
+                g.bond_sum,
+                "{tag} step {target} row {}: bond sum",
+                g.row
+            );
+            assert_eq!(
+                batch.counts()[g.row],
+                g.n_updated,
+                "{tag} step {target} row {}: update count",
+                g.row
+            );
+            let tau = batch.tau_row(g.row);
+            assert_eq!(tau.len(), g.tau.len(), "{tag}: fixture row length");
+            for (k, (&got, &want)) in tau.iter().zip(&g.tau).enumerate() {
+                let tol = 1e-9 * want.abs().max(1e-12);
+                assert!(
+                    (got - want).abs() <= tol,
+                    "{tag} step {target} row {} PE {k}: {got:e} != golden {want:e}",
+                    g.row
+                );
+            }
+        }
+    }
+    for &target in &SAMPLED_STEPS {
+        assert_eq!(
+            golden.iter().filter(|g| g.step == target).count(),
+            rows,
+            "{tag}: fixture misses step {target}"
+        );
+    }
+}
+
+#[test]
+fn golden_ising_ring_windowed() {
+    check_config(
+        "ising_ring12_win2_b0.7",
+        Topology::Ring { l: 12 },
+        Mode::Windowed { delta: 2.0 },
+        ModelSpec::Ising { beta: 0.7, coupling: 1.0 },
+        2,
+        20020601,
+    );
+}
+
+#[test]
+fn golden_ising_kring_conservative() {
+    check_config(
+        "ising_kring12_2_cons_b0.4",
+        Topology::KRing { l: 12, k: 2 },
+        Mode::Conservative,
+        ModelSpec::Ising { beta: 0.4, coupling: 1.0 },
+        1,
+        7,
+    );
+}

@@ -4,7 +4,10 @@
 mod prop;
 
 use prop::{check, PdesCase};
-use repro::pdes::{BatchPdes, InstrumentedRing, Mode, RingPdes, ShardedPdes, Topology, VolumeLoad};
+use repro::pdes::{
+    BatchPdes, InstrumentedRing, Ising1d, Mode, Model, ModelSpec, RingPdes, ShardedPdes,
+    Topology, VolumeLoad,
+};
 use repro::rng::Rng;
 use repro::stats::{horizon_frame, StepStats};
 
@@ -504,6 +507,108 @@ fn sharded_engine_equals_batch_bit_identical() {
                             assert_eq!(s.sum.to_bits(), t.sum.to_bits(), "{ctx}: stats.sum");
                             assert_eq!(s.min.to_bits(), t.min.to_bits(), "{ctx}: stats.min");
                             assert_eq!(s.max.to_bits(), t.max.to_bits(), "{ctx}: stats.max");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Model-payload twin of the determinism harness: with a payload
+/// attached (the Ising payload draws one uniform per event — a new
+/// trajectory family — and the SiteCounter draws nothing), `ShardedPdes`
+/// must still produce, at every step and for every worker count, exactly
+/// the bits `BatchPdes` produces: τ, pend, counts, tracked stats AND the
+/// payload state itself (spins / histograms).  This extends the
+/// bit-identity contract over the new `apply_event` hook point — a
+/// payload call site reading a post-update neighbour where the batch
+/// engine read a frozen one, or a reordered model draw, shows up here as
+/// a spin flip or a histogram shift.
+#[test]
+fn model_payload_sharded_equals_batch_bit_identical() {
+    let topologies = [
+        Topology::Ring { l: 24 },
+        Topology::KRing { l: 24, k: 2 },
+        Topology::SmallWorld { l: 24, extra: 8, seed: 5 },
+    ];
+    let modes = [Mode::Conservative, Mode::Windowed { delta: 2.0 }];
+    let payloads = [
+        // the Ising workload runs at N_V = 1 (neighbour reads need every
+        // event checked, see pdes::model docs)...
+        (ModelSpec::Ising { beta: 0.7, coupling: 1.0 }, VolumeLoad::Sites(1)),
+        // ...the counter payload reads no neighbours, so it also covers
+        // the N_V > 1 pending-redraw interleaving
+        (ModelSpec::SiteCounter, VolumeLoad::Sites(4)),
+    ];
+    let worker_grid = [1usize, 2, 3, 7];
+    let rows = 2usize;
+    for topo in topologies {
+        for mode in modes {
+            for (model, load) in payloads {
+                let mut reference = BatchPdes::with_streams(topo, load, mode, rows, 20020601, 0);
+                reference.attach_models(model.build_rows(topo.len(), rows));
+                let mut sharded: Vec<ShardedPdes> = worker_grid
+                    .iter()
+                    .map(|&w| {
+                        let mut sim =
+                            ShardedPdes::with_streams(topo, load, mode, rows, 20020601, 0, w);
+                        sim.attach_models(model.build_rows(topo.len(), rows));
+                        sim
+                    })
+                    .collect();
+                for step in 0..50 {
+                    reference.step();
+                    for (&workers, sim) in worker_grid.iter().zip(sharded.iter_mut()) {
+                        sim.step();
+                        for row in 0..rows {
+                            let ctx = format!(
+                                "{topo:?} {mode:?} {} workers {workers} step {step} row {row}",
+                                model.tag()
+                            );
+                            for (k, (a, b)) in reference
+                                .tau_row(row)
+                                .iter()
+                                .zip(sim.tau_row(row))
+                                .enumerate()
+                            {
+                                assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: tau PE {k}");
+                            }
+                            assert_eq!(
+                                reference.pending_row(row),
+                                sim.pending_row(row),
+                                "{ctx}: pend"
+                            );
+                            assert_eq!(
+                                reference.counts()[row], sim.counts()[row],
+                                "{ctx}: counts"
+                            );
+                            match model {
+                                ModelSpec::Ising { .. } => {
+                                    let a = reference
+                                        .model_row(row)
+                                        .unwrap()
+                                        .as_any()
+                                        .downcast_ref::<Ising1d>()
+                                        .unwrap();
+                                    let b = sim
+                                        .model_row(row)
+                                        .unwrap()
+                                        .as_any()
+                                        .downcast_ref::<Ising1d>()
+                                        .unwrap();
+                                    assert_eq!(a.spins(), b.spins(), "{ctx}: spins");
+                                }
+                                ModelSpec::SiteCounter => {
+                                    // dyn Model exposes the trait surface
+                                    // directly — no downcast needed here
+                                    let a =
+                                        reference.model_row(row).unwrap().update_stats().unwrap();
+                                    let b = sim.model_row(row).unwrap().update_stats().unwrap();
+                                    assert_eq!(a, b, "{ctx}: update stats");
+                                }
+                                ModelSpec::None => unreachable!(),
+                            }
                         }
                     }
                 }
