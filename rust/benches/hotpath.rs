@@ -26,8 +26,8 @@ use std::time::Duration;
 use repro::bench::{compare_against_baseline, BenchReport, Bencher};
 use repro::coordinator::{run_plan, CampaignOpts, RunSpec, SweepPlan, SweepPoint};
 use repro::pdes::{
-    BatchPdes, InstrumentedRing, LatticePdes, Mode, ModelSpec, RingPdes, ShardedPdes, Topology,
-    VolumeLoad,
+    BatchPdes, InstrumentedRing, LatticePdes, Mode, ModelSpec, RingPdes, ShardedPdes,
+    StreamFamily, Topology, VolumeLoad,
 };
 use repro::rng::Rng;
 use repro::stats::{horizon_frame, horizon_frame_fused, StepStats};
@@ -173,13 +173,14 @@ fn main() {
         }
     }
 
-    // Sharded scaling grid (PR 3): the domain-decomposed engine over
-    // workers x L, windowed Δ = 10 ring at N_V = 1, B = 4 rows (so phase B
-    // has row-level parallelism too).  W1 is the sharded engine's overhead
-    // floor against batch_step; the W{2,4,8} columns are the scaling
-    // claim.  Expectations on a multi-core host: spawn overhead dominates
-    // at L = 1e3 (honest cost of the scope-per-step barrier), phase-A
-    // decision parallelism + row-parallel updates pay off by L = 1e5.
+    // Sharded scaling grid (PR 3; RowV1 family for baseline continuity):
+    // the domain-decomposed engine over workers x L, windowed Δ = 10 ring
+    // at N_V = 1, B = 4 rows (so phase B has row-level parallelism too).
+    // W1 is the sharded engine's overhead floor against batch_step; the
+    // W{2,4,8} columns are the scaling claim.  Since the persistent-pool
+    // PR the per-step cost is a park/wake handshake, not thread spawns —
+    // under RowV1 phase B still serializes within each row, so scaling
+    // here rides phase A + row parallelism only.
     for &l in &[1_000usize, 10_000, 100_000] {
         for &workers in &[1usize, 2, 4, 8] {
             let mut sim = ShardedPdes::with_streams(
@@ -203,6 +204,37 @@ fn main() {
             }
             let name = format!("sharded_step/ring_L{l}_NV1_B4_W{workers}");
             let items = (l * 4) as f64;
+            let m = b.report(&name, items, || {
+                sim.step();
+                std::hint::black_box(sim.counts()[0]);
+            });
+            report.push(&name, items, m);
+        }
+    }
+
+    // Per-PE-family scaling grid (persistent-pool PR): B = 1, so every
+    // drop of parallelism must come from *inside* the row — impossible
+    // under RowV1, the whole point of the per-PE streams.  The acceptance
+    // bar lives on L = 1e4: W4 must reach >= 2x W1 (`pe scaling` summary
+    // below).  Zero thread spawns per step (pool parked between steps).
+    for &l in &[10_000usize, 100_000] {
+        for &workers in &[1usize, 2, 4, 8] {
+            let mut sim = ShardedPdes::with_streams_family(
+                Topology::Ring { l },
+                VolumeLoad::Sites(1),
+                Mode::Windowed { delta: 10.0 },
+                1,
+                5,
+                0,
+                workers,
+                StreamFamily::Pe,
+            );
+            let warm = if l >= 100_000 { 30 } else { 150 };
+            for _ in 0..warm {
+                sim.step();
+            }
+            let name = format!("sharded_step_pe/ring_L{l}_NV1_B1_W{workers}");
+            let items = l as f64;
             let m = b.report(&name, items, || {
                 sim.step();
                 std::hint::black_box(sim.counts()[0]);
@@ -346,6 +378,7 @@ fn main() {
                     trials: 4,
                     steps: 0,
                     seed: 11,
+                    streams: StreamFamily::RowV1,
                 },
                 60,
                 60,
@@ -394,6 +427,27 @@ fn main() {
             let t = report.throughput_of(&format!("sharded_step/ring_L{l}_NV1_B4_W{workers}"));
             if let (Some(b1), Some(tw)) = (base, t) {
                 println!("# sharded scaling L{l} W{workers}: x{:.2} vs W1", tw / b1);
+            }
+        }
+    }
+
+    // per-PE-family scaling summary: the acceptance bar is W4 >= 2x W1
+    // at B = 1, L = 1e4 (intra-row parallelism that RowV1 cannot reach)
+    for &l in &[10_000usize, 100_000] {
+        let base = report.throughput_of(&format!("sharded_step_pe/ring_L{l}_NV1_B1_W1"));
+        for &workers in &[2usize, 4, 8] {
+            let t = report.throughput_of(&format!("sharded_step_pe/ring_L{l}_NV1_B1_W{workers}"));
+            if let (Some(b1), Some(tw)) = (base, t) {
+                let note = if l == 10_000 && workers == 4 {
+                    if tw / b1 >= 2.0 {
+                        " (acceptance: >= 2x — PASS)"
+                    } else {
+                        " (acceptance: >= 2x — FAIL)"
+                    }
+                } else {
+                    ""
+                };
+                println!("# pe scaling L{l} W{workers}: x{:.2} vs W1{note}", tw / b1);
             }
         }
     }

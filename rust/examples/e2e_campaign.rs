@@ -78,6 +78,7 @@ fn main() -> anyhow::Result<()> {
                 trials,
                 steps,
                 seed: 43,
+                streams: repro::pdes::StreamFamily::Pe,
             });
             let u_nat = native.tail_mean(Lane::U, 0.25);
 

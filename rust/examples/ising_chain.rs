@@ -58,6 +58,7 @@ fn main() {
                 trials,
                 steps: 0,
                 seed: 2002,
+                streams: repro::pdes::StreamFamily::Pe,
             },
             &ModelSpec::Ising { beta, coupling: 1.0 },
             warm,

@@ -16,6 +16,7 @@ fn main() {
         trials: if quick { 8 } else { 32 },
         steps: if quick { 800 } else { 8000 },
         seed: 7,
+        streams: repro::pdes::StreamFamily::Pe,
     };
 
     println!(

@@ -38,6 +38,7 @@ fn main() -> anyhow::Result<()> {
         trials,
         steps: 0,
         seed: 11,
+        streams: repro::pdes::StreamFamily::Pe,
     };
     plan.push(SweepPoint::steady(
         "ceiling",

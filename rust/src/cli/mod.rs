@@ -24,7 +24,7 @@ pub struct Args {
 const VALUED: &[&str] = &[
     "out", "config", "trials", "steps", "seed", "l", "nv", "delta", "mode", "artifacts",
     "workers", "lattice-workers", "chunks", "warm", "topology", "k", "links", "model", "beta",
-    "coupling",
+    "coupling", "streams",
 ];
 
 impl Args {

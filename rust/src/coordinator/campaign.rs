@@ -19,7 +19,7 @@ use crate::pdes::{
     BatchPdes, InstrumentedRing, LatticePdes, Mode, Model, ModelSpec, NeighbourTable,
     ShardedPdes, Topology, UpdateStats, VolumeLoad,
 };
-use crate::rng::Rng;
+use crate::rng::{Rng, StreamFamily};
 use crate::runtime::ResultCache;
 use crate::stats::{horizon_frame_fused, EnsembleSeries, OnlineMoments};
 
@@ -123,6 +123,7 @@ enum Engine {
 }
 
 impl Engine {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         topology: Topology,
         nbr: NeighbourTable,
@@ -131,20 +132,15 @@ impl Engine {
         rngs: Vec<Rng>,
         lattice_workers: usize,
         model: &ModelSpec,
+        family: StreamFamily,
     ) -> Self {
         let pes = topology.len();
         let rows = rngs.len();
+        let batch = BatchPdes::with_table_family(topology, nbr, load, mode, rngs, family);
         let mut engine = if lattice_workers > 1 {
-            Engine::Sharded(ShardedPdes::with_table(
-                topology,
-                nbr,
-                load,
-                mode,
-                rngs,
-                lattice_workers,
-            ))
+            Engine::Sharded(ShardedPdes::from_batch(batch, lattice_workers))
         } else {
-            Engine::Single(BatchPdes::with_table(topology, nbr, load, mode, rngs))
+            Engine::Single(batch)
         };
         // `ModelSpec::None` builds nothing: the engine keeps its fused
         // payload-free hot path
@@ -193,6 +189,9 @@ pub struct RunSpec {
     /// Master seed; trial k uses stream (seed, k) so results are
     /// scheduling-independent.
     pub seed: u64,
+    /// RNG trajectory family (see [`StreamFamily`]): `Pe` is the default
+    /// for new runs; `RowV1` replays every historical trajectory.
+    pub streams: StreamFamily,
 }
 
 /// `RunSpec` is `Eq` because [`Mode`] is (window widths are never NaN),
@@ -204,17 +203,21 @@ impl RunSpec {
     /// cache key (see `coordinator::plan` and DESIGN.md §Campaigns).
     ///
     /// Grammar (v1, frozen): `l=<L>;load=<load>;mode=<mode>;trials=<N>;`
-    /// `steps=<T>;seed=<S>` with the sub-specs rendered by
+    /// `steps=<T>;seed=<S>[;streams=pe]` with the sub-specs rendered by
     /// [`VolumeLoad::spec_string`] / [`Mode::spec_string`].  The emission
     /// order is keyed, fixed and independent of the struct's field order,
     /// so reordering `RunSpec`'s fields in code can never change a cache
-    /// key (the cache hashes and byte-compares this string).
+    /// key (the cache hashes and byte-compares this string).  Following
+    /// the `model=` precedent, `streams=` is emitted *only* for the
+    /// non-historical [`StreamFamily::Pe`] family — a `RowV1` spec
+    /// renders byte-identically to its pre-family form, so every
+    /// historical cache key and TSV header is unchanged.
     /// [`RunSpec::parse_spec`] is the tolerant reader for tooling: it
-    /// accepts the six `key=value` fields in any order (round-trip
-    /// tested) — but note the cache itself never parses; it matches the
-    /// canonical emission byte-for-byte.
+    /// accepts the `key=value` fields in any order (round-trip tested) —
+    /// but note the cache itself never parses; it matches the canonical
+    /// emission byte-for-byte.
     pub fn spec_string(&self) -> String {
-        format!(
+        let mut s = format!(
             "l={};load={};mode={};trials={};steps={};seed={}",
             self.l,
             self.load.spec_string(),
@@ -222,14 +225,21 @@ impl RunSpec {
             self.trials,
             self.steps,
             self.seed
-        )
+        );
+        if self.streams != StreamFamily::RowV1 {
+            s.push_str(";streams=");
+            s.push_str(self.streams.tag());
+        }
+        s
     }
 
-    /// Parse a [`RunSpec::spec_string`] rendering: all six fields
-    /// required, any order, unknown keys rejected.
+    /// Parse a [`RunSpec::spec_string`] rendering: the six v1 fields
+    /// required, `streams=` optional (absent ⇒ `RowV1`, matching the
+    /// emission), any order, unknown keys rejected.
     pub fn parse_spec(s: &str) -> Result<RunSpec> {
         let (mut l, mut load, mut mode) = (None, None, None);
         let (mut trials, mut steps, mut seed) = (None, None, None);
+        let mut streams = StreamFamily::RowV1;
         for field in s.split(';') {
             let Some((k, v)) = field.split_once('=') else {
                 bail!("bad run-spec field {field:?} in {s:?}");
@@ -249,6 +259,10 @@ impl RunSpec {
                 "seed" => {
                     seed = Some(v.parse::<u64>().map_err(|_| anyhow::anyhow!("bad seed={v:?}"))?)
                 }
+                "streams" => {
+                    streams = StreamFamily::parse(v)
+                        .ok_or_else(|| anyhow::anyhow!("bad streams={v:?} (want row|pe)"))?
+                }
                 _ => bail!("unknown run-spec key {k:?} in {s:?}"),
             }
         }
@@ -261,6 +275,7 @@ impl RunSpec {
                     trials,
                     steps,
                     seed,
+                    streams,
                 })
             }
             _ => bail!("run spec {s:?} is missing required fields"),
@@ -320,6 +335,7 @@ pub fn run_topology_ensemble_model(
                     BatchPdes::trial_streams(spec.seed, start, rows),
                     lattice_workers,
                     model,
+                    spec.streams,
                 );
                 for t in 0..spec.steps {
                     sim.step();
@@ -426,6 +442,7 @@ pub fn steady_state_topology_model(
                     BatchPdes::trial_streams(spec.seed, start, rows),
                     lattice_workers,
                     model,
+                    spec.streams,
                 );
                 for _ in 0..warm {
                     engine.step();
@@ -539,6 +556,7 @@ pub fn model_steady_topology(
                     BatchPdes::trial_streams(spec.seed, start, rows),
                     lattice_workers,
                     model,
+                    spec.streams,
                 );
                 for _ in 0..warm {
                     engine.step();
@@ -627,6 +645,7 @@ pub fn update_stats_topology(
                     BatchPdes::trial_streams(spec.seed, start, rows),
                     lattice_workers,
                     model,
+                    spec.streams,
                 );
                 for _ in 0..warm {
                     engine.step();
@@ -851,12 +870,14 @@ pub fn execute_point(point: &SweepPoint, lattice_workers: usize) -> PointResult 
         ),
         Sampling::Snapshot { at, stream } => {
             // single-trial surface snapshots: a B = 1 batch on the point's
-            // stream — bit-identical to the historical RingPdes drivers
-            let mut sim = BatchPdes::new(
+            // stream (and stream family) — bit-identical to the historical
+            // RingPdes drivers under RowV1
+            let mut sim = BatchPdes::new_family(
                 point.topology,
                 point.run.load,
                 point.run.mode,
                 vec![Rng::for_stream(point.run.seed, *stream)],
+                point.run.streams,
             );
             let models = point.model.build_rows(point.topology.len(), 1);
             if !models.is_empty() {
@@ -937,6 +958,7 @@ mod tests {
     use crate::stats::Lane;
 
     fn spec(l: usize, mode: Mode, trials: u64, steps: usize) -> RunSpec {
+        // RowV1: these tests pin historical trajectories and cache keys
         RunSpec {
             l,
             load: VolumeLoad::Sites(1),
@@ -944,6 +966,7 @@ mod tests {
             trials,
             steps,
             seed: 99,
+            streams: StreamFamily::RowV1,
         }
     }
 
@@ -1238,8 +1261,11 @@ mod tests {
             trials: 32,
             steps: 500,
             seed: crate::DEFAULT_SEED,
+            streams: StreamFamily::RowV1,
         };
-        // pinned: this exact string is hashed into on-disk cache keys
+        // pinned: this exact string is hashed into on-disk cache keys —
+        // RowV1 must render with no `streams=` key, byte-identical to
+        // every pre-family emission
         assert_eq!(
             s.spec_string(),
             "l=100;load=10;mode=win:10;trials=32;steps=500;seed=20020601"
@@ -1251,6 +1277,39 @@ mod tests {
         assert!(RunSpec::parse_spec("l=100;load=10;mode=win:10").is_err());
         assert!(RunSpec::parse_spec(
             "l=100;load=10;mode=win:10;trials=32;steps=500;seed=1;extra=9"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn pe_run_spec_string_pinned_and_roundtrip() {
+        let s = RunSpec {
+            l: 100,
+            load: VolumeLoad::Sites(10),
+            mode: Mode::Windowed { delta: 10.0 },
+            trials: 32,
+            steps: 500,
+            seed: crate::DEFAULT_SEED,
+            streams: StreamFamily::Pe,
+        };
+        // pinned: the per-PE family appends exactly one key, last
+        assert_eq!(
+            s.spec_string(),
+            "l=100;load=10;mode=win:10;trials=32;steps=500;seed=20020601;streams=pe"
+        );
+        assert_eq!(RunSpec::parse_spec(&s.spec_string()).unwrap(), s);
+        // explicit `streams=row` also parses (tooling symmetry)
+        let mut row = s;
+        row.streams = StreamFamily::RowV1;
+        assert_eq!(
+            RunSpec::parse_spec(
+                "l=100;load=10;mode=win:10;trials=32;steps=500;seed=20020601;streams=row"
+            )
+            .unwrap(),
+            row
+        );
+        assert!(RunSpec::parse_spec(
+            "l=100;load=10;mode=win:10;trials=32;steps=500;seed=1;streams=banana"
         )
         .is_err());
     }
@@ -1278,6 +1337,7 @@ mod tests {
                     trials: 4,
                     steps: 0,
                     seed,
+                    streams: StreamFamily::Pe,
                 },
                 60,
                 60,
@@ -1293,6 +1353,7 @@ mod tests {
                 trials: 3,
                 steps: 0,
                 seed,
+                streams: StreamFamily::Pe,
             },
             30,
         ));
@@ -1306,6 +1367,7 @@ mod tests {
                 trials: 1,
                 steps: 0,
                 seed,
+                streams: StreamFamily::Pe,
             },
             vec![2, 20],
             0,
@@ -1403,6 +1465,7 @@ mod tests {
             trials: 5,
             steps: 0,
             seed: 9,
+            streams: StreamFamily::Pe,
         };
         let point = SweepPoint::steady("p", Topology::Ring { l: 16 }, s, 80, 120);
         let direct = steady_state_topology_with(

@@ -32,5 +32,5 @@ pub use campaign::{
 };
 pub use jax::{run_artifact_ensemble, run_with_executor as run_with_executor_bench, JaxRunSpec};
 pub use plan::{fnv1a64, PointResult, Profile, Sampling, SweepPlan, SweepPoint};
-pub use pool::{shard_lattice, shard_trials, worker_count};
+pub use pool::{shard_lattice, shard_trials, worker_count, StepPool};
 pub use spec::CampaignSpec;

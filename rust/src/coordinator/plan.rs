@@ -808,6 +808,7 @@ mod tests {
     use crate::pdes::{Mode, VolumeLoad};
 
     fn run(l: usize) -> RunSpec {
+        // RowV1: these tests pin historical point specs and cache keys
         RunSpec {
             l,
             load: VolumeLoad::Sites(1),
@@ -815,6 +816,7 @@ mod tests {
             trials: 8,
             steps: 0,
             seed: crate::DEFAULT_SEED,
+            streams: crate::rng::StreamFamily::RowV1,
         }
     }
 

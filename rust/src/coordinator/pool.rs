@@ -1,18 +1,47 @@
 //! Trial sharding across a scoped worker pool (std::thread — no tokio in
 //! the offline toolchain; the pool is structural on 1-core boxes and scales
-//! on real multi-core hosts).
+//! on real multi-core hosts), plus [`StepPool`]: the persistent parked-
+//! worker pool behind [`crate::pdes::ShardedPdes`]'s per-step phases.
 
+use std::sync::{Arc, Condvar, Mutex, Once};
 use std::thread;
 
 /// Number of workers to use (respects `REPRO_WORKERS`, defaults to the
 /// available parallelism).
+///
+/// Clamp policy: `REPRO_WORKERS=0` is read as "the minimum" and clamps to
+/// one worker — a zero-thread pool cannot make progress, and figure
+/// scripts use `0` to mean "serial please".  An *unparseable* value (e.g.
+/// `REPRO_WORKERS=abc`) falls back to the available parallelism, but
+/// warns once on stderr instead of silently ignoring the variable — a
+/// typo'd override used to masquerade as a deliberate machine-width run.
 pub fn worker_count() -> usize {
-    if let Ok(v) = std::env::var("REPRO_WORKERS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
+    let fallback =
+        || thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    match std::env::var("REPRO_WORKERS") {
+        Ok(v) => match parse_worker_env(&v) {
+            Some(n) => n,
+            None => {
+                static WARNED: Once = Once::new();
+                WARNED.call_once(|| {
+                    eprintln!(
+                        "repro: REPRO_WORKERS={v:?} is not an integer; \
+                         falling back to available parallelism"
+                    );
+                });
+                fallback()
+            }
+        },
+        Err(_) => fallback(),
     }
-    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The pure parsing core of [`worker_count`]: `Some(n.max(1))` for an
+/// integer (the documented `0 → 1` clamp), `None` for garbage (the caller
+/// warns and falls back).  Split out so the unit tests below can cover
+/// both branches without mutating the process environment.
+pub(crate) fn parse_worker_env(v: &str) -> Option<usize> {
+    v.trim().parse::<usize>().ok().map(|n| n.max(1))
 }
 
 /// Split `trials` into per-worker contiguous id ranges (first shards take
@@ -99,6 +128,228 @@ where
         acc = merge(acc, r);
     }
     Some(acc)
+}
+
+// ---------------------------------------------------------------------------
+// StepPool: a persistent parked-worker pool for per-step fan-out.
+//
+// `thread::scope` costs one OS spawn + join per worker per call; at the
+// step rates of the sharded engine (O(1e5) steps × 2 phases on small L)
+// that spawn traffic dominates the actual sweep work.  StepPool spawns its
+// workers ONCE and parks them on a condvar between steps; each `run` is a
+// lock + epoch bump + `notify_all`, and the leader thread participates in
+// the work itself, so a 1-thread pool degenerates to a plain inline call
+// with no synchronization at all.
+//
+// Wakeup protocol (DESIGN.md §Sharding has the full correctness argument):
+// the shared state holds a monotonically increasing `epoch`.  A worker
+// remembers the last epoch it served; it runs the published job exactly
+// when the shared epoch differs from its own, then decrements `active` and
+// signals the leader when the count hits zero.  Because the epoch is
+// advanced *under the same mutex* the workers wait on, a notification can
+// never be missed: either the worker is inside `Condvar::wait` (and is
+// woken), or it has not yet re-checked the state (and will observe the new
+// epoch on its next check).  Spurious wakeups re-check the epoch and go
+// back to sleep.
+//
+// Job publication type-erases the borrowed closure into a raw pointer
+// (`JobPtr`).  Soundness: `run` does not return until `active == 0`, i.e.
+// until every worker has finished calling the closure, so the borrow it
+// erases strictly outlives every dereference; workers never touch the
+// pointer outside the epoch window that published it.
+// ---------------------------------------------------------------------------
+
+/// Lifetime-erased pointer to the per-step job (`fn(worker_index)`).
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+
+// Safety: the pointee is `Sync` (shared calls from many threads are fine)
+// and `StepPool::run` blocks until all workers are done with it, so the
+// pointer never dangles while shared (see module comment above).
+unsafe impl Send for JobPtr {}
+
+struct PoolState {
+    /// Bumped once per published job; workers compare against the last
+    /// epoch they served.
+    epoch: u64,
+    /// The current job, valid exactly while `active > 0`.
+    job: Option<JobPtr>,
+    /// Spawned workers still running the current job.
+    active: usize,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here between steps.
+    work: Condvar,
+    /// The leader waits here for `active == 0`.
+    done: Condvar,
+}
+
+/// A persistent worker pool: `threads - 1` OS threads spawned at
+/// construction and parked between calls, the calling thread acting as
+/// worker 0.  Built for [`crate::pdes::ShardedPdes`], whose two per-step
+/// phases used to pay a `thread::scope` spawn/join cycle each.
+pub struct StepPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl StepPool {
+    /// A pool of `threads` total workers (the calling thread counts as
+    /// one, so `threads - 1` OS threads are spawned; `threads <= 1` spawns
+    /// nothing and every `run` is fully inline).  Spawn failure degrades
+    /// gracefully to however many workers did start.
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                active: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let mut handles = Vec::new();
+        for i in 1..threads.max(1) {
+            let sh = Arc::clone(&shared);
+            let builder = thread::Builder::new().name(format!("repro-step-{i}"));
+            match builder.spawn(move || worker_loop(&sh, i)) {
+                Ok(h) => handles.push(h),
+                // degrade gracefully: a pool with fewer workers is slower,
+                // never wrong (run_chunks sizes chunks by live capacity)
+                Err(_) => break,
+            }
+        }
+        Self { shared, handles }
+    }
+
+    /// Total worker count, including the calling thread.
+    #[inline]
+    pub fn threads(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// OS threads spawned at construction (the acceptance metric for
+    /// "zero thread spawns per step": this number is fixed for the life
+    /// of the pool).
+    #[inline]
+    pub fn spawned_threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `f(worker_index)` once on every worker (indices `0..threads()`,
+    /// the calling thread taking index 0) and return when all are done.
+    pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
+        if self.handles.is_empty() {
+            f(0);
+            return;
+        }
+        // Erase the borrow's lifetime for publication; see the module
+        // comment for why this cannot dangle.
+        let f_erased: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(f) };
+        let ptr = JobPtr(f_erased as *const _);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert_eq!(st.active, 0, "overlapping StepPool::run calls");
+            st.job = Some(ptr);
+            st.active = self.handles.len();
+            st.epoch += 1;
+        }
+        self.shared.work.notify_all();
+        // the leader is worker 0 — it works instead of blocking
+        f(0);
+        let mut st = self.shared.state.lock().unwrap();
+        while st.active != 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+
+    /// Split `items` into one contiguous chunk per worker and run `f` on
+    /// each chunk in parallel.  Chunk count adapts to `items.len()`, so a
+    /// wide pool over few items leaves the excess workers idle (they wake,
+    /// find no chunk, and park again).  Chunk boundaries do not affect
+    /// results for the engine's work items (disjoint mutable state per
+    /// item), only scheduling.
+    pub fn run_chunks<T: Send, F>(&self, items: &mut [T], f: F)
+    where
+        F: Fn(&mut [T]) + Sync,
+    {
+        self.run_chunks_capped(items, usize::MAX, f);
+    }
+
+    /// [`Self::run_chunks`] with an explicit cap on the number of chunks —
+    /// lets a caller that *requested* fewer workers than the pool holds
+    /// (e.g. a re-sharded engine reusing a wider long-lived pool) honour
+    /// its requested concurrency.
+    pub fn run_chunks_capped<T: Send, F>(&self, items: &mut [T], cap: usize, f: F)
+    where
+        F: Fn(&mut [T]) + Sync,
+    {
+        if items.is_empty() {
+            return;
+        }
+        let parts = self.threads().min(items.len()).min(cap.max(1));
+        if parts <= 1 {
+            f(items);
+            return;
+        }
+        let per = items.len().div_ceil(parts);
+        let slots: Vec<Mutex<Option<&mut [T]>>> =
+            items.chunks_mut(per).map(|c| Mutex::new(Some(c))).collect();
+        let job = |i: usize| {
+            if let Some(slot) = slots.get(i) {
+                if let Some(chunk) = slot.lock().unwrap().take() {
+                    f(chunk);
+                }
+            }
+        };
+        self.run(&job);
+    }
+}
+
+impl Drop for StepPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared, index: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.job.expect("epoch advanced without a job");
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        // Safety: the leader blocks in `run` until `active == 0`, so the
+        // closure behind this pointer is alive for the whole call.
+        (unsafe { &*job.0 })(index);
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done.notify_one();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -201,6 +452,72 @@ mod tests {
             .unwrap();
             assert_eq!(ids, (0..13).collect::<Vec<u64>>(), "workers = {workers}");
         }
+    }
+
+    #[test]
+    fn worker_env_parses_and_clamps_zero_to_one() {
+        // the documented clamp: 0 is "the minimum", i.e. one worker
+        assert_eq!(parse_worker_env("0"), Some(1));
+        assert_eq!(parse_worker_env("1"), Some(1));
+        assert_eq!(parse_worker_env("7"), Some(7));
+        assert_eq!(parse_worker_env(" 3 "), Some(3));
+    }
+
+    #[test]
+    fn worker_env_garbage_is_rejected_not_swallowed() {
+        // unparseable values return None so worker_count can warn and
+        // fall back, instead of the old silent fall-through
+        for bad in ["abc", "", "-1", "3.5", "2x", "0x4"] {
+            assert_eq!(parse_worker_env(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn step_pool_runs_every_worker_once_per_epoch() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = StepPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        assert_eq!(pool.spawned_threads(), 3);
+        let calls = AtomicUsize::new(0);
+        let seen: [AtomicUsize; 4] = std::array::from_fn(|_| AtomicUsize::new(0));
+        for _ in 0..50 {
+            pool.run(&|i| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                seen[i].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(calls.load(Ordering::Relaxed), 200);
+        for (i, s) in seen.iter().enumerate() {
+            assert_eq!(s.load(Ordering::Relaxed), 50, "worker {i}");
+        }
+    }
+
+    #[test]
+    fn step_pool_chunks_cover_items_exactly() {
+        for threads in [1usize, 2, 3, 5, 9] {
+            let pool = StepPool::new(threads);
+            for n in [0usize, 1, 2, 7, 100] {
+                let mut items: Vec<u64> = vec![0; n];
+                pool.run_chunks(&mut items, |chunk| {
+                    for x in chunk {
+                        *x += 1;
+                    }
+                });
+                assert!(
+                    items.iter().all(|&x| x == 1),
+                    "threads={threads} n={n}: {items:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn step_pool_single_thread_is_inline() {
+        let pool = StepPool::new(1);
+        assert_eq!(pool.spawned_threads(), 0);
+        let mut items = vec![1u32; 10];
+        pool.run_chunks(&mut items, |c| c.iter_mut().for_each(|x| *x *= 2));
+        assert!(items.iter().all(|&x| x == 2));
     }
 
     #[test]

@@ -6,6 +6,7 @@ use anyhow::{bail, Result};
 use crate::config::Config;
 use crate::output::Table;
 use crate::pdes::{Mode, ModelSpec, Topology, VolumeLoad};
+use crate::rng::StreamFamily;
 
 use super::campaign::{run_plan, CampaignOpts, RunSpec, ShardStrategy};
 use super::plan::{SweepPlan, SweepPoint};
@@ -46,6 +47,11 @@ pub struct CampaignSpec {
     pub beta: f64,
     /// Coupling J of the "ising" payload.
     pub coupling: f64,
+    /// RNG trajectory family: "pe" (default — counter-based per-PE
+    /// streams, worker-count-invariant and lattice-parallel) | "row"
+    /// (the historical per-row serial streams; use it to reproduce
+    /// pre-family cache entries, goldens and TSVs bit for bit).
+    pub streams: String,
     /// Worker decomposition: "trials" (default) | "lattice" | "both".
     /// Since the declarative-campaign refactor, "trials" means *point*
     /// fan-out across the pool (each grid cell's trial fold is the
@@ -79,6 +85,7 @@ impl CampaignSpec {
             model: cfg.text(s, "model", "none"),
             beta: cfg.number(s, "beta", crate::pdes::model::DEFAULT_BETA),
             coupling: cfg.number(s, "coupling", crate::pdes::model::DEFAULT_COUPLING),
+            streams: cfg.text(s, "streams", "pe"),
             workers: cfg.text(s, "workers", "trials"),
             lattice_workers: cfg.integer(s, "lattice_workers", 0) as usize,
         };
@@ -107,6 +114,9 @@ impl CampaignSpec {
             "none" | "ising" | "sitecounter" => {}
             m => bail!("campaign: unknown model {m:?} (none|ising|sitecounter)"),
         }
+        if StreamFamily::parse(&spec.streams).is_none() {
+            bail!("campaign: unknown streams {:?} (pe|row)", spec.streams);
+        }
         // NaN/∞ would break the canonical model spec rendering (cache
         // keys); reject at parse time like `deltas`
         if !spec.beta.is_finite() || spec.beta < 0.0 {
@@ -118,6 +128,11 @@ impl CampaignSpec {
         // fail at parse time, not mid-sweep
         ShardStrategy::from_spec(&spec.workers, spec.lattice_workers)?;
         Ok(spec)
+    }
+
+    /// The resolved RNG trajectory family of this campaign.
+    pub fn stream_family(&self) -> StreamFamily {
+        StreamFamily::parse(&self.streams).expect("validated in from_config")
     }
 
     /// The resolved model payload of this campaign.
@@ -214,6 +229,7 @@ impl CampaignSpec {
                         trials: self.trials,
                         steps: 0,
                         seed: self.seed,
+                        streams: self.stream_family(),
                     },
                     self.warm,
                     self.measure,
@@ -380,6 +396,48 @@ measure = 50
         for p in &spec.to_plan().points {
             assert!(!p.spec().contains("model="), "{}", p.spec());
         }
+    }
+
+    #[test]
+    fn default_streams_is_pe_and_row_restores_old_keys() {
+        let cfg = Config::parse("[campaign]\nl = [8]\nnv = [1]").unwrap();
+        let spec = CampaignSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.streams, "pe");
+        assert_eq!(spec.stream_family(), StreamFamily::Pe);
+        for p in &spec.to_plan().points {
+            assert!(p.spec().contains("streams=pe"), "{}", p.spec());
+        }
+        // `streams = "row"` restores the historical family: point specs
+        // render with no streams= key at all, so pre-family cache
+        // entries keep resolving byte-for-byte
+        let cfg = Config::parse("[campaign]\nstreams = \"row\"\nl = [8]\nnv = [1]").unwrap();
+        let spec = CampaignSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.stream_family(), StreamFamily::RowV1);
+        for p in &spec.to_plan().points {
+            assert!(!p.spec().contains("streams="), "{}", p.spec());
+        }
+    }
+
+    #[test]
+    fn bad_streams_rejected() {
+        let cfg = Config::parse("[campaign]\nstreams = \"col\"\nl = [8]\nnv = [1]").unwrap();
+        assert!(CampaignSpec::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn streams_key_executes_the_pe_family() {
+        let cfg = Config::parse(
+            "[campaign]\nmode = \"windowed\"\nworkers = \"lattice\"\nlattice_workers = 3\n\
+             l = [12]\nnv = [1]\ndeltas = [3]\ntrials = 4\nwarm = 30\nmeasure = 30",
+        )
+        .unwrap();
+        let spec = CampaignSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.stream_family(), StreamFamily::Pe);
+        let dir = std::env::temp_dir().join("repro_campaign_streams_test");
+        let table = spec.execute(&dir).unwrap();
+        assert_eq!(table.len(), 1);
+        assert!(table.rows()[0][3] > 0.0 && table.rows()[0][3] <= 1.0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -76,6 +76,7 @@ pub(super) fn plan(p: &Profile) -> SweepPlan {
                     trials: g.trials,
                     steps: 0,
                     seed: p.seed,
+                    streams: crate::rng::StreamFamily::RowV1,
                 },
                 g.warm,
                 g.measure,

@@ -29,6 +29,7 @@ pub(super) fn plan(p: &Profile) -> SweepPlan {
             trials,
             steps: 0,
             seed: p.seed,
+            streams: crate::rng::StreamFamily::RowV1,
         },
         steps,
     ));

@@ -46,6 +46,7 @@ pub(super) fn plan(p: &Profile) -> SweepPlan {
                     trials: g.trials,
                     steps: g.steps,
                     seed: p.seed,
+                    streams: crate::rng::StreamFamily::RowV1,
                 },
                 g.steps,
             ));

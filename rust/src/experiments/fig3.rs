@@ -26,6 +26,7 @@ pub(super) fn plan(p: &Profile) -> SweepPlan {
             trials: 1,
             steps: 0,
             seed: p.seed,
+            streams: crate::rng::StreamFamily::RowV1,
         },
         SNAPSHOTS.to_vec(),
         0,

@@ -47,6 +47,7 @@ pub(super) fn plan(p: &Profile) -> SweepPlan {
                     trials,
                     steps: 0,
                     seed: p.seed + nv,
+                    streams: crate::rng::StreamFamily::RowV1,
                 },
                 steps_for(l, p),
             ));

@@ -79,6 +79,7 @@ pub(super) fn push_u_inf_cell(
                 trials,
                 steps: 0,
                 seed,
+                streams: crate::rng::StreamFamily::RowV1,
             },
             warm,
             measure,

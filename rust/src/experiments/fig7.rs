@@ -32,6 +32,7 @@ pub(super) fn plan(p: &Profile) -> SweepPlan {
                 trials: 1,
                 steps: 0,
                 seed: p.seed,
+                streams: crate::rng::StreamFamily::RowV1,
             },
             vec![t_snap],
             1,

@@ -49,6 +49,7 @@ pub(super) fn plan(p: &Profile) -> SweepPlan {
                         trials: g.trials,
                         steps: 0,
                         seed: p.seed,
+                        streams: crate::rng::StreamFamily::RowV1,
                     },
                     warm,
                     measure,
@@ -64,6 +65,7 @@ pub(super) fn plan(p: &Profile) -> SweepPlan {
                     trials: g.trials,
                     steps: 0,
                     seed: p.seed,
+                    streams: crate::rng::StreamFamily::RowV1,
                 },
                 warm,
                 measure,

@@ -78,6 +78,7 @@ pub(super) fn plan_with(p: &Profile, beta: f64, coupling: f64) -> SweepPlan {
                     trials: g.trials,
                     steps: 0,
                     seed: p.seed,
+                    streams: crate::rng::StreamFamily::RowV1,
                 },
                 g.warm,
                 g.measure,

@@ -59,6 +59,7 @@ pub(super) fn plan(p: &Profile) -> SweepPlan {
             trials: g.trials,
             steps: 0,
             seed: p.seed,
+            streams: crate::rng::StreamFamily::RowV1,
         },
         g.grow_steps,
     ));
@@ -74,6 +75,7 @@ pub(super) fn plan(p: &Profile) -> SweepPlan {
                 trials: g.sat_trials,
                 steps: 0,
                 seed: p.seed + l as u64,
+                streams: crate::rng::StreamFamily::RowV1,
             },
             sat_steps(l, p),
         ));

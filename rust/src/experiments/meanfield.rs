@@ -42,6 +42,7 @@ fn push_point(plan: &mut SweepPlan, g: &Grid, seed: u64, nv: u64, mode: Mode) {
             trials: 1,
             steps: 0,
             seed,
+            streams: crate::rng::StreamFamily::RowV1,
         },
         g.warm,
         g.steps,

@@ -10,8 +10,9 @@
 //! * `repro plan <name>|all [--quick] [--seed S]` — print a plan's grid
 //!   (labels, cache keys, canonical specs) without running anything.
 //! * `repro run --l L --nv NV --delta D [--trials N] [--steps T]
-//!   [--topology ring|kring|smallworld]` — one native campaign point on
-//!   any PE graph, printing the ⟨u⟩/⟨w⟩ summary.
+//!   [--topology ring|kring|smallworld] [--streams pe|row]` — one native
+//!   campaign point on any PE graph, printing the ⟨u⟩/⟨w⟩ summary
+//!   (`--streams row` replays the historical per-row RNG family).
 //! * `repro jax --l L [--trials N] [--steps T]`
 //!   — the same through the AOT JAX/Pallas artifacts (PJRT runtime).
 //! * `repro info` — artifact manifest + platform diagnostics.
@@ -25,7 +26,7 @@ use repro::coordinator::{
 };
 use repro::experiments::{self, Ctx};
 use repro::pdes::model::{DEFAULT_BETA, DEFAULT_COUPLING};
-use repro::pdes::{Mode, ModelSpec, Topology, VolumeLoad};
+use repro::pdes::{Mode, ModelSpec, StreamFamily, Topology, VolumeLoad};
 use repro::runtime::PdesRuntime;
 use repro::stats::Lane;
 use repro::DEFAULT_SEED;
@@ -193,6 +194,10 @@ fn main() -> Result<()> {
             Ok(())
         }
         "run" => {
+            let streams_arg = args.opt("streams", "pe");
+            let Some(streams) = StreamFamily::parse(&streams_arg) else {
+                anyhow::bail!("bad --streams {streams_arg:?} (pe|row)");
+            };
             let spec = RunSpec {
                 l: args.opt_u64("l", 100)? as usize,
                 load: load_from(&args)?,
@@ -200,6 +205,7 @@ fn main() -> Result<()> {
                 trials: args.opt_u64("trials", 32)?,
                 steps: args.opt_u64("steps", 1000)? as usize,
                 seed: args.opt_u64("seed", DEFAULT_SEED)?,
+                streams,
             };
             let topology = topology_from(&args, spec.l)?;
             let model = model_from(&args)?;

@@ -16,11 +16,21 @@
 //! neighbour *slot* (one-sided check), or, at N_V = 1, a border event
 //! facing every neighbour.  Blocked events persist until executed.
 //!
-//! RNG discipline (load-bearing for replay / golden tests): per replica
-//! row, draws happen in PE order; an updating PE first redraws its pending
-//! event (only when N_V > 1 and finite) and then draws its exponential
-//! time increment.  Idle PEs draw nothing.  This is exactly the serial
-//! ring's draw order, so a batch row replays a serial trajectory.
+//! RNG discipline (load-bearing for replay / golden tests): two stream
+//! families exist, selected per simulation by [`StreamFamily`]:
+//!
+//! * `RowV1` (historical): per replica row, draws happen in PE order from
+//!   the row's one serial stream; an updating PE first redraws its
+//!   pending event (only when N_V > 1 and finite) and then draws its
+//!   exponential time increment.  Idle PEs draw nothing.  This is exactly
+//!   the serial ring's draw order, so a batch row replays a serial
+//!   trajectory.
+//! * `Pe` (default for new runs): every PE owns a counter-derived stream
+//!   ([`Rng::pe_streams`]); an updating PE draws pend redraw → payload
+//!   event → exponential from *its own* stream, so the draw sequence is
+//!   independent of which PEs update around it and of any worker
+//!   scheduling — the property that lets [`super::ShardedPdes`]
+//!   parallelize the update sweep inside a row.
 //!
 //! §Perf (DESIGN.md): the hot path is fused and allocation-free.  There is
 //! no double buffer — after the frozen decision pass each PE's update
@@ -34,7 +44,7 @@
 use super::model::Model;
 use super::topology::{NeighbourTable, Topology};
 use super::{Mode, VolumeLoad};
-use crate::rng::Rng;
+use crate::rng::{Rng, StreamFamily};
 use crate::stats::StepStats;
 
 /// Pending-event encoding of one PE: no check needed this event.
@@ -126,8 +136,15 @@ pub struct BatchPdes {
     mode: Mode,
     p_side: f64,
     nv1: bool,
-    /// One independent generator per replica row.
+    /// One independent generator per replica row (the trial stream; under
+    /// the `Pe` family it is consumed once at construction to derive the
+    /// per-PE streams and never used again).
     rngs: Vec<Rng>,
+    /// Which stream family drives the trajectory.
+    family: StreamFamily,
+    /// Per-PE streams, row-major `(B, L)` — populated only under
+    /// [`StreamFamily::Pe`], empty for `RowV1`.
+    rngs_pe: Vec<Rng>,
     /// Model payloads, one per replica row (`pdes::model`) — empty when
     /// no payload is attached, in which case the step runs the exact
     /// fused hot path with no model branches anywhere in the sweep.
@@ -145,20 +162,51 @@ pub struct BatchPdes {
 impl BatchPdes {
     /// A fresh batch: every row synchronized at τ = 0 (the paper's initial
     /// condition), row `i` driven by `rngs[i]`.  Row count = `rngs.len()`.
+    /// Runs the historical `RowV1` stream family (compat default of the
+    /// engine-level constructors — the user-facing spec layer defaults to
+    /// `pe`); see [`Self::new_family`].
     pub fn new(topology: Topology, load: VolumeLoad, mode: Mode, rngs: Vec<Rng>) -> Self {
+        Self::new_family(topology, load, mode, rngs, StreamFamily::RowV1)
+    }
+
+    /// [`Self::new`] with an explicit [`StreamFamily`].
+    pub fn new_family(
+        topology: Topology,
+        load: VolumeLoad,
+        mode: Mode,
+        rngs: Vec<Rng>,
+        family: StreamFamily,
+    ) -> Self {
         let nbr = topology.neighbour_table();
-        Self::with_table(topology, nbr, load, mode, rngs)
+        Self::with_table_family(topology, nbr, load, mode, rngs, family)
     }
 
     /// [`Self::new`] with a prebuilt neighbour table — lets the coordinator
     /// build the graph (small-world link sampling included) once per
-    /// parameter point and share it across trial batches.
+    /// parameter point and share it across trial batches.  `RowV1` family.
     pub fn with_table(
         topology: Topology,
         nbr: NeighbourTable,
         load: VolumeLoad,
         mode: Mode,
+        rngs: Vec<Rng>,
+    ) -> Self {
+        Self::with_table_family(topology, nbr, load, mode, rngs, StreamFamily::RowV1)
+    }
+
+    /// [`Self::with_table`] with an explicit [`StreamFamily`].  Under
+    /// [`StreamFamily::Pe`] each row's trial stream is consumed exactly
+    /// once to derive its per-PE streams ([`Rng::pe_streams`]), and the
+    /// initial pending events are drawn from each PE's *own* stream in PE
+    /// order — so the whole construction is replayable per (seed, trial,
+    /// PE) triple with no dependence on B or scheduling.
+    pub fn with_table_family(
+        topology: Topology,
+        nbr: NeighbourTable,
+        load: VolumeLoad,
+        mode: Mode,
         mut rngs: Vec<Rng>,
+        family: StreamFamily,
     ) -> Self {
         let pes = topology.len();
         assert!(pes >= 3, "topology needs at least 3 PEs");
@@ -178,10 +226,31 @@ impl BatchPdes {
             "PE degree must fit the one-byte pending-slot encoding"
         );
         let mut pend = vec![PEND_INTERIOR; rows * pes];
+        let mut rngs_pe: Vec<Rng> = Vec::new();
+        if family == StreamFamily::Pe {
+            rngs_pe.reserve_exact(rows * pes);
+            for rng in rngs.iter_mut() {
+                rngs_pe.extend(Rng::pe_streams(rng, pes));
+            }
+        }
         if mode.enforces_nn() {
-            for (row, rng) in rngs.iter_mut().enumerate() {
-                for k in 0..pes {
-                    pend[row * pes + k] = draw_pending_slot(rng, p_side, nv1, nbr.degree(k));
+            match family {
+                StreamFamily::RowV1 => {
+                    for (row, rng) in rngs.iter_mut().enumerate() {
+                        for k in 0..pes {
+                            pend[row * pes + k] =
+                                draw_pending_slot(rng, p_side, nv1, nbr.degree(k));
+                        }
+                    }
+                }
+                StreamFamily::Pe => {
+                    for row in 0..rows {
+                        for k in 0..pes {
+                            let i = row * pes + k;
+                            pend[i] =
+                                draw_pending_slot(&mut rngs_pe[i], p_side, nv1, nbr.degree(k));
+                        }
+                    }
                 }
             }
         }
@@ -213,6 +282,8 @@ impl BatchPdes {
             p_side,
             nv1,
             rngs,
+            family,
+            rngs_pe,
             models: Vec::new(),
             t: 0,
             ring2,
@@ -257,7 +328,7 @@ impl BatchPdes {
         (0..rows as u64).map(|i| Rng::for_stream(seed, first + i)).collect()
     }
 
-    /// Convenience constructor over [`Self::trial_streams`].
+    /// Convenience constructor over [`Self::trial_streams`] (`RowV1`).
     pub fn with_streams(
         topology: Topology,
         load: VolumeLoad,
@@ -267,6 +338,31 @@ impl BatchPdes {
         first: u64,
     ) -> Self {
         Self::new(topology, load, mode, Self::trial_streams(seed, first, rows))
+    }
+
+    /// [`Self::with_streams`] with an explicit [`StreamFamily`].
+    pub fn with_streams_family(
+        topology: Topology,
+        load: VolumeLoad,
+        mode: Mode,
+        rows: usize,
+        seed: u64,
+        first: u64,
+        family: StreamFamily,
+    ) -> Self {
+        Self::new_family(
+            topology,
+            load,
+            mode,
+            Self::trial_streams(seed, first, rows),
+            family,
+        )
+    }
+
+    /// The stream family driving this simulation's trajectory.
+    #[inline]
+    pub fn family(&self) -> StreamFamily {
+        self.family
     }
 
     /// Number of replica rows B.
@@ -428,6 +524,7 @@ impl BatchPdes {
         // the two-sided fast path only applies when Eq. 1 is enforced at
         // all — RD modes at N_V = 1 must skip the neighbour check entirely
         let ring_fast = enforce_nn && self.nv1 && self.ring2;
+        let family = self.family;
 
         let Self {
             tau,
@@ -436,6 +533,7 @@ impl BatchPdes {
             counts,
             stats,
             rngs,
+            rngs_pe,
             nbr,
             models,
             t,
@@ -458,7 +556,37 @@ impl BatchPdes {
             let row_tau = &mut tau[base..base + pes];
             let row_mask = mask.as_deref_mut().map(|m| &mut m[base..base + pes]);
 
-            let s = if has_model {
+            let s = if family == StreamFamily::Pe {
+                // per-PE family: the split decide/update shape for every
+                // mode (same frozen-row decision argument as the model
+                // path below), with every updating PE drawing pend
+                // redraw → payload event → exponential from its own
+                // stream.  Row aggregates come from a linear
+                // `StepStats::measure` over the final row — the exact
+                // fold the sharded engine runs after its parallel
+                // block sweep, so the two engines agree to the bit.
+                let row_pend = &mut pend[base..base + pes];
+                decide_row_generic(row_tau, row_pend, nbr, edge, ok);
+                if let Some(m) = row_mask {
+                    m.copy_from_slice(&ok[..]);
+                }
+                let row_rngs = &mut rngs_pe[base..base + pes];
+                let n_up = if has_model {
+                    update_row_model_pe(
+                        row_tau,
+                        row_pend,
+                        nbr,
+                        ok,
+                        redraw,
+                        row_rngs,
+                        models[row].as_mut(),
+                        t_now,
+                    )
+                } else {
+                    update_row_pe(row_tau, row_pend, nbr, ok, redraw, row_rngs)
+                };
+                StepStats::measure(row_tau, n_up)
+            } else if has_model {
                 // model-payload path: the split decide/update shape for
                 // every mode (decisions over the frozen row are
                 // bit-identical to the fused sweeps' — the §Perf in-place
@@ -529,10 +657,12 @@ impl BatchPdes {
             p_side: self.p_side,
             nv1: self.nv1,
             ring2: self.ring2,
+            family: self.family,
             t: self.t,
             tau: &mut self.tau,
             pend: &mut self.pend,
             rngs: &mut self.rngs,
+            rngs_pe: &mut self.rngs_pe,
             counts: &mut self.counts,
             stats: &mut self.stats,
             models: &mut self.models,
@@ -560,11 +690,14 @@ pub(crate) struct StepParts<'a> {
     pub p_side: f64,
     pub nv1: bool,
     pub ring2: bool,
+    pub family: StreamFamily,
     /// Current parallel step index (payload events stamp it).
     pub t: u64,
     pub tau: &'a mut [f64],
     pub pend: &'a mut [u8],
     pub rngs: &'a mut [Rng],
+    /// Per-PE streams (`(B, L)`; empty under `RowV1`).
+    pub rngs_pe: &'a mut [Rng],
     pub counts: &'a mut [u32],
     pub stats: &'a mut [StepStats],
     /// One payload per row, or empty when no model is attached.
@@ -773,6 +906,78 @@ fn update_row_model(
         min: mn,
         max: mx,
     }
+}
+
+/// Per-PE-family update sweep ([`StreamFamily::Pe`]): each updating PE
+/// draws pend redraw → exponential from its *own* stream, so the sweep
+/// order is irrelevant to the trajectory — this serial loop and the
+/// sharded engine's parallel block sweep produce identical bits.  Returns
+/// the update count only; row aggregates come from a subsequent linear
+/// [`StepStats::measure`] over the final row (shared fold with the
+/// sharded engine).
+fn update_row_pe(
+    row_tau: &mut [f64],
+    row_pend: &mut [u8],
+    nbr: &NeighbourTable,
+    ok: &[bool],
+    redraw: Option<f64>,
+    rngs: &mut [Rng],
+) -> u32 {
+    let mut n_up = 0u32;
+    for ((((v, pd), &up), rng), nb) in row_tau
+        .iter_mut()
+        .zip(row_pend.iter_mut())
+        .zip(ok)
+        .zip(rngs.iter_mut())
+        .zip(nbr.lists())
+    {
+        if up {
+            n_up += 1;
+            if let Some(p_side) = redraw {
+                *pd = draw_pending_slot(rng, p_side, false, nb.len());
+            }
+            *v += rng.exponential();
+        }
+    }
+    n_up
+}
+
+/// [`update_row_pe`] with a model payload: the hook fires per updating PE
+/// between the pend redraw and the exponential draw, consuming the PE's
+/// own stream (the per-PE re-pin of the `pdes::model` draw-order
+/// contract).  Payload state mutation is the one part of the sweep that
+/// is *not* order-free (e.g. Ising spin flips read neighbour spins), so
+/// rows with payloads stay serial-within-row in both engines.
+#[allow(clippy::too_many_arguments)]
+fn update_row_model_pe(
+    row_tau: &mut [f64],
+    row_pend: &mut [u8],
+    nbr: &NeighbourTable,
+    ok: &[bool],
+    redraw: Option<f64>,
+    rngs: &mut [Rng],
+    model: &mut dyn Model,
+    t: u64,
+) -> u32 {
+    let mut n_up = 0u32;
+    for (k, ((((v, pd), &up), rng), nb)) in row_tau
+        .iter_mut()
+        .zip(row_pend.iter_mut())
+        .zip(ok)
+        .zip(rngs.iter_mut())
+        .zip(nbr.lists())
+        .enumerate()
+    {
+        if up {
+            n_up += 1;
+            if let Some(p_side) = redraw {
+                *pd = draw_pending_slot(rng, p_side, false, nb.len());
+            }
+            model.apply_event(k, t, *v, nb, rng);
+            *v += rng.exponential();
+        }
+    }
+    n_up
 }
 
 #[cfg(test)]
@@ -1065,6 +1270,96 @@ mod tests {
             (e - exact).abs() < 0.08,
             "e = {e} vs exact {exact} (loose sanity bound; see tests/ising_physics.rs)"
         );
+    }
+
+    #[test]
+    fn pe_family_rows_are_independent_replicas() {
+        // the Pe derivation is per (trial stream, PE): a 3-row batch must
+        // equal three B = 1 batches on the same trial streams
+        let topo = Topology::KRing { l: 16, k: 2 };
+        let mk = |rows: usize, first: u64| {
+            BatchPdes::with_streams_family(
+                topo,
+                VolumeLoad::Sites(4),
+                Mode::Windowed { delta: 3.0 },
+                rows,
+                9,
+                first,
+                StreamFamily::Pe,
+            )
+        };
+        let mut all = mk(3, 0);
+        let mut singles: Vec<BatchPdes> = (0..3u64).map(|i| mk(1, i)).collect();
+        for _ in 0..150 {
+            all.step();
+            for s in singles.iter_mut() {
+                s.step();
+            }
+        }
+        for (row, s) in singles.iter().enumerate() {
+            assert_eq!(all.tau_row(row), s.tau_row(0), "row {row} diverged");
+            assert_eq!(all.pending_row(row), s.pending_row(0), "row {row} pend");
+            assert_eq!(all.counts()[row], s.counts()[row], "row {row} count");
+        }
+    }
+
+    #[test]
+    fn stream_families_are_distinct_trajectories() {
+        // the family break is deliberate and real: same seed, different
+        // bits (otherwise the streams= spec key would be meaningless)
+        let mk = |family| {
+            let mut sim = BatchPdes::with_streams_family(
+                Topology::Ring { l: 16 },
+                VolumeLoad::Sites(1),
+                Mode::Windowed { delta: 2.0 },
+                1,
+                5,
+                0,
+                family,
+            );
+            for _ in 0..10 {
+                sim.step();
+            }
+            sim.tau().to_vec()
+        };
+        assert_ne!(mk(StreamFamily::RowV1), mk(StreamFamily::Pe));
+    }
+
+    #[test]
+    fn row_family_accessor_and_compat_default() {
+        let sim = batch(
+            Topology::Ring { l: 8 },
+            VolumeLoad::Sites(1),
+            Mode::Conservative,
+            1,
+            1,
+        );
+        // engine-level constructors keep the historical family: golden
+        // fixtures and cache entries depend on it
+        assert_eq!(sim.family(), StreamFamily::RowV1);
+    }
+
+    #[test]
+    fn pe_family_resync_rescan_is_trajectory_invisible() {
+        let mk = |period: Option<u64>| {
+            let mut sim = BatchPdes::with_streams_family(
+                Topology::SmallWorld { l: 20, extra: 6, seed: 3 },
+                VolumeLoad::Sites(4),
+                Mode::Windowed { delta: 3.0 },
+                2,
+                17,
+                0,
+                StreamFamily::Pe,
+            );
+            if let Some(p) = period {
+                sim.set_gvt_resync_period(p);
+            }
+            for _ in 0..50 {
+                sim.step();
+            }
+            (sim.tau().to_vec(), sim.step_stats().to_vec())
+        };
+        assert_eq!(mk(None), mk(Some(3)));
     }
 
     #[test]

@@ -15,8 +15,9 @@
 //! * [`BatchPdes`] — the engine: B independent replicas in one `(B, L)`
 //!   struct-of-arrays pass (the L2 artifact layout, natively);
 //! * [`ShardedPdes`] — the same engine stepped by a worker-per-block
-//!   domain decomposition (halo-exchange decisions, per-step barrier),
-//!   bit-identical to [`BatchPdes`] for every worker count;
+//!   domain decomposition (halo-exchange decisions, per-step barrier on
+//!   a persistent parked-worker pool), bit-identical to [`BatchPdes`]
+//!   for every worker count and RNG [`StreamFamily`];
 //! * [`model`] — pluggable per-PE model payloads (kinetic Ising, update
 //!   statistics) whose events ride the update sweeps of both engines
 //!   (causally safe under Eq. 1 — see `model.rs` and DESIGN.md §Models);
@@ -42,3 +43,5 @@ pub use model::{Ising1d, Model, ModelFrame, ModelSpec, NoModel, SiteCounter, Upd
 pub use ring::{Pending, RingPdes, StepOutcome};
 pub use sharded::ShardedPdes;
 pub use topology::{NeighbourTable, Topology};
+
+pub use crate::rng::StreamFamily;

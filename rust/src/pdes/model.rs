@@ -8,7 +8,9 @@
 //! spin, one set of counters, ...) alongside the engine's virtual-time
 //! horizon, and its [`Model::apply_event`] hook fires exactly once per
 //! executed event — at the event's virtual time, with the PE's neighbour
-//! list and the row's RNG stream.
+//! list and the stream the row's [`StreamFamily`](crate::rng::StreamFamily)
+//! assigns to the event (row stream under `RowV1`, the PE's own stream
+//! under `Pe`).
 //!
 //! ## Causal safety (DESIGN.md §Models)
 //!
@@ -31,13 +33,20 @@
 //!
 //! For each *updating* PE, in PE index order: (1) the pending-event
 //! redraw (when the mode redraws, exactly as before), (2) the model's
-//! [`Model::apply_event`] — which may consume row-stream draws, a fixed
-//! count per event per model — then (3) the exponential time increment.
-//! Both `BatchPdes` and `ShardedPdes` follow this order, so payload runs
-//! stay bit-identical across engines and worker counts (pinned by the
-//! determinism suite and `python/tools/crosscheck_sharded.py`).
+//! [`Model::apply_event`] — which may consume draws, a fixed count per
+//! event per model — then (3) the exponential time increment.  *Which*
+//! stream those three sites consume is the row's
+//! [`StreamFamily`](crate::rng::StreamFamily): the shared serial row
+//! stream under `RowV1`, the updating PE's own stream under `Pe`.  Under
+//! either family both `BatchPdes` and `ShardedPdes` follow this order,
+//! so payload runs stay bit-identical across engines and worker counts
+//! (pinned by the determinism suite and
+//! `python/tools/crosscheck_sharded.py`).  Payload rows sweep serially
+//! within the row in both engines even under `Pe` — payload state
+//! mutation (e.g. an Ising spin flip read by a same-step neighbour
+//! event) is order-dependent, unlike the pure τ/pend update.
 //! Attaching a model that draws (e.g. [`Ising1d`], one uniform per
-//! event) shifts the row stream relative to a payload-free run — a new,
+//! event) shifts the streams relative to a payload-free run — a new,
 //! equally deterministic trajectory family; [`NoModel`] and
 //! [`SiteCounter`] draw nothing and are trajectory-invisible (tested).
 //!

@@ -23,37 +23,48 @@
 //!    halo unbounded), which still leaves rows to decide in parallel.
 //!    Decisions are pure reads + disjoint writes into the `ok` buffer, so
 //!    tile scheduling cannot affect them.
-//! 2. **Barrier** — the scoped-thread join.  No τ write happens anywhere
-//!    until *all* decisions of the step are fixed, which is the same
-//!    frozen-horizon argument that made `BatchPdes` single-buffered
+//! 2. **Barrier** — the pool's completion wait.  No τ write happens
+//!    anywhere until *all* decisions of the step are fixed, which is the
+//!    same frozen-horizon argument that made `BatchPdes` single-buffered
 //!    (§Perf in-place safety), extended across threads.
-//! 3. **Update (parallel over rows)** — each row's update sweep runs on
-//!    one worker in PE index order, because the row's RNG stream is
-//!    serial by contract: draws (pending redraw, then exponential,
-//!    updaters only, PE order) must replay exactly for bit-identity with
-//!    `BatchPdes` — and with the paper's serial-reference semantics.  The
-//!    sweep also produces the row's tracked [`StepStats`] in PE order
-//!    (bit-identical to the single-threaded aggregates) *and* per-shard
-//!    partial aggregates, whose shard-order merge reproduces min/max/
-//!    count exactly (see [`StepStats::merge`] for the sum caveat).
+//! 3. **Update (parallel)** — shape depends on the trajectory's
+//!    [`StreamFamily`]:
+//!    * `RowV1` (and any run with model payloads): each row's update
+//!      sweep runs on one worker in PE index order — the row stream
+//!      (resp. payload state mutation order) is serial by contract, so
+//!      rows parallelize but the inside of a row cannot.
+//!    * `Pe`, no payload: every (row, block) tile updates its PEs in
+//!      parallel, each PE drawing only from its own stream — within-row
+//!      parallelism, the tentpole of this engine.  Tiles write per-shard
+//!      partial aggregates; the canonical row [`StepStats`] then comes
+//!      from a linear [`StepStats::measure`] over the final row, the
+//!      exact fold the batch engine runs, so tracked aggregates stay
+//!      bit-identical across engines and worker counts.
+//!
+//! ## The persistent pool
+//!
+//! Both phases fan out over one [`StepPool`] owned by the simulation —
+//! workers are spawned once at construction and *parked* between steps
+//! (epoch-counter wakeup; protocol and correctness argument in
+//! `coordinator/pool.rs` and DESIGN.md §Sharding).  Zero thread spawns
+//! happen per step; [`ShardedPdes::spawned_threads`] exposes the
+//! construction-time spawn count so tests can pin that.  `re_shard`
+//! reuses the pool whenever it is wide enough for the new plan.
 //!
 //! The determinism harness (`tests/properties.rs`,
 //! `tests/golden_trajectory.rs`, and the cross-check port
-//! `python/tools/crosscheck_sharded.py`) pins the bit-identity contract;
-//! any future rework of this engine — e.g. a persistent worker pool, or
-//! per-PE RNG streams that would unlock within-row parallel updates at
-//! the price of a new trajectory family — must keep it green or
-//! regenerate the goldens deliberately.
+//! `python/tools/crosscheck_sharded.py`) pins the bit-identity contract
+//! for both families; any future rework of this engine must keep it
+//! green or regenerate the goldens deliberately.
 
 use std::ops::{Deref, DerefMut, Range};
-use std::thread;
 
 use super::batch::{draw_pending_slot, BatchPdes, PEND_ALL, PEND_INTERIOR};
 use super::model::Model;
 use super::topology::{NeighbourTable, Topology};
 use super::{Mode, VolumeLoad};
-use crate::coordinator::pool::{shard_lattice, worker_count};
-use crate::rng::Rng;
+use crate::coordinator::pool::{shard_lattice, worker_count, StepPool};
+use crate::rng::{Rng, StreamFamily};
 use crate::stats::StepStats;
 
 /// A [`BatchPdes`] whose parallel step is executed by a worker-per-block
@@ -79,6 +90,9 @@ pub struct ShardedPdes {
     /// Reusable per-row window-edge scratch (Δ + tracked GVT), refilled
     /// each step — keeps the per-step path free of avoidable allocation.
     edges: Vec<f64>,
+    /// The persistent parked-worker pool driving both phases.  Spawned
+    /// once at construction; zero thread spawns per step.
+    pool: StepPool,
 }
 
 impl ShardedPdes {
@@ -133,6 +147,25 @@ impl ShardedPdes {
         )
     }
 
+    /// [`Self::with_streams`] with an explicit [`StreamFamily`] — the
+    /// sharded twin of [`BatchPdes::with_streams_family`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_streams_family(
+        topology: Topology,
+        load: VolumeLoad,
+        mode: Mode,
+        rows: usize,
+        seed: u64,
+        first: u64,
+        workers: usize,
+        family: StreamFamily,
+    ) -> Self {
+        Self::from_batch(
+            BatchPdes::with_streams_family(topology, load, mode, rows, seed, first, family),
+            workers,
+        )
+    }
+
     /// [`Self::with_streams`] with the pool's worker budget
     /// (`REPRO_WORKERS`-aware via [`worker_count`]).
     pub fn with_env_workers(
@@ -150,6 +183,15 @@ impl ShardedPdes {
     /// bit-identical to the single-threaded one, this changes *how* the
     /// trajectory is computed, never the trajectory itself.
     pub fn from_batch(batch: BatchPdes, workers: usize) -> Self {
+        Self::from_batch_with_pool(batch, workers, None)
+    }
+
+    /// [`Self::from_batch`] optionally reusing an existing pool (the
+    /// `re_shard` path).  The pool is kept when it is at least as wide as
+    /// the new plan needs — cycling worker counts on one long-lived
+    /// simulation then never spawns another thread — and rebuilt (old
+    /// workers joined) only when the new plan needs more.
+    fn from_batch_with_pool(batch: BatchPdes, workers: usize, pool: Option<StepPool>) -> Self {
         let workers = workers.clamp(1, Self::MAX_WORKERS);
         let pes = batch.pes();
         let rows = batch.rows();
@@ -163,6 +205,15 @@ impl ShardedPdes {
             vec![0..pes]
         };
         let blocks = plan.len();
+        // Pool width: never more threads than the widest per-step fan-out
+        // can use (rows × blocks phase-A tiles bound phase B's job count
+        // too), so a `MAX_WORKERS` request on a tiny lattice parks a
+        // handful of threads, not a thousand.
+        let capacity = workers.min(rows * blocks).max(1);
+        let pool = match pool {
+            Some(p) if p.threads() >= capacity => p,
+            _ => StepPool::new(capacity),
+        };
         let mut sharded = Self {
             inner: batch,
             workers,
@@ -171,15 +222,18 @@ impl ShardedPdes {
             ok: vec![false; rows * pes],
             shard_stats: vec![StepStats::identity(); rows * blocks],
             edges: Vec::with_capacity(rows),
+            pool,
         };
         sharded.refresh_shard_stats();
         sharded
     }
 
     /// Re-plan the decomposition for a different worker count, preserving
-    /// the trajectory (bit-identity is worker-count-independent).
+    /// the trajectory (bit-identity is worker-count-independent).  The
+    /// persistent pool is reused whenever it is wide enough.
     pub fn re_shard(self, workers: usize) -> Self {
-        Self::from_batch(self.inner, workers)
+        let Self { inner, pool, .. } = self;
+        Self::from_batch_with_pool(inner, workers, Some(pool))
     }
 
     /// Unwrap the underlying batch engine.
@@ -195,6 +249,18 @@ impl ShardedPdes {
     /// Requested worker count.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// OS threads spawned by the persistent pool at construction — fixed
+    /// for the pool's lifetime, so a test can assert "zero spawns per
+    /// step" by sampling it before and after a run.
+    pub fn spawned_threads(&self) -> usize {
+        self.pool.spawned_threads()
+    }
+
+    /// Total pool width including the calling thread.
+    pub fn pool_threads(&self) -> usize {
+        self.pool.threads()
     }
 
     /// The contiguous PE blocks of the decomposition, in lattice order.
@@ -286,7 +352,7 @@ impl ShardedPdes {
             );
 
             // ---- phase A: frozen-horizon decisions, one tile per
-            // (row, block), contiguous tile chunks per worker.
+            // (row, block), contiguous tile chunks per pool worker.
             {
                 let tau: &[f64] = p.tau;
                 let pend: &[u8] = p.pend;
@@ -305,24 +371,11 @@ impl ShardedPdes {
                         rest = tail;
                     }
                 }
-                let threads = workers.clamp(1, tiles.len().max(1));
-                if threads == 1 {
-                    run_decide_tiles(&mut tiles, tau, pend, nbr, edges, pes, kind);
-                } else {
-                    let per = tiles.len().div_ceil(threads);
-                    // the scope join below is the step's decision barrier:
-                    // no τ write can happen before it
-                    thread::scope(|s| {
-                        let mut chunks = tiles.chunks_mut(per);
-                        let mine = chunks.next().unwrap();
-                        for chunk in chunks {
-                            s.spawn(move || {
-                                run_decide_tiles(chunk, tau, pend, nbr, edges, pes, kind);
-                            });
-                        }
-                        run_decide_tiles(mine, tau, pend, nbr, edges, pes, kind);
-                    });
-                }
+                // the pool's completion wait is the step's decision
+                // barrier: no τ write can happen before it
+                self.pool.run_chunks_capped(&mut tiles, workers, |chunk| {
+                    run_decide_tiles(chunk, tau, pend, nbr, edges, pes, kind);
+                });
             }
 
             // ---- barrier passed: every decision of the step is frozen.
@@ -330,22 +383,85 @@ impl ShardedPdes {
                 m.copy_from_slice(&self.ok);
             }
 
-            // ---- phase B: per-row update sweeps (PE order — the row RNG
-            // stream is serial by contract), rows distributed over workers.
-            // Model payloads are per-row objects, so each worker gets its
-            // rows' payloads exclusively — the hook fires at the exact
-            // point of the `pdes::model` draw-order contract, mirroring
-            // `BatchPdes`' model sweep bit for bit.
-            {
+            let pe_tiles = p.family == StreamFamily::Pe && p.models.is_empty();
+            if pe_tiles {
+                // ---- phase B (per-PE family): (row, block) tiles update
+                // in parallel — every PE draws only from its own stream,
+                // so tile scheduling cannot touch the trajectory.  Tiles
+                // write the per-shard partial aggregates as a by-product.
+                let plan: &[Range<usize>] = &self.plan;
+                let ok_all: &[bool] = &self.ok;
+                let nbr = p.nbr;
+                {
+                    let mut tiles: Vec<PeTile<'_>> = Vec::with_capacity(rows * blocks);
+                    let mut tau_rows = p.tau.chunks_mut(pes);
+                    let mut pend_rows = p.pend.chunks_mut(pes);
+                    let mut rng_rows = p.rngs_pe.chunks_mut(pes);
+                    let mut shard_rows = self.shard_stats.chunks_mut(blocks);
+                    for row in 0..rows {
+                        let mut tau_rest = tau_rows.next().unwrap();
+                        let mut pend_rest = pend_rows.next().unwrap();
+                        let mut rng_rest = rng_rows.next().unwrap();
+                        let mut shard_it = shard_rows.next().unwrap().iter_mut();
+                        let ok_row = &ok_all[row * pes..(row + 1) * pes];
+                        for blk in plan {
+                            let len = blk.end - blk.start;
+                            let (t_head, t_tail) = tau_rest.split_at_mut(len);
+                            let (p_head, p_tail) = pend_rest.split_at_mut(len);
+                            let (r_head, r_tail) = rng_rest.split_at_mut(len);
+                            tiles.push(PeTile {
+                                start: blk.start,
+                                tau: t_head,
+                                pend: p_head,
+                                rngs: r_head,
+                                ok: &ok_row[blk.start..blk.end],
+                                shard: shard_it.next().unwrap(),
+                            });
+                            tau_rest = t_tail;
+                            pend_rest = p_tail;
+                            rng_rest = r_tail;
+                        }
+                    }
+                    self.pool.run_chunks_capped(&mut tiles, workers, |chunk| {
+                        for tile in chunk.iter_mut() {
+                            update_pe_tile(tile, nbr, redraw);
+                        }
+                    });
+                }
+                // ---- all tiles done: canonical row aggregates from a
+                // linear measure over the final row — the exact fold
+                // `BatchPdes`' per-PE path runs, so tracked stats agree
+                // to the bit across engines and worker counts.  The
+                // update count merges exactly (integer sum).
+                for row in 0..rows {
+                    let n: u32 = self.shard_stats[row * blocks..(row + 1) * blocks]
+                        .iter()
+                        .map(|s| s.n_updated)
+                        .sum();
+                    let row_tau = &p.tau[row * pes..(row + 1) * pes];
+                    p.stats[row] = StepStats::measure(row_tau, n);
+                    p.counts[row] = n;
+                }
+            } else {
+                // ---- phase B (RowV1 family, or model payloads): per-row
+                // update sweeps (PE order — the row stream, and payload
+                // state mutation, are serial by contract), rows
+                // distributed over the pool.  Model payloads are per-row
+                // objects, so each worker gets its rows' payloads
+                // exclusively — the hook fires at the exact point of the
+                // `pdes::model` draw-order contract, mirroring
+                // `BatchPdes`' model sweep bit for bit.
                 let plan: &[Range<usize>] = &self.plan;
                 let ok_all: &[bool] = &self.ok;
                 let nbr = p.nbr;
                 let t_now = p.t;
-                let mut jobs: Vec<RowJob<'_>> = Vec::with_capacity(rows);
+                let family = p.family;
                 {
+                    let mut jobs: Vec<RowJob<'_>> = Vec::with_capacity(rows);
                     let mut tau_it = p.tau.chunks_mut(pes);
                     let mut pend_it = p.pend.chunks_mut(pes);
                     let mut rng_it = p.rngs.iter_mut();
+                    let mut pe_it = p.rngs_pe.chunks_mut(pes);
                     let mut count_it = p.counts.iter_mut();
                     let mut stat_it = p.stats.iter_mut();
                     let mut shard_it = self.shard_stats.chunks_mut(blocks);
@@ -354,7 +470,11 @@ impl ShardedPdes {
                         jobs.push(RowJob {
                             tau: tau_it.next().unwrap(),
                             pend: pend_it.next().unwrap(),
-                            rng: rng_it.next().unwrap(),
+                            streams: if family == StreamFamily::Pe {
+                                RowStreams::Pe(pe_it.next().unwrap())
+                            } else {
+                                RowStreams::Row(rng_it.next().unwrap())
+                            },
                             count: count_it.next().unwrap(),
                             stat: stat_it.next().unwrap(),
                             shard_stats: shard_it.next().unwrap(),
@@ -364,22 +484,19 @@ impl ShardedPdes {
                             ok: &ok_all[row * pes..(row + 1) * pes],
                         });
                     }
-                }
-                let threads = workers.clamp(1, jobs.len().max(1));
-                if threads == 1 {
-                    run_update_rows(&mut jobs, nbr, plan, redraw, t_now);
-                } else {
-                    let per = jobs.len().div_ceil(threads);
-                    thread::scope(|s| {
-                        let mut chunks = jobs.chunks_mut(per);
-                        let mine = chunks.next().unwrap();
-                        for chunk in chunks {
-                            s.spawn(move || {
-                                run_update_rows(chunk, nbr, plan, redraw, t_now);
-                            });
-                        }
-                        run_update_rows(mine, nbr, plan, redraw, t_now);
+                    self.pool.run_chunks_capped(&mut jobs, workers, |chunk| {
+                        run_update_rows(chunk, nbr, plan, redraw, t_now);
                     });
+                }
+                if family == StreamFamily::Pe {
+                    // per-PE model rows: replace the fused row aggregates
+                    // with the same linear measure the batch engine's
+                    // per-PE path uses (equal folds — this keeps the
+                    // cross-engine equality an identity, not an argument)
+                    for row in 0..rows {
+                        let row_tau = &p.tau[row * pes..(row + 1) * pes];
+                        p.stats[row] = StepStats::measure(row_tau, p.counts[row]);
+                    }
                 }
             }
         }
@@ -430,17 +547,48 @@ struct DecideTile<'a> {
     ok: &'a mut [bool],
 }
 
+/// The RNG source of one row-update job — one serial stream for the
+/// historical `RowV1` family, the row's per-PE stream slice for `Pe`.
+enum RowStreams<'a> {
+    Row(&'a mut Rng),
+    Pe(&'a mut [Rng]),
+}
+
+impl RowStreams<'_> {
+    /// The stream PE `k` draws from (the shared row stream under `RowV1`).
+    #[inline]
+    fn for_pe(&mut self, k: usize) -> &mut Rng {
+        match self {
+            RowStreams::Row(r) => r,
+            RowStreams::Pe(s) => &mut s[k],
+        }
+    }
+}
+
 /// One phase-B work item: everything one row's update sweep touches.
 struct RowJob<'a> {
     tau: &'a mut [f64],
     pend: &'a mut [u8],
-    rng: &'a mut Rng,
+    streams: RowStreams<'a>,
     count: &'a mut u32,
     stat: &'a mut StepStats,
     shard_stats: &'a mut [StepStats],
     /// The row's model payload, when one is attached.
     model: Option<&'a mut Box<dyn Model>>,
     ok: &'a [bool],
+}
+
+/// One per-PE-family phase-B work item: the update slice of one
+/// (row, block) tile.  Every PE in the tile draws from its own stream,
+/// so tiles are mutually independent and schedule-order-invariant.
+struct PeTile<'a> {
+    start: usize,
+    tau: &'a mut [f64],
+    pend: &'a mut [u8],
+    rngs: &'a mut [Rng],
+    ok: &'a [bool],
+    /// The tile's shard-partial aggregate slot (merged after the barrier).
+    shard: &'a mut StepStats,
 }
 
 fn run_decide_tiles(
@@ -557,12 +705,13 @@ fn update_row(
                 n_up += 1;
                 bn += 1;
                 if let Some(p_side) = redraw {
-                    job.pend[k] = draw_pending_slot(job.rng, p_side, false, nbr.degree(k));
+                    let rng = job.streams.for_pe(k);
+                    job.pend[k] = draw_pending_slot(rng, p_side, false, nbr.degree(k));
                 }
                 if let Some(model) = job.model.as_mut() {
-                    model.apply_event(k, t, x, nbr.neighbours(k), job.rng);
+                    model.apply_event(k, t, x, nbr.neighbours(k), job.streams.for_pe(k));
                 }
-                x += job.rng.exponential();
+                x += job.streams.for_pe(k).exponential();
                 job.tau[k] = x;
             }
             mn = mn.min(x);
@@ -586,6 +735,38 @@ fn update_row(
         max: mx,
     };
     *job.count = n_up;
+}
+
+/// One (row, block) tile's per-PE-family update sweep: every PE draws
+/// pend redraw then exponential from its own stream — identical draw
+/// sites to `BatchPdes::update_row_pe`, restricted to the tile.  Only
+/// the integer update count of the shard partial is merged afterwards;
+/// the canonical row [`StepStats`] comes from a post-barrier linear
+/// measure (the same fold the batch per-PE path runs).
+fn update_pe_tile(tile: &mut PeTile<'_>, nbr: &NeighbourTable, redraw: Option<f64>) {
+    let mut bn = 0u32;
+    let (mut bmn, mut bmx, mut bsum) = (f64::INFINITY, f64::NEG_INFINITY, 0.0);
+    for (i, (&up, rng)) in tile.ok.iter().zip(tile.rngs.iter_mut()).enumerate() {
+        let k = tile.start + i;
+        let mut x = tile.tau[i];
+        if up {
+            bn += 1;
+            if let Some(p_side) = redraw {
+                tile.pend[i] = draw_pending_slot(rng, p_side, false, nbr.degree(k));
+            }
+            x += rng.exponential();
+            tile.tau[i] = x;
+        }
+        bmn = bmn.min(x);
+        bmx = bmx.max(x);
+        bsum += x;
+    }
+    *tile.shard = StepStats {
+        n_updated: bn,
+        sum: bsum,
+        min: bmn,
+        max: bmx,
+    };
 }
 
 #[cfg(test)]
@@ -922,5 +1103,208 @@ mod tests {
         sim.step();
         assert_eq!(sim.counts()[0] as usize, 12);
         assert!(sim.workers() >= 1);
+    }
+
+    #[test]
+    fn pe_family_sharded_matches_batch_for_every_worker_count() {
+        use crate::rng::StreamFamily;
+        // ring (halo kernel + tile updates) and small-world (generic
+        // kernel, single lattice shard → trial sharding only)
+        for topo in [
+            Topology::Ring { l: 24 },
+            Topology::SmallWorld { l: 20, extra: 6, seed: 2 },
+        ] {
+            for mode in [
+                Mode::Conservative,
+                Mode::Windowed { delta: 2.0 },
+                Mode::Rd,
+            ] {
+                for workers in [1usize, 2, 3, 7] {
+                    let mut reference = BatchPdes::with_streams_family(
+                        topo,
+                        VolumeLoad::Sites(4),
+                        mode,
+                        2,
+                        47,
+                        0,
+                        StreamFamily::Pe,
+                    );
+                    let mut sharded = ShardedPdes::with_streams_family(
+                        topo,
+                        VolumeLoad::Sites(4),
+                        mode,
+                        2,
+                        47,
+                        0,
+                        workers,
+                        StreamFamily::Pe,
+                    );
+                    assert_eq!(sharded.family(), StreamFamily::Pe);
+                    for step in 0..60 {
+                        reference.step();
+                        sharded.step();
+                        assert_rows_bit_identical(
+                            &reference,
+                            &sharded,
+                            &format!("pe {topo:?} {mode:?} workers {workers} step {step}"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pe_family_ising_payload_sharded_matches_batch() {
+        use crate::pdes::{Ising1d, ModelSpec};
+        use crate::rng::StreamFamily;
+        // payload rows take the serial-within-row job path even under the
+        // per-PE family (payload state mutation is order-dependent); the
+        // draws still come from per-PE streams
+        let topo = Topology::Ring { l: 24 };
+        let spec = ModelSpec::Ising { beta: 0.7, coupling: 1.0 };
+        for workers in [1usize, 3, 7] {
+            let mut reference = BatchPdes::with_streams_family(
+                topo,
+                VolumeLoad::Sites(1),
+                Mode::Windowed { delta: 2.0 },
+                2,
+                61,
+                0,
+                StreamFamily::Pe,
+            );
+            reference.attach_models(spec.build_rows(24, 2));
+            let mut sharded = ShardedPdes::with_streams_family(
+                topo,
+                VolumeLoad::Sites(1),
+                Mode::Windowed { delta: 2.0 },
+                2,
+                61,
+                0,
+                workers,
+                StreamFamily::Pe,
+            );
+            sharded.attach_models(spec.build_rows(24, 2));
+            for step in 0..60 {
+                reference.step();
+                sharded.step();
+                assert_rows_bit_identical(
+                    &reference,
+                    &sharded,
+                    &format!("pe ising workers {workers} step {step}"),
+                );
+                for row in 0..2 {
+                    let a = reference
+                        .model_row(row)
+                        .unwrap()
+                        .as_any()
+                        .downcast_ref::<Ising1d>()
+                        .unwrap();
+                    let b = sharded
+                        .model_row(row)
+                        .unwrap()
+                        .as_any()
+                        .downcast_ref::<Ising1d>()
+                        .unwrap();
+                    assert_eq!(
+                        a.spins(),
+                        b.spins(),
+                        "pe ising workers {workers} step {step} row {row}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn persistent_pool_spawns_no_threads_after_construction() {
+        use crate::rng::StreamFamily;
+        let mut sim = ShardedPdes::with_streams_family(
+            Topology::Ring { l: 40 },
+            VolumeLoad::Sites(1),
+            Mode::Windowed { delta: 2.0 },
+            2,
+            77,
+            0,
+            4,
+            StreamFamily::Pe,
+        );
+        let spawned = sim.spawned_threads();
+        assert_eq!(spawned, 3, "leader participates; 4 workers = 3 spawns");
+        for _ in 0..200 {
+            sim.step();
+            assert_eq!(
+                sim.spawned_threads(),
+                spawned,
+                "a step must never spawn a thread"
+            );
+        }
+    }
+
+    #[test]
+    fn re_sharding_down_reuses_the_pool() {
+        use crate::rng::StreamFamily;
+        let mut reference = BatchPdes::with_streams_family(
+            Topology::Ring { l: 24 },
+            VolumeLoad::Sites(2),
+            Mode::Conservative,
+            2,
+            83,
+            0,
+            StreamFamily::Pe,
+        );
+        let mut sharded = ShardedPdes::with_streams_family(
+            Topology::Ring { l: 24 },
+            VolumeLoad::Sites(2),
+            Mode::Conservative,
+            2,
+            83,
+            0,
+            5,
+            StreamFamily::Pe,
+        );
+        let pool_width = sharded.pool_threads();
+        for _ in 0..30 {
+            reference.step();
+            sharded.step();
+        }
+        // shrinking the worker count keeps the wider pool alive (capped
+        // chunking honours the new count); the trajectory is unaffected
+        let mut sharded = sharded.re_shard(2);
+        assert_eq!(sharded.workers(), 2);
+        assert_eq!(sharded.plan().len(), 2);
+        assert_eq!(sharded.pool_threads(), pool_width, "pool must be reused");
+        for step in 0..30 {
+            reference.step();
+            sharded.step();
+            assert_rows_bit_identical(&reference, &sharded, &format!("post-shrink step {step}"));
+        }
+        // growing past the pool width rebuilds it once, then it is stable
+        let mut sharded = sharded.re_shard(8);
+        assert!(sharded.pool_threads() >= 8);
+        let spawned = sharded.spawned_threads();
+        for step in 0..30 {
+            reference.step();
+            sharded.step();
+            assert_eq!(sharded.spawned_threads(), spawned);
+            assert_rows_bit_identical(&reference, &sharded, &format!("post-grow step {step}"));
+        }
+    }
+
+    #[test]
+    fn row_family_golden_paths_stay_on_the_row_streams() {
+        // compat guard: the plain constructors must keep producing the
+        // historical RowV1 trajectory family
+        use crate::rng::StreamFamily;
+        let sim = ShardedPdes::with_streams(
+            Topology::Ring { l: 8 },
+            VolumeLoad::Sites(1),
+            Mode::Conservative,
+            1,
+            1,
+            0,
+            2,
+        );
+        assert_eq!(sim.family(), StreamFamily::RowV1);
     }
 }

@@ -17,6 +17,52 @@ pub use ziggurat::exponential_ziggurat;
 /// The crate-wide RNG used by the native PDES substrate.
 pub type Rng = Xoshiro256pp;
 
+/// Which RNG-stream layout drives a PDES trajectory — a *trajectory
+/// family*, pinned in run specs by the `streams=` key.
+///
+/// * [`RowV1`](Self::RowV1) — the historical layout: one serial stream
+///   per replica row, consumed by updating PEs in PE index order.  Update
+///   sweeps are therefore serial within a row by contract.  Kept as a
+///   compat flag so every pre-existing golden fixture, `ResultCache`
+///   entry and historical TSV stays verifiable bit for bit.
+/// * [`Pe`](Self::Pe) — counter-based per-PE streams: each row draws one
+///   `u64` from its trial stream as a row base, and PE `k` owns the
+///   independent stream `Rng::for_stream(base, k)` (derivation in
+///   [`Rng::pe_streams`]).  An updating PE draws only from its own
+///   stream, so update sweeps parallelize *inside* a row and the
+///   trajectory is worker-count-invariant by construction.
+///
+/// The two families produce different (both valid) trajectories; spec
+/// strings omit `streams=` for `RowV1` so historical cache keys are
+/// unchanged, and append `;streams=pe` for the new family.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum StreamFamily {
+    /// Per-row serial streams (historical v1 family).
+    RowV1,
+    /// Counter-based per-PE streams (the default for new runs).
+    #[default]
+    Pe,
+}
+
+impl StreamFamily {
+    /// The spec-key token (`streams=row` / `streams=pe`).
+    pub fn tag(self) -> &'static str {
+        match self {
+            StreamFamily::RowV1 => "row",
+            StreamFamily::Pe => "pe",
+        }
+    }
+
+    /// Parse a spec-key token.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "row" => Some(StreamFamily::RowV1),
+            "pe" => Some(StreamFamily::Pe),
+            _ => None,
+        }
+    }
+}
+
 impl Rng {
     /// Derive an independent stream for trial `id` under master `seed`.
     ///
@@ -58,6 +104,17 @@ impl Rng {
     #[inline]
     pub fn below(&mut self, n: u64) -> u64 {
         ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Derive the counter-based per-PE streams of one replica row
+    /// ([`StreamFamily::Pe`]): one `u64` row base drawn from the row's
+    /// trial stream, then stream `k` = `for_stream(base, k)` — the same
+    /// splitmix split used for trial streams, one level deeper.  Consumes
+    /// exactly one draw from `row_rng` regardless of `pes`, so the
+    /// derivation itself is replayable.
+    pub fn pe_streams(row_rng: &mut Rng, pes: usize) -> Vec<Rng> {
+        let base = row_rng.next_u64();
+        (0..pes as u64).map(|k| Rng::for_stream(base, k)).collect()
     }
 }
 
@@ -114,6 +171,42 @@ mod tests {
         let var = s2 / n as f64 - mean * mean;
         assert!((mean - 1.0).abs() < 2e-2, "mean {mean}");
         assert!((var - 1.0).abs() < 5e-2, "var {var}");
+    }
+
+    #[test]
+    fn pe_streams_are_deterministic_independent_and_single_draw() {
+        let mut a = Rng::for_stream(7, 0);
+        let mut b = Rng::for_stream(7, 0);
+        let mut sa = Rng::pe_streams(&mut a, 8);
+        let mut sb = Rng::pe_streams(&mut b, 8);
+        for (x, y) in sa.iter_mut().zip(sb.iter_mut()) {
+            for _ in 0..32 {
+                assert_eq!(x.next_u64(), y.next_u64());
+            }
+        }
+        // neighbouring PE streams must not collide
+        let mut s0 = Rng::pe_streams(&mut Rng::for_stream(7, 0), 2);
+        let (lo, hi) = s0.split_at_mut(1);
+        let same = (0..64)
+            .filter(|_| lo[0].next_u64() == hi[0].next_u64())
+            .count();
+        assert_eq!(same, 0);
+        // exactly one draw consumed from the row stream
+        let mut c = Rng::for_stream(7, 0);
+        let _ = Rng::pe_streams(&mut c, 1000);
+        let mut d = Rng::for_stream(7, 0);
+        d.next_u64();
+        assert_eq!(c.next_u64(), d.next_u64());
+    }
+
+    #[test]
+    fn stream_family_tags_roundtrip() {
+        assert_eq!(StreamFamily::parse("row"), Some(StreamFamily::RowV1));
+        assert_eq!(StreamFamily::parse("pe"), Some(StreamFamily::Pe));
+        assert_eq!(StreamFamily::parse("v1"), None);
+        assert_eq!(StreamFamily::RowV1.tag(), "row");
+        assert_eq!(StreamFamily::Pe.tag(), "pe");
+        assert_eq!(StreamFamily::default(), StreamFamily::Pe);
     }
 
     #[test]

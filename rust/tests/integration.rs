@@ -84,6 +84,7 @@ fn artifact_and_native_paths_agree_statistically() {
             trials: 64,
             steps: 96,
             seed: 18,
+            streams: repro::pdes::StreamFamily::RowV1,
         });
         for lane in [Lane::U, Lane::W, Lane::Wa] {
             let a = jax.tail_mean(lane, 0.25);
@@ -127,6 +128,7 @@ fn steady_state_campaign_reproduces_u_inf_trend() {
                 trials: 12,
                 steps: 0,
                 seed: 5,
+                streams: repro::pdes::StreamFamily::RowV1,
             },
             1500,
             1500,
@@ -149,6 +151,7 @@ fn window_bounds_width_at_scale() {
             trials: 6,
             steps: 0,
             seed: 6,
+            streams: repro::pdes::StreamFamily::RowV1,
         },
         1000,
         1000,

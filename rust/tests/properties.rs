@@ -6,7 +6,7 @@ mod prop;
 use prop::{check, PdesCase};
 use repro::pdes::{
     BatchPdes, InstrumentedRing, Ising1d, Mode, Model, ModelSpec, RingPdes, ShardedPdes,
-    Topology, VolumeLoad,
+    StreamFamily, Topology, VolumeLoad,
 };
 use repro::rng::Rng;
 use repro::stats::{horizon_frame, StepStats};
@@ -645,6 +645,256 @@ fn sharded_shard_merge_consistent_with_tracked_gvt() {
                     sim.gvt_from_shards_row(row).to_bits(),
                     sim.global_virtual_time_row(row).to_bits()
                 );
+            }
+        }
+    }
+}
+
+/// Per-PE-family twin of THE determinism harness: under
+/// `StreamFamily::Pe` every lattice site owns its own counter-based
+/// stream, so the update sweep is order-free and the sharded engine can
+/// genuinely parallelise *inside* a row — and it must still produce, at
+/// every step and for every worker count in {1, 2, 3, 7}, exactly the
+/// bits the batch engine produces: τ, pend, counts, and the tracked
+/// `StepStats` (which both engines now derive from the same
+/// left-to-right `StepStats::measure` fold).  A tile boundary placed one
+/// PE off, a shard partial merged in the wrong order, or a stream index
+/// derived from anything scheduling-dependent shows up here as a bit
+/// flip.
+#[test]
+fn pe_family_sharded_equals_batch_bit_identical() {
+    let topologies = [
+        Topology::Ring { l: 24 },
+        Topology::KRing { l: 24, k: 2 },
+        Topology::SmallWorld { l: 24, extra: 8, seed: 5 },
+        Topology::Square { side: 5 },
+        Topology::Cubic { side: 3 },
+    ];
+    let modes = [
+        Mode::Conservative,
+        Mode::Windowed { delta: 2.0 },
+        Mode::Rd,
+        Mode::WindowedRd { delta: 2.0 },
+    ];
+    let loads = [
+        VolumeLoad::Sites(1),
+        VolumeLoad::Sites(10),
+        VolumeLoad::Infinite,
+    ];
+    let worker_grid = [1usize, 2, 3, 7];
+    let rows = 2usize;
+    for topo in topologies {
+        for mode in modes {
+            for load in loads {
+                let mut reference = BatchPdes::with_streams_family(
+                    topo,
+                    load,
+                    mode,
+                    rows,
+                    20020601,
+                    0,
+                    StreamFamily::Pe,
+                );
+                let mut sharded: Vec<ShardedPdes> = worker_grid
+                    .iter()
+                    .map(|&w| {
+                        ShardedPdes::with_streams_family(
+                            topo,
+                            load,
+                            mode,
+                            rows,
+                            20020601,
+                            0,
+                            w,
+                            StreamFamily::Pe,
+                        )
+                    })
+                    .collect();
+                for step in 0..60 {
+                    reference.step();
+                    for (&workers, sim) in worker_grid.iter().zip(sharded.iter_mut()) {
+                        sim.step();
+                        for row in 0..rows {
+                            let ctx = format!(
+                                "pe {topo:?} {mode:?} {load:?} workers {workers} step {step} row {row}"
+                            );
+                            for (k, (a, b)) in reference
+                                .tau_row(row)
+                                .iter()
+                                .zip(sim.tau_row(row))
+                                .enumerate()
+                            {
+                                assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: tau PE {k}");
+                            }
+                            assert_eq!(
+                                reference.pending_row(row),
+                                sim.pending_row(row),
+                                "{ctx}: pend"
+                            );
+                            assert_eq!(
+                                reference.counts()[row], sim.counts()[row],
+                                "{ctx}: counts"
+                            );
+                            let (s, t) =
+                                (reference.step_stats_row(row), sim.step_stats_row(row));
+                            assert_eq!(s.n_updated, t.n_updated, "{ctx}: stats.n");
+                            assert_eq!(s.sum.to_bits(), t.sum.to_bits(), "{ctx}: stats.sum");
+                            assert_eq!(s.min.to_bits(), t.min.to_bits(), "{ctx}: stats.min");
+                            assert_eq!(s.max.to_bits(), t.max.to_bits(), "{ctx}: stats.max");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Model-payload twin under the per-PE family: payload rows sweep
+/// serially within a row in BOTH engines (payload state mutation is
+/// order-dependent) but every event draws from the PE's own stream, so
+/// sharded and batch must still agree to the bit on τ, pend, counts AND
+/// the payload state (spins / histograms) at every worker count.
+#[test]
+fn pe_family_model_payload_sharded_equals_batch_bit_identical() {
+    let topologies = [
+        Topology::Ring { l: 24 },
+        Topology::SmallWorld { l: 24, extra: 8, seed: 5 },
+    ];
+    let modes = [Mode::Conservative, Mode::Windowed { delta: 2.0 }];
+    let payloads = [
+        (ModelSpec::Ising { beta: 0.7, coupling: 1.0 }, VolumeLoad::Sites(1)),
+        (ModelSpec::SiteCounter, VolumeLoad::Sites(4)),
+    ];
+    let worker_grid = [1usize, 2, 3, 7];
+    let rows = 2usize;
+    for topo in topologies {
+        for mode in modes {
+            for (model, load) in payloads {
+                let mut reference = BatchPdes::with_streams_family(
+                    topo,
+                    load,
+                    mode,
+                    rows,
+                    20020601,
+                    0,
+                    StreamFamily::Pe,
+                );
+                reference.attach_models(model.build_rows(topo.len(), rows));
+                let mut sharded: Vec<ShardedPdes> = worker_grid
+                    .iter()
+                    .map(|&w| {
+                        let mut sim = ShardedPdes::with_streams_family(
+                            topo,
+                            load,
+                            mode,
+                            rows,
+                            20020601,
+                            0,
+                            w,
+                            StreamFamily::Pe,
+                        );
+                        sim.attach_models(model.build_rows(topo.len(), rows));
+                        sim
+                    })
+                    .collect();
+                for step in 0..50 {
+                    reference.step();
+                    for (&workers, sim) in worker_grid.iter().zip(sharded.iter_mut()) {
+                        sim.step();
+                        for row in 0..rows {
+                            let ctx = format!(
+                                "pe {topo:?} {mode:?} {} workers {workers} step {step} row {row}",
+                                model.tag()
+                            );
+                            for (k, (a, b)) in reference
+                                .tau_row(row)
+                                .iter()
+                                .zip(sim.tau_row(row))
+                                .enumerate()
+                            {
+                                assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: tau PE {k}");
+                            }
+                            assert_eq!(
+                                reference.pending_row(row),
+                                sim.pending_row(row),
+                                "{ctx}: pend"
+                            );
+                            match model {
+                                ModelSpec::Ising { .. } => {
+                                    let a = reference
+                                        .model_row(row)
+                                        .unwrap()
+                                        .as_any()
+                                        .downcast_ref::<Ising1d>()
+                                        .unwrap();
+                                    let b = sim
+                                        .model_row(row)
+                                        .unwrap()
+                                        .as_any()
+                                        .downcast_ref::<Ising1d>()
+                                        .unwrap();
+                                    assert_eq!(a.spins(), b.spins(), "{ctx}: spins");
+                                }
+                                ModelSpec::SiteCounter => {
+                                    let a =
+                                        reference.model_row(row).unwrap().update_stats().unwrap();
+                                    let b = sim.model_row(row).unwrap().update_stats().unwrap();
+                                    assert_eq!(a, b, "{ctx}: update stats");
+                                }
+                                ModelSpec::None => unreachable!(),
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One long-lived engine cycled through worker counts (the persistent
+/// pool's whole point): `re_shard` must keep the trajectory on the exact
+/// batch-engine bits at every count, and shrinking must reuse the
+/// already-spawned pool instead of building a new one.  This is the
+/// property-suite form of the pool-reuse contract — a stale plan, a
+/// worker still reading the previous decomposition's block bounds, or a
+/// pool that silently respawns per re-shard all fail here.
+#[test]
+fn pe_family_pool_survives_worker_count_cycling() {
+    let topo = Topology::KRing { l: 30, k: 2 };
+    let (load, mode, rows) = (VolumeLoad::Sites(4), Mode::Windowed { delta: 3.0 }, 2usize);
+    let mut reference =
+        BatchPdes::with_streams_family(topo, load, mode, rows, 909, 0, StreamFamily::Pe);
+    let mut sim = ShardedPdes::with_streams_family(
+        topo,
+        load,
+        mode,
+        rows,
+        909,
+        0,
+        7,
+        StreamFamily::Pe,
+    );
+    let spawned_at_birth = sim.spawned_threads();
+    // 7 → 3 → 1 → 5 → 7: every re-shard fits inside the width-7 pool,
+    // so no step in the cycle may spawn a thread.
+    for &workers in &[7usize, 3, 1, 5, 7] {
+        sim = sim.re_shard(workers);
+        assert_eq!(
+            sim.spawned_threads(),
+            spawned_at_birth,
+            "re_shard({workers}) respawned the pool"
+        );
+        for step in 0..20 {
+            reference.step();
+            sim.step();
+            for row in 0..rows {
+                let ctx = format!("cycle workers {workers} step {step} row {row}");
+                for (k, (a, b)) in
+                    reference.tau_row(row).iter().zip(sim.tau_row(row)).enumerate()
+                {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: tau PE {k}");
+                }
+                assert_eq!(reference.counts()[row], sim.counts()[row], "{ctx}: counts");
             }
         }
     }
