@@ -3,7 +3,9 @@
 //! on real multi-core hosts), plus [`StepPool`]: the persistent parked-
 //! worker pool behind [`crate::pdes::ShardedPdes`]'s per-step phases.
 
-use std::sync::{Arc, Condvar, Mutex, Once};
+use std::any::Any;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, Once, PoisonError};
 use std::thread;
 
 /// Number of workers to use (respects `REPRO_WORKERS`, defaults to the
@@ -153,10 +155,28 @@ where
 // back to sleep.
 //
 // Job publication type-erases the borrowed closure into a raw pointer
-// (`JobPtr`).  Soundness: `run` does not return until `active == 0`, i.e.
-// until every worker has finished calling the closure, so the borrow it
-// erases strictly outlives every dereference; workers never touch the
-// pointer outside the epoch window that published it.
+// (`JobPtr`).  Soundness: `run` does not leave its frame — not even by
+// unwinding — until `active == 0`, i.e. until every worker has finished
+// calling the closure, so the borrow it erases strictly outlives every
+// dereference; workers never touch the pointer outside the epoch window
+// that published it.  Two panic paths make that "not even by unwinding"
+// hold:
+//
+// * Leader panic: `run` arms a drop guard *before* calling its own
+//   `f(0)` share; the guard's `Drop` waits out the `active == 0` barrier,
+//   so an unwind through `run` still blocks until no worker can be
+//   touching the erased borrow (the borrow's owner frames sit above
+//   `run`, and destructors run outside-in).
+// * Worker panic: the job call is wrapped in `catch_unwind`, and the
+//   decrement + `done` notification happen unconditionally afterwards —
+//   a panicking job can neither strand the leader in the barrier nor
+//   skip the count.  The first payload is stashed and re-raised by the
+//   leader after the barrier, preserving the panic propagation the old
+//   `thread::scope` join provided.
+//
+// Because caught panics leave the shared state fully consistent, mutex
+// poisoning carries no information here; all pool locking goes through
+// `lock_state` / `wait_*`, which recover the guard from a poisoned lock.
 // ---------------------------------------------------------------------------
 
 /// Lifetime-erased pointer to the per-step job (`fn(worker_index)`).
@@ -176,6 +196,9 @@ struct PoolState {
     job: Option<JobPtr>,
     /// Spawned workers still running the current job.
     active: usize,
+    /// First panic payload caught from a worker's job call this epoch;
+    /// the leader re-raises it once the barrier has drained.
+    worker_panic: Option<Box<dyn Any + Send>>,
     shutdown: bool,
 }
 
@@ -185,6 +208,23 @@ struct PoolShared {
     work: Condvar,
     /// The leader waits here for `active == 0`.
     done: Condvar,
+}
+
+/// Lock the pool state, recovering from poison.  Job panics are caught in
+/// the worker loop and the leader holds the lock only across invariant-
+/// preserving field writes, so a poisoned mutex still guards a consistent
+/// `PoolState`; propagating the poison would only convert a reported
+/// panic into a barrier deadlock.
+fn lock_state(shared: &PoolShared) -> MutexGuard<'_, PoolState> {
+    shared.state.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait`] with the same poison recovery as [`lock_state`].
+fn wait_on<'a>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, PoolState>,
+) -> MutexGuard<'a, PoolState> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
 }
 
 /// A persistent worker pool: `threads - 1` OS threads spawned at
@@ -207,6 +247,7 @@ impl StepPool {
                 epoch: 0,
                 job: None,
                 active: 0,
+                worker_panic: None,
                 shutdown: false,
             }),
             work: Condvar::new(),
@@ -242,6 +283,15 @@ impl StepPool {
 
     /// Run `f(worker_index)` once on every worker (indices `0..threads()`,
     /// the calling thread taking index 0) and return when all are done.
+    ///
+    /// A panic in any worker's `f` call propagates to the caller *after*
+    /// the barrier (every other worker finishes first), and a panic in
+    /// the caller's own `f(0)` share likewise waits out the barrier
+    /// before unwinding — `f`'s borrow is never released while a worker
+    /// might still dereference it.  Panics if called while a previous
+    /// `run` on the same pool is still in flight (the pool is a
+    /// single-dispatcher primitive; checked unconditionally, since a
+    /// silent overlap would corrupt the epoch protocol).
     pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
         if self.handles.is_empty() {
             f(0);
@@ -253,20 +303,40 @@ impl StepPool {
             unsafe { std::mem::transmute(f) };
         let ptr = JobPtr(f_erased as *const _);
         {
-            let mut st = self.shared.state.lock().unwrap();
-            debug_assert_eq!(st.active, 0, "overlapping StepPool::run calls");
+            let mut st = lock_state(&self.shared);
+            assert_eq!(st.active, 0, "overlapping StepPool::run calls");
             st.job = Some(ptr);
             st.active = self.handles.len();
             st.epoch += 1;
+            st.worker_panic = None;
         }
         self.shared.work.notify_all();
+
+        // Drop guard: whether the leader's own share below returns or
+        // unwinds, this frame blocks until every worker is done with the
+        // erased borrow.  Without it, a panic in `f(0)` would destroy the
+        // caller frames that own `f`'s captures while workers still hold
+        // the pointer — the use-after-free the module comment rules out.
+        struct BarrierGuard<'a>(&'a PoolShared);
+        impl Drop for BarrierGuard<'_> {
+            fn drop(&mut self) {
+                let mut st = lock_state(self.0);
+                while st.active != 0 {
+                    st = wait_on(&self.0.done, st);
+                }
+                st.job = None;
+            }
+        }
+        let barrier = BarrierGuard(&self.shared);
         // the leader is worker 0 — it works instead of blocking
         f(0);
-        let mut st = self.shared.state.lock().unwrap();
-        while st.active != 0 {
-            st = self.shared.done.wait(st).unwrap();
+        drop(barrier); // the normal-path barrier wait
+        // barrier drained: surface the first worker panic, if any, with
+        // its original payload (parity with the old thread::scope join)
+        let payload = lock_state(&self.shared).worker_panic.take();
+        if let Some(p) = payload {
+            panic::resume_unwind(p);
         }
-        st.job = None;
     }
 
     /// Split `items` into one contiguous chunk per worker and run `f` on
@@ -302,10 +372,13 @@ impl StepPool {
         let slots: Vec<Mutex<Option<&mut [T]>>> =
             items.chunks_mut(per).map(|c| Mutex::new(Some(c))).collect();
         let job = |i: usize| {
-            if let Some(slot) = slots.get(i) {
-                if let Some(chunk) = slot.lock().unwrap().take() {
-                    f(chunk);
-                }
+            // take the chunk and release the slot guard before running f,
+            // so a panicking f cannot poison the slot it was served from
+            let chunk = slots.get(i).and_then(|slot| {
+                slot.lock().unwrap_or_else(PoisonError::into_inner).take()
+            });
+            if let Some(chunk) = chunk {
+                f(chunk);
             }
         };
         self.run(&job);
@@ -315,7 +388,7 @@ impl StepPool {
 impl Drop for StepPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_state(&self.shared);
             st.shutdown = true;
         }
         self.shared.work.notify_all();
@@ -329,7 +402,7 @@ fn worker_loop(shared: &PoolShared, index: usize) {
     let mut seen = 0u64;
     loop {
         let job = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_state(shared);
             loop {
                 if st.shutdown {
                     return;
@@ -338,13 +411,24 @@ fn worker_loop(shared: &PoolShared, index: usize) {
                     seen = st.epoch;
                     break st.job.expect("epoch advanced without a job");
                 }
-                st = shared.work.wait(st).unwrap();
+                st = wait_on(&shared.work, st);
             }
         };
-        // Safety: the leader blocks in `run` until `active == 0`, so the
-        // closure behind this pointer is alive for the whole call.
-        (unsafe { &*job.0 })(index);
-        let mut st = shared.state.lock().unwrap();
+        // Safety: the leader does not leave `run`'s frame — even by
+        // unwinding — until `active == 0`, so the closure behind this
+        // pointer is alive for the whole call.
+        //
+        // The catch_unwind is what keeps that barrier sound: a panicking
+        // job must still decrement `active` and signal `done`, or the
+        // leader would block forever.  AssertUnwindSafe is justified
+        // because the panic is re-raised to the `run` caller, so any
+        // broken invariant in the job's captures is reported, not hidden.
+        let outcome =
+            panic::catch_unwind(AssertUnwindSafe(|| (unsafe { &*job.0 })(index)));
+        let mut st = lock_state(shared);
+        if let Err(payload) = outcome {
+            st.worker_panic.get_or_insert(payload);
+        }
         st.active -= 1;
         if st.active == 0 {
             shared.done.notify_one();
@@ -518,6 +602,82 @@ mod tests {
         let mut items = vec![1u32; 10];
         pool.run_chunks(&mut items, |c| c.iter_mut().for_each(|x| *x *= 2));
         assert!(items.iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    fn step_pool_leader_panic_waits_for_workers() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        // the erased borrow (here: `hits`) lives in this frame — if `run`
+        // unwound without the barrier, the workers' late writes would be
+        // use-after-free (TSan/miri would flag it); with the drop guard
+        // they all land before catch_unwind observes the panic
+        let pool = StepPool::new(4);
+        let hits = AtomicUsize::new(0);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|i| {
+                if i == 0 {
+                    panic!("leader bails first");
+                }
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+        }));
+        assert!(r.is_err());
+        assert_eq!(hits.load(Ordering::SeqCst), 3, "guard returned early");
+        // the barrier drained cleanly: the pool is still serviceable
+        let again = AtomicUsize::new(0);
+        pool.run(&|_| {
+            again.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(again.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn step_pool_worker_panic_propagates_not_hangs() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = StepPool::new(3);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|i| {
+                if i == 2 {
+                    panic!("worker 2 exploded");
+                }
+            });
+        }));
+        // the panic reaches the leader with its original payload, instead
+        // of the pre-fix behaviour (leader parked forever in done.wait)
+        let payload = r.unwrap_err();
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .unwrap_or_default();
+        assert!(msg.contains("worker 2 exploded"), "payload: {msg:?}");
+        // no stale panic, no stuck counter: the next run is clean
+        let calls = AtomicUsize::new(0);
+        pool.run(&|_| {
+            calls.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn step_pool_rejects_overlapping_run() {
+        use std::sync::Barrier;
+        // re-entrant dispatch on an in-flight pool must fail loudly in
+        // release builds too (it was a debug_assert); the gate + sleep
+        // keep `active != 0` while the leader re-enters
+        let pool = StepPool::new(2);
+        let gate = Barrier::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|i| {
+                gate.wait();
+                if i == 0 {
+                    pool.run(&|_| {});
+                } else {
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                }
+            });
+        }));
+        assert!(r.is_err(), "overlapping run was accepted");
     }
 
     #[test]
