@@ -24,7 +24,7 @@ pub struct Args {
 const VALUED: &[&str] = &[
     "out", "config", "trials", "steps", "seed", "l", "nv", "delta", "mode", "artifacts",
     "workers", "lattice-workers", "chunks", "warm", "topology", "k", "links", "model", "beta",
-    "coupling", "streams",
+    "coupling", "streams", "max-retries", "on-fault",
 ];
 
 impl Args {
@@ -111,6 +111,14 @@ mod tests {
         let a = parse("run --delta inf");
         assert!(a.opt_f64("delta", 1.0).unwrap().is_infinite());
         assert_eq!(a.opt_f64("l", 100.0).unwrap(), 100.0);
+    }
+
+    #[test]
+    fn supervision_options_take_values() {
+        let a = parse("fig2 --max-retries 3 --on-fault abort");
+        assert_eq!(a.opt_u64("max-retries", 0).unwrap(), 3);
+        assert_eq!(a.opt("on-fault", "quarantine"), "abort");
+        assert!(a.flags.is_empty(), "valued options must not parse as flags");
     }
 
     #[test]

@@ -9,8 +9,8 @@
 //! path (bit-identical per trial; ensemble moments up to floating-point
 //! accumulation order) and independent of worker scheduling.
 
-use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use anyhow::{bail, Result};
@@ -20,9 +20,12 @@ use crate::pdes::{
     ShardedPdes, Topology, UpdateStats, VolumeLoad,
 };
 use crate::rng::{Rng, StreamFamily};
-use crate::runtime::ResultCache;
+use crate::runtime::{CacheLoad, ResultCache};
 use crate::stats::{horizon_frame_fused, EnsembleSeries, OnlineMoments};
 
+use super::faults::{
+    Backoff, CampaignError, CancelToken, FaultPlan, Interrupted, OnFault, PointFailure,
+};
 use super::plan::{PointResult, Sampling, SweepPlan, SweepPoint};
 use super::pool::{map_shards_with, worker_count};
 
@@ -151,11 +154,27 @@ impl Engine {
         engine
     }
 
-    fn step(&mut self) {
+    /// One parallel step, with an optional cooperative-cancellation
+    /// checkpoint first: `Err(Interrupted)` means the step did NOT run —
+    /// a step is all-or-nothing on both engines, so the caller's fold
+    /// state is exactly "before this step" and is discarded whole (the
+    /// cancellation-safety invariant, DESIGN.md §Supervision).
+    fn step_ctl(&mut self, cancel: Option<&CancelToken>) -> Result<(), Interrupted> {
         match self {
-            Engine::Single(sim) => sim.step(),
-            Engine::Sharded(sim) => sim.step(),
+            Engine::Single(sim) => {
+                CancelToken::check(cancel)?;
+                sim.step();
+            }
+            Engine::Sharded(sim) => match cancel {
+                Some(token) => {
+                    if !sim.step_unless_cancelled(token) {
+                        return Err(Interrupted);
+                    }
+                }
+                None => sim.step(),
+            },
         }
+        Ok(())
     }
 
     fn batch(&self) -> &BatchPdes {
@@ -315,6 +334,31 @@ pub fn run_topology_ensemble_model(
     model: &ModelSpec,
     strategy: ShardStrategy,
 ) -> EnsembleSeries {
+    run_topology_ensemble_ctl(topology, spec, model, strategy, None)
+        .expect("no cancel token: the fold cannot be interrupted")
+}
+
+/// Combine two interruptible shard results: any interrupted shard makes
+/// the whole fold interrupted (partial ensembles are never surfaced).
+fn merge_ctl<R>(
+    merge: impl Fn(R, R) -> R,
+) -> impl Fn(Result<R, Interrupted>, Result<R, Interrupted>) -> Result<R, Interrupted> {
+    move |a, b| match (a, b) {
+        (Ok(a), Ok(b)) => Ok(merge(a, b)),
+        _ => Err(Interrupted),
+    }
+}
+
+/// [`run_topology_ensemble_model`] with a cooperative-cancellation
+/// checkpoint before every step: `Err(Interrupted)` discards the whole
+/// partial fold (a point either publishes complete or not at all).
+pub(crate) fn run_topology_ensemble_ctl(
+    topology: Topology,
+    spec: &RunSpec,
+    model: &ModelSpec,
+    strategy: ShardStrategy,
+    cancel: Option<&CancelToken>,
+) -> Result<EnsembleSeries, Interrupted> {
     assert_eq!(topology.len(), spec.l, "RunSpec.l must match the topology");
     // built once per parameter point; shared (read-only) by every batch
     let nbr = topology.neighbour_table();
@@ -322,7 +366,7 @@ pub fn run_topology_ensemble_model(
     map_shards_with(
         spec.trials,
         strategy.trial_workers(),
-        |range| {
+        |range| -> Result<EnsembleSeries, Interrupted> {
             let mut series = EnsembleSeries::new(spec.steps);
             let mut start = range.start;
             while start < range.end {
@@ -338,7 +382,7 @@ pub fn run_topology_ensemble_model(
                     spec.streams,
                 );
                 for t in 0..spec.steps {
-                    sim.step();
+                    sim.step_ctl(cancel)?;
                     // fused measurement: the step pass already produced
                     // each row's sum/min/max, so only the deviation pass
                     // per row remains (§Perf) — bit-identical frames to
@@ -348,14 +392,14 @@ pub fn run_topology_ensemble_model(
                 }
                 start += rows as u64;
             }
-            series
+            Ok(series)
         },
-        |mut a, b| {
+        merge_ctl(|mut a: EnsembleSeries, b| {
             a.merge(&b);
             a
-        },
+        }),
     )
-    .unwrap_or_else(|| EnsembleSeries::new(spec.steps))
+    .unwrap_or_else(|| Ok(EnsembleSeries::new(spec.steps)))
 }
 
 /// Steady-state summary of one campaign point.
@@ -418,14 +462,30 @@ pub fn steady_state_topology_model(
     measure: usize,
     strategy: ShardStrategy,
 ) -> SteadyStats {
+    steady_state_topology_ctl(topology, spec, model, warm, measure, strategy, None)
+        .expect("no cancel token: the fold cannot be interrupted")
+}
+
+/// [`steady_state_topology_model`] with per-step cancellation checkpoints.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn steady_state_topology_ctl(
+    topology: Topology,
+    spec: &RunSpec,
+    model: &ModelSpec,
+    warm: usize,
+    measure: usize,
+    strategy: ShardStrategy,
+    cancel: Option<&CancelToken>,
+) -> Result<SteadyStats, Interrupted> {
     assert_eq!(topology.len(), spec.l, "RunSpec.l must match the topology");
     // built once per parameter point; shared (read-only) by every batch
     let nbr = topology.neighbour_table();
     let lattice_workers = strategy.lattice_workers();
+    type Acc = (OnlineMoments, OnlineMoments, OnlineMoments, OnlineMoments);
     let acc = map_shards_with(
         spec.trials,
         strategy.trial_workers(),
-        |range| {
+        |range| -> Result<Acc, Interrupted> {
             // per-shard: moments over per-trial time averages
             let mut u = OnlineMoments::new();
             let mut w = OnlineMoments::new();
@@ -445,7 +505,7 @@ pub fn steady_state_topology_model(
                     spec.streams,
                 );
                 for _ in 0..warm {
-                    engine.step();
+                    engine.step_ctl(cancel)?;
                 }
                 // tracked GVT: an O(1) read per row, no rescan
                 let gvt0: Vec<f64> = (0..rows)
@@ -455,7 +515,7 @@ pub fn steady_state_topology_model(
                 let mut sw = vec![0.0f64; rows];
                 let mut swa = vec![0.0f64; rows];
                 for _ in 0..measure {
-                    engine.step();
+                    engine.step_ctl(cancel)?;
                     let sim = engine.batch();
                     for row in 0..rows {
                         let f =
@@ -475,25 +535,25 @@ pub fn steady_state_topology_model(
                 }
                 start += rows as u64;
             }
-            (u, w, wa, rate)
+            Ok((u, w, wa, rate))
         },
-        |mut a, b| {
+        merge_ctl(|mut a: Acc, b| {
             a.0.merge(&b.0);
             a.1.merge(&b.1);
             a.2.merge(&b.2);
             a.3.merge(&b.3);
             a
-        },
+        }),
     )
-    .expect("at least one trial required");
-    SteadyStats {
+    .expect("at least one trial required")?;
+    Ok(SteadyStats {
         u: acc.0.mean(),
         u_err: acc.0.stderr(),
         w: acc.1.mean(),
         w_err: acc.1.stderr(),
         wa: acc.2.mean(),
         gvt_rate: acc.3.mean(),
-    }
+    })
 }
 
 /// Steady-state summary of one model-payload campaign point: the
@@ -530,6 +590,21 @@ pub fn model_steady_topology(
     measure: usize,
     strategy: ShardStrategy,
 ) -> ModelSteadyStats {
+    model_steady_topology_ctl(topology, spec, model, warm, measure, strategy, None)
+        .expect("no cancel token: the fold cannot be interrupted")
+}
+
+/// [`model_steady_topology`] with per-step cancellation checkpoints.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn model_steady_topology_ctl(
+    topology: Topology,
+    spec: &RunSpec,
+    model: &ModelSpec,
+    warm: usize,
+    measure: usize,
+    strategy: ShardStrategy,
+    cancel: Option<&CancelToken>,
+) -> Result<ModelSteadyStats, Interrupted> {
     assert_eq!(topology.len(), spec.l, "RunSpec.l must match the topology");
     assert!(
         *model != ModelSpec::None,
@@ -537,10 +612,11 @@ pub fn model_steady_topology(
     );
     let nbr = topology.neighbour_table();
     let lattice_workers = strategy.lattice_workers();
+    type Acc = (OnlineMoments, OnlineMoments, OnlineMoments, OnlineMoments);
     let acc = map_shards_with(
         spec.trials,
         strategy.trial_workers(),
-        |range| {
+        |range| -> Result<Acc, Interrupted> {
             let mut u = OnlineMoments::new();
             let mut e = OnlineMoments::new();
             let mut m = OnlineMoments::new();
@@ -559,7 +635,7 @@ pub fn model_steady_topology(
                     spec.streams,
                 );
                 for _ in 0..warm {
-                    engine.step();
+                    engine.step_ctl(cancel)?;
                 }
                 let gvt0: Vec<f64> = (0..rows)
                     .map(|r| engine.batch().global_virtual_time_row(r))
@@ -568,7 +644,7 @@ pub fn model_steady_topology(
                 let mut se = vec![0.0f64; rows];
                 let mut sm = vec![0.0f64; rows];
                 for _ in 0..measure {
-                    engine.step();
+                    engine.step_ctl(cancel)?;
                     let sim = engine.batch();
                     let pes = sim.pes() as f64;
                     for row in 0..rows {
@@ -592,18 +668,18 @@ pub fn model_steady_topology(
                 }
                 start += rows as u64;
             }
-            (u, e, m, rate)
+            Ok((u, e, m, rate))
         },
-        |mut a, b| {
+        merge_ctl(|mut a: Acc, b| {
             a.0.merge(&b.0);
             a.1.merge(&b.1);
             a.2.merge(&b.2);
             a.3.merge(&b.3);
             a
-        },
+        }),
     )
-    .expect("at least one trial required");
-    ModelSteadyStats {
+    .expect("at least one trial required")?;
+    Ok(ModelSteadyStats {
         u: acc.0.mean(),
         u_err: acc.0.stderr(),
         e: acc.1.mean(),
@@ -611,7 +687,7 @@ pub fn model_steady_topology(
         m_abs: acc.2.mean(),
         m_err: acc.2.stderr(),
         gvt_rate: acc.3.mean(),
-    }
+    })
 }
 
 /// Warm up, reset the payload's counters, then accumulate the per-PE
@@ -626,13 +702,28 @@ pub fn update_stats_topology(
     measure: usize,
     strategy: ShardStrategy,
 ) -> UpdateStats {
+    update_stats_topology_ctl(topology, spec, model, warm, measure, strategy, None)
+        .expect("no cancel token: the fold cannot be interrupted")
+}
+
+/// [`update_stats_topology`] with per-step cancellation checkpoints.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn update_stats_topology_ctl(
+    topology: Topology,
+    spec: &RunSpec,
+    model: &ModelSpec,
+    warm: usize,
+    measure: usize,
+    strategy: ShardStrategy,
+    cancel: Option<&CancelToken>,
+) -> Result<UpdateStats, Interrupted> {
     assert_eq!(topology.len(), spec.l, "RunSpec.l must match the topology");
     let nbr = topology.neighbour_table();
     let lattice_workers = strategy.lattice_workers();
     map_shards_with(
         spec.trials,
         strategy.trial_workers(),
-        |range| {
+        |range| -> Result<UpdateStats, Interrupted> {
             let mut acc = UpdateStats::new();
             let mut start = range.start;
             while start < range.end {
@@ -648,7 +739,7 @@ pub fn update_stats_topology(
                     spec.streams,
                 );
                 for _ in 0..warm {
-                    engine.step();
+                    engine.step_ctl(cancel)?;
                 }
                 for row in 0..rows {
                     engine
@@ -658,7 +749,7 @@ pub fn update_stats_topology(
                         .reset_stats();
                 }
                 for _ in 0..measure {
-                    engine.step();
+                    engine.step_ctl(cancel)?;
                 }
                 let sim = engine.batch();
                 for row in 0..rows {
@@ -671,12 +762,12 @@ pub fn update_stats_topology(
                 }
                 start += rows as u64;
             }
-            acc
+            Ok(acc)
         },
-        |mut a, b| {
+        merge_ctl(|mut a: UpdateStats, b| {
             a.merge(&b);
             a
-        },
+        }),
     )
     // zero trials must fail loudly (like model_steady_topology), not
     // cache an all-zero histogram whose events=0 divides to NaN rows
@@ -702,6 +793,21 @@ pub struct CampaignOpts {
     pub cache_dir: Option<PathBuf>,
     /// Suppress per-point and summary log lines (benchmark harnesses).
     pub quiet: bool,
+    /// Retries per point after its first failed attempt (`--max-retries`;
+    /// 0 = quarantine on the first panic).
+    pub max_retries: u32,
+    /// Deterministic delay schedule between retry attempts.
+    pub backoff: Backoff,
+    /// What to do once a point exhausts its retries (`--on-fault`).
+    pub on_fault: OnFault,
+    /// Cooperative cancellation: checked before claiming each point and
+    /// at every step of the trial folds.  `None` = uncancellable.
+    pub cancel: Option<CancelToken>,
+    /// Deterministic fault injection (tests / `REPRO_FAULT_PLAN`).
+    pub faults: Option<FaultPlan>,
+    /// Where to write the quarantine manifest (one line per failed
+    /// point, beside the TSVs).  A healthy run removes a stale one.
+    pub failed_manifest: Option<PathBuf>,
 }
 
 impl Default for CampaignOpts {
@@ -712,13 +818,19 @@ impl Default for CampaignOpts {
             resume: false,
             cache_dir: None,
             quiet: false,
+            max_retries: 0,
+            backoff: Backoff::default(),
+            on_fault: OnFault::Quarantine,
+            cancel: None,
+            faults: None,
+            failed_manifest: None,
         }
     }
 }
 
 /// What a campaign run did — surfaced in the scheduler log line (the CI
 /// resume smoke asserts `executed=0` on a warm cache).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct CampaignReport {
     /// Total points in the plan.
     pub points: usize,
@@ -728,6 +840,29 @@ pub struct CampaignReport {
     pub executed: usize,
     /// Point-level workers used.
     pub workers: usize,
+    /// Retry attempts consumed across all points (transient faults that
+    /// recovered leave their trace here).
+    pub retried: usize,
+    /// Cache entries that were present but corrupt/unreadable under
+    /// `--resume` and were recomputed (silent degradation made loud).
+    pub corrupt_entries: usize,
+    /// Points that exhausted their retries, plan-order.
+    pub quarantined: Vec<PointFailure>,
+    /// Did a cancellation request drain this run early?
+    pub cancelled: bool,
+}
+
+/// A supervised campaign's full outcome: per-slot results (`None` =
+/// quarantined or never reached before cancellation/abort) plus the
+/// report.  [`run_plan`] is the strict wrapper that turns partial
+/// outcomes into typed errors; schedulers that want to degrade
+/// gracefully (serve the healthy points, surface the rest) read this.
+#[derive(Clone, Debug)]
+pub struct CampaignOutcome {
+    /// Plan-order results; `None` slots were not computed.
+    pub results: Vec<Option<PointResult>>,
+    /// The run report (quarantine list included).
+    pub report: CampaignReport,
 }
 
 /// Execute every point of `plan` and return the results in plan order,
@@ -742,6 +877,55 @@ pub struct CampaignReport {
 /// which points came from the cache (see the determinism contract in
 /// `coordinator::plan`).
 pub fn run_plan(plan: &SweepPlan, opts: &CampaignOpts) -> Result<(Vec<PointResult>, CampaignReport)> {
+    let CampaignOutcome { results, report } = run_plan_supervised(plan, opts)?;
+    if report.cancelled {
+        return Err(CampaignError::Cancelled {
+            plan: plan.name.clone(),
+            completed: results.iter().filter(|r| r.is_some()).count(),
+            points: report.points,
+        }
+        .into());
+    }
+    if !report.quarantined.is_empty() {
+        return Err(CampaignError::Quarantined {
+            plan: plan.name.clone(),
+            failures: report.quarantined.clone(),
+        }
+        .into());
+    }
+    let mut out = Vec::with_capacity(results.len());
+    for (i, slot) in results.into_iter().enumerate() {
+        match slot {
+            Some(r) => out.push(r),
+            None => {
+                return Err(CampaignError::MissingPoint {
+                    plan: plan.name.clone(),
+                    index: i,
+                }
+                .into())
+            }
+        }
+    }
+    Ok((out, report))
+}
+
+/// The supervised scheduler underneath [`run_plan`]: fault isolation,
+/// retry/quarantine, and cooperative cancellation, returning a partial
+/// [`CampaignOutcome`] instead of erroring on the first casualty.
+///
+/// Supervision contract:
+/// - a panic inside a point is caught per-attempt (`catch_unwind`) and
+///   never takes down sibling points already in flight;
+/// - a point gets `1 + max_retries` attempts, separated by the
+///   deterministic [`Backoff`] schedule, then lands in
+///   `report.quarantined` (and the `FAILED` manifest, if configured);
+/// - a cancellation request (token or signal) is honored between points
+///   and between steps inside the trial folds: in-flight points drain
+///   without publishing partial state, so the cache stays bitwise
+///   resumable;
+/// - under [`OnFault::Abort`] the first quarantined point stops workers
+///   from claiming further points (in-flight ones still drain).
+pub fn run_plan_supervised(plan: &SweepPlan, opts: &CampaignOpts) -> Result<CampaignOutcome> {
     let cache = match &opts.cache_dir {
         Some(dir) => Some(ResultCache::open(dir)?),
         None => None,
@@ -756,10 +940,22 @@ pub fn run_plan(plan: &SweepPlan, opts: &CampaignOpts) -> Result<(Vec<PointResul
     let next = AtomicUsize::new(0);
     let hits = AtomicUsize::new(0);
     let ran = AtomicUsize::new(0);
+    let retried = AtomicUsize::new(0);
+    let corrupt = AtomicUsize::new(0);
+    let cancelled_flag = AtomicBool::new(false);
+    let abort_flag = AtomicBool::new(false);
+    let failures: Mutex<Vec<PointFailure>> = Mutex::new(Vec::new());
     let slots: Vec<Mutex<Option<PointResult>>> = (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
+                if opts.cancel.as_ref().is_some_and(|t| t.is_cancelled()) {
+                    cancelled_flag.store(true, Ordering::Relaxed);
+                    break;
+                }
+                if abort_flag.load(Ordering::Relaxed) {
+                    break;
+                }
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
@@ -767,16 +963,52 @@ pub fn run_plan(plan: &SweepPlan, opts: &CampaignOpts) -> Result<(Vec<PointResul
                 let point = &plan.points[i];
                 let spec = point.spec();
                 let cached = if opts.resume {
-                    cache
-                        .as_ref()
-                        .and_then(|c| c.load(&spec))
-                        .and_then(|payload| PointResult::from_cache_text(&payload).ok())
+                    cache.as_ref().and_then(|c| match c.load_checked(&spec) {
+                        CacheLoad::Hit(payload) => match PointResult::from_cache_text(&payload) {
+                            Ok(r) => Some(r),
+                            Err(_) => {
+                                // parsed magic but an unreadable payload is
+                                // corruption too: recompute, count it
+                                corrupt.fetch_add(1, Ordering::Relaxed);
+                                None
+                            }
+                        },
+                        CacheLoad::Corrupt => {
+                            corrupt.fetch_add(1, Ordering::Relaxed);
+                            None
+                        }
+                        CacheLoad::Miss => None,
+                    })
                 } else {
                     None
                 };
                 let (result, hit) = match cached {
                     Some(r) => (r, true),
-                    None => (execute_point(point, opts.lattice_workers), false),
+                    None => {
+                        match supervise_execute(
+                            i,
+                            point,
+                            &spec,
+                            opts,
+                            &retried,
+                            &cancelled_flag,
+                        ) {
+                            Ok(r) => (r, false),
+                            Err(Some(failure)) => {
+                                failures
+                                    .lock()
+                                    .unwrap_or_else(|e| e.into_inner())
+                                    .push(failure);
+                                if opts.on_fault == OnFault::Abort {
+                                    abort_flag.store(true, Ordering::Relaxed);
+                                }
+                                continue;
+                            }
+                            // cancelled mid-point: nothing to store, the
+                            // attempt drained without side effects
+                            Err(None) => break,
+                        }
+                    }
                 };
                 if hit {
                     hits.fetch_add(1, Ordering::Relaxed);
@@ -786,6 +1018,11 @@ pub fn run_plan(plan: &SweepPlan, opts: &CampaignOpts) -> Result<(Vec<PointResul
                         // stream the completed point to disk as it lands
                         if let Err(e) = c.store(&spec, &result.to_cache_text()) {
                             eprintln!("warning: cache store failed for {}: {e}", point.label);
+                        }
+                        if let Some(faults) = &opts.faults {
+                            if faults.corrupts_store(&spec) {
+                                corrupt_entry_on_disk(&c.path_for(&spec));
+                            }
                         }
                     }
                 }
@@ -797,76 +1034,213 @@ pub fn run_plan(plan: &SweepPlan, opts: &CampaignOpts) -> Result<(Vec<PointResul
                         if hit { "cache" } else { "run" }
                     );
                 }
-                *slots[i].lock().unwrap() = Some(result);
+                *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(result);
             });
         }
     });
-    let results: Vec<PointResult> = slots
+    let results: Vec<Option<PointResult>> = slots
         .into_iter()
-        .enumerate()
-        .map(|(i, slot)| {
-            slot.into_inner()
-                .unwrap()
-                .unwrap_or_else(|| panic!("point {i} was never computed"))
-        })
+        .map(|slot| slot.into_inner().unwrap_or_else(|e| e.into_inner()))
         .collect();
+    let mut quarantined = failures.into_inner().unwrap_or_else(|e| e.into_inner());
+    quarantined.sort_by_key(|f| f.index);
     let report = CampaignReport {
         points: n,
         cache_hits: hits.into_inner(),
         executed: ran.into_inner(),
         workers,
+        retried: retried.into_inner(),
+        corrupt_entries: corrupt.into_inner(),
+        quarantined,
+        cancelled: cancelled_flag.into_inner(),
     };
+    if let Some(path) = &opts.failed_manifest {
+        if report.quarantined.is_empty() {
+            // a healthy (or fully drained) run clears a stale manifest so
+            // operators don't act on last run's quarantine list
+            let _ = std::fs::remove_file(path);
+        } else {
+            write_failed_manifest(path, &plan.name, &report.quarantined);
+        }
+    }
     if !opts.quiet {
+        // NOTE: the prefix through `workers=` is frozen — CI greps key on
+        // it; new fields only ever append after.
         println!(
-            "campaign {}: {} points, cache_hits={} executed={} workers={}",
-            plan.name, report.points, report.cache_hits, report.executed, report.workers
+            "campaign {}: {} points, cache_hits={} executed={} workers={} retried={} corrupt={} quarantined={}{}",
+            plan.name,
+            report.points,
+            report.cache_hits,
+            report.executed,
+            report.workers,
+            report.retried,
+            report.corrupt_entries,
+            report.quarantined.len(),
+            if report.cancelled { " cancelled" } else { "" }
         );
     }
-    Ok((results, report))
+    Ok(CampaignOutcome { results, report })
+}
+
+/// Run one point's attempt loop: fault injection, `catch_unwind`
+/// isolation, retry with deterministic backoff.  Returns the result,
+/// `Err(Some(failure))` when retries are exhausted, or `Err(None)` when
+/// a cancellation drained the attempt (nothing published).
+fn supervise_execute(
+    index: usize,
+    point: &SweepPoint,
+    spec: &str,
+    opts: &CampaignOpts,
+    retried: &AtomicUsize,
+    cancelled_flag: &AtomicBool,
+) -> std::result::Result<PointResult, Option<PointFailure>> {
+    let cancel = opts.cancel.as_ref();
+    let mut attempt = 0u32;
+    loop {
+        attempt += 1;
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if let Some(faults) = &opts.faults {
+                faults.pre_execute(spec);
+            }
+            execute_point_ctl(point, opts.lattice_workers, cancel)
+        }));
+        match outcome {
+            Ok(Ok(result)) => return Ok(result),
+            Ok(Err(Interrupted)) => {
+                cancelled_flag.store(true, Ordering::Relaxed);
+                return Err(None);
+            }
+            Err(payload) => {
+                let error = panic_message(payload);
+                eprintln!(
+                    "warning: point {} ({}) attempt {attempt} panicked: {error}",
+                    index + 1,
+                    point.label
+                );
+                if attempt > opts.max_retries {
+                    return Err(Some(PointFailure {
+                        index,
+                        label: point.label.clone(),
+                        spec: spec.to_string(),
+                        attempts: attempt,
+                        error,
+                    }));
+                }
+                retried.fetch_add(1, Ordering::Relaxed);
+                let delay = opts.backoff.delay_for(attempt);
+                if !delay.is_zero() {
+                    std::thread::sleep(delay);
+                }
+            }
+        }
+    }
+}
+
+/// Best-effort extraction of a panic payload's message (`&str` and
+/// `String` payloads cover `panic!`/`assert!`; anything else is opaque).
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic payload of unknown type".to_string()
+    }
+}
+
+/// Fault-injection helper: flip one bit of a published cache entry so
+/// the next `--resume` sees a checksum mismatch (not a missing file).
+fn corrupt_entry_on_disk(path: &Path) {
+    if let Ok(mut bytes) = std::fs::read(path) {
+        if bytes.len() >= 2 {
+            let at = bytes.len() - 2;
+            bytes[at] ^= 0x01;
+            let _ = std::fs::write(path, bytes);
+        }
+    }
+}
+
+/// Write the quarantine manifest: one tab-separated record per failed
+/// point, deterministic plan order, newlines in errors sanitized.
+fn write_failed_manifest(path: &Path, plan: &str, failures: &[PointFailure]) {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "# FAILED manifest for campaign {plan}: {} quarantined point(s)\n",
+        failures.len()
+    ));
+    out.push_str("# index\tattempts\tlabel\terror\tspec\n");
+    for f in failures {
+        let error = f.error.replace(['\n', '\t'], " ");
+        out.push_str(&format!(
+            "{}\t{}\t{}\t{}\t{}\n",
+            f.index, f.attempts, f.label, error, f.spec
+        ));
+    }
+    if let Err(e) = std::fs::write(path, out) {
+        eprintln!("warning: failed to write quarantine manifest {}: {e}", path.display());
+    }
 }
 
 /// Execute one sweep point with the canonical serial trial fold
 /// (trial-order ascending, one accumulator — bit-identical to the
 /// pre-scheduler single-worker path), optionally lattice-sharded.
 pub fn execute_point(point: &SweepPoint, lattice_workers: usize) -> PointResult {
+    execute_point_ctl(point, lattice_workers, None)
+        .expect("no cancel token: the point cannot be interrupted")
+}
+
+/// Cancellable [`execute_point`]: the token is polled between steps of
+/// every sampling mode's loops, so a cancellation drains at a step
+/// boundary — a point either completes (and publishes) or leaves no
+/// trace, never a half-measured accumulator (see DESIGN.md
+/// §Supervision for the safety argument).
+pub(crate) fn execute_point_ctl(
+    point: &SweepPoint,
+    lattice_workers: usize,
+    cancel: Option<&CancelToken>,
+) -> std::result::Result<PointResult, Interrupted> {
     let strategy = ShardStrategy::Both {
         trial_workers: 1,
         lattice_workers: lattice_workers.max(1),
     };
-    match &point.sampling {
-        Sampling::Curves { .. } => PointResult::Curves(run_topology_ensemble_model(
+    Ok(match &point.sampling {
+        Sampling::Curves { .. } => PointResult::Curves(run_topology_ensemble_ctl(
             point.topology,
             &point.run,
             &point.model,
             strategy,
-        )),
-        Sampling::Steady { warm, measure } => PointResult::Steady(steady_state_topology_model(
+            cancel,
+        )?),
+        Sampling::Steady { warm, measure } => PointResult::Steady(steady_state_topology_ctl(
             point.topology,
             &point.run,
             &point.model,
             *warm,
             *measure,
             strategy,
-        )),
+            cancel,
+        )?),
         Sampling::ModelSteady { warm, measure } => PointResult::ModelSteady(
-            model_steady_topology(
+            model_steady_topology_ctl(
                 point.topology,
                 &point.run,
                 &point.model,
                 *warm,
                 *measure,
                 strategy,
-            ),
+                cancel,
+            )?,
         ),
         Sampling::UpdateStats { warm, measure } => PointResult::UpdateStats(
-            update_stats_topology(
+            update_stats_topology_ctl(
                 point.topology,
                 &point.run,
                 &point.model,
                 *warm,
                 *measure,
                 strategy,
-            ),
+                cancel,
+            )?,
         ),
         Sampling::Snapshot { at, stream } => {
             // single-trial surface snapshots: a B = 1 batch on the point's
@@ -887,6 +1261,7 @@ pub fn execute_point(point: &SweepPoint, lattice_workers: usize) -> PointResult 
             let mut t = 0usize;
             for &t_snap in at {
                 while t < t_snap {
+                    CancelToken::check(cancel)?;
                     sim.step();
                     t += 1;
                 }
@@ -913,10 +1288,12 @@ pub fn execute_point(point: &SweepPoint, lattice_workers: usize) -> PointResult 
                 Rng::for_stream(point.run.seed, *stream),
             );
             for _ in 0..*warm {
+                CancelToken::check(cancel)?;
                 sim.step();
             }
             sim.reset_counters();
             for _ in 0..*steps {
+                CancelToken::check(cancel)?;
                 sim.step();
             }
             PointResult::Counters(sim.counters())
@@ -934,11 +1311,13 @@ pub fn execute_point(point: &SweepPoint, lattice_workers: usize) -> PointResult 
                     Rng::for_stream(point.run.seed, trial),
                 );
                 for _ in 0..*warm {
+                    CancelToken::check(cancel)?;
                     sim.step();
                 }
                 let pes = sim.len() as f64;
                 let mut s = 0.0;
                 for _ in 0..*measure {
+                    CancelToken::check(cancel)?;
                     s += sim.step() as f64 / pes;
                 }
                 acc.push(s / *measure as f64);
@@ -948,7 +1327,7 @@ pub fn execute_point(point: &SweepPoint, lattice_workers: usize) -> PointResult 
                 err: acc.stderr(),
             }
         }
-    }
+    })
 }
 
 #[cfg(test)]

@@ -1,0 +1,667 @@
+//! Supervision primitives for the campaign scheduler: cooperative
+//! cancellation, deterministic retry backoff, typed campaign errors, and
+//! a deterministic fault-injection harness (DESIGN.md §Supervision).
+//!
+//! Everything here is decision-path deterministic: the retry schedule is
+//! a pure function of the attempt index, fault rules key off frozen spec
+//! strings with explicit fire counts, and the test-facing cancellation
+//! trigger ([`CancelToken::after_checks`]) counts polls instead of
+//! reading a clock.  Wall time appears only where it must — the actual
+//! backoff sleep and injected delays — never in *whether* something
+//! retries, cancels, or faults.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+// ---------------------------------------------------------------------------
+// Cooperative cancellation
+
+/// Process-wide flag set by the SIGINT/SIGTERM handlers.  Sticky by
+/// design: once the operator asked to stop, every subsequent campaign in
+/// this process drains too.
+static SIGNAL_RAISED: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_signal_handlers() {
+    use std::sync::Once;
+    static INSTALL: Once = Once::new();
+    INSTALL.call_once(|| {
+        // A handler may only touch async-signal-safe state: one relaxed
+        // store into a static atomic.  The worker loops poll the flag at
+        // step boundaries (`CancelToken::is_cancelled`) and drain.
+        extern "C" fn on_signal(_signum: i32) {
+            SIGNAL_RAISED.store(true, Ordering::Relaxed);
+        }
+        // Declared directly (offline workspace — no libc crate): the
+        // C `signal(2)` entry point, with the Linux signal numbers.
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            let _ = signal(SIGINT, on_signal);
+            let _ = signal(SIGTERM, on_signal);
+        }
+    });
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+#[derive(Debug, Default)]
+struct TokenInner {
+    cancelled: AtomicBool,
+    /// Deterministic poll budget: when armed, the `budget`-th
+    /// [`CancelToken::is_cancelled`] call trips the token.
+    armed: AtomicBool,
+    budget: AtomicU64,
+}
+
+/// A cooperative cancellation token, threaded from the CLI through the
+/// campaign scheduler into the trial folds' step loops.
+///
+/// Cancellation is *checked*, never imposed: a fold observes the token
+/// between steps and abandons its (whole) partial accumulation, so a
+/// cancelled point leaves no output at all — the cache only ever holds
+/// complete, rename-published point payloads, which is what makes a
+/// drained campaign bitwise-resumable (DESIGN.md §Supervision).
+///
+/// Clones share state: cancelling any clone cancels them all.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    inner: Arc<TokenInner>,
+    /// Also observe the process-wide SIGINT/SIGTERM flag.
+    signal: bool,
+}
+
+impl CancelToken {
+    /// A token that only trips when [`CancelToken::cancel`] is called.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A token wired to SIGINT/SIGTERM: installs the (idempotent,
+    /// process-wide) handlers and observes their flag in addition to
+    /// explicit [`CancelToken::cancel`] calls.
+    pub fn for_signals() -> Self {
+        install_signal_handlers();
+        CancelToken {
+            inner: Arc::default(),
+            signal: true,
+        }
+    }
+
+    /// A token that trips on its `n`-th [`CancelToken::is_cancelled`]
+    /// poll (n ≥ 1) — the deterministic stand-in for "a signal arrived
+    /// mid-campaign" used by the drain tests: with the canonical serial
+    /// fold the k-th poll always happens at the same step of the same
+    /// point, independent of wall clock.
+    pub fn after_checks(n: u64) -> Self {
+        assert!(n >= 1, "after_checks(0) would never trip deterministically");
+        let token = CancelToken::new();
+        token.inner.armed.store(true, Ordering::Relaxed);
+        token.inner.budget.store(n, Ordering::Relaxed);
+        token
+    }
+
+    /// Request cancellation (idempotent).
+    pub fn cancel(&self) {
+        self.inner.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// Has cancellation been requested?  (One relaxed atomic load on the
+    /// fast path — cheap enough to poll every step.)
+    pub fn is_cancelled(&self) -> bool {
+        if self.inner.cancelled.load(Ordering::Relaxed) {
+            return true;
+        }
+        if self.signal && SIGNAL_RAISED.load(Ordering::Relaxed) {
+            self.cancel();
+            return true;
+        }
+        if self.inner.armed.load(Ordering::Relaxed) {
+            let prev = self
+                .inner
+                .budget
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| b.checked_sub(1))
+                .unwrap_or(0);
+            if prev <= 1 {
+                self.cancel();
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Step-boundary checkpoint used by the trial folds: `Err` exactly
+    /// when a token is present and tripped.  `None` (no supervision) is
+    /// free and can never interrupt — the historical public entry points
+    /// pass it.
+    #[inline]
+    pub fn check(cancel: Option<&CancelToken>) -> std::result::Result<(), Interrupted> {
+        match cancel {
+            Some(token) if token.is_cancelled() => Err(Interrupted),
+            _ => Ok(()),
+        }
+    }
+}
+
+/// Marker returned out of a trial fold whose cancel token tripped: the
+/// fold's partial accumulation has been discarded whole (nothing was
+/// stored, nothing is quarantined — the point simply remains pending).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interrupted;
+
+// ---------------------------------------------------------------------------
+// Retry policy
+
+/// Deterministic exponential backoff: the delay before retry `attempt`
+/// (1-based) is `base · 2^(attempt-1)` capped at `cap` — a pure function
+/// of the attempt index, no jitter, no wall-clock reads in the decision
+/// path (only the sleep itself consumes time).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Backoff {
+    /// First-retry delay in milliseconds.
+    pub base_millis: u64,
+    /// Ceiling on any single delay, in milliseconds.
+    pub cap_millis: u64,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Backoff {
+            base_millis: 25,
+            cap_millis: 1000,
+        }
+    }
+}
+
+impl Backoff {
+    /// No delay at all (unit tests; retry storms are bounded by
+    /// `max_retries` anyway).
+    pub const fn none() -> Self {
+        Backoff {
+            base_millis: 0,
+            cap_millis: 0,
+        }
+    }
+
+    /// Delay before the given retry attempt (1-based).
+    pub fn delay_for(&self, attempt: u32) -> Duration {
+        let shift = attempt.saturating_sub(1).min(16);
+        let millis = self.base_millis.saturating_mul(1u64 << shift);
+        Duration::from_millis(millis.min(self.cap_millis))
+    }
+}
+
+/// What the scheduler does with a point whose retries are exhausted.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OnFault {
+    /// Record the failure, keep executing every other point, write the
+    /// `FAILED` manifest, exit non-zero (the default).
+    #[default]
+    Quarantine,
+    /// Stop claiming new points after the first exhausted failure
+    /// (in-flight siblings still finish; the failure is still recorded).
+    Abort,
+}
+
+impl OnFault {
+    /// Parse the `--on-fault` CLI value.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "quarantine" => OnFault::Quarantine,
+            "abort" => OnFault::Abort,
+            other => bail!("--on-fault {other:?}: expected quarantine|abort"),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed campaign failures
+
+/// One sweep point that exhausted its retry budget.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PointFailure {
+    /// Plan-order index of the point.
+    pub index: usize,
+    /// Human label (`SweepPoint::label`).
+    pub label: String,
+    /// Frozen canonical spec string (`SweepPoint::spec`).
+    pub spec: String,
+    /// Execution attempts made (1 + retries).
+    pub attempts: u32,
+    /// The final panic message.
+    pub error: String,
+}
+
+/// Typed, diagnosable campaign-level errors.  The vendored `anyhow` shim
+/// converts any `std::error::Error` through its blanket `From`, so these
+/// propagate through the existing `Result` plumbing — and out of `main`
+/// as a non-zero exit — without losing their structure in the message.
+#[derive(Clone, Debug)]
+pub enum CampaignError {
+    /// One or more points were quarantined after exhausting retries;
+    /// every other point still published.
+    Quarantined {
+        /// Plan name.
+        plan: String,
+        /// The quarantined points, plan-order.
+        failures: Vec<PointFailure>,
+    },
+    /// The campaign drained after a cancellation request; completed
+    /// points are in the cache, the rest remain pending for `--resume`.
+    Cancelled {
+        /// Plan name.
+        plan: String,
+        /// Points that completed (cache hits + executions) before drain.
+        completed: usize,
+        /// Total points in the plan.
+        points: usize,
+    },
+    /// A scheduler invariant broke: a slot was never filled even though
+    /// the run neither cancelled nor quarantined.  Diagnosable evidence
+    /// of a scheduling bug — previously a bare `panic!`.
+    MissingPoint {
+        /// Plan name.
+        plan: String,
+        /// Plan-order index of the empty slot.
+        index: usize,
+    },
+}
+
+impl fmt::Display for CampaignError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CampaignError::Quarantined { plan, failures } => {
+                write!(
+                    f,
+                    "campaign {plan}: {} point(s) quarantined after retry exhaustion:",
+                    failures.len()
+                )?;
+                for p in failures {
+                    write!(
+                        f,
+                        "\n  [{}] {} after {} attempt(s): {}",
+                        p.index, p.label, p.attempts, p.error
+                    )?;
+                }
+                Ok(())
+            }
+            CampaignError::Cancelled {
+                plan,
+                completed,
+                points,
+            } => write!(
+                f,
+                "campaign {plan}: cancelled after {completed}/{points} points; \
+                 completed work is cached — rerun with --resume to finish"
+            ),
+            CampaignError::MissingPoint { plan, index } => write!(
+                f,
+                "campaign {plan}: scheduler bug — point {index} was never computed \
+                 (no cancellation, no quarantine)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CampaignError {}
+
+// ---------------------------------------------------------------------------
+// Deterministic fault injection
+
+/// What an injected fault does when its rule fires.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic before the point executes (exercises isolation + retry).
+    Panic,
+    /// Sleep before the point executes (exercises drain-window timing in
+    /// the kill/resume CI loop; trajectory-invisible).
+    Delay {
+        /// Sleep duration in milliseconds.
+        millis: u64,
+    },
+    /// Flip one payload byte of the point's cache entry *after* the
+    /// store publishes (exercises the corrupt-entry recompute path).
+    CorruptStore,
+}
+
+/// One injection rule: fire `kind` for the first `times` executions of
+/// any point whose frozen spec string contains `spec_substr`
+/// (`u32::MAX` = persistent, never exhausts).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultRule {
+    /// Fault to inject.
+    pub kind: FaultKind,
+    /// Fire count per matching spec (`u32::MAX` = every time).
+    pub times: u32,
+    /// Substring match against the point's canonical spec string.
+    pub spec_substr: String,
+}
+
+/// A deterministic fault-injection plan, test/env-gated: campaigns run
+/// fault-free unless one is attached explicitly
+/// (`CampaignOpts::faults`) or through `REPRO_FAULT_PLAN`.
+///
+/// Rules fire per (rule, spec) pair: "the first 2 executions of point X
+/// panic" means exactly that, independent of scheduling order or worker
+/// count, because the counters key off the frozen spec string — the same
+/// identity the result cache uses.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+    /// Fire counters per (rule index, spec string); shared across clones
+    /// so retries of the same point observe the same budget.
+    fired: Arc<Mutex<BTreeMap<(usize, String), u32>>>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no rules fire).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a panic rule: the first `times` executions of matching specs
+    /// panic.
+    pub fn panic_on(mut self, spec_substr: impl Into<String>, times: u32) -> Self {
+        self.rules.push(FaultRule {
+            kind: FaultKind::Panic,
+            times,
+            spec_substr: spec_substr.into(),
+        });
+        self
+    }
+
+    /// Add a delay rule.
+    pub fn delay_on(mut self, spec_substr: impl Into<String>, millis: u64, times: u32) -> Self {
+        self.rules.push(FaultRule {
+            kind: FaultKind::Delay { millis },
+            times,
+            spec_substr: spec_substr.into(),
+        });
+        self
+    }
+
+    /// Add a corrupt-after-store rule.
+    pub fn corrupt_on(mut self, spec_substr: impl Into<String>, times: u32) -> Self {
+        self.rules.push(FaultRule {
+            kind: FaultKind::CorruptStore,
+            times,
+            spec_substr: spec_substr.into(),
+        });
+        self
+    }
+
+    /// The rules, in declaration order.
+    pub fn rules(&self) -> &[FaultRule] {
+        &self.rules
+    }
+
+    /// Parse the `REPRO_FAULT_PLAN` grammar: `|`-separated rules, each
+    /// * `panic:<times>:<substr>`
+    /// * `delay:<millis>:<times>:<substr>`
+    /// * `corrupt:<times>:<substr>`
+    ///
+    /// with `<times>` a count or `inf`, and `<substr>` the rest of the
+    /// rule verbatim (spec strings legitimately contain `:`).
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::new();
+        for rule in s.split('|') {
+            let rule = rule.trim();
+            if rule.is_empty() {
+                continue;
+            }
+            let Some((kind, rest)) = rule.split_once(':') else {
+                bail!("fault rule {rule:?}: expected kind:...");
+            };
+            plan = match kind {
+                "panic" | "corrupt" => {
+                    let Some((times, substr)) = rest.split_once(':') else {
+                        bail!("fault rule {rule:?}: expected {kind}:<times>:<substr>");
+                    };
+                    let times = parse_times(times)
+                        .ok_or_else(|| anyhow::anyhow!("fault rule {rule:?}: bad count {times:?}"))?;
+                    if kind == "panic" {
+                        plan.panic_on(substr, times)
+                    } else {
+                        plan.corrupt_on(substr, times)
+                    }
+                }
+                "delay" => {
+                    let mut it = rest.splitn(3, ':');
+                    let (millis, times, substr) = (it.next(), it.next(), it.next());
+                    let (Some(millis), Some(times), Some(substr)) = (millis, times, substr) else {
+                        bail!("fault rule {rule:?}: expected delay:<millis>:<times>:<substr>");
+                    };
+                    let millis = millis
+                        .parse::<u64>()
+                        .map_err(|_| anyhow::anyhow!("fault rule {rule:?}: bad millis"))?;
+                    let times = parse_times(times)
+                        .ok_or_else(|| anyhow::anyhow!("fault rule {rule:?}: bad count {times:?}"))?;
+                    plan.delay_on(substr, millis, times)
+                }
+                other => bail!("fault rule {rule:?}: unknown kind {other:?} (panic|delay|corrupt)"),
+            };
+        }
+        if plan.rules.is_empty() {
+            bail!("fault plan {s:?} contains no rules");
+        }
+        Ok(plan)
+    }
+
+    /// Read a plan from `REPRO_FAULT_PLAN`: `Ok(None)` when unset or
+    /// empty, `Err` on a malformed value — a typo'd injection plan must
+    /// fail loudly, not silently run fault-free (a CI leg that *expects*
+    /// faults would otherwise fake a pass).
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var("REPRO_FAULT_PLAN") {
+            Ok(v) if !v.trim().is_empty() => Ok(Some(Self::parse(&v)?)),
+            _ => Ok(None),
+        }
+    }
+
+    /// Consume one charge of rule `idx` for `spec`; `false` once the
+    /// rule's budget for this spec is spent.
+    fn consume(&self, idx: usize, spec: &str, times: u32) -> bool {
+        let mut fired = self.fired.lock().unwrap_or_else(|e| e.into_inner());
+        let n = fired.entry((idx, spec.to_string())).or_insert(0);
+        if *n >= times {
+            return false;
+        }
+        *n = n.saturating_add(1);
+        true
+    }
+
+    /// Fire every matching pre-execution rule for `spec` — called inside
+    /// the supervisor's `catch_unwind`, so an injected panic becomes a
+    /// retryable [`PointFailure`], exactly like an organic one.
+    pub fn pre_execute(&self, spec: &str) {
+        for (idx, rule) in self.rules.iter().enumerate() {
+            if matches!(rule.kind, FaultKind::CorruptStore) || !spec.contains(&rule.spec_substr) {
+                continue;
+            }
+            if !self.consume(idx, spec, rule.times) {
+                continue;
+            }
+            match &rule.kind {
+                FaultKind::Panic => panic!(
+                    "injected fault: panic (rule {:?} matched spec {:?})",
+                    rule.spec_substr, spec
+                ),
+                FaultKind::Delay { millis } => {
+                    std::thread::sleep(Duration::from_millis(*millis))
+                }
+                FaultKind::CorruptStore => unreachable!("filtered above"),
+            }
+        }
+    }
+
+    /// Should the just-published cache entry for `spec` be corrupted?
+    /// (Consumes one charge per query that matches.)
+    pub fn corrupts_store(&self, spec: &str) -> bool {
+        self.rules.iter().enumerate().any(|(idx, rule)| {
+            matches!(rule.kind, FaultKind::CorruptStore)
+                && spec.contains(&rule.spec_substr)
+                && self.consume(idx, spec, rule.times)
+        })
+    }
+}
+
+/// `<times>` field: a count or `inf`.
+fn parse_times(s: &str) -> Option<u32> {
+    if s == "inf" {
+        Some(u32::MAX)
+    } else {
+        s.parse::<u32>().ok().filter(|&n| n >= 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancel_token_trips_and_shares_state() {
+        let a = CancelToken::new();
+        let b = a.clone();
+        assert!(!a.is_cancelled());
+        b.cancel();
+        assert!(a.is_cancelled() && b.is_cancelled());
+        assert!(CancelToken::check(None).is_ok());
+        assert!(CancelToken::check(Some(&a)).is_err());
+    }
+
+    #[test]
+    fn cancel_token_after_checks_is_deterministic() {
+        let t = CancelToken::after_checks(3);
+        assert!(!t.is_cancelled());
+        assert!(!t.is_cancelled());
+        assert!(t.is_cancelled(), "third poll must trip");
+        assert!(t.is_cancelled(), "and it stays tripped");
+        let one = CancelToken::after_checks(1);
+        assert!(one.is_cancelled(), "first poll trips a budget of 1");
+    }
+
+    #[test]
+    fn backoff_schedule_is_pure_exponential_with_cap() {
+        let b = Backoff {
+            base_millis: 10,
+            cap_millis: 55,
+        };
+        assert_eq!(b.delay_for(1).as_millis(), 10);
+        assert_eq!(b.delay_for(2).as_millis(), 20);
+        assert_eq!(b.delay_for(3).as_millis(), 40);
+        assert_eq!(b.delay_for(4).as_millis(), 55, "capped");
+        assert_eq!(b.delay_for(60).as_millis(), 55, "shift saturates");
+        assert_eq!(Backoff::none().delay_for(9).as_millis(), 0);
+        // determinism: same attempt, same delay, always
+        assert_eq!(b.delay_for(2), b.delay_for(2));
+    }
+
+    #[test]
+    fn fault_plan_grammar_roundtrip() {
+        let plan = FaultPlan::parse("panic:2:l=12|delay:5:1:steady|corrupt:inf:mode=cons").unwrap();
+        assert_eq!(plan.rules().len(), 3);
+        assert_eq!(
+            plan.rules()[0],
+            FaultRule {
+                kind: FaultKind::Panic,
+                times: 2,
+                spec_substr: "l=12".into()
+            }
+        );
+        assert_eq!(
+            plan.rules()[1],
+            FaultRule {
+                kind: FaultKind::Delay { millis: 5 },
+                times: 1,
+                spec_substr: "steady".into()
+            }
+        );
+        assert_eq!(
+            plan.rules()[2],
+            FaultRule {
+                kind: FaultKind::CorruptStore,
+                times: u32::MAX,
+                spec_substr: "mode=cons".into()
+            }
+        );
+        // substrings keep their own colons (spec strings contain them)
+        let plan = FaultPlan::parse("panic:1:mode=win:10").unwrap();
+        assert_eq!(plan.rules()[0].spec_substr, "mode=win:10");
+        for bad in ["panic", "panic:x:spec", "panic:0:spec", "wiggle:1:s", "", "  "] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn fault_rules_fire_times_then_exhaust_per_spec() {
+        let plan = FaultPlan::new().panic_on("l=12", 2);
+        let spec_a = "repro/v1 run=l=12;x";
+        let spec_b = "repro/v1 run=l=12;y";
+        for _ in 0..2 {
+            let r = std::panic::catch_unwind(|| plan.pre_execute(spec_a));
+            assert!(r.is_err(), "first two executions panic");
+        }
+        plan.pre_execute(spec_a); // third is clean
+                                  // budgets are per spec: B has its own two charges
+        assert!(std::panic::catch_unwind(|| plan.pre_execute(spec_b)).is_err());
+        // non-matching specs never fire
+        plan.pre_execute("repro/v1 run=l=99;z");
+    }
+
+    #[test]
+    fn corrupt_rules_consume_independently() {
+        let plan = FaultPlan::new().corrupt_on("steady", 1);
+        assert!(plan.corrupts_store("spec steady one"));
+        assert!(!plan.corrupts_store("spec steady one"), "budget spent");
+        assert!(plan.corrupts_store("spec steady two"), "per-spec budget");
+        assert!(!plan.corrupts_store("spec curves"));
+        // corrupt rules never fire pre-execution
+        plan.pre_execute("spec steady three");
+    }
+
+    #[test]
+    fn on_fault_parses() {
+        assert_eq!(OnFault::parse("quarantine").unwrap(), OnFault::Quarantine);
+        assert_eq!(OnFault::parse("abort").unwrap(), OnFault::Abort);
+        assert!(OnFault::parse("explode").is_err());
+        assert_eq!(OnFault::default(), OnFault::Quarantine);
+    }
+
+    #[test]
+    fn campaign_error_displays_structure() {
+        let e = CampaignError::Quarantined {
+            plan: "fig2".into(),
+            failures: vec![PointFailure {
+                index: 3,
+                label: "L100".into(),
+                spec: "repro/v1 ...".into(),
+                attempts: 4,
+                error: "boom".into(),
+            }],
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("fig2") && msg.contains("[3] L100") && msg.contains("boom"));
+        let e = CampaignError::Cancelled {
+            plan: "fig9".into(),
+            completed: 5,
+            points: 12,
+        };
+        assert!(e.to_string().contains("5/12"));
+        // the anyhow shim's blanket From picks these up as std errors
+        let any: anyhow::Error = CampaignError::MissingPoint {
+            plan: "x".into(),
+            index: 7,
+        }
+        .into();
+        assert!(any.to_string().contains("point 7"));
+    }
+}

@@ -18,17 +18,21 @@
 //! `--resume`, outputs byte-identical for every worker count.
 
 mod campaign;
+pub mod faults;
 mod jax;
 pub mod plan;
 pub mod pool;
 mod spec;
 
 pub use campaign::{
-    execute_point, model_steady_topology, run_ensemble, run_plan, run_topology_ensemble,
-    run_topology_ensemble_model, run_topology_ensemble_with, steady_state,
-    steady_state_topology, steady_state_topology_model, steady_state_topology_with,
-    update_stats_topology, CampaignOpts, CampaignReport, ModelSteadyStats, RunSpec,
-    ShardStrategy, SteadyStats, BATCH_ROWS,
+    execute_point, model_steady_topology, run_ensemble, run_plan, run_plan_supervised,
+    run_topology_ensemble, run_topology_ensemble_model, run_topology_ensemble_with,
+    steady_state, steady_state_topology, steady_state_topology_model,
+    steady_state_topology_with, update_stats_topology, CampaignOpts, CampaignOutcome,
+    CampaignReport, ModelSteadyStats, RunSpec, ShardStrategy, SteadyStats, BATCH_ROWS,
+};
+pub use faults::{
+    Backoff, CampaignError, CancelToken, FaultPlan, Interrupted, OnFault, PointFailure,
 };
 pub use jax::{run_artifact_ensemble, run_with_executor as run_with_executor_bench, JaxRunSpec};
 pub use plan::{fnv1a64, PointResult, Profile, Sampling, SweepPlan, SweepPoint};

@@ -401,7 +401,10 @@ impl SweepPoint {
     /// pre-existing cache key still resolves.  Equal specs ⇒
     /// bit-identical results (the determinism contract), so this string
     /// *is* the point's cache identity; [`SweepPoint::key`] hashes it
-    /// into the content address.
+    /// into the content address.  The supervision layer reuses the same
+    /// identity: fault-injection rules (`coordinator::faults`) and the
+    /// quarantine manifest both key off this exact string, so an
+    /// injected fault targets the same point under every worker count.
     pub fn spec(&self) -> String {
         let mut s = format!(
             "repro/v1 topo={} run={} samp={}",

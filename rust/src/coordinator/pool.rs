@@ -109,6 +109,11 @@ where
 }
 
 /// [`map_shards`] with an explicit worker count.
+///
+/// `R` may itself be a `Result` — the cancellable trial folds return
+/// `Result<Acc, Interrupted>` per shard and merge errors sticky
+/// (`campaign::merge_ctl`), so a cancellation observed by any shard
+/// drains the whole fold without publishing a partial accumulator.
 pub fn map_shards_with<R, J, M>(trials: u64, workers: usize, job: J, mut merge: M) -> Option<R>
 where
     R: Send,

@@ -257,6 +257,7 @@ impl CampaignSpec {
             resume: false,
             cache_dir: None,
             quiet: false,
+            ..Default::default()
         };
         let (results, _report) = run_plan(&plan, &opts)?;
         let mut table = Table::new(

@@ -35,7 +35,10 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::{run_plan, CampaignOpts, PointResult, Profile, SweepPlan};
+use crate::coordinator::{
+    run_plan, Backoff, CampaignOpts, CancelToken, FaultPlan, OnFault, PointResult, Profile,
+    SweepPlan,
+};
 use crate::fit::extrapolate_to_zero;
 
 /// Shared experiment context: where to write, at what fidelity, and how
@@ -59,6 +62,14 @@ pub struct Ctx {
     pub beta: f64,
     /// Ising coupling J (`--coupling`).
     pub coupling: f64,
+    /// Retries per faulting point before quarantine (`--max-retries`).
+    pub max_retries: u32,
+    /// Policy once a point exhausts its retries (`--on-fault`).
+    pub on_fault: OnFault,
+    /// Deterministic fault injection (`REPRO_FAULT_PLAN`; tests/CI).
+    pub faults: Option<FaultPlan>,
+    /// Cooperative cancellation token (signal-backed in the CLI).
+    pub cancel: Option<CancelToken>,
 }
 
 impl Ctx {
@@ -74,6 +85,10 @@ impl Ctx {
             resume: false,
             beta: crate::pdes::model::DEFAULT_BETA,
             coupling: crate::pdes::model::DEFAULT_COUPLING,
+            max_retries: 0,
+            on_fault: OnFault::Quarantine,
+            faults: None,
+            cancel: None,
         }
     }
 
@@ -95,6 +110,12 @@ impl Ctx {
             resume: self.resume,
             cache_dir: Some(self.out_dir.join(".cache")),
             quiet: false,
+            max_retries: self.max_retries,
+            backoff: Backoff::default(),
+            on_fault: self.on_fault,
+            cancel: self.cancel.clone(),
+            faults: self.faults.clone(),
+            failed_manifest: Some(self.out_dir.join("FAILED.manifest")),
         }
     }
 

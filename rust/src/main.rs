@@ -21,8 +21,8 @@ use anyhow::Result;
 
 use repro::cli::Args;
 use repro::coordinator::{
-    run_artifact_ensemble, run_topology_ensemble_model, JaxRunSpec, Profile, RunSpec,
-    ShardStrategy,
+    run_artifact_ensemble, run_topology_ensemble_model, CancelToken, FaultPlan, JaxRunSpec,
+    OnFault, Profile, RunSpec, ShardStrategy,
 };
 use repro::experiments::{self, Ctx};
 use repro::pdes::model::{DEFAULT_BETA, DEFAULT_COUPLING};
@@ -118,6 +118,7 @@ fn main() -> Result<()> {
                 "usage: repro <fig2..fig11|eq8|kpz|meanfield|appendix|dims|topology|ising|updatestats|all>\n\
                  \x20                 [--quick] [--out DIR] [--seed S] [--workers N]\n\
                  \x20                 [--lattice-workers N] [--resume]\n\
+                 \x20                 [--max-retries N] [--on-fault quarantine|abort]\n\
                  \x20      repro plan <name|all> [--quick] [--seed S]\n\
                  \x20      repro run  --l L --nv NV --delta D [--rd] [--trials N] [--steps T] [--seed S]\n\
                  \x20                 [--topology ring|kring|smallworld] [--k K] [--links N]\n\
@@ -250,6 +251,12 @@ fn main() -> Result<()> {
                 resume: args.has_flag("resume"),
                 beta,
                 coupling,
+                max_retries: args.opt_u64("max-retries", 0)? as u32,
+                on_fault: OnFault::parse(&args.opt("on-fault", "quarantine"))?,
+                faults: FaultPlan::from_env()?,
+                // SIGINT/SIGTERM drain in-flight points and flush the
+                // cache instead of killing the process mid-write
+                cancel: Some(CancelToken::for_signals()),
             };
             experiments::run(name, &ctx)
         }

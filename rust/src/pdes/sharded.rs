@@ -508,6 +508,27 @@ impl ShardedPdes {
     pub fn step(&mut self) {
         self.step_masked(None);
     }
+
+    /// One parallel step unless `cancel` has tripped: returns `false`
+    /// (without touching the batch) when cancelled, `true` after a
+    /// completed step.
+    ///
+    /// This is the cancellation-safety invariant for the sharded engine:
+    /// the token is polled only *between* steps, so a parallel step
+    /// either runs to completion across all shards (barrier included) or
+    /// does not start at all — a cancelled trial fold can never observe,
+    /// or persist, a half-stepped lattice.
+    #[inline]
+    pub fn step_unless_cancelled(
+        &mut self,
+        cancel: &crate::coordinator::faults::CancelToken,
+    ) -> bool {
+        if cancel.is_cancelled() {
+            return false;
+        }
+        self.step_masked(None);
+        true
+    }
 }
 
 impl Deref for ShardedPdes {
@@ -820,6 +841,33 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn step_unless_cancelled_is_all_or_nothing() {
+        use crate::coordinator::faults::CancelToken;
+        let mk = || {
+            ShardedPdes::with_streams(
+                Topology::Ring { l: 24 },
+                VolumeLoad::Sites(1),
+                Mode::Windowed { delta: 2.0 },
+                2,
+                41,
+                0,
+                3,
+            )
+        };
+        // token trips on its second poll: step 1 completes, step 2 is
+        // refused without touching the batch
+        let token = CancelToken::after_checks(2);
+        let mut sharded = mk();
+        assert!(sharded.step_unless_cancelled(&token), "first step runs");
+        assert!(!sharded.step_unless_cancelled(&token), "second is refused");
+        assert!(!sharded.step_unless_cancelled(&token), "and stays refused");
+        // the refused steps left the state exactly one step in
+        let mut one_step = mk();
+        one_step.step();
+        assert_rows_bit_identical(&one_step, &sharded, "cancel is all-or-nothing");
     }
 
     #[test]

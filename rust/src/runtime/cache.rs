@@ -45,6 +45,21 @@ const MAGIC: &str = "# repro point cache v2";
 /// workers may store entries concurrently).
 static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
+/// What [`ResultCache::load_checked`] found for a spec.  The scheduler
+/// recomputes on both `Miss` and `Corrupt`, but a `Corrupt` entry is
+/// evidence of torn writes or disk rot and is tallied in the
+/// `CampaignReport` (`corrupt_entries`) instead of degrading silently.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CacheLoad {
+    /// Entry present and intact: the stored payload.
+    Hit(String),
+    /// No entry on disk for this spec.
+    Miss,
+    /// An entry exists but failed validation (wrong magic, spec
+    /// collision, truncation, checksum mismatch) or could not be read.
+    Corrupt,
+}
+
 /// A directory of content-addressed point results.
 #[derive(Clone, Debug)]
 pub struct ResultCache {
@@ -52,11 +67,25 @@ pub struct ResultCache {
 }
 
 impl ResultCache {
-    /// Open (creating if needed) a cache directory.
+    /// Open (creating if needed) a cache directory, sweeping any stale
+    /// `*.tmp` files a killed writer left behind (rename-publish means
+    /// they were never visible as entries — they are pure litter).
+    ///
+    /// The sweep assumes no *other* process is mid-`store` on the same
+    /// directory while we open it; concurrent multi-process sharing of
+    /// one cache dir is not a supported pattern (kill/resume relaunches
+    /// are sequential).
     pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
         let dir = dir.into();
         fs::create_dir_all(&dir)
             .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        if let Ok(entries) = fs::read_dir(&dir) {
+            for entry in entries.flatten() {
+                if entry.file_name().to_string_lossy().contains(".tmp") {
+                    let _ = fs::remove_file(entry.path());
+                }
+            }
+        }
         Ok(Self { dir })
     }
 
@@ -75,8 +104,35 @@ impl ResultCache {
     /// mismatch (absent file, wrong magic, spec collision, truncation,
     /// checksum failure) returns `None`: a miss, never an error the
     /// sweep has to handle — a corrupt entry is simply recomputed.
+    /// Use [`ResultCache::load_checked`] to tell the cases apart.
     pub fn load(&self, spec: &str) -> Option<String> {
-        let text = fs::read_to_string(self.path_for(spec)).ok()?;
+        match self.load_checked(spec) {
+            CacheLoad::Hit(payload) => Some(payload),
+            CacheLoad::Miss | CacheLoad::Corrupt => None,
+        }
+    }
+
+    /// Like [`ResultCache::load`], but distinguishes "no entry" from
+    /// "entry present but damaged" so the scheduler can count corrupt
+    /// recomputes instead of degrading silently.
+    pub fn load_checked(&self, spec: &str) -> CacheLoad {
+        let text = match fs::read_to_string(self.path_for(spec)) {
+            Ok(text) => text,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return CacheLoad::Miss,
+            // the file exists but cannot be read (permissions, I/O
+            // error, invalid UTF-8): treat as damaged, not absent
+            Err(_) => return CacheLoad::Corrupt,
+        };
+        match Self::validate(&text, spec) {
+            Some(payload) => CacheLoad::Hit(payload),
+            None => CacheLoad::Corrupt,
+        }
+    }
+
+    /// Entry-format validation shared by the load paths: magic, embedded
+    /// spec, payload checksum.  `None` = the entry is not a trustworthy
+    /// record of `spec`.
+    fn validate(text: &str, spec: &str) -> Option<String> {
         let rest = text.strip_prefix(MAGIC)?.strip_prefix('\n')?;
         let rest = rest.strip_prefix("spec ")?;
         let (stored_spec, rest) = rest.split_once('\n')?;
@@ -109,9 +165,26 @@ impl ResultCache {
             "{MAGIC}\nspec {spec}\nsum {:016x}\n{payload}",
             crate::coordinator::fnv1a64(payload)
         );
-        fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
+        {
+            use std::io::Write;
+            let mut f = fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(text.as_bytes())
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            // fsync before the rename-publish: without it a power loss
+            // can leave the *renamed* entry with torn contents (rename
+            // metadata can reach the journal before the data blocks)
+            f.sync_all()
+                .with_context(|| format!("syncing {}", tmp.display()))?;
+        }
         fs::rename(&tmp, &path)
             .with_context(|| format!("publishing {}", path.display()))?;
+        // best-effort directory fsync so the rename itself is durable;
+        // failure here is not fatal (the entry is still valid in-session)
+        #[cfg(unix)]
+        if let Ok(d) = fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
         Ok(())
     }
 }
@@ -228,6 +301,51 @@ mod tests {
         )
         .unwrap();
         assert!(c.load(spec).is_none());
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn load_checked_distinguishes_miss_from_corrupt() {
+        let c = tmp_cache("checked");
+        let spec = "repro/v1 checked-case";
+        // absent entry: a plain miss
+        assert_eq!(c.load_checked(spec), CacheLoad::Miss);
+        let payload = "steady 3fcf8b588e368f08 0000000000000000 3ff0000000000000 \
+                       0000000000000000 3fe0000000000000 3fb999999999999a\n";
+        c.store(spec, payload).unwrap();
+        assert_eq!(c.load_checked(spec), CacheLoad::Hit(payload.to_string()));
+        // bit-flip one payload hex digit in the published v2 entry: the
+        // checksum trips and the damage is reported as Corrupt, not Miss
+        let path = c.path_for(spec);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let pos = bytes
+            .windows(7)
+            .position(|w| w == b"3fcf8b5")
+            .expect("payload hex present");
+        bytes[pos] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        assert_eq!(c.load_checked(spec), CacheLoad::Corrupt);
+        // the compat wrapper still degrades both cases to None
+        assert!(c.load(spec).is_none());
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn stale_tmp_files_are_swept_on_open() {
+        let c = tmp_cache("sweep");
+        let spec = "repro/v1 sweep-case";
+        c.store(spec, "latticeu 0 0\n").unwrap();
+        // plant a torn tmp file, as a kill -9 mid-store would leave
+        let torn = c.dir().join("00deadbeef00cafe.tmp12345-0");
+        std::fs::write(&torn, "# repro point cache v2\nspec trunc").unwrap();
+        assert!(torn.exists());
+        let reopened = ResultCache::open(c.dir()).unwrap();
+        assert!(!torn.exists(), "stale tmp must be swept on open");
+        // the published entry survives the sweep
+        assert_eq!(
+            reopened.load_checked(spec),
+            CacheLoad::Hit("latticeu 0 0\n".to_string())
+        );
         std::fs::remove_dir_all(c.dir()).ok();
     }
 

@@ -12,7 +12,7 @@ mod cache;
 mod executor;
 
 pub use artifact::{ArtifactInfo, Manifest};
-pub use cache::ResultCache;
+pub use cache::{CacheLoad, ResultCache};
 pub use executor::{ChunkExecutor, ChunkResult, PdesRuntime, N_ARTIFACT_STATS};
 
 /// The Δ value the AOT path uses to encode an infinite window (must match

@@ -10,7 +10,9 @@
 use std::fs;
 use std::path::{Path, PathBuf};
 
-use repro::coordinator::{run_plan, CampaignOpts, Profile, SweepPlan};
+use repro::coordinator::{
+    run_plan, Backoff, CampaignOpts, CancelToken, FaultPlan, Profile, SweepPlan,
+};
 use repro::experiments::{self, Ctx};
 use repro::DEFAULT_SEED;
 
@@ -208,6 +210,114 @@ fn corrupt_cache_entries_recompute_under_resume_with_correct_bytes() {
     .unwrap();
     assert_eq!(rep.executed, 0, "repaired cache must satisfy every point");
     fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn sigterm_simulated_drain_flushes_cache_and_resumes_bitwise() {
+    // the SIGTERM story end-to-end through the figure driver, with the
+    // deterministic poll-counted token standing in for the signal (the
+    // real handler sets the same flag the token observes): cancel
+    // mid-plan, assert completed points were flushed to the cache, then
+    // resume and require byte-identical TSVs with executed == 0 for the
+    // previously completed points
+    let reference = run_quick("fig2", 1, "drain_ref");
+
+    let out = std::env::temp_dir().join("repro_cplan_fig2_drain");
+    fs::remove_dir_all(&out).ok();
+    let mut ctx = Ctx::new(&out, true);
+    ctx.workers = 1;
+    // trips partway through the plan's serial execution
+    ctx.cancel = Some(CancelToken::after_checks(500));
+    let err = experiments::run("fig2", &ctx)
+        .expect_err("a drained campaign must surface as an error")
+        .to_string();
+    assert!(err.contains("--resume"), "unexpected drain error: {err}");
+
+    // the drain left rename-published entries behind: the cache holds
+    // only complete points, never partial state
+    let cache_dir: PathBuf = out.join(".cache");
+    let flushed = fs::read_dir(&cache_dir)
+        .expect("cache dir must exist after a drain")
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().is_some_and(|x| x == "point"))
+        .count();
+    let full_plan = experiments::plan_for("fig2", &Profile::quick(DEFAULT_SEED)).unwrap();
+    assert!(
+        flushed >= 1 && flushed < full_plan.len(),
+        "expected a partial flush, got {flushed}/{} entries",
+        full_plan.len()
+    );
+
+    // resume: completed points are cache hits (executed only the rest),
+    // and the final TSVs are byte-identical to an uninterrupted run
+    let mut ctx = Ctx::new(&out, true);
+    ctx.workers = 1;
+    ctx.resume = true;
+    experiments::run("fig2", &ctx).unwrap();
+    assert_eq!(reference, tsv_files(&out), "drained+resumed TSVs differ");
+
+    // and a further resume executes nothing at all
+    let (_, rep) = run_plan(
+        &full_plan,
+        &CampaignOpts {
+            resume: true,
+            cache_dir: Some(cache_dir),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(rep.executed, 0, "warm cache must satisfy every point");
+    fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn sharded_pool_worker_panic_under_campaign_is_isolated() {
+    // stress the panic-unwinds-while-StepPools-are-live hazard under the
+    // campaign supervisor (rides the `sharded pool pe_family` TSan
+    // filter): every point advances on lattice-sharded engines
+    // (persistent worker pools), a sibling point panics mid-campaign,
+    // and the supervisor must retry it without perturbing the pools'
+    // trajectories — bitwise-stable output across repetitions
+    let profile = Profile::quick(DEFAULT_SEED);
+    let full_plan = experiments::plan_for("fig2", &profile).unwrap();
+    let mut plan = SweepPlan::new("fig2", "pool-panic stress slice");
+    for p in &full_plan.points[..4.min(full_plan.len())] {
+        plan.push(p.clone());
+    }
+    let target = plan.points[1].spec();
+    let baseline = run_plan(
+        &plan,
+        &CampaignOpts {
+            workers: 2,
+            lattice_workers: 2,
+            quiet: true,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+    .0
+    .iter()
+    .map(|r| r.to_cache_text())
+    .collect::<Vec<_>>();
+    for round in 0..3 {
+        let opts = CampaignOpts {
+            workers: 2,
+            lattice_workers: 2,
+            max_retries: 2,
+            backoff: Backoff::none(),
+            faults: Some(FaultPlan::new().panic_on(target.clone(), 1)),
+            quiet: true,
+            ..Default::default()
+        };
+        let (results, report) = run_plan(&plan, &opts).unwrap();
+        assert_eq!(report.retried, 1, "round {round}: injected panic retried");
+        assert!(report.quarantined.is_empty());
+        let texts: Vec<String> = results.iter().map(|r| r.to_cache_text()).collect();
+        assert_eq!(
+            texts, baseline,
+            "round {round}: pool trajectories perturbed by a sibling panic"
+        );
+    }
 }
 
 #[test]

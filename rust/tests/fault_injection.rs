@@ -1,0 +1,266 @@
+//! Fault-injection suite for the campaign supervision layer (ISSUE 7
+//! acceptance): transient faults recover via retry with bytes identical
+//! to a fault-free run, persistent faults quarantine without
+//! contaminating neighbors, cancellation drains to bitwise-resumable
+//! state, and corrupt cache entries are recomputed (and counted).
+//!
+//! Everything here is deterministic: fault rules key off frozen spec
+//! strings with explicit fire counts, cancellation uses the poll-counted
+//! [`CancelToken::after_checks`] trigger, and backoff is disabled so no
+//! decision depends on wall time.
+
+use std::fs;
+use std::path::PathBuf;
+
+use repro::coordinator::{
+    run_plan, run_plan_supervised, Backoff, CampaignOpts, CancelToken, FaultPlan, OnFault,
+    PointResult, RunSpec, SweepPlan, SweepPoint,
+};
+use repro::pdes::{Mode, StreamFamily, Topology, VolumeLoad};
+
+/// A small 4-point plan whose specs are mutually non-overlapping on the
+/// `l=<L>;` substring, so a fault rule can target exactly one point.
+fn plan() -> SweepPlan {
+    let mut plan = SweepPlan::new("faultprobe", "supervision test plan");
+    for l in [10usize, 12, 14, 16] {
+        plan.push(SweepPoint::steady(
+            format!("L{l}"),
+            Topology::Ring { l },
+            RunSpec {
+                l,
+                load: VolumeLoad::Sites(1),
+                mode: Mode::Conservative,
+                trials: 2,
+                steps: 0,
+                seed: 7,
+                streams: StreamFamily::Pe,
+            },
+            40,
+            40,
+        ));
+    }
+    plan
+}
+
+/// Canonical byte identity of a result set: the cache-text encoding
+/// carries raw f64 bit patterns, so equal strings = bitwise-equal data.
+fn texts(results: &[PointResult]) -> Vec<String> {
+    results.iter().map(|r| r.to_cache_text()).collect()
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("repro_faultinj_{tag}"));
+    fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Fault-free reference results for [`plan`].
+fn reference() -> Vec<String> {
+    let (results, report) = run_plan(&plan(), &CampaignOpts::default()).unwrap();
+    assert_eq!(report.executed, 4);
+    texts(&results)
+}
+
+#[test]
+fn transient_panic_recovers_via_retry_bitwise() {
+    let reference = reference();
+    // the first 2 executions of the l=12 point panic; retries cover it
+    let opts = CampaignOpts {
+        workers: 2,
+        max_retries: 3,
+        backoff: Backoff::none(),
+        faults: Some(FaultPlan::new().panic_on("l=12;", 2)),
+        quiet: true,
+        ..Default::default()
+    };
+    let (results, report) = run_plan(&plan(), &opts).unwrap();
+    assert_eq!(report.retried, 2, "both injected panics consumed a retry");
+    assert!(report.quarantined.is_empty());
+    assert!(!report.cancelled);
+    assert_eq!(report.executed, 4);
+    assert_eq!(
+        texts(&results),
+        reference,
+        "recovered campaign must be byte-identical to a fault-free run"
+    );
+}
+
+#[test]
+fn persistent_fault_quarantines_without_contamination() {
+    let reference = reference();
+    let dir = tmp_dir("quarantine");
+    let manifest = dir.join("FAILED.manifest");
+    let opts = CampaignOpts {
+        workers: 2,
+        max_retries: 1,
+        backoff: Backoff::none(),
+        faults: Some(FaultPlan::new().panic_on("l=12;", u32::MAX)),
+        cache_dir: Some(dir.join(".cache")),
+        failed_manifest: Some(manifest.clone()),
+        quiet: true,
+        ..Default::default()
+    };
+
+    // the strict wrapper surfaces the quarantine as a typed error
+    let err = run_plan(&plan(), &opts).unwrap_err().to_string();
+    assert!(err.contains("quarantined"), "unexpected error: {err}");
+    assert!(err.contains("L12"), "error must name the point: {err}");
+
+    // the supervised entry point degrades gracefully instead
+    let outcome = run_plan_supervised(&plan(), &opts).unwrap();
+    let report = &outcome.report;
+    assert_eq!(report.quarantined.len(), 1);
+    let failure = &report.quarantined[0];
+    assert_eq!(failure.index, 1);
+    assert_eq!(failure.label, "L12");
+    assert_eq!(failure.attempts, 2, "1 + max_retries attempts");
+    assert!(failure.error.contains("injected fault"));
+    // healthy neighbors still published, byte-identical
+    for (i, slot) in outcome.results.iter().enumerate() {
+        if i == 1 {
+            assert!(slot.is_none(), "quarantined slot must stay empty");
+        } else {
+            let text = slot.as_ref().expect("healthy point").to_cache_text();
+            assert_eq!(text, reference[i], "healthy point {i} contaminated");
+        }
+    }
+    let manifest_text = fs::read_to_string(&manifest).expect("FAILED manifest written");
+    assert!(manifest_text.contains("L12") && manifest_text.contains("injected fault"));
+
+    // a healthy rerun over the same cache completes the missing point
+    // and clears the stale manifest
+    let healthy = CampaignOpts {
+        faults: None,
+        max_retries: 0,
+        resume: true,
+        ..opts
+    };
+    let (results, report) = run_plan(&plan(), &healthy).unwrap();
+    assert_eq!(report.executed, 1, "only the quarantined point recomputes");
+    assert_eq!(report.cache_hits, 3);
+    assert_eq!(texts(&results), reference);
+    assert!(!manifest.exists(), "healthy run must clear the manifest");
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn on_fault_abort_stops_claiming_after_first_quarantine() {
+    // serial worker + the FIRST point persistently failing: under abort
+    // no later point may be claimed (under quarantine all of them run)
+    let opts = CampaignOpts {
+        workers: 1,
+        max_retries: 0,
+        backoff: Backoff::none(),
+        on_fault: OnFault::Abort,
+        faults: Some(FaultPlan::new().panic_on("l=10;", u32::MAX)),
+        quiet: true,
+        ..Default::default()
+    };
+    let outcome = run_plan_supervised(&plan(), &opts).unwrap();
+    assert_eq!(outcome.report.quarantined.len(), 1);
+    assert_eq!(outcome.report.quarantined[0].index, 0);
+    assert_eq!(outcome.report.executed, 0, "no point after the abort");
+    assert!(
+        outcome.results.iter().all(|r| r.is_none()),
+        "abort must leave every remaining slot unfilled"
+    );
+}
+
+#[test]
+fn cancel_mid_campaign_drains_and_resumes_bitwise() {
+    let reference = reference();
+    let dir = tmp_dir("drain");
+    let cache = dir.join(".cache");
+
+    // pass 1: serial worker, token tripping deterministically mid-plan
+    // (each steady point polls once per claim + once per warm/measure
+    // step; 100 polls lands inside point 1)
+    let cancelled = CampaignOpts {
+        workers: 1,
+        cancel: Some(CancelToken::after_checks(100)),
+        cache_dir: Some(cache.clone()),
+        quiet: true,
+        ..Default::default()
+    };
+    let outcome = run_plan_supervised(&plan(), &cancelled).unwrap();
+    assert!(outcome.report.cancelled, "token must drain the campaign");
+    let completed = outcome.results.iter().filter(|r| r.is_some()).count();
+    assert!(
+        completed >= 1 && completed < 4,
+        "expected a partial drain, got {completed}/4"
+    );
+    assert_eq!(outcome.report.executed, completed, "completed points stored");
+
+    // the strict wrapper reports the same drain as a typed error
+    let err = run_plan(
+        &plan(),
+        &CampaignOpts {
+            cancel: Some(CancelToken::after_checks(1)),
+            quiet: true,
+            ..Default::default()
+        },
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("--resume"), "unexpected error: {err}");
+
+    // pass 2: resume finishes exactly the remaining points...
+    let resume = CampaignOpts {
+        workers: 1,
+        resume: true,
+        cache_dir: Some(cache.clone()),
+        quiet: true,
+        ..Default::default()
+    };
+    let (results, report) = run_plan(&plan(), &resume).unwrap();
+    assert_eq!(report.cache_hits, completed, "drained points came from cache");
+    assert_eq!(report.executed, 4 - completed);
+    assert_eq!(
+        texts(&results),
+        reference,
+        "drained + resumed campaign must be byte-identical"
+    );
+
+    // pass 3: everything cached, nothing executes
+    let (_, report) = run_plan(&plan(), &resume).unwrap();
+    assert_eq!(report.executed, 0);
+    assert_eq!(report.cache_hits, 4);
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_store_fault_recomputes_on_resume() {
+    let reference = reference();
+    let dir = tmp_dir("corrupt");
+    let cache = dir.join(".cache");
+
+    // pass 1: the l=12 entry is bit-flipped right after it publishes
+    let opts = CampaignOpts {
+        workers: 2,
+        faults: Some(FaultPlan::new().corrupt_on("l=12;", 1)),
+        cache_dir: Some(cache.clone()),
+        quiet: true,
+        ..Default::default()
+    };
+    let (results, report) = run_plan(&plan(), &opts).unwrap();
+    assert_eq!(report.executed, 4);
+    assert_eq!(texts(&results), reference, "corruption is post-publish only");
+
+    // pass 2: resume detects the damaged entry, counts it, recomputes
+    let resume = CampaignOpts {
+        faults: None,
+        resume: true,
+        ..opts
+    };
+    let (results, report) = run_plan(&plan(), &resume).unwrap();
+    assert_eq!(report.corrupt_entries, 1, "the flipped entry must be counted");
+    assert_eq!(report.executed, 1, "only the damaged point recomputes");
+    assert_eq!(report.cache_hits, 3);
+    assert_eq!(texts(&results), reference);
+
+    // pass 3: the repaired cache satisfies everything
+    let (_, report) = run_plan(&plan(), &resume).unwrap();
+    assert_eq!(report.corrupt_entries, 0);
+    assert_eq!(report.executed, 0);
+    fs::remove_dir_all(&dir).ok();
+}
