@@ -253,12 +253,32 @@ def updatestats(q):
     return "per-PE update statistics: interval + idle-streak distributions", pts
 
 
+def autotune_pt(trials, l, delta):
+    # Sampling::Autotune has no steps/warm/measure of its own; the
+    # controller epoch length lives in the run spec's control= field
+    return dict(kind="autotune", trials=trials, l=l, nv=1, delta=delta,
+                steps=None, warm=None, measure=None)
+
+
+def autotune(q):
+    l = pick(q, 256, 64)
+    tr = p_trials(16, q)
+    deltas = pick(q, [0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0],
+                  [1.0, 4.0, 16.0, 64.0])
+    pts = []
+    for _ in range(3):  # ring, scale-free, random-regular
+        pts += [autotune_pt(tr, l, d) for d in deltas]
+        pts.append(autotune_pt(tr, l, 1.0))  # the controller-driven point
+    return "closed-loop delta autotuning vs the static sweep", pts
+
+
 ALL = [
     ("fig2", fig2), ("fig3", fig3), ("fig4", fig4), ("fig5", fig5),
     ("fig6", fig6), ("fig7", fig7), ("fig8", fig8), ("fig9", fig9),
     ("fig10", fig10), ("fig11", fig11), ("eq8", eq8), ("kpz", kpz),
     ("meanfield", meanfield), ("appendix", appendix), ("dims", dims),
     ("topology", topology), ("ising", ising), ("updatestats", updatestats),
+    ("autotune", autotune),
 ]
 
 # -------------------------------------------------------------- rendering

@@ -379,6 +379,7 @@ fn main() {
                     steps: 0,
                     seed: 11,
                     streams: StreamFamily::RowV1,
+                    control: repro::coordinator::Control::Static,
                 },
                 60,
                 60,

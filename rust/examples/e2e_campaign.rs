@@ -79,6 +79,7 @@ fn main() -> anyhow::Result<()> {
                 steps,
                 seed: 43,
                 streams: repro::pdes::StreamFamily::Pe,
+                control: repro::coordinator::Control::Static,
             });
             let u_nat = native.tail_mean(Lane::U, 0.25);
 

@@ -59,6 +59,7 @@ fn main() {
                 steps: 0,
                 seed: 2002,
                 streams: repro::pdes::StreamFamily::Pe,
+                control: repro::coordinator::Control::Static,
             },
             &ModelSpec::Ising { beta, coupling: 1.0 },
             warm,

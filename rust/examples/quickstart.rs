@@ -17,6 +17,7 @@ fn main() {
         steps: if quick { 800 } else { 8000 },
         seed: 7,
         streams: repro::pdes::StreamFamily::Pe,
+        control: repro::coordinator::Control::Static,
     };
 
     println!(

@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
         steps: 0,
         seed: 11,
         streams: repro::pdes::StreamFamily::Pe,
+        control: repro::coordinator::Control::Static,
     };
     plan.push(SweepPoint::steady(
         "ceiling",

@@ -24,7 +24,8 @@ pub struct Args {
 const VALUED: &[&str] = &[
     "out", "config", "trials", "steps", "seed", "l", "nv", "delta", "mode", "artifacts",
     "workers", "lattice-workers", "chunks", "warm", "topology", "k", "links", "model", "beta",
-    "coupling", "streams", "max-retries", "on-fault",
+    "coupling", "streams", "max-retries", "on-fault", "autotune-cap", "autotune-window",
+    "autotune-epochs",
 ];
 
 impl Args {

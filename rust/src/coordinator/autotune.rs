@@ -1,0 +1,363 @@
+//! Closed-loop Δ autotuning (ROADMAP: "network-design scenarios +
+//! closed-loop Δ autotuning").
+//!
+//! The paper's closing remark is that the window width Δ "can serve as a
+//! tuning parameter … adjusted to optimize the utilization so as to
+//! maximize the efficiency" (cs/0211013 §V).  Both u(Δ) and the horizon
+//! spread max−min grow monotonically with Δ (a wider window admits more
+//! updates and lets the horizon decohere further), so the unconstrained
+//! "maximize u" problem is degenerate — its optimum is always Δ = ∞.  The
+//! operational problem is the constrained one:
+//!
+//! > maximize u(Δ)  subject to  ⟨spread⟩ ≤ cap
+//!
+//! which, by monotonicity, is solved by the **largest feasible Δ**.  The
+//! controller finds it by geometric expansion + bisection on the
+//! feasibility boundary, measuring each probe over an epoch of `window`
+//! steps.
+//!
+//! ## Determinism
+//!
+//! Every decision is a pure function of (epoch index, windowed mean spread,
+//! windowed mean u) — quantities the engines produce bit-identically for
+//! every worker count — and the controller holds no wall-clock, RNG or
+//! iteration-order state.  A run that feeds it the same `StepStats` stream
+//! therefore probes the same Δ sequence bit for bit, which is what makes
+//! autotuned campaign points cacheable and kill/`--resume`-safe like any
+//! static point.
+//!
+//! Mid-run Δ changes are safe in both engines: see
+//! [`crate::pdes::BatchPdes::set_delta`] and the dynamic-Δ property tests.
+
+use crate::pdes::Mode;
+
+/// Geometric growth factor while no infeasible ceiling is known.
+const GROW: f64 = 2.0;
+/// Convergence tolerance on the feasibility bracket: done when hi/lo ≤ this.
+const BRACKET_TOL: f64 = 1.05;
+
+/// Autotuning parameters, carried on `RunSpec::control`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutotuneCfg {
+    /// Ceiling on the windowed mean horizon spread ⟨max − min⟩.
+    pub spread_cap: f64,
+    /// Steps per measurement epoch (one Δ probe per epoch).
+    pub window: u32,
+    /// Hard bound on probe epochs (the controller usually brackets and
+    /// converges well before this).
+    pub max_epochs: u32,
+}
+
+impl AutotuneCfg {
+    fn validate(&self) {
+        assert!(
+            self.spread_cap.is_finite() && self.spread_cap > 0.0,
+            "autotune spread cap must be finite and positive"
+        );
+        assert!(self.window >= 1, "autotune epoch window must be >= 1 step");
+        assert!(self.max_epochs >= 1, "autotune needs at least one epoch");
+    }
+}
+
+/// Run-level Δ control policy.  `Static` is the historical behaviour and
+/// renders as *no* `control=` key, so every legacy spec string and cache
+/// key stays byte-identical.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Control {
+    /// Δ fixed at the mode's value for the whole run.
+    Static,
+    /// Closed-loop Δ autotuning via [`AutotuneController`].
+    Autotune(AutotuneCfg),
+}
+
+// Fields are validated non-NaN (validate / parse), so equality is total.
+impl Eq for Control {}
+
+impl Control {
+    /// Canonical spec fragment (v1, frozen): `auto:<cap>:<window>:<epochs>`
+    /// with the cap rendered by the shared float canonicalizer.  `Static`
+    /// has no rendering — the `control=` key is omitted entirely.
+    pub fn spec_string(self) -> Option<String> {
+        match self {
+            Control::Static => None,
+            Control::Autotune(cfg) => Some(format!(
+                "auto:{}:{}:{}",
+                crate::pdes::canon_f64(cfg.spread_cap),
+                cfg.window,
+                cfg.max_epochs
+            )),
+        }
+    }
+
+    /// Parse a [`Self::spec_string`] fragment (exact inverse of the
+    /// `Autotune` rendering; `Static` never appears on the wire).
+    pub fn parse_spec(s: &str) -> anyhow::Result<Control> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match (parts.first().copied(), parts.len()) {
+            (Some("auto"), 4) => {
+                let cfg = AutotuneCfg {
+                    spread_cap: crate::pdes::parse_canon_f64(parts[1])
+                        .map_err(|_| anyhow::anyhow!("bad control cap in {s:?}"))?,
+                    window: parts[2]
+                        .parse::<u32>()
+                        .map_err(|_| anyhow::anyhow!("bad control window in {s:?}"))?,
+                    max_epochs: parts[3]
+                        .parse::<u32>()
+                        .map_err(|_| anyhow::anyhow!("bad control epochs in {s:?}"))?,
+                };
+                anyhow::ensure!(
+                    cfg.spread_cap.is_finite() && cfg.spread_cap > 0.0,
+                    "control cap must be finite and positive in {s:?}"
+                );
+                anyhow::ensure!(cfg.window >= 1, "control window must be >= 1 in {s:?}");
+                anyhow::ensure!(cfg.max_epochs >= 1, "control epochs must be >= 1 in {s:?}");
+                Ok(Control::Autotune(cfg))
+            }
+            _ => anyhow::bail!("unknown control spec {s:?}"),
+        }
+    }
+}
+
+/// One epoch's verdict from the controller.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Verdict {
+    /// Keep probing: run the next epoch at [`AutotuneController::delta`].
+    Probe,
+    /// Bracket converged (or the epoch budget ran out): Δ is final.
+    Converged,
+}
+
+/// The feasibility-bisection controller: expands Δ geometrically until the
+/// spread cap is violated, then bisects the (feasible, infeasible) bracket
+/// in log space.  Pure state machine — feed it one windowed measurement
+/// per epoch via [`Self::observe_epoch`].
+#[derive(Clone, Debug)]
+pub struct AutotuneController {
+    cfg: AutotuneCfg,
+    /// Δ to probe in the current epoch.
+    delta: f64,
+    /// Largest Δ observed feasible so far (0.0 until one exists).
+    lo: f64,
+    /// Smallest Δ observed infeasible so far (∞ until one exists).
+    hi: f64,
+    /// Mean utilization measured at `lo` (reported with the converged Δ).
+    lo_u: f64,
+    /// Mean spread measured at `lo`.
+    lo_spread: f64,
+    epochs: u32,
+    done: bool,
+}
+
+impl AutotuneController {
+    /// Start probing at `delta0` (must be positive and finite — seed it
+    /// from the run's static Δ, or 1.0 when the mode carries none).
+    pub fn new(cfg: AutotuneCfg, delta0: f64) -> Self {
+        cfg.validate();
+        assert!(
+            delta0.is_finite() && delta0 > 0.0,
+            "autotune needs a finite positive initial delta"
+        );
+        AutotuneController {
+            cfg,
+            delta: delta0,
+            lo: 0.0,
+            hi: f64::INFINITY,
+            lo_u: 0.0,
+            lo_spread: 0.0,
+            epochs: 0,
+            done: false,
+        }
+    }
+
+    /// Seed Δ for a mode: its own window if finite, else 1.0.
+    pub fn seed_delta(mode: Mode) -> f64 {
+        let d = mode.delta();
+        if d.is_finite() && d > 0.0 {
+            d
+        } else {
+            1.0
+        }
+    }
+
+    /// The Δ the next epoch must run at.
+    #[inline]
+    pub fn delta(&self) -> f64 {
+        self.delta
+    }
+
+    /// Epochs consumed so far.
+    #[inline]
+    pub fn epochs(&self) -> u32 {
+        self.epochs
+    }
+
+    /// True once [`Verdict::Converged`] has been returned.
+    #[inline]
+    pub fn converged(&self) -> bool {
+        self.done
+    }
+
+    /// The answer: the largest Δ observed feasible, or — if no probe ever
+    /// satisfied the cap — the smallest Δ probed (the conservative floor
+    /// the halving sequence reached).
+    pub fn best_delta(&self) -> f64 {
+        if self.lo > 0.0 {
+            self.lo
+        } else {
+            self.delta
+        }
+    }
+
+    /// Mean (u, spread) measured at [`Self::best_delta`]'s feasible probe
+    /// (zeros when nothing was feasible).
+    pub fn best_measures(&self) -> (f64, f64) {
+        (self.lo_u, self.lo_spread)
+    }
+
+    /// Feed one epoch's windowed means; returns whether to keep probing.
+    ///
+    /// Pure arithmetic on the arguments and internal bracket — no clocks,
+    /// no RNG — so identical measurement streams give identical Δ
+    /// sequences (the determinism keystone).
+    pub fn observe_epoch(&mut self, mean_spread: f64, mean_u: f64) -> Verdict {
+        assert!(!self.done, "observe_epoch after convergence");
+        assert!(!mean_spread.is_nan() && !mean_u.is_nan(), "NaN epoch measurement");
+        self.epochs += 1;
+
+        if mean_spread <= self.cfg.spread_cap {
+            // feasible: this Δ (or a larger one) is the answer
+            self.lo = self.delta;
+            self.lo_u = mean_u;
+            self.lo_spread = mean_spread;
+            self.delta = if self.hi.is_finite() {
+                (self.lo * self.hi).sqrt()
+            } else {
+                self.delta * GROW
+            };
+        } else {
+            // infeasible: the answer is strictly below this Δ
+            self.hi = self.delta;
+            self.delta = if self.lo > 0.0 {
+                (self.lo * self.hi).sqrt()
+            } else {
+                self.delta / GROW
+            };
+        }
+
+        let bracketed = self.lo > 0.0 && self.hi.is_finite() && self.hi / self.lo <= BRACKET_TOL;
+        if bracketed || self.epochs >= self.cfg.max_epochs {
+            self.done = true;
+            Verdict::Converged
+        } else {
+            Verdict::Probe
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(cap: f64) -> AutotuneCfg {
+        AutotuneCfg { spread_cap: cap, window: 10, max_epochs: 64 }
+    }
+
+    /// Synthetic monotone environment: spread(Δ) = Δ exactly.  The largest
+    /// feasible Δ is then the cap itself.
+    fn run_identity_env(cap: f64, delta0: f64) -> AutotuneController {
+        let mut c = AutotuneController::new(cfg(cap), delta0);
+        while c.observe_epoch(c.delta(), 1.0 - 1.0 / (1.0 + c.delta())) == Verdict::Probe {}
+        c
+    }
+
+    #[test]
+    fn identity_environment_converges_to_the_cap() {
+        for delta0 in [0.1, 1.0, 7.3, 400.0] {
+            let c = run_identity_env(5.0, delta0);
+            let best = c.best_delta();
+            // the bracket converges to hi/lo <= 1.05 around spread = cap
+            assert!(best <= 5.0, "best {best} must be feasible");
+            assert!(best >= 5.0 / (BRACKET_TOL * GROW), "best {best} too far below cap");
+            assert!(c.converged());
+            assert!(c.epochs() <= 64);
+        }
+    }
+
+    #[test]
+    fn bracket_is_tight_at_convergence() {
+        let c = run_identity_env(5.0, 1.0);
+        assert!(c.lo > 0.0 && c.hi.is_finite());
+        assert!(c.hi / c.lo <= BRACKET_TOL);
+        assert_eq!(c.best_delta(), c.lo);
+    }
+
+    #[test]
+    fn identical_streams_give_identical_probe_sequences() {
+        let mut a = AutotuneController::new(cfg(3.0), 1.0);
+        let mut b = AutotuneController::new(cfg(3.0), 1.0);
+        loop {
+            assert_eq!(a.delta().to_bits(), b.delta().to_bits());
+            let (va, vb) = (a.observe_epoch(a.delta(), 0.5), b.observe_epoch(b.delta(), 0.5));
+            assert_eq!(va, vb);
+            if va == Verdict::Converged {
+                break;
+            }
+        }
+        assert_eq!(a.best_delta().to_bits(), b.best_delta().to_bits());
+    }
+
+    #[test]
+    fn never_feasible_halves_to_the_epoch_budget() {
+        let mut c = AutotuneController::new(
+            AutotuneCfg { spread_cap: 1.0, window: 5, max_epochs: 6 },
+            8.0,
+        );
+        // environment always violates the cap
+        while c.observe_epoch(1e9, 0.9) == Verdict::Probe {}
+        assert_eq!(c.epochs(), 6);
+        // best_delta falls back to the halving floor: 8 / 2^6
+        assert_eq!(c.best_delta(), 8.0 / 64.0);
+        assert_eq!(c.best_measures(), (0.0, 0.0));
+    }
+
+    #[test]
+    fn always_feasible_grows_until_the_budget() {
+        let mut c = AutotuneController::new(
+            AutotuneCfg { spread_cap: 1e18, window: 5, max_epochs: 5 },
+            1.0,
+        );
+        while c.observe_epoch(0.1, 0.8) == Verdict::Probe {}
+        // every probe is feasible, so the best is the last probed value
+        assert_eq!(c.best_delta(), 16.0);
+        assert_eq!(c.best_measures(), (0.8, 0.1));
+    }
+
+    #[test]
+    fn control_spec_is_pinned_and_roundtrips() {
+        // frozen v1 fragment: part of campaign cache keys from this PR on
+        let c = Control::Autotune(AutotuneCfg { spread_cap: 10.0, window: 200, max_epochs: 24 });
+        assert_eq!(c.spec_string().unwrap(), "auto:10:200:24");
+        assert_eq!(Control::parse_spec("auto:10:200:24").unwrap(), c);
+        let frac = Control::Autotune(AutotuneCfg { spread_cap: 2.5, window: 50, max_epochs: 8 });
+        assert_eq!(frac.spec_string().unwrap(), "auto:2.5:50:8");
+        assert_eq!(Control::parse_spec("auto:2.5:50:8").unwrap(), frac);
+        // Static never renders: the control= key vanishes from specs
+        assert_eq!(Control::Static.spec_string(), None);
+        assert!(Control::parse_spec("auto:0:5:5").is_err());
+        assert!(Control::parse_spec("auto:inf:5:5").is_err());
+        assert!(Control::parse_spec("auto:10:0:5").is_err());
+        assert!(Control::parse_spec("auto:10:5").is_err());
+        assert!(Control::parse_spec("pid:10:5:5").is_err());
+    }
+
+    #[test]
+    fn seed_delta_uses_the_mode_window_when_finite() {
+        assert_eq!(AutotuneController::seed_delta(Mode::Windowed { delta: 7.0 }), 7.0);
+        assert_eq!(AutotuneController::seed_delta(Mode::WindowedRd { delta: 0.5 }), 0.5);
+        assert_eq!(AutotuneController::seed_delta(Mode::Conservative), 1.0);
+        assert_eq!(
+            AutotuneController::seed_delta(Mode::Windowed { delta: f64::INFINITY }),
+            1.0
+        );
+    }
+}

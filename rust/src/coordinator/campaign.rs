@@ -23,6 +23,7 @@ use crate::rng::{Rng, StreamFamily};
 use crate::runtime::{CacheLoad, ResultCache};
 use crate::stats::{horizon_frame_fused, EnsembleSeries, OnlineMoments};
 
+use super::autotune::{AutotuneCfg, AutotuneController, Control, Verdict};
 use super::faults::{
     Backoff, CampaignError, CancelToken, FaultPlan, Interrupted, OnFault, PointFailure,
 };
@@ -211,6 +212,9 @@ pub struct RunSpec {
     /// RNG trajectory family (see [`StreamFamily`]): `Pe` is the default
     /// for new runs; `RowV1` replays every historical trajectory.
     pub streams: StreamFamily,
+    /// Δ control policy: [`Control::Static`] (the historical behaviour —
+    /// renders as no `control=` key) or closed-loop autotuning.
+    pub control: Control,
 }
 
 /// `RunSpec` is `Eq` because [`Mode`] is (window widths are never NaN),
@@ -231,6 +235,10 @@ impl RunSpec {
     /// non-historical [`StreamFamily::Pe`] family — a `RowV1` spec
     /// renders byte-identically to its pre-family form, so every
     /// historical cache key and TSV header is unchanged.
+    /// Like `streams=`, the `control=` key is emitted *only* for
+    /// non-[`Control::Static`] policies (and after `streams=`, fixed
+    /// order), so every historical — statically controlled — spec renders
+    /// byte-identically and its cache key survives.
     /// [`RunSpec::parse_spec`] is the tolerant reader for tooling: it
     /// accepts the `key=value` fields in any order (round-trip tested) —
     /// but note the cache itself never parses; it matches the canonical
@@ -249,16 +257,21 @@ impl RunSpec {
             s.push_str(";streams=");
             s.push_str(self.streams.tag());
         }
+        if let Some(c) = self.control.spec_string() {
+            s.push_str(";control=");
+            s.push_str(&c);
+        }
         s
     }
 
     /// Parse a [`RunSpec::spec_string`] rendering: the six v1 fields
-    /// required, `streams=` optional (absent ⇒ `RowV1`, matching the
-    /// emission), any order, unknown keys rejected.
+    /// required, `streams=` and `control=` optional (absent ⇒ `RowV1` /
+    /// `Static`, matching the emission), any order, unknown keys rejected.
     pub fn parse_spec(s: &str) -> Result<RunSpec> {
         let (mut l, mut load, mut mode) = (None, None, None);
         let (mut trials, mut steps, mut seed) = (None, None, None);
         let mut streams = StreamFamily::RowV1;
+        let mut control = Control::Static;
         for field in s.split(';') {
             let Some((k, v)) = field.split_once('=') else {
                 bail!("bad run-spec field {field:?} in {s:?}");
@@ -282,6 +295,7 @@ impl RunSpec {
                     streams = StreamFamily::parse(v)
                         .ok_or_else(|| anyhow::anyhow!("bad streams={v:?} (want row|pe)"))?
                 }
+                "control" => control = Control::parse_spec(v)?,
                 _ => bail!("unknown run-spec key {k:?} in {s:?}"),
             }
         }
@@ -295,6 +309,7 @@ impl RunSpec {
                     steps,
                     seed,
                     streams,
+                    control,
                 })
             }
             _ => bail!("run spec {s:?} is missing required fields"),
@@ -774,6 +789,115 @@ pub(crate) fn update_stats_topology_ctl(
     .expect("at least one trial required")
 }
 
+/// Result of one closed-loop autotuned campaign point (see
+/// `coordinator::autotune` for the controller law).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutotuneStats {
+    /// Converged window width Δ* (largest Δ keeping ⟨spread⟩ ≤ cap).
+    pub delta: f64,
+    /// Mean utilization over the confirmation epoch run at Δ*.
+    pub u: f64,
+    /// Mean horizon spread over the confirmation epoch at Δ*.
+    pub spread: f64,
+    /// Probe epochs the controller consumed before converging.
+    pub epochs: u32,
+}
+
+/// One probe epoch: advance `window` steps and return the ensemble means
+/// (⟨spread⟩, ⟨u⟩) over steps × rows in fixed step-major/row-ascending
+/// order.  Spread and the update count come straight from the tracked
+/// [`crate::stats::StepStats`] — bit-identical across lattice worker
+/// counts by the sharded-engine contract, which is what makes the
+/// controller's decisions (and so the whole autotuned run) worker- and
+/// resume-invariant.
+fn autotune_epoch(
+    engine: &mut Engine,
+    rows: usize,
+    window: u32,
+    cancel: Option<&CancelToken>,
+) -> Result<(f64, f64), Interrupted> {
+    let mut s_spread = 0.0f64;
+    let mut s_u = 0.0f64;
+    for _ in 0..window {
+        engine.step_ctl(cancel)?;
+        let sim = engine.batch();
+        let pes = sim.pes() as f64;
+        for row in 0..rows {
+            let st = sim.step_stats_row(row);
+            s_spread += st.spread();
+            s_u += st.n_updated as f64 / pes;
+        }
+    }
+    let n = window as f64 * rows as f64;
+    Ok((s_spread / n, s_u / n))
+}
+
+/// Run one parameter point under closed-loop Δ autotuning: probe epochs
+/// drive the [`AutotuneController`]'s expand/bisect search, then a final
+/// confirmation epoch at the converged Δ* produces the published (u,
+/// spread).
+///
+/// Unlike the static folds this runs the whole ensemble as ONE batch (all
+/// `trials` rows in a single engine): the controller is closed-loop over
+/// the ensemble-mean measurement, and splitting trials across sequential
+/// batches would let each batch converge to a different Δ.  The fold is
+/// strictly serial over steps, so it is trivially worker-invariant (the
+/// campaign scheduler parallelizes across points; lattice workers stay
+/// trajectory-invisible inside the engine).
+pub fn autotune_topology(
+    topology: Topology,
+    spec: &RunSpec,
+    model: &ModelSpec,
+    cfg: AutotuneCfg,
+    lattice_workers: usize,
+) -> AutotuneStats {
+    autotune_topology_ctl(topology, spec, model, cfg, lattice_workers, None)
+        .expect("no cancel token: the fold cannot be interrupted")
+}
+
+/// [`autotune_topology`] with per-step cancellation checkpoints.
+pub(crate) fn autotune_topology_ctl(
+    topology: Topology,
+    spec: &RunSpec,
+    model: &ModelSpec,
+    cfg: AutotuneCfg,
+    lattice_workers: usize,
+    cancel: Option<&CancelToken>,
+) -> Result<AutotuneStats, Interrupted> {
+    assert_eq!(topology.len(), spec.l, "RunSpec.l must match the topology");
+    assert!(spec.trials >= 1, "autotune needs at least one trial");
+    let nbr = topology.neighbour_table();
+    let rows = spec.trials as usize;
+    let mut engine = Engine::new(
+        topology,
+        nbr,
+        spec.load,
+        spec.mode,
+        BatchPdes::trial_streams(spec.seed, 0, rows),
+        lattice_workers,
+        model,
+        spec.streams,
+    );
+    let mut ctl = AutotuneController::new(cfg, AutotuneController::seed_delta(spec.mode));
+    engine.batch_mut().set_delta(ctl.delta());
+    loop {
+        let (spread, u) = autotune_epoch(&mut engine, rows, cfg.window, cancel)?;
+        if ctl.observe_epoch(spread, u) == Verdict::Converged {
+            break;
+        }
+        engine.batch_mut().set_delta(ctl.delta());
+    }
+    let delta = ctl.best_delta();
+    engine.batch_mut().set_delta(delta);
+    let (spread, u) = autotune_epoch(&mut engine, rows, cfg.window, cancel)?;
+    Ok(AutotuneStats {
+        delta,
+        u,
+        spread,
+        epochs: ctl.epochs(),
+    })
+}
+
 /// Execution options for a [`SweepPlan`] campaign.
 #[derive(Clone, Debug)]
 pub struct CampaignOpts {
@@ -1242,6 +1366,21 @@ pub(crate) fn execute_point_ctl(
                 cancel,
             )?,
         ),
+        Sampling::Autotune => {
+            // the controller parameters ride the run spec (and so the
+            // cache key); a point can't be autotune-sampled without them
+            let Control::Autotune(cfg) = point.run.control else {
+                panic!("autotune sampling requires control=auto:... on the run spec");
+            };
+            PointResult::Autotune(autotune_topology_ctl(
+                point.topology,
+                &point.run,
+                &point.model,
+                cfg,
+                strategy.lattice_workers(),
+                cancel,
+            )?)
+        }
         Sampling::Snapshot { at, stream } => {
             // single-trial surface snapshots: a B = 1 batch on the point's
             // stream (and stream family) — bit-identical to the historical
@@ -1346,6 +1485,7 @@ mod tests {
             steps,
             seed: 99,
             streams: StreamFamily::RowV1,
+            control: Control::Static,
         }
     }
 
@@ -1641,10 +1781,11 @@ mod tests {
             steps: 500,
             seed: crate::DEFAULT_SEED,
             streams: StreamFamily::RowV1,
+            control: Control::Static,
         };
         // pinned: this exact string is hashed into on-disk cache keys —
-        // RowV1 must render with no `streams=` key, byte-identical to
-        // every pre-family emission
+        // RowV1 must render with no `streams=` key (and Static with no
+        // `control=` key), byte-identical to every pre-family emission
         assert_eq!(
             s.spec_string(),
             "l=100;load=10;mode=win:10;trials=32;steps=500;seed=20020601"
@@ -1670,6 +1811,7 @@ mod tests {
             steps: 500,
             seed: crate::DEFAULT_SEED,
             streams: StreamFamily::Pe,
+            control: Control::Static,
         };
         // pinned: the per-PE family appends exactly one key, last
         assert_eq!(
@@ -1691,6 +1833,118 @@ mod tests {
             "l=100;load=10;mode=win:10;trials=32;steps=500;seed=1;streams=banana"
         )
         .is_err());
+    }
+
+    #[test]
+    fn control_run_spec_string_pinned_and_roundtrip() {
+        let s = RunSpec {
+            l: 64,
+            load: VolumeLoad::Sites(1),
+            mode: Mode::Windowed { delta: 1.0 },
+            trials: 8,
+            steps: 0,
+            seed: crate::DEFAULT_SEED,
+            streams: StreamFamily::Pe,
+            control: Control::Autotune(AutotuneCfg {
+                spread_cap: 10.0,
+                window: 100,
+                max_epochs: 24,
+            }),
+        };
+        // pinned: control= appends after streams=, fixed order
+        assert_eq!(
+            s.spec_string(),
+            "l=64;load=1;mode=win:1;trials=8;steps=0;seed=20020601;streams=pe;control=auto:10:100:24"
+        );
+        assert_eq!(RunSpec::parse_spec(&s.spec_string()).unwrap(), s);
+        // control= works without streams= too (RowV1 stays key-free)
+        let mut row = s;
+        row.streams = StreamFamily::RowV1;
+        assert_eq!(
+            row.spec_string(),
+            "l=64;load=1;mode=win:1;trials=8;steps=0;seed=20020601;control=auto:10:100:24"
+        );
+        assert_eq!(RunSpec::parse_spec(&row.spec_string()).unwrap(), row);
+        assert!(RunSpec::parse_spec(
+            "l=64;load=1;mode=win:1;trials=8;steps=0;seed=1;control=pid:1:2:3"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn autotune_fold_is_deterministic_and_respects_the_cap() {
+        let cfg = AutotuneCfg { spread_cap: 6.0, window: 40, max_epochs: 16 };
+        let mut s = spec(24, Mode::Windowed { delta: 1.0 }, 4, 0);
+        s.streams = StreamFamily::Pe;
+        s.control = Control::Autotune(cfg);
+        let run = |lattice_workers: usize| {
+            autotune_topology(Topology::Ring { l: 24 }, &s, &ModelSpec::None, cfg, lattice_workers)
+        };
+        let one = run(1);
+        // the converged point is feasible and the confirmation epoch stays
+        // in the cap's neighbourhood (epoch-to-epoch fluctuation allowed)
+        assert!(one.delta > 0.0 && one.delta.is_finite());
+        assert!(one.u > 0.0 && one.u <= 1.0);
+        assert!(one.spread <= cfg.spread_cap * 1.5, "spread {} vs cap", one.spread);
+        assert!(one.epochs >= 1 && one.epochs <= cfg.max_epochs);
+        // bit-identical on a re-run and across lattice worker counts: the
+        // controller sees the same StepStats stream everywhere
+        let again = run(1);
+        assert_eq!(one.delta.to_bits(), again.delta.to_bits());
+        assert_eq!(one.u.to_bits(), again.u.to_bits());
+        assert_eq!(one.spread.to_bits(), again.spread.to_bits());
+        assert_eq!(one.epochs, again.epochs);
+        for lw in [2usize, 3] {
+            let lat = run(lw);
+            assert_eq!(one.delta.to_bits(), lat.delta.to_bits(), "lw = {lw}");
+            assert_eq!(one.u.to_bits(), lat.u.to_bits(), "lw = {lw}");
+            assert_eq!(one.spread.to_bits(), lat.spread.to_bits(), "lw = {lw}");
+            assert_eq!(one.epochs, lat.epochs, "lw = {lw}");
+        }
+    }
+
+    #[test]
+    fn autotuned_delta_tracks_the_spread_cap_ordering() {
+        // a tighter cap must converge to a smaller (or equal) Δ — the
+        // monotonicity the controller's bisection rests on
+        let mut s = spec(32, Mode::Windowed { delta: 1.0 }, 4, 0);
+        s.streams = StreamFamily::Pe;
+        let mut run = |cap: f64| {
+            let cfg = AutotuneCfg { spread_cap: cap, window: 40, max_epochs: 16 };
+            s.control = Control::Autotune(cfg);
+            autotune_topology(Topology::Ring { l: 32 }, &s, &ModelSpec::None, cfg, 1).delta
+        };
+        let tight = run(3.0);
+        let loose = run(12.0);
+        assert!(tight <= loose, "tight cap Δ {tight} !<= loose cap Δ {loose}");
+    }
+
+    #[test]
+    fn autotune_point_runs_through_the_scheduler_and_caches() {
+        let dir = std::env::temp_dir().join("repro_sched_autotune_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = AutotuneCfg { spread_cap: 5.0, window: 30, max_epochs: 12 };
+        let mut plan = SweepPlan::new("autotune-test", "autotune scheduler test");
+        let mut run = spec(16, Mode::Windowed { delta: 1.0 }, 4, 0);
+        run.streams = StreamFamily::Pe;
+        run.control = Control::Autotune(cfg);
+        plan.push(SweepPoint::autotune("auto_ring16", Topology::Ring { l: 16 }, run));
+        let opts = CampaignOpts {
+            workers: 2,
+            cache_dir: Some(dir.clone()),
+            quiet: true,
+            ..Default::default()
+        };
+        let (cold, rep1) = run_plan(&plan, &opts).unwrap();
+        assert_eq!(rep1.executed, 1);
+        let (warm, rep2) = run_plan(&plan, &CampaignOpts { resume: true, ..opts }).unwrap();
+        assert_eq!(rep2.executed, 0, "autotune result must restore from cache");
+        let (a, b) = (cold[0].autotune(), warm[0].autotune());
+        assert_eq!(a.delta.to_bits(), b.delta.to_bits());
+        assert_eq!(a.u.to_bits(), b.u.to_bits());
+        assert_eq!(a.spread.to_bits(), b.spread.to_bits());
+        assert_eq!(a.epochs, b.epochs);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -1717,6 +1971,7 @@ mod tests {
                     steps: 0,
                     seed,
                     streams: StreamFamily::Pe,
+                    control: Control::Static,
                 },
                 60,
                 60,
@@ -1733,6 +1988,7 @@ mod tests {
                 steps: 0,
                 seed,
                 streams: StreamFamily::Pe,
+                control: Control::Static,
             },
             30,
         ));
@@ -1747,6 +2003,7 @@ mod tests {
                 steps: 0,
                 seed,
                 streams: StreamFamily::Pe,
+                control: Control::Static,
             },
             vec![2, 20],
             0,
@@ -1845,6 +2102,7 @@ mod tests {
             steps: 0,
             seed: 9,
             streams: StreamFamily::Pe,
+            control: Control::Static,
         };
         let point = SweepPoint::steady("p", Topology::Ring { l: 16 }, s, 80, 120);
         let direct = steady_state_topology_with(

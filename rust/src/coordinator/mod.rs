@@ -17,6 +17,7 @@
 //! fanned across the worker pool, results cached content-addressed for
 //! `--resume`, outputs byte-identical for every worker count.
 
+pub mod autotune;
 mod campaign;
 pub mod faults;
 mod jax;
@@ -24,12 +25,14 @@ pub mod plan;
 pub mod pool;
 mod spec;
 
+pub use autotune::{AutotuneCfg, AutotuneController, Control};
 pub use campaign::{
-    execute_point, model_steady_topology, run_ensemble, run_plan, run_plan_supervised,
-    run_topology_ensemble, run_topology_ensemble_model, run_topology_ensemble_with,
-    steady_state, steady_state_topology, steady_state_topology_model,
-    steady_state_topology_with, update_stats_topology, CampaignOpts, CampaignOutcome,
-    CampaignReport, ModelSteadyStats, RunSpec, ShardStrategy, SteadyStats, BATCH_ROWS,
+    autotune_topology, execute_point, model_steady_topology, run_ensemble, run_plan,
+    run_plan_supervised, run_topology_ensemble, run_topology_ensemble_model,
+    run_topology_ensemble_with, steady_state, steady_state_topology,
+    steady_state_topology_model, steady_state_topology_with, update_stats_topology,
+    AutotuneStats, CampaignOpts, CampaignOutcome, CampaignReport, ModelSteadyStats, RunSpec,
+    ShardStrategy, SteadyStats, BATCH_ROWS,
 };
 pub use faults::{
     Backoff, CampaignError, CancelToken, FaultPlan, Interrupted, OnFault, PointFailure,

@@ -30,7 +30,8 @@ use anyhow::{bail, Context as _, Result};
 use crate::pdes::{MeanFieldCounters, ModelSpec, Topology, UpdateStats};
 use crate::stats::{EnsembleSeries, N_LANES};
 
-use super::campaign::{ModelSteadyStats, RunSpec, SteadyStats};
+use super::autotune::Control;
+use super::campaign::{AutotuneStats, ModelSteadyStats, RunSpec, SteadyStats};
 
 /// FNV-1a 64-bit hash of a spec string — the campaign cache key.  Chosen
 /// for stability (the constant pair is frozen by the FNV reference) and
@@ -159,6 +160,13 @@ pub enum Sampling {
         /// Measured steps.
         measure: usize,
     },
+    /// Closed-loop Δ autotuning: run the controller-driven fold
+    /// (`autotune_topology`) until the bracket converges, then publish
+    /// the converged Δ with its confirmation-epoch measurements (the
+    /// `autotune` experiment).  Carries no parameters of its own — the
+    /// controller configuration lives in the run spec's `control=` field,
+    /// which is part of the cache identity.
+    Autotune,
 }
 
 impl Sampling {
@@ -180,6 +188,7 @@ impl Sampling {
             Sampling::LatticeU { warm, measure } => format!("latticeu:{warm}:{measure}"),
             Sampling::ModelSteady { warm, measure } => format!("modelsteady:{warm}:{measure}"),
             Sampling::UpdateStats { warm, measure } => format!("updstats:{warm}:{measure}"),
+            Sampling::Autotune => "autotune".to_string(),
         }
     }
 
@@ -193,6 +202,7 @@ impl Sampling {
             Sampling::LatticeU { .. } => "lattice-u",
             Sampling::ModelSteady { .. } => "model-steady",
             Sampling::UpdateStats { .. } => "update-stats",
+            Sampling::Autotune => "autotune",
         }
     }
 
@@ -379,6 +389,21 @@ impl SweepPoint {
             .with_model(ModelSpec::SiteCounter)
     }
 
+    /// A closed-loop Δ-autotuning point (`run.steps` normalized to 0).
+    /// The run spec must carry a [`Control::Autotune`] configuration —
+    /// it parameterizes the controller and is the part of the cache
+    /// identity that distinguishes autotune points from each other, the
+    /// same way `model_steady` refuses a missing payload.  The run's
+    /// `mode` window seeds the controller's first probe.
+    pub fn autotune(label: impl Into<String>, topology: Topology, mut run: RunSpec) -> Self {
+        assert!(
+            matches!(run.control, Control::Autotune(_)),
+            "autotune point needs control=auto:... on its run spec"
+        );
+        run.steps = 0;
+        Self::new(label, topology, run, Sampling::Autotune)
+    }
+
     /// A lattice steady-utilization point (`run.steps` normalized to 0,
     /// `run.load` to N_V = 1 — `LatticePdes` is hard-wired to one site
     /// per PE, so any other load in the spec would mislabel the cached
@@ -486,6 +511,8 @@ pub enum PointResult {
     ModelSteady(ModelSteadyStats),
     /// Accumulated per-PE update statistics ([`Sampling::UpdateStats`]).
     UpdateStats(UpdateStats),
+    /// Converged controller state ([`Sampling::Autotune`]).
+    Autotune(AutotuneStats),
 }
 
 impl PointResult {
@@ -545,6 +572,14 @@ impl PointResult {
         }
     }
 
+    /// The converged autotune summary (panics on kind mismatch).
+    pub fn autotune(&self) -> &AutotuneStats {
+        match self {
+            PointResult::Autotune(s) => s,
+            other => panic!("expected an autotune result, got {}", other.kind_tag()),
+        }
+    }
+
     /// Kind tag (mirrors [`Sampling::kind_tag`]).
     pub fn kind_tag(&self) -> &'static str {
         match self {
@@ -555,6 +590,7 @@ impl PointResult {
             PointResult::LatticeU { .. } => "lattice-u",
             PointResult::ModelSteady(_) => "model-steady",
             PointResult::UpdateStats(_) => "update-stats",
+            PointResult::Autotune(_) => "autotune",
         }
     }
 
@@ -640,6 +676,15 @@ impl PointResult {
                 };
                 out.push_str(&format!("i {}\n", join(&s.interval_bins)));
                 out.push_str(&format!("d {}\n", join(&s.idle_bins)));
+            }
+            PointResult::Autotune(s) => {
+                out.push_str(&format!(
+                    "autotune {} {} {} {}\n",
+                    hex_f64(s.delta),
+                    hex_f64(s.u),
+                    hex_f64(s.spread),
+                    s.epochs
+                ));
             }
         }
         out
@@ -789,6 +834,23 @@ impl PointResult {
                     idle_bins,
                 })
             }
+            "autotune" => {
+                let mut f = || -> Result<f64> {
+                    parse_hex_f64(head.next().context("autotune payload truncated")?)
+                };
+                let (delta, u, spread) = (f()?, f()?, f()?);
+                let epochs: u32 = head
+                    .next()
+                    .context("autotune payload missing epochs")?
+                    .parse()
+                    .context("bad autotune epochs")?;
+                PointResult::Autotune(AutotuneStats {
+                    delta,
+                    u,
+                    spread,
+                    epochs,
+                })
+            }
             other => bail!("unknown cache payload kind {other:?}"),
         })
     }
@@ -820,6 +882,7 @@ mod tests {
             steps: 0,
             seed: crate::DEFAULT_SEED,
             streams: crate::rng::StreamFamily::RowV1,
+            control: Control::Static,
         }
     }
 
@@ -895,6 +958,52 @@ mod tests {
         let steady_ising = SweepPoint::steady("p", Topology::Ring { l: 100 }, run(100), 10, 20)
             .with_model(ModelSpec::Ising { beta: 0.7, coupling: 1.0 });
         assert_ne!(steady_ising.key(), plain.key());
+    }
+
+    #[test]
+    fn autotune_point_spec_is_pinned() {
+        let mut r = run(64);
+        r.control = Control::Autotune(super::super::autotune::AutotuneCfg {
+            spread_cap: 10.0,
+            window: 100,
+            max_epochs: 24,
+        });
+        let p = SweepPoint::autotune("auto_L64", Topology::Ring { l: 64 }, r);
+        assert_eq!(p.run.steps, 0);
+        assert_eq!(
+            p.spec(),
+            "repro/v1 topo=ring:64 run=l=64;load=1;mode=win:10;trials=8;steps=0;\
+             seed=20020601;control=auto:10:100:24 samp=autotune"
+        );
+        assert_eq!(p.key(), fnv1a64(&p.spec()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn autotune_point_requires_autotune_control() {
+        SweepPoint::autotune("x", Topology::Ring { l: 16 }, run(16));
+    }
+
+    #[test]
+    fn autotune_cache_text_roundtrip_is_bitwise() {
+        let st = AutotuneStats {
+            delta: 7.0710678118654755,
+            u: 0.24653,
+            spread: 9.875,
+            epochs: 13,
+        };
+        let back =
+            PointResult::from_cache_text(&PointResult::Autotune(st).to_cache_text()).unwrap();
+        assert_eq!(back.autotune().delta.to_bits(), st.delta.to_bits());
+        assert_eq!(back.autotune().u.to_bits(), st.u.to_bits());
+        assert_eq!(back.autotune().spread.to_bits(), st.spread.to_bits());
+        assert_eq!(back.autotune().epochs, 13);
+        assert_eq!(back.kind_tag(), "autotune");
+        // truncated payloads are a parse error, never wrong data
+        assert!(PointResult::from_cache_text(
+            "autotune 0000000000000000 0000000000000000 0000000000000000\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -8,6 +8,7 @@ use crate::output::Table;
 use crate::pdes::{Mode, ModelSpec, Topology, VolumeLoad};
 use crate::rng::StreamFamily;
 
+use super::autotune::Control;
 use super::campaign::{run_plan, CampaignOpts, RunSpec, ShardStrategy};
 use super::plan::{SweepPlan, SweepPoint};
 
@@ -18,9 +19,12 @@ pub struct CampaignSpec {
     pub name: String,
     /// Mode family: "conservative" | "windowed" | "rd" | "windowed_rd".
     pub mode: String,
-    /// PE graph: "ring" | "kring" | "smallworld" (cond-mat/0304617).
+    /// PE graph: "ring" | "kring" | "smallworld" (cond-mat/0304617) |
+    /// "scalefree" | "randomregular" (the quenched asynchronous-network
+    /// families).
     pub topology: String,
-    /// Neighbours per side for "kring".
+    /// Neighbours per side for "kring"; attachment edges per node for
+    /// "scalefree"; degree for "randomregular".
     pub k: usize,
     /// Random symmetric long-range links for "smallworld".
     pub links: usize,
@@ -107,8 +111,11 @@ impl CampaignSpec {
             m => bail!("campaign: unknown mode {m:?}"),
         }
         match spec.topology.as_str() {
-            "ring" | "kring" | "smallworld" => {}
-            t => bail!("campaign: unknown topology {t:?} (ring|kring|smallworld)"),
+            "ring" | "kring" | "smallworld" | "scalefree" | "randomregular" => {}
+            t => bail!(
+                "campaign: unknown topology {t:?} \
+                 (ring|kring|smallworld|scalefree|randomregular)"
+            ),
         }
         match spec.model.as_str() {
             "none" | "ising" | "sitecounter" => {}
@@ -153,14 +160,25 @@ impl CampaignSpec {
             .expect("validated in from_config")
     }
 
-    /// The PE graph for ring size `l` (links are seeded from the campaign
-    /// seed so reruns rebuild the identical small-world graph).
+    /// The PE graph for ring size `l` (the quenched families — small
+    /// world, scale free, random regular — are seeded from the campaign
+    /// seed so reruns rebuild the identical graph).
     pub fn topology_for(&self, l: usize) -> Topology {
         match self.topology.as_str() {
             "kring" => Topology::KRing { l, k: self.k },
             "smallworld" => Topology::SmallWorld {
                 l,
                 extra: self.links,
+                seed: self.seed,
+            },
+            "scalefree" => Topology::ScaleFree {
+                l,
+                m: self.k,
+                seed: self.seed,
+            },
+            "randomregular" => Topology::RandomRegular {
+                l,
+                k: self.k,
                 seed: self.seed,
             },
             _ => Topology::Ring { l },
@@ -230,6 +248,7 @@ impl CampaignSpec {
                         steps: 0,
                         seed: self.seed,
                         streams: self.stream_family(),
+                        control: Control::Static,
                     },
                     self.warm,
                     self.measure,
@@ -318,6 +337,43 @@ measure = 50
         assert_eq!(spec.topology, "kring");
         assert_eq!(spec.topology_for(12), Topology::KRing { l: 12, k: 2 });
         let dir = std::env::temp_dir().join("repro_campaign_topo_test");
+        let table = spec.execute(&dir).unwrap();
+        assert_eq!(table.len(), 1);
+        assert!(table.rows()[0][3] > 0.0 && table.rows()[0][3] <= 1.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quenched_network_topologies_parse_and_execute() {
+        // scalefree: `k` is the per-node attachment count m
+        let cfg = Config::parse(
+            "[campaign]\nmode = \"windowed\"\ntopology = \"scalefree\"\nk = 2\nseed = 11\n\
+             l = [16]\nnv = [1]\ndeltas = [3]\ntrials = 4\nwarm = 30\nmeasure = 30",
+        )
+        .unwrap();
+        let spec = CampaignSpec::from_config(&cfg).unwrap();
+        assert_eq!(
+            spec.topology_for(16),
+            Topology::ScaleFree { l: 16, m: 2, seed: 11 }
+        );
+        let dir = std::env::temp_dir().join("repro_campaign_sf_test");
+        let table = spec.execute(&dir).unwrap();
+        assert_eq!(table.len(), 1);
+        assert!(table.rows()[0][3] > 0.0 && table.rows()[0][3] <= 1.0);
+        std::fs::remove_dir_all(&dir).ok();
+
+        // randomregular: `k` is the uniform degree
+        let cfg = Config::parse(
+            "[campaign]\nmode = \"windowed\"\ntopology = \"randomregular\"\nk = 4\nseed = 11\n\
+             l = [16]\nnv = [1]\ndeltas = [3]\ntrials = 4\nwarm = 30\nmeasure = 30",
+        )
+        .unwrap();
+        let spec = CampaignSpec::from_config(&cfg).unwrap();
+        assert_eq!(
+            spec.topology_for(16),
+            Topology::RandomRegular { l: 16, k: 4, seed: 11 }
+        );
+        let dir = std::env::temp_dir().join("repro_campaign_rr_test");
         let table = spec.execute(&dir).unwrap();
         assert_eq!(table.len(), 1);
         assert!(table.rows()[0][3] > 0.0 && table.rows()[0][3] <= 1.0);

@@ -1,0 +1,245 @@
+//! Closed-loop Δ autotuning vs the static sweep (ROADMAP: "closed-loop
+//! Δ autotuning"; the paper's closing remark in cs/0211013 §V that Δ
+//! "can serve as a tuning parameter").
+//!
+//! For each PE graph (ring, scale-free, random-regular) the experiment
+//! measures a static Δ grid and one controller-driven point, all through
+//! the same windowed-epoch protocol:
+//!
+//! * *static rows* are one-epoch autotune points with an unreachable
+//!   spread cap — the controller probes exactly the seeded Δ once and
+//!   publishes its windowed (u, ⟨spread⟩), i.e. a plain measurement in
+//!   the identical fold the controller itself uses (apples to apples);
+//! * the *auto row* runs the full feasibility bisection against
+//!   [`SPREAD_CAP`] and publishes the converged Δ with its
+//!   confirmation-epoch measurements.
+//!
+//! The reducer then compares the converged Δ against the *static-sweep
+//! optimum* — the largest grid Δ whose measured spread obeys the cap.
+//! Documented tolerance: the two agree to within one static grid step
+//! (a factor of the grid ratio), since the bisection resolves the
+//! feasibility boundary much finer than the grid quantizes it.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::coordinator::{
+    AutotuneCfg, Control, PointResult, Profile, RunSpec, SweepPlan, SweepPoint,
+};
+use crate::output::Table;
+use crate::pdes::{Mode, Topology, VolumeLoad};
+
+/// Spread ceiling the closed-loop controller optimizes against.
+const SPREAD_CAP: f64 = 10.0;
+/// Cap for the one-epoch static probes: never binding, so the probe
+/// publishes the measurement at exactly its seeded Δ.
+const PROBE_CAP: f64 = 1e18;
+
+/// The topology grid for ring size `l`: the paper baseline plus the two
+/// quenched network families this PR introduces.
+fn topo_grid(l: usize, seed: u64) -> Vec<Topology> {
+    vec![
+        Topology::Ring { l },
+        Topology::ScaleFree { l, m: 2, seed },
+        Topology::RandomRegular { l, k: 4, seed },
+    ]
+}
+
+struct Grid {
+    l: usize,
+    trials: u64,
+    window: u32,
+    max_epochs: u32,
+    deltas: &'static [f64],
+}
+
+fn grid(p: &Profile) -> Grid {
+    Grid {
+        l: p.pick(256, 64),
+        trials: p.trials(16),
+        window: p.pick(400, 100),
+        max_epochs: p.pick(24, 16),
+        deltas: p.pick(
+            &[0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0][..],
+            &[1.0, 4.0, 16.0, 64.0][..],
+        ),
+    }
+}
+
+/// The static grid's Δ ratio — the documented agreement tolerance.
+fn grid_ratio(g: &Grid) -> f64 {
+    g.deltas[1] / g.deltas[0]
+}
+
+fn run_spec(g: &Grid, seed: u64, delta: f64, control: Control) -> RunSpec {
+    RunSpec {
+        l: g.l,
+        load: VolumeLoad::Sites(1),
+        mode: Mode::Windowed { delta },
+        trials: g.trials,
+        steps: 0,
+        seed,
+        streams: crate::rng::StreamFamily::RowV1,
+        control,
+    }
+}
+
+pub(super) fn plan(p: &Profile) -> SweepPlan {
+    let g = grid(p);
+    let mut plan = SweepPlan::new(
+        "autotune",
+        "closed-loop delta autotuning vs the static sweep",
+    );
+    for topo in topo_grid(g.l, p.seed) {
+        for &delta in g.deltas {
+            let probe = Control::Autotune(AutotuneCfg {
+                spread_cap: PROBE_CAP,
+                window: g.window,
+                max_epochs: 1,
+            });
+            plan.push(SweepPoint::autotune(
+                format!("{}_static_d{delta}", topo.tag()),
+                topo,
+                run_spec(&g, p.seed, delta, probe),
+            ));
+        }
+        let auto = Control::Autotune(AutotuneCfg {
+            spread_cap: SPREAD_CAP,
+            window: g.window,
+            max_epochs: g.max_epochs,
+        });
+        plan.push(SweepPoint::autotune(
+            format!("{}_auto", topo.tag()),
+            topo,
+            run_spec(&g, p.seed, 1.0, auto),
+        ));
+    }
+    plan
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let plan = plan(&ctx.profile());
+    let results = ctx.schedule(&plan)?;
+    reduce(ctx, &results)
+}
+
+/// The static-sweep optimum under the cap: the largest grid Δ whose
+/// measured spread is feasible, or the smallest grid Δ when none is
+/// (mirroring the controller's conservative-floor fallback).
+fn static_optimum(deltas: &[f64], spreads: &[f64]) -> f64 {
+    deltas
+        .iter()
+        .zip(spreads)
+        .filter(|&(_, &s)| s <= SPREAD_CAP)
+        .map(|(&d, _)| d)
+        .fold(deltas[0], f64::max)
+}
+
+fn reduce(ctx: &Ctx, results: &[PointResult]) -> Result<()> {
+    let p = ctx.profile();
+    let g = grid(&p);
+    let topologies = topo_grid(g.l, p.seed);
+
+    let mut sweep = Table::new(
+        format!(
+            "autotune sweep: windowed (u, spread) per delta (L = {}, N_V = 1, \
+             {} trials, window = {}, cap = {SPREAD_CAP})",
+            g.l, g.trials, g.window
+        ),
+        &["topo", "auto", "delta", "u", "spread", "epochs"],
+    );
+    let mut summary = Table::new(
+        format!(
+            "autotune summary: converged delta vs static optimum \
+             (tolerance: one grid step = x{})",
+            grid_ratio(&g)
+        ),
+        &["topo", "delta_static", "delta_auto", "ratio", "u_auto", "spread_auto"],
+    );
+    println!("topology index legend:");
+    for (ti, topo) in topologies.iter().enumerate() {
+        println!("  {ti}: {} ({:?})", topo.tag(), topo);
+    }
+
+    let per_topo = g.deltas.len() + 1;
+    for (ti, _topo) in topologies.iter().enumerate() {
+        let rows = &results[ti * per_topo..(ti + 1) * per_topo];
+        let mut spreads = Vec::with_capacity(g.deltas.len());
+        for (&delta, r) in g.deltas.iter().zip(rows) {
+            let st = r.autotune();
+            spreads.push(st.spread);
+            sweep.push(vec![ti as f64, 0.0, delta, st.u, st.spread, st.epochs as f64]);
+        }
+        let auto = rows[g.deltas.len()].autotune();
+        sweep.push(vec![
+            ti as f64,
+            1.0,
+            auto.delta,
+            auto.u,
+            auto.spread,
+            auto.epochs as f64,
+        ]);
+        let star = static_optimum(g.deltas, &spreads);
+        summary.push(vec![
+            ti as f64,
+            star,
+            auto.delta,
+            auto.delta / star,
+            auto.u,
+            auto.spread,
+        ]);
+    }
+    sweep.write_tsv(&ctx.out_dir, "autotune_sweep")?;
+    summary.write_tsv(&ctx.out_dir, "autotune_summary")?;
+    println!("{}", sweep.render());
+    println!("{}", summary.render());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_autotune_tracks_the_static_optimum() {
+        let out = std::env::temp_dir().join("repro_autotune_exp_test");
+        std::fs::remove_dir_all(&out).ok();
+        let ctx = Ctx::new(&out, true);
+        run(&ctx).unwrap();
+
+        let text = std::fs::read_to_string(out.join("autotune_sweep.tsv")).unwrap();
+        // 3 topologies × (4 static + 1 auto) + header
+        let rows = text.lines().filter(|l| !l.starts_with('#')).count();
+        assert_eq!(rows, 3 * 5 + 1, "{text}");
+
+        // the acceptance bar: for every topology the converged delta
+        // agrees with the static-sweep optimum to within one grid step,
+        // and its confirmation spread respects the cap (slack for the
+        // re-measurement being a different epoch than the probe)
+        let summary = std::fs::read_to_string(out.join("autotune_summary.tsv")).unwrap();
+        let tol = 4.0 * 1.6; // quick grid ratio x measurement slack
+        for line in summary.lines().filter(|l| !l.starts_with('#')).skip(1) {
+            let cells: Vec<f64> = line
+                .split('\t')
+                .map(|c| c.parse().unwrap())
+                .collect();
+            let (ratio, spread) = (cells[3], cells[5]);
+            assert!(ratio >= 1.0 / tol && ratio <= tol, "{line}");
+            assert!(spread <= SPREAD_CAP * 1.5, "{line}");
+        }
+        assert_eq!(
+            summary.lines().filter(|l| !l.starts_with('#')).count(),
+            3 + 1
+        );
+        std::fs::remove_dir_all(&out).ok();
+    }
+
+    #[test]
+    fn static_optimum_picks_the_largest_feasible_delta() {
+        let deltas = [1.0, 4.0, 16.0, 64.0];
+        assert_eq!(static_optimum(&deltas, &[2.0, 5.0, 11.0, 70.0]), 4.0);
+        assert_eq!(static_optimum(&deltas, &[2.0, 5.0, 9.0, 9.9]), 64.0);
+        // nothing feasible: conservative floor = the smallest grid delta
+        assert_eq!(static_optimum(&deltas, &[11.0, 12.0, 13.0, 14.0]), 1.0);
+    }
+}

@@ -77,6 +77,7 @@ pub(super) fn plan(p: &Profile) -> SweepPlan {
                     steps: 0,
                     seed: p.seed,
                     streams: crate::rng::StreamFamily::RowV1,
+                    control: crate::coordinator::Control::Static,
                 },
                 g.warm,
                 g.measure,

@@ -47,6 +47,7 @@ pub(super) fn plan(p: &Profile) -> SweepPlan {
                     steps: g.steps,
                     seed: p.seed,
                     streams: crate::rng::StreamFamily::RowV1,
+                    control: crate::coordinator::Control::Static,
                 },
                 g.steps,
             ));

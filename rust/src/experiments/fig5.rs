@@ -48,6 +48,7 @@ pub(super) fn plan(p: &Profile) -> SweepPlan {
                         steps: 0,
                         seed: p.seed,
                         streams: crate::rng::StreamFamily::RowV1,
+                        control: crate::coordinator::Control::Static,
                     },
                     g.warm,
                     g.measure,
@@ -65,6 +66,7 @@ pub(super) fn plan(p: &Profile) -> SweepPlan {
                     steps: 0,
                     seed: p.seed,
                     streams: crate::rng::StreamFamily::RowV1,
+                    control: crate::coordinator::Control::Static,
                 },
                 g.warm,
                 g.measure,

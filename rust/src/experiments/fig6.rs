@@ -80,6 +80,7 @@ pub(super) fn push_u_inf_cell(
                 steps: 0,
                 seed,
                 streams: crate::rng::StreamFamily::RowV1,
+                control: crate::coordinator::Control::Static,
             },
             warm,
             measure,

@@ -35,6 +35,7 @@ pub(super) fn plan(p: &Profile) -> SweepPlan {
                     steps: 0,
                     seed: p.seed + nv,
                     streams: crate::rng::StreamFamily::RowV1,
+                    control: crate::coordinator::Control::Static,
                 },
                 steps,
             ));

@@ -79,6 +79,7 @@ pub(super) fn plan_with(p: &Profile, beta: f64, coupling: f64) -> SweepPlan {
                     steps: 0,
                     seed: p.seed,
                     streams: crate::rng::StreamFamily::RowV1,
+                    control: crate::coordinator::Control::Static,
                 },
                 g.warm,
                 g.measure,

@@ -60,6 +60,7 @@ pub(super) fn plan(p: &Profile) -> SweepPlan {
             steps: 0,
             seed: p.seed,
             streams: crate::rng::StreamFamily::RowV1,
+            control: crate::coordinator::Control::Static,
         },
         g.grow_steps,
     ));
@@ -76,6 +77,7 @@ pub(super) fn plan(p: &Profile) -> SweepPlan {
                 steps: 0,
                 seed: p.seed + l as u64,
                 streams: crate::rng::StreamFamily::RowV1,
+                control: crate::coordinator::Control::Static,
             },
             sat_steps(l, p),
         ));

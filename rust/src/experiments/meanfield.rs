@@ -43,6 +43,7 @@ fn push_point(plan: &mut SweepPlan, g: &Grid, seed: u64, nv: u64, mode: Mode) {
             steps: 0,
             seed,
             streams: crate::rng::StreamFamily::RowV1,
+            control: crate::coordinator::Control::Static,
         },
         g.warm,
         g.steps,

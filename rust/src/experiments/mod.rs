@@ -13,6 +13,7 @@
 //! preserved, error bars are larger).
 
 mod appendix;
+mod autotune;
 mod dims;
 mod eq8;
 mod fig10;
@@ -141,7 +142,7 @@ impl Ctx {
 /// All experiment names in run order.
 pub const ALL: &[&str] = &[
     "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "eq8",
-    "kpz", "meanfield", "appendix", "dims", "topology", "ising", "updatestats",
+    "kpz", "meanfield", "appendix", "dims", "topology", "ising", "updatestats", "autotune",
 ];
 
 /// The declarative sweep plan of one experiment at one fidelity, or
@@ -167,6 +168,7 @@ pub fn plan_for(name: &str, profile: &Profile) -> Option<SweepPlan> {
         "topology" => topology::plan(profile),
         "ising" => ising::plan(profile),
         "updatestats" => updatestats::plan(profile),
+        "autotune" => autotune::plan(profile),
         _ => return None,
     })
 }
@@ -192,6 +194,7 @@ pub fn run(name: &str, ctx: &Ctx) -> Result<()> {
         "topology" => topology::run(ctx),
         "ising" => ising::run(ctx),
         "updatestats" => updatestats::run(ctx),
+        "autotune" => autotune::run(ctx),
         "all" => {
             for n in ALL {
                 println!("\n##### experiment {n} #####");
@@ -435,6 +438,7 @@ mod tests {
             ("topology", 30, 15),
             ("ising", 14, 6),
             ("updatestats", 4, 2),
+            ("autotune", 27, 15),
         ] {
             assert_eq!(count(name, false), full, "{name} full grid");
             assert_eq!(count(name, true), quick, "{name} quick grid");

@@ -12,7 +12,7 @@
 use anyhow::Result;
 
 use super::Ctx;
-use crate::coordinator::{PointResult, Profile, RunSpec, SweepPlan, SweepPoint};
+use crate::coordinator::{Control, PointResult, Profile, RunSpec, SweepPlan, SweepPoint};
 use crate::output::Table;
 use crate::pdes::{Mode, Topology, VolumeLoad};
 
@@ -71,6 +71,7 @@ pub(super) fn plan(p: &Profile) -> SweepPlan {
                     steps: 0,
                     seed: p.seed,
                     streams: crate::rng::StreamFamily::RowV1,
+                    control: Control::Static,
                 },
                 g.warm,
                 g.measure,
@@ -96,11 +97,20 @@ fn reduce(ctx: &Ctx, results: &[PointResult]) -> Result<()> {
             "topology sweep: u and width vs Δ (L = {}, N_V = 1, {} trials)",
             g.l, g.trials
         ),
-        &["topo", "coord", "delta", "u", "u_err", "w", "wa", "gvt_rate"],
+        &["topo", "coord", "links", "delta", "u", "u_err", "w", "wa", "gvt_rate"],
     );
-    println!("topology index legend:");
+    // the links column records links_achieved — the undirected edge count
+    // the generator actually realized, which for dense small-world
+    // requests falls short of ring + extra (degree cap / duplicate
+    // rejection); the table must report the graph measured, not the one
+    // requested
+    let links: Vec<usize> = topologies
+        .iter()
+        .map(|t| t.neighbour_table().undirected_edges())
+        .collect();
+    println!("topology index legend (links = achieved undirected edges):");
     for (ti, topo) in topologies.iter().enumerate() {
-        println!("  {ti}: {} ({:?})", topo.tag(), topo);
+        println!("  {ti}: {} links={} ({:?})", topo.tag(), links[ti], topo);
     }
     let mut idx = 0usize;
     for (ti, topo) in topologies.iter().enumerate() {
@@ -110,6 +120,7 @@ fn reduce(ctx: &Ctx, results: &[PointResult]) -> Result<()> {
             table.push(vec![
                 ti as f64,
                 topo.coordination() as f64,
+                links[ti] as f64,
                 delta,
                 st.u,
                 st.u_err,
@@ -138,6 +149,16 @@ mod tests {
         // 5 topologies × 3 quick deltas + header + title line
         let rows = text.lines().filter(|l| !l.starts_with('#')).count();
         assert_eq!(rows, 5 * 3 + 1, "{text}");
+        // links_achieved rides every row: the quick ring (l = 64) has
+        // exactly 64 undirected edges, and no row may report zero links
+        let header = text.lines().find(|l| !l.starts_with('#')).unwrap();
+        assert!(header.split('\t').any(|c| c == "links"), "{header}");
+        for line in text.lines().filter(|l| !l.starts_with('#')).skip(1) {
+            let links: f64 = line.split('\t').nth(2).unwrap().parse().unwrap();
+            assert!(links > 0.0, "{line}");
+        }
+        let ring_row = text.lines().filter(|l| !l.starts_with('#')).nth(1).unwrap();
+        assert_eq!(ring_row.split('\t').nth(2).unwrap().parse::<f64>().unwrap(), 64.0);
         std::fs::remove_dir_all(&out).ok();
     }
 }

@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //! * `repro fig2 .. fig11 | eq8 | kpz | meanfield | appendix | dims |
-//!   topology | all` — regenerate a paper figure/table (§4 of DESIGN.md)
+//!   topology | ising | updatestats | autotune | all` — regenerate a
+//!   paper figure/table (§4 of DESIGN.md)
 //!   through the declarative campaign scheduler; `--quick` for smoke
 //!   runs, `--out DIR` for the TSV directory, `--workers N` for the
 //!   point-level fan-out (outputs are byte-identical for every N),
@@ -10,9 +11,12 @@
 //! * `repro plan <name>|all [--quick] [--seed S]` — print a plan's grid
 //!   (labels, cache keys, canonical specs) without running anything.
 //! * `repro run --l L --nv NV --delta D [--trials N] [--steps T]
-//!   [--topology ring|kring|smallworld] [--streams pe|row]` — one native
-//!   campaign point on any PE graph, printing the ⟨u⟩/⟨w⟩ summary
-//!   (`--streams row` replays the historical per-row RNG family).
+//!   [--topology ring|kring|smallworld|scalefree|randomregular]
+//!   [--streams pe|row]` — one native campaign point on any PE graph,
+//!   printing the ⟨u⟩/⟨w⟩ summary (`--streams row` replays the
+//!   historical per-row RNG family); `--autotune` runs the closed-loop
+//!   Δ controller instead and prints the converged window
+//!   (`--autotune-cap`/`--autotune-window`/`--autotune-epochs`).
 //! * `repro jax --l L [--trials N] [--steps T]`
 //!   — the same through the AOT JAX/Pallas artifacts (PJRT runtime).
 //! * `repro info` — artifact manifest + platform diagnostics.
@@ -21,8 +25,8 @@ use anyhow::Result;
 
 use repro::cli::Args;
 use repro::coordinator::{
-    run_artifact_ensemble, run_topology_ensemble_model, CancelToken, FaultPlan, JaxRunSpec,
-    OnFault, Profile, RunSpec, ShardStrategy,
+    autotune_topology, run_artifact_ensemble, run_topology_ensemble_model, AutotuneCfg,
+    CancelToken, Control, FaultPlan, JaxRunSpec, OnFault, Profile, RunSpec, ShardStrategy,
 };
 use repro::experiments::{self, Ctx};
 use repro::pdes::model::{DEFAULT_BETA, DEFAULT_COUPLING};
@@ -55,8 +59,40 @@ fn topology_from(args: &Args, l: usize) -> Result<Topology> {
             extra: args.opt_u64("links", (l / 4) as u64)? as usize,
             seed: args.opt_u64("seed", DEFAULT_SEED)?,
         },
-        other => anyhow::bail!("--topology {other:?}: expected ring|kring|smallworld"),
+        "scalefree" => Topology::ScaleFree {
+            l,
+            m: args.opt_u64("k", 2)? as usize,
+            seed: args.opt_u64("seed", DEFAULT_SEED)?,
+        },
+        "randomregular" => Topology::RandomRegular {
+            l,
+            k: args.opt_u64("k", 4)? as usize,
+            seed: args.opt_u64("seed", DEFAULT_SEED)?,
+        },
+        other => anyhow::bail!(
+            "--topology {other:?}: expected ring|kring|smallworld|scalefree|randomregular"
+        ),
     })
+}
+
+/// Resolve the `--autotune*` options into a [`Control`] policy (the
+/// same validation `control=auto:...` spec parsing applies).
+fn control_from(args: &Args) -> Result<Control> {
+    if !args.has_flag("autotune") {
+        return Ok(Control::Static);
+    }
+    let cfg = AutotuneCfg {
+        spread_cap: args.opt_f64("autotune-cap", 10.0)?,
+        window: args.opt_u64("autotune-window", 100)? as u32,
+        max_epochs: args.opt_u64("autotune-epochs", 24)? as u32,
+    };
+    if !cfg.spread_cap.is_finite() || cfg.spread_cap <= 0.0 {
+        anyhow::bail!("--autotune-cap must be finite and positive");
+    }
+    if cfg.window == 0 || cfg.max_epochs == 0 {
+        anyhow::bail!("--autotune-window and --autotune-epochs must be >= 1");
+    }
+    Ok(Control::Autotune(cfg))
 }
 
 /// Parse and validate `--beta`/`--coupling` — same rules the config
@@ -115,14 +151,15 @@ fn main() -> Result<()> {
     match args.command.as_str() {
         "" | "help" => {
             println!(
-                "usage: repro <fig2..fig11|eq8|kpz|meanfield|appendix|dims|topology|ising|updatestats|all>\n\
+                "usage: repro <fig2..fig11|eq8|kpz|meanfield|appendix|dims|topology|ising|updatestats|autotune|all>\n\
                  \x20                 [--quick] [--out DIR] [--seed S] [--workers N]\n\
                  \x20                 [--lattice-workers N] [--resume]\n\
                  \x20                 [--max-retries N] [--on-fault quarantine|abort]\n\
                  \x20      repro plan <name|all> [--quick] [--seed S]\n\
                  \x20      repro run  --l L --nv NV --delta D [--rd] [--trials N] [--steps T] [--seed S]\n\
-                 \x20                 [--topology ring|kring|smallworld] [--k K] [--links N]\n\
+                 \x20                 [--topology ring|kring|smallworld|scalefree|randomregular] [--k K] [--links N]\n\
                  \x20                 [--model none|ising|sitecounter] [--beta B] [--coupling J]\n\
+                 \x20                 [--autotune] [--autotune-cap C] [--autotune-window W] [--autotune-epochs E]\n\
                  \x20      repro jax  --l L --nv NV --delta D [--trials N] [--steps T] [--artifacts DIR]\n\
                  \x20      repro campaign --config FILE [--out DIR]\n\
                  \x20      repro info [--artifacts DIR]"
@@ -207,9 +244,19 @@ fn main() -> Result<()> {
                 steps: args.opt_u64("steps", 1000)? as usize,
                 seed: args.opt_u64("seed", DEFAULT_SEED)?,
                 streams,
+                control: control_from(&args)?,
             };
             let topology = topology_from(&args, spec.l)?;
             let model = model_from(&args)?;
+            if let Control::Autotune(cfg) = spec.control {
+                println!("autotune campaign on {}: {spec:?}", topology.tag());
+                let st = autotune_topology(topology, &spec, &model, cfg, 1);
+                println!(
+                    "converged delta = {:.4} after {} epochs\n<u> = {:.4}\n<spread> = {:.4} (cap {})",
+                    st.delta, st.epochs, st.u, st.spread, cfg.spread_cap
+                );
+                return Ok(());
+            }
             if model == ModelSpec::None {
                 println!("native campaign on {}: {spec:?}", topology.tag());
             } else {

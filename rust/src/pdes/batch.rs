@@ -458,6 +458,29 @@ impl BatchPdes {
         self.resync_period = period;
     }
 
+    /// Change the window width Δ mid-run (the autotuning hook).
+    ///
+    /// Safe by construction: `step_masked` reads `self.mode` fresh at the
+    /// top of every step, and the sharded engine copies the mode into its
+    /// per-step `StepParts` the same way, so a new Δ takes effect exactly
+    /// at the next step on both engines with no partially-applied state.
+    /// The tracked `StepStats` are recomputed from the row values on every
+    /// sweep (no cross-step accumulation), so a mid-run Δ change cannot
+    /// drift them — pinned by the dynamic-Δ property tests.
+    ///
+    /// Preserves the nearest-neighbour axis of the current mode:
+    /// `Conservative`/`Windowed` become `Windowed { delta }`, `Rd`/
+    /// `WindowedRd` become `WindowedRd { delta }`.  `Δ = ∞` means
+    /// unconstrained (the window check disappears, as in `Mode::
+    /// enforces_window`); NaN is rejected.
+    pub fn set_delta(&mut self, delta: f64) {
+        assert!(!delta.is_nan(), "window width must not be NaN");
+        self.mode = match self.mode {
+            Mode::Conservative | Mode::Windowed { .. } => Mode::Windowed { delta },
+            Mode::Rd | Mode::WindowedRd { .. } => Mode::WindowedRd { delta },
+        };
+    }
+
     /// Replace one row's horizon (custom initial conditions / resync).
     pub fn set_tau_row(&mut self, row: usize, tau: &[f64]) {
         assert_eq!(tau.len(), self.pes);

@@ -15,14 +15,28 @@
 //!   `KRing { k: 1 }` is exactly `Ring`;
 //! * [`Topology::SmallWorld`] — ring plus `extra` seeded random symmetric
 //!   long-range links (the cond-mat/0304617 construction);
+//! * [`Topology::ScaleFree`] — seeded Barabási–Albert preferential
+//!   attachment (`m` links per new PE), the broad-degree network-design
+//!   scenario of cond-mat/0304617;
+//! * [`Topology::RandomRegular`] — seeded configuration-model random
+//!   `k`-regular graph (uniform degree, no geometric structure);
 //! * [`Topology::Square`] / [`Topology::Cubic`] — the 2-d/3-d periodic
 //!   tori of the paper's Section III A remark.
 
 use crate::rng::Rng;
 
-/// RNG stream tag for small-world link generation ("TOPO"), kept separate
-/// from trial streams so graph construction never perturbs trajectories.
+/// RNG stream tag for quenched-randomness link generation ("TOPO"), kept
+/// separate from trial streams so graph construction never perturbs
+/// trajectories.  Shared by small-world, scale-free and random-regular
+/// generators — the family + parameters disambiguate, the stream only has
+/// to be trial-disjoint.
 const LINK_STREAM: u64 = 0x544F_504F;
+
+/// Hard degree ceiling for generated graphs: the engine's pending-event
+/// encoding reserves slot 255 (`PEND_ALL`), so `max_degree()` must stay
+/// below it.  Generators that could exceed it (preferential attachment)
+/// reject candidates at this cap.
+const DEGREE_CAP: usize = 254;
 
 /// Periodic PE-graph topologies.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -34,6 +48,14 @@ pub enum Topology {
     /// Ring plus `extra` random symmetric long-range links drawn from the
     /// deterministic stream `(seed, "TOPO")`.
     SmallWorld { l: usize, extra: usize, seed: u64 },
+    /// Barabási–Albert preferential attachment: a complete core on `m + 1`
+    /// PEs, then each new PE attaches `m` links to existing PEs with
+    /// probability proportional to degree.  Deterministic per seed.
+    ScaleFree { l: usize, m: usize, seed: u64 },
+    /// Configuration-model random `k`-regular graph: every PE has exactly
+    /// `k` neighbours, links otherwise unstructured.  Deterministic per
+    /// seed; requires `l * k` even.
+    RandomRegular { l: usize, k: usize, seed: u64 },
     /// 2-d `side × side` torus, 4 neighbours per PE.
     Square { side: usize },
     /// 3-d `side³` torus, 6 neighbours per PE.
@@ -44,7 +66,11 @@ impl Topology {
     /// Total number of PEs.
     pub fn len(self) -> usize {
         match self {
-            Topology::Ring { l } | Topology::KRing { l, .. } | Topology::SmallWorld { l, .. } => l,
+            Topology::Ring { l }
+            | Topology::KRing { l, .. }
+            | Topology::SmallWorld { l, .. }
+            | Topology::ScaleFree { l, .. }
+            | Topology::RandomRegular { l, .. } => l,
             Topology::Square { side } => side * side,
             Topology::Cubic { side } => side * side * side,
         }
@@ -57,11 +83,15 @@ impl Topology {
     }
 
     /// Base neighbours per PE (the regular-lattice part; small-world extra
-    /// links come on top of this).
+    /// links come on top of this).  For the irregular families this is the
+    /// characteristic degree: the asymptotic mean `2m` for scale-free, the
+    /// exact uniform `k` for random-regular.
     pub fn coordination(self) -> usize {
         match self {
             Topology::Ring { .. } | Topology::SmallWorld { .. } => 2,
             Topology::KRing { k, .. } => 2 * k,
+            Topology::ScaleFree { m, .. } => 2 * m,
+            Topology::RandomRegular { k, .. } => k,
             Topology::Square { .. } => 4,
             Topology::Cubic { .. } => 6,
         }
@@ -73,6 +103,8 @@ impl Topology {
             Topology::Ring { l } => format!("ring{l}"),
             Topology::KRing { l, k } => format!("kring{k}_{l}"),
             Topology::SmallWorld { l, extra, .. } => format!("sw{extra}_{l}"),
+            Topology::ScaleFree { l, m, .. } => format!("sf{m}_{l}"),
+            Topology::RandomRegular { l, k, .. } => format!("rr{k}_{l}"),
             Topology::Square { side } => format!("square{side}"),
             Topology::Cubic { side } => format!("cubic{side}"),
         }
@@ -81,12 +113,15 @@ impl Topology {
     /// Canonical, stable spec string — the topology component of a
     /// campaign cache key.  Grammar (v1, frozen — same stability guarantee
     /// as [`super::Mode::spec_string`]): `ring:<l>` | `kring:<l>:<k>` |
-    /// `sw:<l>:<extra>:<seed>` | `square:<side>` | `cubic:<side>`.
+    /// `sw:<l>:<extra>:<seed>` | `sf:<l>:<m>:<seed>` | `rr:<l>:<k>:<seed>`
+    /// | `square:<side>` | `cubic:<side>`.
     pub fn spec_string(self) -> String {
         match self {
             Topology::Ring { l } => format!("ring:{l}"),
             Topology::KRing { l, k } => format!("kring:{l}:{k}"),
             Topology::SmallWorld { l, extra, seed } => format!("sw:{l}:{extra}:{seed}"),
+            Topology::ScaleFree { l, m, seed } => format!("sf:{l}:{m}:{seed}"),
+            Topology::RandomRegular { l, k, seed } => format!("rr:{l}:{k}:{seed}"),
             Topology::Square { side } => format!("square:{side}"),
             Topology::Cubic { side } => format!("cubic:{side}"),
         }
@@ -110,6 +145,20 @@ impl Topology {
             (Some("sw"), 4) => Topology::SmallWorld {
                 l: num(1)?,
                 extra: num(2)?,
+                seed: parts[3]
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("bad topology seed in {s:?}"))?,
+            },
+            (Some("sf"), 4) => Topology::ScaleFree {
+                l: num(1)?,
+                m: num(2)?,
+                seed: parts[3]
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("bad topology seed in {s:?}"))?,
+            },
+            (Some("rr"), 4) => Topology::RandomRegular {
+                l: num(1)?,
+                k: num(2)?,
                 seed: parts[3]
                     .parse::<u64>()
                     .map_err(|_| anyhow::anyhow!("bad topology seed in {s:?}"))?,
@@ -139,6 +188,19 @@ impl Topology {
             Topology::SmallWorld { l, extra, seed } => {
                 assert!(l >= 3, "small-world ring needs at least 3 PEs");
                 small_world_table(l, extra, seed)
+            }
+            Topology::ScaleFree { l, m, seed } => {
+                assert!(m >= 1, "scale-free needs m >= 1");
+                assert!(m <= DEGREE_CAP, "scale-free needs m <= {DEGREE_CAP}");
+                assert!(l > m + 1, "scale-free needs l > m + 1 (core + growth)");
+                scale_free_table(l, m, seed)
+            }
+            Topology::RandomRegular { l, k, seed } => {
+                assert!(k >= 1, "random-regular needs k >= 1");
+                assert!(k < l, "random-regular needs k < l (distinct neighbours)");
+                assert!(k <= DEGREE_CAP, "random-regular needs k <= {DEGREE_CAP}");
+                assert!(l * k % 2 == 0, "random-regular needs l*k even ({l} PEs × degree {k})");
+                random_regular_table(l, k, seed)
             }
             Topology::Square { side } => {
                 assert!(side >= 3, "square torus needs side >= 3");
@@ -218,12 +280,112 @@ fn small_world_table(l: usize, extra: usize, seed: u64) -> NeighbourTable {
     }
     if added < extra {
         // visible, not fatal: the graph stays valid, but tags/configs
-        // quoting the requested link count would otherwise mislead
-        eprintln!(
-            "warning: small-world graph on {l} PEs holds {added} of {extra} requested links"
-        );
+        // quoting the requested link count would otherwise mislead.  Once
+        // per process, not per construction — sharded multi-replica runs
+        // rebuild the table per engine and would otherwise spam stderr;
+        // `NeighbourTable::undirected_edges` carries the achieved count
+        // for outputs that must report the graph actually simulated.
+        static SHORTFALL_WARNING: std::sync::Once = std::sync::Once::new();
+        SHORTFALL_WARNING.call_once(|| {
+            eprintln!(
+                "warning: small-world graph on {l} PEs holds {added} of {extra} requested links \
+                 (further shortfall warnings suppressed)"
+            );
+        });
     }
     NeighbourTable::from_lists(&lists)
+}
+
+/// Barabási–Albert preferential attachment, deterministic per seed.
+///
+/// Core: complete graph on `m + 1` PEs.  Growth: each new PE `v` draws `m`
+/// distinct targets from the repeated-endpoints list (probability ∝ degree),
+/// rejecting self-loops, duplicates and targets at [`DEGREE_CAP`].  A
+/// bounded attempt budget plus a deterministic lowest-index fallback scan
+/// keeps construction total even in degenerate corners.
+fn scale_free_table(l: usize, m: usize, seed: u64) -> NeighbourTable {
+    let mut lists: Vec<Vec<u32>> = vec![Vec::with_capacity(m + 1); l];
+    // `ends` holds every edge endpoint once per incidence, so uniform draws
+    // from it are degree-proportional — the classic BA sampling trick.
+    let mut ends: Vec<u32> = Vec::with_capacity(2 * (m * l));
+    for a in 0..=m {
+        for b in (a + 1)..=m {
+            lists[a].push(b as u32);
+            lists[b].push(a as u32);
+            ends.push(a as u32);
+            ends.push(b as u32);
+        }
+    }
+    let mut rng = Rng::for_stream(seed, LINK_STREAM);
+    for v in (m + 1)..l {
+        let mut chosen: Vec<u32> = Vec::with_capacity(m);
+        let mut attempts = 0usize;
+        let budget = 100 * m + 100;
+        // snapshot bound: draws index the ends list as it stood before v's
+        // own edges are appended (v cannot attach to itself)
+        let pool = ends.len() as u64;
+        while chosen.len() < m && attempts < budget {
+            attempts += 1;
+            let t = ends[rng.below(pool) as usize];
+            if chosen.contains(&t) || lists[t as usize].len() >= DEGREE_CAP {
+                continue;
+            }
+            chosen.push(t);
+        }
+        if chosen.len() < m {
+            // budget exhausted (tiny graphs, saturated hubs): finish with
+            // the lowest-index eligible PEs — deterministic by construction
+            for t in 0..v {
+                if chosen.len() == m {
+                    break;
+                }
+                if !chosen.contains(&(t as u32)) && lists[t].len() < DEGREE_CAP {
+                    chosen.push(t as u32);
+                }
+            }
+        }
+        for &t in &chosen {
+            lists[v].push(t);
+            lists[t as usize].push(v as u32);
+            ends.push(t);
+            ends.push(v as u32);
+        }
+    }
+    NeighbourTable::from_lists(&lists)
+}
+
+/// Configuration-model random `k`-regular graph, deterministic per seed.
+///
+/// Each attempt Fisher-Yates-shuffles the stub list (`k` stubs per PE) and
+/// pairs consecutive stubs; a self-loop or duplicate edge rejects the whole
+/// attempt and reshuffles with the stream continuing, so the accepted graph
+/// is uniform over simple pairings.  For k ≪ l rejection is rare; the
+/// attempt bound turns the pathological corner into a clear panic instead
+/// of an unbounded spin.
+fn random_regular_table(l: usize, k: usize, seed: u64) -> NeighbourTable {
+    let mut rng = Rng::for_stream(seed, LINK_STREAM);
+    let base: Vec<u32> = (0..l as u32).flat_map(|p| std::iter::repeat(p).take(k)).collect();
+    'attempt: for _ in 0..1000 {
+        let mut stubs = base.clone();
+        for i in (1..stubs.len()).rev() {
+            let j = rng.below((i + 1) as u64) as usize;
+            stubs.swap(i, j);
+        }
+        let mut lists: Vec<Vec<u32>> = vec![Vec::with_capacity(k); l];
+        for pair in stubs.chunks_exact(2) {
+            let (a, b) = (pair[0], pair[1]);
+            if a == b || lists[a as usize].contains(&b) {
+                continue 'attempt;
+            }
+            lists[a as usize].push(b);
+            lists[b as usize].push(a);
+        }
+        return NeighbourTable::from_lists(&lists);
+    }
+    panic!(
+        "random-regular graph (l = {l}, k = {k}, seed = {seed}) found no simple \
+         pairing in 1000 attempts — parameters too dense; lower k or raise l"
+    );
 }
 
 /// Flat CSR adjacency: `targets[offsets[k] .. offsets[k+1]]` are the PEs
@@ -286,6 +448,17 @@ impl NeighbourTable {
     pub fn edges(&self) -> usize {
         self.targets.len()
     }
+
+    /// Total undirected edge count **actually present** in the graph.
+    ///
+    /// This is the number outputs must quote as `links_achieved`: a
+    /// small-world request can fall short of its `links=` parameter when
+    /// the attempt budget runs out, while the spec string / tag / cache key
+    /// keep quoting the request (they identify the construction, not the
+    /// outcome).
+    pub fn undirected_edges(&self) -> usize {
+        self.edges() / 2
+    }
 }
 
 #[cfg(test)]
@@ -298,6 +471,8 @@ mod tests {
             Topology::KRing { l: 9, k: 2 },
             Topology::KRing { l: 16, k: 3 },
             Topology::SmallWorld { l: 16, extra: 5, seed: 7 },
+            Topology::ScaleFree { l: 16, m: 2, seed: 7 },
+            Topology::RandomRegular { l: 16, k: 4, seed: 7 },
             Topology::Square { side: 5 },
             Topology::Cubic { side: 3 },
         ]
@@ -397,6 +572,54 @@ mod tests {
         let t = Topology::SmallWorld { l: 5, extra: 1000, seed: 1 }.neighbour_table();
         // complete graph on 5 nodes has 10 undirected edges = 20 directed
         assert!(t.edges() <= 20);
+        // the achieved count is the queryable truth behind the shortfall
+        assert_eq!(t.undirected_edges(), t.edges() / 2);
+        assert!(t.undirected_edges() < 5 + 1000);
+    }
+
+    #[test]
+    fn scale_free_is_deterministic_with_ba_edge_count() {
+        let a = Topology::ScaleFree { l: 64, m: 2, seed: 3 }.neighbour_table();
+        let b = Topology::ScaleFree { l: 64, m: 2, seed: 3 }.neighbour_table();
+        let c = Topology::ScaleFree { l: 64, m: 2, seed: 4 }.neighbour_table();
+        // BA edge count: C(m+1, 2) core + m per grown node
+        let expect = (2 * 3) / 2 + (64 - 3) * 2;
+        assert_eq!(a.undirected_edges(), expect);
+        assert_eq!(a.targets, b.targets, "same seed, same graph");
+        assert_ne!(a.targets, c.targets, "different seed, different graph");
+        assert!(a.max_degree() <= DEGREE_CAP);
+        // preferential attachment makes hubs: some PE beats the mean degree
+        assert!(a.max_degree() > 2 * 2);
+        for k in 0..a.pes() {
+            assert!(a.degree(k) >= 2, "every PE keeps at least its m links");
+        }
+    }
+
+    #[test]
+    fn random_regular_is_exactly_regular_and_deterministic() {
+        let a = Topology::RandomRegular { l: 32, k: 4, seed: 11 }.neighbour_table();
+        let b = Topology::RandomRegular { l: 32, k: 4, seed: 11 }.neighbour_table();
+        let c = Topology::RandomRegular { l: 32, k: 4, seed: 12 }.neighbour_table();
+        for k in 0..a.pes() {
+            assert_eq!(a.degree(k), 4, "PE {k} degree");
+        }
+        assert_eq!(a.undirected_edges(), 32 * 4 / 2);
+        assert_eq!(a.targets, b.targets, "same seed, same graph");
+        assert_ne!(a.targets, c.targets, "different seed, different graph");
+        // odd-degree sum is impossible: the constructor must reject it
+        let odd = std::panic::catch_unwind(|| {
+            Topology::RandomRegular { l: 5, k: 3, seed: 1 }.neighbour_table()
+        });
+        assert!(odd.is_err(), "l*k odd must be rejected");
+    }
+
+    #[test]
+    fn undirected_edges_is_half_of_directed_for_all_families() {
+        for topo in all_test_topologies() {
+            let t = topo.neighbour_table();
+            assert_eq!(t.edges() % 2, 0, "{topo:?}: symmetric tables have even directed count");
+            assert_eq!(t.undirected_edges(), t.edges() / 2, "{topo:?}");
+        }
     }
 
     #[test]
@@ -404,6 +627,8 @@ mod tests {
         assert_eq!(Topology::Ring { l: 7 }.len(), 7);
         assert_eq!(Topology::KRing { l: 7, k: 2 }.len(), 7);
         assert_eq!(Topology::SmallWorld { l: 7, extra: 2, seed: 0 }.len(), 7);
+        assert_eq!(Topology::ScaleFree { l: 7, m: 2, seed: 0 }.len(), 7);
+        assert_eq!(Topology::RandomRegular { l: 8, k: 3, seed: 0 }.len(), 8);
         assert_eq!(Topology::Square { side: 4 }.len(), 16);
         assert_eq!(Topology::Cubic { side: 3 }.len(), 27);
         assert!(!Topology::Ring { l: 3 }.is_empty());
@@ -425,6 +650,14 @@ mod tests {
                 Topology::SmallWorld { l: 64, extra: 16, seed: 20020601 },
                 "sw:64:16:20020601",
             ),
+            (
+                Topology::ScaleFree { l: 256, m: 2, seed: 20020601 },
+                "sf:256:2:20020601",
+            ),
+            (
+                Topology::RandomRegular { l: 256, k: 4, seed: 20020601 },
+                "rr:256:4:20020601",
+            ),
             (Topology::Square { side: 16 }, "square:16"),
             (Topology::Cubic { side: 8 }, "cubic:8"),
         ];
@@ -435,5 +668,7 @@ mod tests {
         assert!(Topology::parse_spec("torus:8").is_err());
         assert!(Topology::parse_spec("ring:8:9").is_err());
         assert!(Topology::parse_spec("ring:x").is_err());
+        assert!(Topology::parse_spec("sf:8:2").is_err());
+        assert!(Topology::parse_spec("rr:8:2:x").is_err());
     }
 }

@@ -137,14 +137,26 @@ impl StepStats {
     }
 
     /// Mean virtual time τ̄ for a row of `l` PEs.
+    ///
+    /// An empty row (`l == 0`, as the degenerate shard-plan tests build)
+    /// has no PEs to average over: return 0.0 rather than the 0/0 NaN that
+    /// would otherwise propagate silently into [`HorizonFrame`] and TSVs.
     #[inline]
     pub fn mean(&self, l: usize) -> f64 {
+        if l == 0 {
+            return 0.0;
+        }
         self.sum / l as f64
     }
 
     /// Utilization u = n_updated / L for a row of `l` PEs.
+    ///
+    /// 0.0 for `l == 0` (no PEs can have updated), matching [`Self::mean`].
     #[inline]
     pub fn utilization(&self, l: usize) -> f64 {
+        if l == 0 {
+            return 0.0;
+        }
         self.n_updated as f64 / l as f64
     }
 }
@@ -153,6 +165,11 @@ impl StepStats {
 ///
 /// `n_updated` is the number of PEs that updated in the step that produced
 /// this snapshot (u = n_updated / L, as in the paper's per-step counting).
+///
+/// Empty-slice audit: a zero-length snapshot panics via the fused path's
+/// `assert!(l > 0)` instead of silently filling the frame with NaN — frames
+/// only exist for rows with PEs; empty rows stop at [`StepStats`], whose
+/// `mean`/`utilization` answer 0.0.
 pub fn horizon_frame(tau: &[f64], n_updated: usize) -> HorizonFrame {
     horizon_frame_fused(tau, &StepStats::measure(tau, n_updated as u32))
 }
@@ -269,6 +286,28 @@ mod tests {
         assert_eq!(s.spread(), 3.0);
         assert_eq!(s.mean(4), 2.375);
         assert_eq!(s.utilization(4), 0.5);
+    }
+
+    #[test]
+    fn empty_row_stats_are_zero_not_nan() {
+        // l = 0 rows exist in the degenerate shard-plan tests; 0/0 NaN must
+        // not leak into frames or TSVs.  measure([]) keeps min/max at ±∞
+        // (the merge identity), but mean/utilization are defined as 0.0.
+        let s = StepStats::measure(&[], 0);
+        assert_eq!(s.mean(0), 0.0);
+        assert_eq!(s.utilization(0), 0.0);
+        assert!(!s.mean(0).is_nan());
+        assert!(!s.utilization(0).is_nan());
+        assert_eq!(s.min, f64::INFINITY);
+        assert_eq!(s.max, f64::NEG_INFINITY);
+        // the identity element answers the same way
+        let id = StepStats::identity();
+        assert_eq!(id.mean(0), 0.0);
+        assert_eq!(id.utilization(0), 0.0);
+        // a non-empty aggregate is untouched by the guard
+        let n = StepStats::measure(&[3.0, 1.0], 1);
+        assert_eq!(n.mean(2), 2.0);
+        assert_eq!(n.utilization(2), 0.5);
     }
 
     #[test]

@@ -34,6 +34,7 @@ fn plan() -> SweepPlan {
                 steps: 0,
                 seed: 7,
                 streams: StreamFamily::Pe,
+                control: repro::coordinator::Control::Static,
             },
             40,
             40,

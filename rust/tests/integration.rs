@@ -85,6 +85,7 @@ fn artifact_and_native_paths_agree_statistically() {
             steps: 96,
             seed: 18,
             streams: repro::pdes::StreamFamily::RowV1,
+            control: repro::coordinator::Control::Static,
         });
         for lane in [Lane::U, Lane::W, Lane::Wa] {
             let a = jax.tail_mean(lane, 0.25);
@@ -129,6 +130,7 @@ fn steady_state_campaign_reproduces_u_inf_trend() {
                 steps: 0,
                 seed: 5,
                 streams: repro::pdes::StreamFamily::RowV1,
+                control: repro::coordinator::Control::Static,
             },
             1500,
             1500,
@@ -152,6 +154,7 @@ fn window_bounds_width_at_scale() {
             steps: 0,
             seed: 6,
             streams: repro::pdes::StreamFamily::RowV1,
+            control: repro::coordinator::Control::Static,
         },
         1000,
         1000,
