@@ -18,7 +18,10 @@
 //! measurement pairs `measure_fused/...` / `measure_split/...` over the
 //! same grid — the fused path must win at every (B, L) — plus (since the
 //! declarative-campaign PR) the scheduler-throughput grid
-//! `campaign/points_W{1,2,4}` (items = sweep points through `run_plan`).
+//! `campaign/points_W{1,2,4}` (items = sweep points through `run_plan`),
+//! plus (since the decision-kernel PR) the isolated decide-pass grid
+//! `decide_kernel/{scalar,simd}_L{1e4,1e5}_B{1,4,8}` whose acceptance
+//! bar is simd >= 1.8x scalar at L = 1e5, B = 8 under AVX2.
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -26,8 +29,8 @@ use std::time::Duration;
 use repro::bench::{compare_against_baseline, BenchReport, Bencher};
 use repro::coordinator::{run_plan, CampaignOpts, RunSpec, SweepPlan, SweepPoint};
 use repro::pdes::{
-    BatchPdes, InstrumentedRing, LatticePdes, Mode, ModelSpec, RingPdes, ShardedPdes,
-    StreamFamily, Topology, VolumeLoad,
+    kernel_provenance, simd_supported, ActiveKernel, BatchPdes, InstrumentedRing, LatticePdes,
+    Mode, ModelSpec, RingPdes, ShardedPdes, StreamFamily, Topology, VolumeLoad,
 };
 use repro::rng::Rng;
 use repro::stats::{horizon_frame, horizon_frame_fused, StepStats};
@@ -67,10 +70,17 @@ fn main() {
     } else {
         Bencher::new(Duration::from_millis(200), Duration::from_secs(1), 7)
     };
-    let mut report = BenchReport::new(
-        "hotpath",
+    // Provenance records the detected ISA and the kernel the decide pass
+    // dispatches to on THIS machine (ISSUE 9) — the numbers in the JSON
+    // are meaningless without it.  kernel_provenance() emits plain
+    // `key=value` pairs (no quotes/backslashes), which BenchReport
+    // requires of its provenance string.
+    let provenance = format!(
+        "{}; {}",
         if quick { "quick run" } else { "full run" },
+        kernel_provenance(),
     );
+    let mut report = BenchReport::new("hotpath", &provenance);
 
     println!("# hotpath microbenches (items = PE-steps unless noted)");
 
@@ -134,6 +144,44 @@ fn main() {
                 std::hint::black_box(sim.counts()[0]);
             });
             report.push(&name, items, m);
+        }
+    }
+
+    // Decision-kernel grid (ISSUE 9): the decide pass in isolation —
+    // `decide_only()` runs exactly the lane-blocked kernel dispatch that
+    // `step_masked` uses (fused Eq. 3 window compare included) and
+    // nothing else, so scalar-vs-SIMD ratios here are pure kernel
+    // speedups, not diluted by the RNG-bound update pass.  The
+    // acceptance bar is >= 1.8x at L = 1e5, B = 8 with AVX2 (summary
+    // below).  Without AVX2 the simd cases are skipped — the committed
+    // BENCH_2.json provenance documents the arming procedure.
+    for &l in &[10_000usize, 100_000] {
+        for &rows in &[1usize, 4, 8] {
+            let mut sim = BatchPdes::with_streams(
+                Topology::Ring { l },
+                VolumeLoad::Sites(1),
+                Mode::Windowed { delta: 10.0 },
+                rows,
+                6,
+                0,
+            );
+            let warm = if l >= 100_000 { 30 } else { 150 };
+            for _ in 0..warm {
+                sim.step();
+            }
+            let items = (l * rows) as f64;
+            let mut kernels = vec![("scalar", ActiveKernel::Scalar)];
+            if simd_supported() {
+                kernels.push(("simd", ActiveKernel::SimdAvx2));
+            }
+            for (tag, kernel) in kernels {
+                sim.set_decide_kernel(kernel);
+                let name = format!("decide_kernel/{tag}_L{l}_B{rows}");
+                let m = b.report(&name, items, || {
+                    std::hint::black_box(sim.decide_only());
+                });
+                report.push(&name, items, m);
+            }
         }
     }
 
@@ -451,6 +499,31 @@ fn main() {
                 println!("# pe scaling L{l} W{workers}: x{:.2} vs W1{note}", tw / b1);
             }
         }
+    }
+
+    // decide-kernel summary: SIMD speedup over scalar on the isolated
+    // decide pass; the tentpole bar is >= 1.8x at L = 1e5, B = 8
+    if simd_supported() {
+        for &l in &[10_000usize, 100_000] {
+            for &rows in &[1usize, 4, 8] {
+                let scalar = report.throughput_of(&format!("decide_kernel/scalar_L{l}_B{rows}"));
+                let simd = report.throughput_of(&format!("decide_kernel/simd_L{l}_B{rows}"));
+                if let (Some(s), Some(v)) = (scalar, simd) {
+                    let note = if l == 100_000 && rows == 8 {
+                        if v / s >= 1.8 {
+                            " (acceptance: >= 1.8x — PASS)"
+                        } else {
+                            " (acceptance: >= 1.8x — FAIL)"
+                        }
+                    } else {
+                        ""
+                    };
+                    println!("# decide kernel L{l} B{rows}: simd x{:.2} vs scalar{note}", v / s);
+                }
+            }
+        }
+    } else {
+        println!("# decide kernel: AVX2 unavailable on this machine — simd cases skipped");
     }
 
     // model-payload summary: NoModel must be free (ratio ≈ 1 vs the

@@ -32,15 +32,21 @@
 //!   scheduling — the property that lets [`super::ShardedPdes`]
 //!   parallelize the update sweep inside a row.
 //!
-//! §Perf (DESIGN.md): the hot path is fused and allocation-free.  There is
-//! no double buffer — after the frozen decision pass each PE's update
-//! depends only on its own τ, so updates land in place and idle PEs cost
-//! no copy.  Each row's [`StepStats`] (min/sum/max + update count) is a
-//! by-product of the update sweep, which removes both the windowed-GVT
-//! rescan at the top of the step and the first pass of `horizon_frame`;
-//! a periodic exact rescan (`gvt_resync_period`) guards the tracked
-//! aggregates against drift.
+//! §Perf (DESIGN.md): the step is two passes over the `(B, L)` block.
+//! The *decision* pass is RNG-free and runs through the lane-blocked
+//! `pdes::kernel` dispatch (scalar or AVX2 at runtime, bit-identical by
+//! construction — see `kernel.rs`), filling the whole `(B, L)` verdict
+//! buffer with the Eq. 3 window compare fused into the same mask.  The
+//! *update* pass then lands in place — no double buffer: every decision
+//! was fixed against the frozen horizon before any write, and after that
+//! each PE's update depends only on its own τ, so idle PEs cost no copy.
+//! Each row's [`StepStats`] (min/sum/max + update count) is a by-product
+//! of the update sweep, which removes both the windowed-GVT rescan at the
+//! top of the step and the first pass of `horizon_frame`; a periodic
+//! exact rescan (`gvt_resync_period`) guards the tracked aggregates
+//! against drift.
 
+use super::kernel::{self, ActiveKernel, DecideKind};
 use super::model::Model;
 use super::topology::{NeighbourTable, Topology};
 use super::{Mode, VolumeLoad};
@@ -124,9 +130,13 @@ pub struct BatchPdes {
     tau: Vec<f64>,
     /// Pending-event classes, row-major `(B, L)`.
     pend: Vec<u8>,
-    /// Decision scratch for one row (generic-topology pass only; the ring
-    /// and window-only paths fuse decide/update into one sweep).
+    /// Frozen-horizon decision verdicts, row-major `(B, L)`, filled by
+    /// the lane-blocked `pdes::kernel` dispatch at the top of every step
+    /// (before any write to the horizon lands).
     ok: Vec<bool>,
+    /// Reusable per-row window-edge scratch: Δ + tracked GVT, or +inf
+    /// when Eq. 3 is off.
+    edges: Vec<f64>,
     /// Per-row updated-PE count of the latest step.
     counts: Vec<u32>,
     /// Per-row fused measurement aggregates of the latest step: min (the
@@ -150,11 +160,17 @@ pub struct BatchPdes {
     /// fused hot path with no model branches anywhere in the sweep.
     models: Vec<Box<dyn Model>>,
     t: u64,
-    /// Honest two-neighbour ring: the topology tag *and* the supplied
-    /// table agree on `[left, right]` ring adjacency.  Precondition of the
-    /// fused two-sided fast path (at N_V = 1) and of the sharded engine's
-    /// halo decision kernel (`pdes::sharded`).
-    ring2: bool,
+    /// Neighbour-access strategy of the decision kernels, classified from
+    /// the topology *and* the supplied table at construction
+    /// (`kernel::classify`): gather-free ring halo, strided k-ring, or
+    /// generic CSR.  Shared with the sharded engine via [`StepParts`].
+    kind: DecideKind,
+    /// Dispatched decision kernel (scalar or AVX2), resolved once at
+    /// construction from `REPRO_KERNEL` + runtime feature detection so an
+    /// engine's kernel never changes mid-trajectory.  Trajectory-invisible
+    /// by construction; see `pdes::kernel` and
+    /// [`Self::set_decide_kernel`].
+    kernel: ActiveKernel,
     /// Exact-rescan period for the tracked aggregates (steps).
     resync_period: u64,
 }
@@ -254,18 +270,12 @@ impl BatchPdes {
                 }
             }
         }
-        // The two-sided fast path and the sharded halo kernel hard-code
-        // ring adjacency, so it must be earned from the *table* actually
+        // The ring/k-ring decision kernels hard-code ring adjacency, so
+        // the fast kinds must be earned from the *table* actually
         // supplied, not just the enum — a custom table paired with a Ring
-        // tag falls back to the generic (table-honouring) pass instead of
-        // silently using the wrong graph.
-        let ring2 = matches!(topology, Topology::Ring { .. })
-            && (0..pes).all(|k| {
-                let nb = nbr.neighbours(k);
-                nb.len() == 2
-                    && nb[0] == ((k + pes - 1) % pes) as u32
-                    && nb[1] == ((k + 1) % pes) as u32
-            });
+        // tag falls back to the generic CSR (table-honouring) kernel
+        // instead of silently using the wrong graph.
+        let kind = kernel::classify(topology, &nbr);
         Self {
             rows,
             pes,
@@ -273,7 +283,8 @@ impl BatchPdes {
             nbr,
             tau: vec![0.0; rows * pes],
             pend,
-            ok: vec![false; pes],
+            ok: vec![false; rows * pes],
+            edges: Vec::with_capacity(rows),
             counts: vec![0; rows],
             // the paper's initial condition is the all-zero horizon, whose
             // aggregates are exactly zero
@@ -286,7 +297,8 @@ impl BatchPdes {
             rngs_pe,
             models: Vec::new(),
             t: 0,
-            ring2,
+            kind,
+            kernel: kernel::active_kernel(),
             resync_period: GVT_RESYNC_PERIOD,
         }
     }
@@ -458,6 +470,30 @@ impl BatchPdes {
         self.resync_period = period;
     }
 
+    /// The decision kernel this engine dispatches (resolved once at
+    /// construction from `REPRO_KERNEL` + runtime feature detection).
+    #[inline]
+    pub fn decide_kernel(&self) -> ActiveKernel {
+        self.kernel
+    }
+
+    /// Override the dispatched decision kernel without touching the
+    /// environment — the race-free hook the equivalence tests and the
+    /// `decide_kernel` bench grid use.  Trajectory-invisible by
+    /// construction (decisions are RNG-free exact f64 compares; pinned by
+    /// the `kernel_*` test suite and the golden fixtures).
+    ///
+    /// Requesting [`ActiveKernel::SimdAvx2`] on a machine without AVX2
+    /// clamps to scalar, upholding the dispatch-safety invariant that the
+    /// AVX2 kernel only ever runs behind positive feature detection.
+    pub fn set_decide_kernel(&mut self, kernel: ActiveKernel) {
+        self.kernel = if kernel == ActiveKernel::SimdAvx2 && !kernel::simd_supported() {
+            ActiveKernel::Scalar
+        } else {
+            kernel
+        };
+    }
+
     /// Change the window width Δ mid-run (the autotuning hook).
     ///
     /// Safe by construction: `step_masked` reads `self.mode` fresh at the
@@ -515,40 +551,95 @@ impl BatchPdes {
         }
     }
 
+    /// The frozen-horizon decision pass over every row: refresh the
+    /// per-row window edges (Δ + tracked GVT, +inf when Eq. 3 is off) and
+    /// fill the whole `(B, L)` verdict buffer through the lane-blocked
+    /// `pdes::kernel` dispatch.  RNG-free and idempotent — it reads only
+    /// `tau`/`pend`/`stats`, so running it twice (or benchmarking it in a
+    /// loop, see [`Self::decide_only`]) is trajectory-invisible.
+    fn decide_all(&mut self) {
+        let pes = self.pes;
+        let enforce_win = self.mode.enforces_window();
+        let delta = self.mode.delta();
+        // modes without Eq. 1 drop the neighbour constraint entirely —
+        // the verdict degenerates to the local window compare
+        let kind = if self.mode.enforces_nn() {
+            self.kind
+        } else {
+            DecideKind::Local
+        };
+        self.edges.clear();
+        self.edges.extend(self.stats.iter().map(|s| {
+            if enforce_win {
+                delta + s.min
+            } else {
+                f64::INFINITY
+            }
+        }));
+        let mut rows_ok: Vec<&mut [bool]> = self.ok.chunks_mut(pes).collect();
+        for (g, lanes) in rows_ok.chunks_mut(kernel::LANE).enumerate() {
+            kernel::decide_tile(
+                &self.tau,
+                &self.pend,
+                pes,
+                &self.nbr,
+                &self.edges,
+                g * kernel::LANE,
+                0,
+                kind,
+                self.kernel,
+                lanes,
+            );
+        }
+    }
+
+    /// Run the decision pass alone and return the number of PEs whose
+    /// verdict is "advance".  Diagnostic / bench hook for the
+    /// `decide_kernel` grid in `benches/hotpath.rs`: RNG-free and
+    /// trajectory-invisible (the next step recomputes the verdicts from
+    /// the same frozen horizon).
+    pub fn decide_only(&mut self) -> u32 {
+        self.decide_all();
+        self.ok.iter().map(|&b| u32::from(b)).sum()
+    }
+
     /// One parallel step of every row; optionally records the `(B, L)`
     /// per-PE update mask.  Per-row updated counts land in [`Self::counts`]
     /// and fused measurement aggregates in [`Self::step_stats`].
     ///
-    /// §Perf (DESIGN.md): the hot path is fused and allocation-free.  The
-    /// ring + N_V = 1 configuration and the window-only / free modes run
-    /// decide + update + measure as ONE in-place sweep per row (the ring
-    /// sweep carries the frozen left-neighbour value in a register, so no
-    /// scratch horizon is needed); the generic-topology pass keeps the
-    /// decide/update split — decisions must all be fixed against the
-    /// frozen row before in-place writes land — but fuses measurement
-    /// into the update sweep and writes only updating PEs.  The window
-    /// edge comes from the tracked GVT, not a rescan.
+    /// §Perf (DESIGN.md): two passes.  The decision pass fixes every
+    /// verdict against the frozen horizon through the lane-blocked
+    /// `pdes::kernel` dispatch (LANE ensemble rows of one PE column per
+    /// iteration; the window edge from the tracked GVT is fused into the
+    /// same mask — no rescan).  The update pass then sweeps each row in
+    /// place, drawing only for updating PEs in PE order, with measurement
+    /// aggregates as a by-product.  Splitting decide out of the per-row
+    /// loop is trajectory-invisible: decisions consume no randomness, so
+    /// the draw sequence is exactly the historical fused sweeps' (pinned
+    /// by `drawless_payloads_are_trajectory_invisible` and the golden
+    /// fixtures).
     pub fn step_masked(&mut self, mut mask: Option<&mut [bool]>) {
         let rows = self.rows;
         let pes = self.pes;
         if let Some(m) = mask.as_deref_mut() {
             assert_eq!(m.len(), rows * pes);
         }
-        let enforce_nn = self.mode.enforces_nn();
-        let enforce_win = self.mode.enforces_window();
-        let delta = self.mode.delta();
         // per-slot border probability, present only when pending events
         // are redrawn after execution (finite N_V > 1 under Eq. 1)
-        let redraw = if enforce_nn && !self.nv1 {
+        let redraw = if self.mode.enforces_nn() && !self.nv1 {
             Some(self.p_side)
         } else {
             None
         };
-        // the two-sided fast path only applies when Eq. 1 is enforced at
-        // all — RD modes at N_V = 1 must skip the neighbour check entirely
-        let ring_fast = enforce_nn && self.nv1 && self.ring2;
         let family = self.family;
 
+        // --- decision pass (reads the frozen block; no RNG)
+        self.decide_all();
+        if let Some(m) = mask.as_deref_mut() {
+            m.copy_from_slice(&self.ok);
+        }
+
+        // --- per-row fused update + measurement passes (in place)
         let Self {
             tau,
             pend,
@@ -567,87 +658,53 @@ impl BatchPdes {
 
         for row in 0..rows {
             let base = row * pes;
-            // Window edge from the row's tracked GVT (the frozen horizon's
-            // minimum, maintained by the previous step's update sweep);
-            // +inf when Eq. 3 is off.
-            let edge = if enforce_win {
-                delta + stats[row].min
-            } else {
-                f64::INFINITY
-            };
             let rng = &mut rngs[row];
             let row_tau = &mut tau[base..base + pes];
-            let row_mask = mask.as_deref_mut().map(|m| &mut m[base..base + pes]);
+            let row_pend = &mut pend[base..base + pes];
+            let row_ok = &ok[base..base + pes];
 
             let s = if family == StreamFamily::Pe {
-                // per-PE family: the split decide/update shape for every
-                // mode (same frozen-row decision argument as the model
-                // path below), with every updating PE drawing pend
-                // redraw → payload event → exponential from its own
-                // stream.  Row aggregates come from a linear
-                // `StepStats::measure` over the final row — the exact
-                // fold the sharded engine runs after its parallel
-                // block sweep, so the two engines agree to the bit.
-                let row_pend = &mut pend[base..base + pes];
-                decide_row_generic(row_tau, row_pend, nbr, edge, ok);
-                if let Some(m) = row_mask {
-                    m.copy_from_slice(&ok[..]);
-                }
+                // per-PE family: every updating PE draws pend redraw →
+                // payload event → exponential from its own stream.  Row
+                // aggregates come from a linear `StepStats::measure` over
+                // the final row — the exact fold the sharded engine runs
+                // after its parallel block sweep, so the two engines
+                // agree to the bit.
                 let row_rngs = &mut rngs_pe[base..base + pes];
                 let n_up = if has_model {
                     update_row_model_pe(
                         row_tau,
                         row_pend,
                         nbr,
-                        ok,
+                        row_ok,
                         redraw,
                         row_rngs,
                         models[row].as_mut(),
                         t_now,
                     )
                 } else {
-                    update_row_pe(row_tau, row_pend, nbr, ok, redraw, row_rngs)
+                    update_row_pe(row_tau, row_pend, nbr, row_ok, redraw, row_rngs)
                 };
                 StepStats::measure(row_tau, n_up)
             } else if has_model {
-                // model-payload path: the split decide/update shape for
-                // every mode (decisions over the frozen row are
-                // bit-identical to the fused sweeps' — the §Perf in-place
-                // safety argument — and RD modes keep pend at
-                // PEND_INTERIOR, which the generic decision pass treats
-                // as "no neighbour check"), with the payload hook fired
-                // per updating PE between the pend redraw and the
-                // exponential draw (the pdes::model draw-order contract)
-                let row_pend = &mut pend[base..base + pes];
-                decide_row_generic(row_tau, row_pend, nbr, edge, ok);
-                if let Some(m) = row_mask {
-                    m.copy_from_slice(&ok[..]);
-                }
+                // model-payload path: the payload hook fires per updating
+                // PE between the pend redraw and the exponential draw
+                // (the pdes::model draw-order contract)
                 update_row_model(
                     row_tau,
                     row_pend,
                     nbr,
-                    ok,
+                    row_ok,
                     redraw,
                     rng,
                     models[row].as_mut(),
                     t_now,
                 )
-            } else if ring_fast {
-                step_row_ring_nv1(row_tau, edge, rng, row_mask)
-            } else if enforce_nn {
-                let row_pend = &mut pend[base..base + pes];
-                // --- decision pass (reads the frozen row; no RNG)
-                decide_row_generic(row_tau, row_pend, nbr, edge, ok);
-                if let Some(m) = row_mask {
-                    m.copy_from_slice(&ok[..]);
-                }
-                // --- fused update + measurement pass (in place)
-                update_row_generic(row_tau, row_pend, nbr, ok, redraw, rng)
             } else {
-                // window-only (Eq. 3 alone) or free (RD): each PE's
-                // decision is local, so decide/update/measure fuse fully
-                step_row_local(row_tau, edge, rng, row_mask)
+                // plain RowV1: draws land in PE order from the row
+                // stream — updating PEs only — which is exactly the
+                // historical fused sweeps' draw sequence, for every mode
+                update_row_generic(row_tau, row_pend, nbr, row_ok, redraw, rng)
             };
             counts[row] = s.n_updated;
             stats[row] = s;
@@ -679,7 +736,8 @@ impl BatchPdes {
             mode: self.mode,
             p_side: self.p_side,
             nv1: self.nv1,
-            ring2: self.ring2,
+            kind: self.kind,
+            kernel: self.kernel,
             family: self.family,
             t: self.t,
             tau: &mut self.tau,
@@ -712,7 +770,10 @@ pub(crate) struct StepParts<'a> {
     pub mode: Mode,
     pub p_side: f64,
     pub nv1: bool,
-    pub ring2: bool,
+    /// Decision-kernel neighbour strategy (`kernel::classify` result).
+    pub kind: DecideKind,
+    /// Dispatched decision kernel of the owning engine.
+    pub kernel: ActiveKernel,
     pub family: StreamFamily,
     /// Current parallel step index (payload events stamp it).
     pub t: u64,
@@ -726,120 +787,6 @@ pub(crate) struct StepParts<'a> {
     /// One payload per row, or empty when no model is attached.
     pub models: &'a mut [Box<dyn Model>],
     pub nbr: &'a NeighbourTable,
-}
-
-/// Fused decide + update + measure sweep for the ring + N_V = 1 fast path
-/// (every check two-sided).  Works in place on the single horizon buffer:
-/// PE k's decision reads its frozen left neighbour from a register (`prev`
-/// holds τ_{k−1} as it was *before* any update this step), its right
-/// neighbour from the buffer (not yet written), and the row boundary
-/// values saved up front — bit-identical decisions to the historical
-/// split decision pass over a frozen copy.
-fn step_row_ring_nv1(
-    row_tau: &mut [f64],
-    edge: f64,
-    rng: &mut Rng,
-    mut mask: Option<&mut [bool]>,
-) -> StepStats {
-    let pes = row_tau.len();
-    let first = row_tau[0];
-    let mut prev = row_tau[pes - 1]; // frozen left neighbour of PE 0
-    let mut n_up = 0u32;
-    let (mut mn, mut mx, mut sum) = (f64::INFINITY, f64::NEG_INFINITY, 0.0);
-    for k in 0..pes {
-        let cur = row_tau[k];
-        let right = if k + 1 == pes { first } else { row_tau[k + 1] };
-        let up = (cur <= prev) & (cur <= right) & (cur <= edge);
-        let mut v = cur;
-        if up {
-            n_up += 1;
-            v = cur + rng.exponential();
-            row_tau[k] = v;
-        }
-        if let Some(m) = mask.as_deref_mut() {
-            m[k] = up;
-        }
-        prev = cur;
-        mn = mn.min(v);
-        mx = mx.max(v);
-        sum += v;
-    }
-    StepStats {
-        n_updated: n_up,
-        sum,
-        min: mn,
-        max: mx,
-    }
-}
-
-/// Fused decide + update + measure sweep for modes without Eq. 1 (window-
-/// only RD, or free RD with `edge = +inf`): every PE's decision is local,
-/// so one in-place pass suffices.
-fn step_row_local(
-    row_tau: &mut [f64],
-    edge: f64,
-    rng: &mut Rng,
-    mut mask: Option<&mut [bool]>,
-) -> StepStats {
-    let mut n_up = 0u32;
-    let (mut mn, mut mx, mut sum) = (f64::INFINITY, f64::NEG_INFINITY, 0.0);
-    for (k, v) in row_tau.iter_mut().enumerate() {
-        let cur = *v;
-        let up = cur <= edge;
-        let mut x = cur;
-        if up {
-            n_up += 1;
-            x = cur + rng.exponential();
-            *v = x;
-        }
-        if let Some(m) = mask.as_deref_mut() {
-            m[k] = up;
-        }
-        mn = mn.min(x);
-        mx = mx.max(x);
-        sum += x;
-    }
-    StepStats {
-        n_updated: n_up,
-        sum,
-        min: mn,
-        max: mx,
-    }
-}
-
-/// Decision pass for arbitrary topologies: fix every PE's verdict against
-/// the frozen row before any in-place write lands.  §Perf: local row
-/// slices and a zipped CSR walk (`NeighbourTable::lists`) keep the k-
-/// indexed accesses bounds-check-free; only the neighbour gather
-/// `row_tau[j]` retains a check (j comes from the table, not the loop).
-fn decide_row_generic(
-    row_tau: &[f64],
-    row_pend: &[u8],
-    nbr: &NeighbourTable,
-    edge: f64,
-    ok: &mut [bool],
-) {
-    for ((okk, (&tk, &pd)), nb) in ok
-        .iter_mut()
-        .zip(row_tau.iter().zip(row_pend))
-        .zip(nbr.lists())
-    {
-        let nn_ok = match pd {
-            PEND_INTERIOR => true,
-            PEND_ALL => {
-                let mut fine = true;
-                for &j in nb {
-                    fine &= tk <= row_tau[j as usize];
-                }
-                fine
-            }
-            slot => {
-                let j = nb[(slot - 1) as usize];
-                tk <= row_tau[j as usize]
-            }
-        };
-        *okk = nn_ok & (tk <= edge);
-    }
 }
 
 /// Fused update + measure sweep for arbitrary topologies: in place, draws

@@ -1,0 +1,785 @@
+//! Branchless, lane-blocked decision kernels with runtime SIMD dispatch.
+//!
+//! The conservative update rule (Eq. 1: PE *i* advances iff
+//! τ_i ≤ min over its checked neighbours' τ, optionally ∧ τ_i ≤ GVT + Δ,
+//! Eq. 3) makes the decision phase a pure, RNG-free compare over the
+//! frozen `(B, L)` horizon — the one part of the step that is embarrassingly
+//! data-parallel in *both* directions.  This module vectorizes it
+//! **batch-vertically**: one iteration decides LANE ensemble rows of a
+//! single PE column, so the neighbour columns are shared across lanes and
+//! the pending-slot semantics collapse into one branchless mask formula:
+//!
+//! ```text
+//! for neighbour slot s (1-based):
+//!     required_s = (pend == PEND_ALL) | (pend == s)
+//!     verdict   &= !required_s | (τ ≤ τ_neighbour_s)
+//! verdict &= τ ≤ edge                  // the fused Eq. 3 window compare
+//! ```
+//!
+//! which reproduces the interior (`pend = 0` → no constraint required),
+//! all-sided (N_V = 1) and one-sided border cases of the historical
+//! `match`-based decision pass exactly.  Because decisions consume no
+//! randomness and `≤` on f64 is exact, any kernel that evaluates this
+//! formula produces **bit-identical trajectories** — scalar, AVX2, any
+//! lane count; the equivalence is pinned by the unit tests below, the
+//! `kernel_*` integration suite, the golden fixtures and the Python
+//! crosscheck.
+//!
+//! Three neighbour-access strategies ([`DecideKind`]) cover the topology
+//! zoo:
+//!
+//! * **Ring** — gather-free halo sweep: the frozen left/current/right
+//!   column lanes ride in registers across the strip, so each τ column is
+//!   loaded exactly once (the left neighbour of column k+1 *is* the
+//!   current column of k);
+//! * **KRing** — strided: neighbour columns at offsets ±d, d = 1..=k, are
+//!   computed arithmetically, no CSR lookup;
+//! * **Generic** — CSR gather through [`NeighbourTable`] (any topology,
+//!   honours the table verbatim).  `Local` drops the neighbour constraint
+//!   entirely (modes without Eq. 1).
+//!
+//! Dispatch is resolved at runtime: `REPRO_KERNEL=scalar|simd|auto`
+//! (default `auto`) picks between an autovectorizable fixed-width-array
+//! scalar kernel and `#[target_feature(enable = "avx2")]` f64 intrinsics
+//! guarded by `is_x86_feature_detected!` — stable Rust, no dependencies.
+//! Partial lane groups (B mod LANE ≠ 0) always take the scalar kernel at
+//! their exact width; full groups take whichever kernel is active.  The
+//! choice is sampled once per engine at construction
+//! ([`super::BatchPdes`] field) so an engine's kernel never changes
+//! mid-trajectory, and [`super::BatchPdes::set_decide_kernel`] overrides
+//! it without touching the environment (the race-free hook the
+//! equivalence tests use).
+
+use std::sync::Once;
+
+use super::batch::PEND_ALL;
+use super::topology::{NeighbourTable, Topology};
+
+/// Lane width of the blocked kernels: 4 ensemble rows per iteration, the
+/// f64 width of one AVX2 register.  The scalar kernel uses the same
+/// blocking (monomorphized per width ≤ LANE) so memory traffic — each τ
+/// column read once per lane block instead of once per row — is identical
+/// across dispatch choices.
+pub const LANE: usize = 4;
+
+/// User-requested kernel choice (the `REPRO_KERNEL` env knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// Best available: AVX2 when the CPU has it, scalar otherwise.
+    Auto,
+    /// Force the portable fixed-width-array scalar kernel.
+    Scalar,
+    /// Request the AVX2 kernel; warns once and falls back to scalar on
+    /// machines without AVX2 (never a crash, never silent).
+    Simd,
+}
+
+/// The kernel actually dispatched after feature detection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActiveKernel {
+    /// Fixed-width-array scalar lane blocks (portable, autovectorizable).
+    Scalar,
+    /// `#[target_feature(enable = "avx2")]` f64 intrinsics; only ever
+    /// constructed behind a positive `is_x86_feature_detected!("avx2")`.
+    SimdAvx2,
+}
+
+impl ActiveKernel {
+    /// Stable tag for bench names / provenance strings.
+    pub fn tag(self) -> &'static str {
+        match self {
+            ActiveKernel::Scalar => "scalar",
+            ActiveKernel::SimdAvx2 => "simd-avx2",
+        }
+    }
+}
+
+/// Parse a `REPRO_KERNEL` value.  Same contract as
+/// `coordinator::pool::parse_worker_env`: `None` means the value is
+/// garbage and the caller warns + falls back (to `auto`) — the kernel is
+/// never changed silently by a typo.
+pub(crate) fn parse_kernel_env(v: &str) -> Option<KernelChoice> {
+    match v.trim().to_ascii_lowercase().as_str() {
+        "auto" => Some(KernelChoice::Auto),
+        "scalar" => Some(KernelChoice::Scalar),
+        "simd" => Some(KernelChoice::Simd),
+        _ => None,
+    }
+}
+
+/// The requested kernel choice: `REPRO_KERNEL` when set and valid,
+/// warning once on stderr (and falling back to `auto`) when set to
+/// garbage, `auto` when unset.
+pub fn kernel_choice() -> KernelChoice {
+    match std::env::var("REPRO_KERNEL") {
+        Ok(v) => match parse_kernel_env(&v) {
+            Some(choice) => choice,
+            None => {
+                static WARNED: Once = Once::new();
+                WARNED.call_once(|| {
+                    eprintln!(
+                        "repro: REPRO_KERNEL={v:?} is not one of scalar|simd|auto; \
+                         falling back to auto"
+                    );
+                });
+                KernelChoice::Auto
+            }
+        },
+        Err(_) => KernelChoice::Auto,
+    }
+}
+
+/// True when the AVX2 f64 kernels can run on this machine (always false
+/// off x86_64 — the scalar kernel is the portable path).
+pub fn simd_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        return is_x86_feature_detected!("avx2");
+    }
+    #[allow(unreachable_code)]
+    false
+}
+
+/// Resolve a requested choice against the running CPU.  `Simd` on a
+/// machine without AVX2 warns once and degrades to scalar — the resolved
+/// value upholds the safety invariant that [`ActiveKernel::SimdAvx2`] is
+/// only ever produced after positive feature detection.
+pub fn resolve(choice: KernelChoice) -> ActiveKernel {
+    match choice {
+        KernelChoice::Scalar => ActiveKernel::Scalar,
+        KernelChoice::Auto => {
+            if simd_supported() {
+                ActiveKernel::SimdAvx2
+            } else {
+                ActiveKernel::Scalar
+            }
+        }
+        KernelChoice::Simd => {
+            if simd_supported() {
+                ActiveKernel::SimdAvx2
+            } else {
+                static WARNED: Once = Once::new();
+                WARNED.call_once(|| {
+                    eprintln!(
+                        "repro: REPRO_KERNEL=simd requested but AVX2 is unavailable \
+                         on this CPU; using the scalar kernel"
+                    );
+                });
+                ActiveKernel::Scalar
+            }
+        }
+    }
+}
+
+/// The kernel a fresh engine dispatches: `resolve(kernel_choice())`.
+pub fn active_kernel() -> ActiveKernel {
+    resolve(kernel_choice())
+}
+
+/// ISA + dispatch provenance for bench reports.  Deliberately contains no
+/// quotes or backslashes (the minimal JSON writer does not escape).
+pub fn kernel_provenance() -> String {
+    format!(
+        "isa={} kernel={}",
+        if simd_supported() { "avx2" } else { "baseline" },
+        active_kernel().tag()
+    )
+}
+
+/// Neighbour-access strategy of the decision kernels, classified once per
+/// engine from the topology/table pair ([`classify`]); `Local` is
+/// substituted per step when the mode does not enforce Eq. 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum DecideKind {
+    /// No neighbour constraint: verdict = (τ ≤ edge) only.
+    Local,
+    /// Honest 2-neighbour ring, slots `[left, right]`: gather-free halo
+    /// sweep with the lane columns carried in registers.
+    Ring,
+    /// Honest k-ring, slots `[left_1, right_1, .., left_k, right_k]`:
+    /// strided neighbour columns at ±d, no CSR lookup.
+    KRing { k: usize },
+    /// CSR gather through the table (any topology, honoured verbatim).
+    Generic,
+}
+
+/// Classify a topology/table pair.  Like the historical `ring2` check,
+/// the fast kinds must be *earned from the table actually supplied*, not
+/// just the enum tag — a custom table paired with a Ring/KRing tag falls
+/// back to the CSR kernel, which honours the table verbatim.  The k-ring
+/// check pins the exact canonical slot order `topology::ring_table`
+/// emits (interleaved left/right by increasing distance), because the
+/// strided kernel maps pending slots to offsets arithmetically.
+pub(crate) fn classify(topology: Topology, nbr: &NeighbourTable) -> DecideKind {
+    let pes = nbr.pes();
+    let is_ring_table = |k: usize| {
+        (0..pes).all(|p| {
+            let nb = nbr.neighbours(p);
+            nb.len() == 2 * k
+                && (0..k).all(|d| {
+                    nb[2 * d] == ((p + pes - (d + 1)) % pes) as u32
+                        && nb[2 * d + 1] == ((p + d + 1) % pes) as u32
+                })
+        })
+    };
+    match topology {
+        Topology::Ring { .. } if is_ring_table(1) => DecideKind::Ring,
+        Topology::KRing { k, .. } if is_ring_table(k) => DecideKind::KRing { k },
+        _ => DecideKind::Generic,
+    }
+}
+
+/// Decide one lane-blocked tile: rows `row0 .. row0 + lanes.len()` of the
+/// PE column strip `start .. start + lanes[0].len()`, verdicts written to
+/// `lanes[i][c]` for row `row0 + i`, column `start + c`.
+///
+/// `tau`/`pend` are the full frozen `(B, L)` blocks (read-only — phase-A
+/// safety is purely disjoint-write on the verdict lanes), `edges[row]` is
+/// each row's fused window edge (Δ + tracked GVT, or +inf).  Full LANE
+/// groups take the active kernel; partial groups (the B mod LANE tail)
+/// always take the scalar kernel at their exact width, which is
+/// bit-identical by the formula argument in the module docs.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn decide_tile(
+    tau: &[f64],
+    pend: &[u8],
+    pes: usize,
+    nbr: &NeighbourTable,
+    edges: &[f64],
+    row0: usize,
+    start: usize,
+    kind: DecideKind,
+    kernel: ActiveKernel,
+    lanes: &mut [&mut [bool]],
+) {
+    debug_assert!(!lanes.is_empty() && lanes.len() <= LANE);
+    let len = lanes[0].len();
+    debug_assert!(lanes.iter().all(|l| l.len() == len));
+    if len == 0 {
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if kernel == ActiveKernel::SimdAvx2 && lanes.len() == LANE {
+        // SAFETY: `SimdAvx2` is only ever constructed behind a positive
+        // `is_x86_feature_detected!("avx2")` (`resolve` and the
+        // `set_decide_kernel` clamp), so the target-feature contract of
+        // the callee holds on this machine.
+        unsafe { avx2::decide_tile_avx2(tau, pend, pes, nbr, edges, row0, start, kind, lanes) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = kernel;
+    match lanes.len() {
+        4 => decide_tile_scalar::<4>(tau, pend, pes, nbr, edges, row0, start, kind, lanes),
+        3 => decide_tile_scalar::<3>(tau, pend, pes, nbr, edges, row0, start, kind, lanes),
+        2 => decide_tile_scalar::<2>(tau, pend, pes, nbr, edges, row0, start, kind, lanes),
+        _ => decide_tile_scalar::<1>(tau, pend, pes, nbr, edges, row0, start, kind, lanes),
+    }
+}
+
+/// The portable lane-blocked kernel, monomorphized per lane count `N` so
+/// every per-lane loop runs over a fixed-width array — the shape LLVM
+/// autovectorizes without intrinsics.  Semantics identical to the AVX2
+/// path: the same branchless slot-mask formula, evaluated per lane.
+#[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+fn decide_tile_scalar<const N: usize>(
+    tau: &[f64],
+    pend: &[u8],
+    pes: usize,
+    nbr: &NeighbourTable,
+    edges: &[f64],
+    row0: usize,
+    start: usize,
+    kind: DecideKind,
+    lanes: &mut [&mut [bool]],
+) {
+    let len = lanes[0].len();
+    let mut base = [0usize; N];
+    let mut edge = [0.0f64; N];
+    for i in 0..N {
+        base[i] = (row0 + i) * pes;
+        edge[i] = edges[row0 + i];
+    }
+    match kind {
+        DecideKind::Local => {
+            for c in 0..len {
+                let k = start + c;
+                for i in 0..N {
+                    lanes[i][c] = tau[base[i] + k] <= edge[i];
+                }
+            }
+        }
+        DecideKind::Ring => {
+            // gather-free halo sweep: the frozen left/current/right column
+            // lanes ride in registers, so each τ column is loaded exactly
+            // once per lane block (the halo columns wrap around the ring,
+            // matching the sharded block decomposition).
+            let left_col = (start + pes - 1) % pes;
+            let right_halo = (start + len) % pes;
+            let mut left = [0.0f64; N];
+            let mut cur = [0.0f64; N];
+            for i in 0..N {
+                left[i] = tau[base[i] + left_col];
+                cur[i] = tau[base[i] + start];
+            }
+            for c in 0..len {
+                let k = start + c;
+                let next_col = if c + 1 == len { right_halo } else { k + 1 };
+                let mut right = [0.0f64; N];
+                for i in 0..N {
+                    right[i] = tau[base[i] + next_col];
+                }
+                for i in 0..N {
+                    let t = cur[i];
+                    let pd = pend[base[i] + k];
+                    // ring slot order is [left, right] → slots 1, 2
+                    let req_l = (pd == PEND_ALL) | (pd == 1);
+                    let req_r = (pd == PEND_ALL) | (pd == 2);
+                    lanes[i][c] = (!req_l | (t <= left[i]))
+                        & (!req_r | (t <= right[i]))
+                        & (t <= edge[i]);
+                }
+                left = cur;
+                cur = right;
+            }
+        }
+        DecideKind::KRing { k: reach } => {
+            for c in 0..len {
+                let col = start + c;
+                let mut cur = [0.0f64; N];
+                let mut ok = [false; N];
+                for i in 0..N {
+                    cur[i] = tau[base[i] + col];
+                    ok[i] = cur[i] <= edge[i];
+                }
+                for d in 1..=reach {
+                    let jl = (col + pes - d) % pes;
+                    let jr = (col + d) % pes;
+                    // canonical slot order [left_1, right_1, ..]: the
+                    // left/right neighbours at distance d own slots
+                    // 2d - 1 and 2d
+                    let sl = (2 * d - 1) as u8;
+                    let sr = (2 * d) as u8;
+                    for i in 0..N {
+                        let pd = pend[base[i] + col];
+                        let req_l = (pd == PEND_ALL) | (pd == sl);
+                        let req_r = (pd == PEND_ALL) | (pd == sr);
+                        ok[i] &= (!req_l | (cur[i] <= tau[base[i] + jl]))
+                            & (!req_r | (cur[i] <= tau[base[i] + jr]));
+                    }
+                }
+                for i in 0..N {
+                    lanes[i][c] = ok[i];
+                }
+            }
+        }
+        DecideKind::Generic => {
+            for c in 0..len {
+                let col = start + c;
+                let mut cur = [0.0f64; N];
+                let mut ok = [false; N];
+                for i in 0..N {
+                    cur[i] = tau[base[i] + col];
+                    ok[i] = cur[i] <= edge[i];
+                }
+                for (s, &j) in nbr.neighbours(col).iter().enumerate() {
+                    let slot = (s + 1) as u8;
+                    let j = j as usize;
+                    for i in 0..N {
+                        let pd = pend[base[i] + col];
+                        let req = (pd == PEND_ALL) | (pd == slot);
+                        ok[i] &= !req | (cur[i] <= tau[base[i] + j]);
+                    }
+                }
+                for i in 0..N {
+                    lanes[i][c] = ok[i];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! The `#[target_feature(enable = "avx2")]` lane kernels: one __m256d
+    //! holds the four ensemble-row lanes of a PE column.  Pending bytes
+    //! are lifted to f64 lanes (exact for 0..=255) so the slot-required
+    //! mask is two vector equality compares; comparison masks combine via
+    //! `andnot` exactly as the scalar boolean formula does.  Every helper
+    //! carries the same target-feature gate so the whole cluster inlines
+    //! into one AVX2 region.
+
+    use super::*;
+    use std::arch::x86_64::*;
+
+    /// Gather the four row lanes of τ column `col` (strided by `pes`).
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn load_cols(tau: &[f64], base: &[usize; 4], col: usize) -> __m256d {
+        _mm256_set_pd(
+            tau[base[3] + col],
+            tau[base[2] + col],
+            tau[base[1] + col],
+            tau[base[0] + col],
+        )
+    }
+
+    /// The four row lanes of the pending byte at column `col`, as f64.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn load_pend(pend: &[u8], base: &[usize; 4], col: usize) -> __m256d {
+        _mm256_set_pd(
+            f64::from(pend[base[3] + col]),
+            f64::from(pend[base[2] + col]),
+            f64::from(pend[base[1] + col]),
+            f64::from(pend[base[0] + col]),
+        )
+    }
+
+    /// Per-lane `(pend == PEND_ALL) | (pend == slot)` mask.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn slot_required(pv: __m256d, all: __m256d, slot: f64) -> __m256d {
+        _mm256_or_pd(
+            _mm256_cmp_pd::<_CMP_EQ_OQ>(pv, all),
+            _mm256_cmp_pd::<_CMP_EQ_OQ>(pv, _mm256_set1_pd(slot)),
+        )
+    }
+
+    /// Fold one slot constraint into the verdict:
+    /// `ok &= !(required & !cond)` — `andnot(cond, required)` is the
+    /// violation mask, `andnot(violation, ok)` clears violating lanes.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn apply(ok: __m256d, required: __m256d, cond: __m256d) -> __m256d {
+        _mm256_andnot_pd(_mm256_andnot_pd(cond, required), ok)
+    }
+
+    /// Scatter the verdict sign bits to the four lane slices.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn store_verdicts(ok: __m256d, lanes: &mut [&mut [bool]], c: usize) {
+        let m = _mm256_movemask_pd(ok);
+        lanes[0][c] = m & 1 != 0;
+        lanes[1][c] = m & 2 != 0;
+        lanes[2][c] = m & 4 != 0;
+        lanes[3][c] = m & 8 != 0;
+    }
+
+    /// AVX2 twin of `decide_tile_scalar::<4>` — same formula, same
+    /// column-sweep structure, vector lanes instead of arrays.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn decide_tile_avx2(
+        tau: &[f64],
+        pend: &[u8],
+        pes: usize,
+        nbr: &NeighbourTable,
+        edges: &[f64],
+        row0: usize,
+        start: usize,
+        kind: DecideKind,
+        lanes: &mut [&mut [bool]],
+    ) {
+        let len = lanes[0].len();
+        let base = [
+            row0 * pes,
+            (row0 + 1) * pes,
+            (row0 + 2) * pes,
+            (row0 + 3) * pes,
+        ];
+        let edge_v = _mm256_set_pd(
+            edges[row0 + 3],
+            edges[row0 + 2],
+            edges[row0 + 1],
+            edges[row0],
+        );
+        let all = _mm256_set1_pd(f64::from(PEND_ALL));
+        match kind {
+            DecideKind::Local => {
+                for c in 0..len {
+                    let cur = load_cols(tau, &base, start + c);
+                    store_verdicts(_mm256_cmp_pd::<_CMP_LE_OQ>(cur, edge_v), lanes, c);
+                }
+            }
+            DecideKind::Ring => {
+                let left_col = (start + pes - 1) % pes;
+                let right_halo = (start + len) % pes;
+                let mut left = load_cols(tau, &base, left_col);
+                let mut cur = load_cols(tau, &base, start);
+                for c in 0..len {
+                    let k = start + c;
+                    let next_col = if c + 1 == len { right_halo } else { k + 1 };
+                    let right = load_cols(tau, &base, next_col);
+                    let pv = load_pend(pend, &base, k);
+                    let mut ok = _mm256_cmp_pd::<_CMP_LE_OQ>(cur, edge_v);
+                    ok = apply(
+                        ok,
+                        slot_required(pv, all, 1.0),
+                        _mm256_cmp_pd::<_CMP_LE_OQ>(cur, left),
+                    );
+                    ok = apply(
+                        ok,
+                        slot_required(pv, all, 2.0),
+                        _mm256_cmp_pd::<_CMP_LE_OQ>(cur, right),
+                    );
+                    store_verdicts(ok, lanes, c);
+                    left = cur;
+                    cur = right;
+                }
+            }
+            DecideKind::KRing { k: reach } => {
+                for c in 0..len {
+                    let col = start + c;
+                    let cur = load_cols(tau, &base, col);
+                    let pv = load_pend(pend, &base, col);
+                    let mut ok = _mm256_cmp_pd::<_CMP_LE_OQ>(cur, edge_v);
+                    for d in 1..=reach {
+                        let jl = (col + pes - d) % pes;
+                        let jr = (col + d) % pes;
+                        ok = apply(
+                            ok,
+                            slot_required(pv, all, (2 * d - 1) as f64),
+                            _mm256_cmp_pd::<_CMP_LE_OQ>(cur, load_cols(tau, &base, jl)),
+                        );
+                        ok = apply(
+                            ok,
+                            slot_required(pv, all, (2 * d) as f64),
+                            _mm256_cmp_pd::<_CMP_LE_OQ>(cur, load_cols(tau, &base, jr)),
+                        );
+                    }
+                    store_verdicts(ok, lanes, c);
+                }
+            }
+            DecideKind::Generic => {
+                for c in 0..len {
+                    let col = start + c;
+                    let cur = load_cols(tau, &base, col);
+                    let pv = load_pend(pend, &base, col);
+                    let mut ok = _mm256_cmp_pd::<_CMP_LE_OQ>(cur, edge_v);
+                    for (s, &j) in nbr.neighbours(col).iter().enumerate() {
+                        ok = apply(
+                            ok,
+                            slot_required(pv, all, (s + 1) as f64),
+                            _mm256_cmp_pd::<_CMP_LE_OQ>(cur, load_cols(tau, &base, j as usize)),
+                        );
+                    }
+                    store_verdicts(ok, lanes, c);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn kernel_env_parsing_accepts_the_three_values_case_insensitively() {
+        assert_eq!(parse_kernel_env("auto"), Some(KernelChoice::Auto));
+        assert_eq!(parse_kernel_env("scalar"), Some(KernelChoice::Scalar));
+        assert_eq!(parse_kernel_env("simd"), Some(KernelChoice::Simd));
+        assert_eq!(parse_kernel_env("  SIMD \n"), Some(KernelChoice::Simd));
+        assert_eq!(parse_kernel_env("Auto"), Some(KernelChoice::Auto));
+        assert_eq!(parse_kernel_env("SCALAR"), Some(KernelChoice::Scalar));
+    }
+
+    #[test]
+    fn kernel_env_parsing_rejects_garbage() {
+        for bad in ["", "  ", "fast", "avx2", "sse", "1", "scalar,simd", "simd!"] {
+            assert_eq!(parse_kernel_env(bad), None, "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn kernel_resolve_upholds_the_detection_invariant() {
+        assert_eq!(resolve(KernelChoice::Scalar), ActiveKernel::Scalar);
+        let expect = if simd_supported() {
+            ActiveKernel::SimdAvx2
+        } else {
+            ActiveKernel::Scalar
+        };
+        assert_eq!(resolve(KernelChoice::Auto), expect);
+        assert_eq!(resolve(KernelChoice::Simd), expect);
+        // active_kernel() must never return SimdAvx2 on a non-AVX2 box
+        assert!(simd_supported() || active_kernel() == ActiveKernel::Scalar);
+    }
+
+    #[test]
+    fn kernel_classify_earns_fast_kinds_from_the_table() {
+        let ring = Topology::Ring { l: 12 };
+        assert_eq!(classify(ring, &ring.neighbour_table()), DecideKind::Ring);
+        let kring = Topology::KRing { l: 12, k: 2 };
+        assert_eq!(
+            classify(kring, &kring.neighbour_table()),
+            DecideKind::KRing { k: 2 }
+        );
+        let sw = Topology::SmallWorld { l: 12, extra: 4, seed: 3 };
+        assert_eq!(classify(sw, &sw.neighbour_table()), DecideKind::Generic);
+        // a Ring tag over a non-ring table must NOT claim the halo kernel
+        assert_eq!(
+            classify(ring, &kring.neighbour_table()),
+            DecideKind::Generic
+        );
+        assert_eq!(
+            classify(kring, &ring.neighbour_table()),
+            DecideKind::Generic
+        );
+    }
+
+    /// Reference decision: the historical match-based per-PE pass
+    /// (`decide_row_generic` semantics), the oracle every kernel must
+    /// reproduce bit for bit.
+    fn reference_decide(
+        tau: &[f64],
+        pend: &[u8],
+        pes: usize,
+        nbr: &NeighbourTable,
+        edges: &[f64],
+        rows: usize,
+        nn: bool,
+    ) -> Vec<bool> {
+        let mut ok = vec![false; rows * pes];
+        for row in 0..rows {
+            let base = row * pes;
+            for k in 0..pes {
+                let tk = tau[base + k];
+                let nb = nbr.neighbours(k);
+                let nn_ok = if !nn {
+                    true
+                } else {
+                    match pend[base + k] {
+                        crate::pdes::PEND_INTERIOR => true,
+                        PEND_ALL => nb.iter().all(|&j| tk <= tau[base + j as usize]),
+                        slot => tk <= tau[base + nb[(slot - 1) as usize] as usize],
+                    }
+                };
+                ok[base + k] = nn_ok && tk <= edges[row];
+            }
+        }
+        ok
+    }
+
+    /// Random (τ, pend, edges) state with heavy ties (τ drawn from a
+    /// small grid) so the ≤ boundary cases are exercised, pend covering
+    /// interior/all/every slot.
+    fn random_state(
+        rng: &mut Rng,
+        rows: usize,
+        pes: usize,
+        nbr: &NeighbourTable,
+    ) -> (Vec<f64>, Vec<u8>, Vec<f64>) {
+        let tau: Vec<f64> = (0..rows * pes)
+            .map(|_| (rng.uniform() * 8.0).floor() * 0.5)
+            .collect();
+        let pend: Vec<u8> = (0..rows * pes)
+            .map(|i| {
+                let z = nbr.degree(i % pes);
+                let u = rng.uniform();
+                if u < 0.25 {
+                    crate::pdes::PEND_INTERIOR
+                } else if u < 0.5 {
+                    PEND_ALL
+                } else {
+                    ((u * 977.0) as usize % z) as u8 + 1
+                }
+            })
+            .collect();
+        let edges: Vec<f64> = (0..rows)
+            .map(|r| if r % 3 == 0 { f64::INFINITY } else { (rng.uniform() * 8.0).floor() * 0.5 })
+            .collect();
+        (tau, pend, edges)
+    }
+
+    /// Run `decide_tile` over a whole (rows, pes) block in lane groups of
+    /// at most LANE, one column strip per group, with the given kernel.
+    fn kernel_decide(
+        tau: &[f64],
+        pend: &[u8],
+        pes: usize,
+        nbr: &NeighbourTable,
+        edges: &[f64],
+        rows: usize,
+        kind: DecideKind,
+        kernel: ActiveKernel,
+        strip: usize,
+    ) -> Vec<bool> {
+        let mut ok = vec![false; rows * pes];
+        let mut row_slices: Vec<&mut [bool]> = ok.chunks_mut(pes).collect();
+        for (g, group) in row_slices.chunks_mut(LANE).enumerate() {
+            let mut start = 0;
+            while start < pes {
+                let len = strip.min(pes - start);
+                let mut lanes: Vec<&mut [bool]> = group
+                    .iter_mut()
+                    .map(|r| &mut r[start..start + len])
+                    .collect();
+                decide_tile(
+                    tau,
+                    pend,
+                    pes,
+                    nbr,
+                    edges,
+                    g * LANE,
+                    start,
+                    kind,
+                    kernel,
+                    &mut lanes,
+                );
+                start += len;
+            }
+        }
+        ok
+    }
+
+    #[test]
+    fn kernel_tiles_match_the_reference_for_every_kind_and_width() {
+        let mut rng = Rng::for_stream(2002, 42);
+        let topos = [
+            Topology::Ring { l: 11 },
+            Topology::KRing { l: 13, k: 3 },
+            Topology::SmallWorld { l: 12, extra: 5, seed: 9 },
+            Topology::RandomRegular { l: 12, k: 4, seed: 4 },
+        ];
+        let mut kernels = vec![ActiveKernel::Scalar];
+        if simd_supported() {
+            kernels.push(ActiveKernel::SimdAvx2);
+        }
+        for topo in topos {
+            let nbr = topo.neighbour_table();
+            let pes = nbr.pes();
+            let kind = classify(topo, &nbr);
+            for rows in [1usize, 3, 4, 8, 9] {
+                let (tau, pend, edges) = random_state(&mut rng, rows, pes, &nbr);
+                for nn_kind in [kind, DecideKind::Local, DecideKind::Generic] {
+                    let want = reference_decide(
+                        &tau,
+                        &pend,
+                        pes,
+                        &nbr,
+                        &edges,
+                        rows,
+                        nn_kind != DecideKind::Local,
+                    );
+                    for &kernel in &kernels {
+                        for strip in [pes, 1, 5] {
+                            let got = kernel_decide(
+                                &tau, &pend, pes, &nbr, &edges, rows, nn_kind, kernel, strip,
+                            );
+                            assert_eq!(
+                                got, want,
+                                "{topo:?} rows={rows} kind={nn_kind:?} \
+                                 kernel={kernel:?} strip={strip}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

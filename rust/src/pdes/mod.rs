@@ -18,6 +18,11 @@
 //!   domain decomposition (halo-exchange decisions, per-step barrier on
 //!   a persistent parked-worker pool), bit-identical to [`BatchPdes`]
 //!   for every worker count and RNG [`StreamFamily`];
+//! * `kernel` (crate-internal) — the branchless lane-blocked decision
+//!   kernels both engines dispatch into: LANE ensemble rows of one PE
+//!   column per iteration, scalar or AVX2 at runtime (`REPRO_KERNEL`),
+//!   bit-identical across kernels because decisions are RNG-free exact
+//!   f64 compares;
 //! * [`model`] — pluggable per-PE model payloads (kinetic Ising, update
 //!   statistics) whose events ride the update sweeps of both engines
 //!   (causally safe under Eq. 1 — see `model.rs` and DESIGN.md §Models);
@@ -28,6 +33,7 @@
 
 mod batch;
 mod instrument;
+pub(crate) mod kernel;
 mod lattice;
 mod mode;
 pub mod model;
@@ -36,6 +42,10 @@ mod sharded;
 mod topology;
 
 pub use batch::{BatchPdes, GVT_RESYNC_PERIOD, PEND_ALL, PEND_INTERIOR};
+pub use kernel::{
+    active_kernel, kernel_choice, kernel_provenance, simd_supported, ActiveKernel, KernelChoice,
+    LANE,
+};
 pub use instrument::{InstrumentedRing, MeanFieldCounters};
 pub use lattice::LatticePdes;
 pub use mode::{canon_f64, parse_canon_f64, Mode, VolumeLoad};

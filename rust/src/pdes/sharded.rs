@@ -13,16 +13,19 @@
 //!
 //! ## The two-phase step (DESIGN.md §Sharding)
 //!
-//! 1. **Decide (parallel)** — every (row, block) tile computes its PEs'
-//!    update verdicts against the *frozen* horizon τ(t), exactly the
-//!    horizon `BatchPdes::step_masked` decides against.  On the honest
-//!    ring the kernel reads only its block plus one halo τ per side (the
-//!    literal nearest-neighbour halo exchange; k-rings widen the halo to
-//!    k, realized through the shared frozen row); non-ring graphs fall
-//!    back to a single lattice shard (long-range links make a contiguous
-//!    halo unbounded), which still leaves rows to decide in parallel.
-//!    Decisions are pure reads + disjoint writes into the `ok` buffer, so
-//!    tile scheduling cannot affect them.
+//! 1. **Decide (parallel)** — every (lane group, block) tile computes its
+//!    PEs' update verdicts against the *frozen* horizon τ(t), exactly the
+//!    horizon `BatchPdes::step_masked` decides against, through the same
+//!    lane-blocked `pdes::kernel` dispatch (up to LANE consecutive
+//!    ensemble rows per tile; scalar or AVX2 at runtime, bit-identical by
+//!    construction).  On the honest ring the kernel reads only its block
+//!    plus one halo τ per side (the literal nearest-neighbour halo
+//!    exchange; k-rings stride the halo to k, realized through the shared
+//!    frozen row); non-ring graphs fall back to a single lattice shard
+//!    (long-range links make a contiguous halo unbounded), which still
+//!    leaves lane groups to decide in parallel.  Decisions are pure reads
+//!    + disjoint writes into the `ok` buffer, so tile scheduling cannot
+//!    affect them.
 //! 2. **Barrier** — the pool's completion wait.  No τ write happens
 //!    anywhere until *all* decisions of the step are fixed, which is the
 //!    same frozen-horizon argument that made `BatchPdes` single-buffered
@@ -59,7 +62,8 @@
 
 use std::ops::{Deref, DerefMut, Range};
 
-use super::batch::{draw_pending_slot, BatchPdes, PEND_ALL, PEND_INTERIOR};
+use super::batch::{draw_pending_slot, BatchPdes};
+use super::kernel::{self, DecideKind};
 use super::model::Model;
 use super::topology::{NeighbourTable, Topology};
 use super::{Mode, VolumeLoad};
@@ -334,13 +338,9 @@ impl ShardedPdes {
             } else {
                 None
             };
-            let kind = if !enforce_nn {
-                DecideKind::Local
-            } else if p.ring2 {
-                DecideKind::RingHalo
-            } else {
-                DecideKind::Generic
-            };
+            // the same mode substitution the batch engine's decide pass
+            // makes: without Eq. 1 the neighbour constraint disappears
+            let kind = if enforce_nn { p.kind } else { DecideKind::Local };
             // Window edges against the frozen horizon: Δ + the tracked GVT
             // of the *previous* step, exactly as `BatchPdes::step_masked`
             // (reusable scratch — no per-step allocation).
@@ -351,30 +351,72 @@ impl ShardedPdes {
                     .map(|s| if enforce_win { delta + s.min } else { f64::INFINITY }),
             );
 
-            // ---- phase A: frozen-horizon decisions, one tile per
-            // (row, block), contiguous tile chunks per pool worker.
+            // ---- phase A: frozen-horizon decisions through the
+            // lane-blocked `pdes::kernel` dispatch.  The historical
+            // (row, block) tiles shrink to lane-blocked column strips:
+            // one tile per (group of ≤ LANE consecutive rows, block), so
+            // the kernel decides LANE ensemble lanes of each PE column
+            // together (AVX2 when dispatched; the B mod LANE tail group
+            // takes the scalar kernel at its exact width — bit-identical
+            // either way).  Decisions stay pure reads (τ/pend shared —
+            // the frozen row is the halo) + disjoint writes into the
+            // `ok` buffer, so tile scheduling cannot affect them.
             {
                 let tau: &[f64] = p.tau;
                 let pend: &[u8] = p.pend;
                 let nbr = p.nbr;
                 let edges: &[f64] = &self.edges;
-                let mut tiles: Vec<DecideTile<'_>> = Vec::with_capacity(rows * blocks);
-                for (row, ok_row) in self.ok.chunks_mut(pes).enumerate() {
+                let kernel_choice = p.kernel;
+                // per-row plan chunks of the verdict buffer, then a
+                // transpose-move into (lane group × block) tiles
+                let mut per_row: Vec<std::vec::IntoIter<&mut [bool]>> =
+                    Vec::with_capacity(rows);
+                for ok_row in self.ok.chunks_mut(pes) {
                     let mut rest = ok_row;
+                    let mut chunks: Vec<&mut [bool]> = Vec::with_capacity(blocks);
                     for blk in &self.plan {
                         let (head, tail) = rest.split_at_mut(blk.end - blk.start);
-                        tiles.push(DecideTile {
-                            row,
-                            start: blk.start,
-                            ok: head,
-                        });
+                        chunks.push(head);
                         rest = tail;
                     }
+                    per_row.push(chunks.into_iter());
+                }
+                let lane_groups = rows.div_ceil(kernel::LANE);
+                let mut tiles: Vec<DecideTile<'_>> = Vec::with_capacity(lane_groups * blocks);
+                let mut row0 = 0usize;
+                while row0 < rows {
+                    let n = kernel::LANE.min(rows - row0);
+                    let group = &mut per_row[row0..row0 + n];
+                    for blk in &self.plan {
+                        let lanes: Vec<&mut [bool]> = group
+                            .iter_mut()
+                            .map(|it| it.next().expect("one chunk per block per row"))
+                            .collect();
+                        tiles.push(DecideTile {
+                            row0,
+                            start: blk.start,
+                            lanes,
+                        });
+                    }
+                    row0 += n;
                 }
                 // the pool's completion wait is the step's decision
                 // barrier: no τ write can happen before it
                 self.pool.run_chunks_capped(&mut tiles, workers, |chunk| {
-                    run_decide_tiles(chunk, tau, pend, nbr, edges, pes, kind);
+                    for tile in chunk.iter_mut() {
+                        kernel::decide_tile(
+                            tau,
+                            pend,
+                            pes,
+                            nbr,
+                            edges,
+                            tile.row0,
+                            tile.start,
+                            kind,
+                            kernel_choice,
+                            &mut tile.lanes,
+                        );
+                    }
                 });
             }
 
@@ -549,23 +591,17 @@ impl DerefMut for ShardedPdes {
     }
 }
 
-/// Which decision kernel phase A runs (fixed per step by mode/topology).
-#[derive(Clone, Copy)]
-enum DecideKind {
-    /// No Eq. 1 (RD families): the verdict is `τ_k ≤ edge`, purely local.
-    Local,
-    /// Honest two-neighbour ring: block + one halo τ per side.
-    RingHalo,
-    /// Arbitrary graph: gather neighbours through the CSR table (the
-    /// shared frozen row is the degenerate whole-row halo).
-    Generic,
-}
-
-/// One phase-A work item: the decision slice of one (row, block) tile.
+/// One phase-A work item: the decision strip of one (lane group, block)
+/// tile — the verdict slices of up to `kernel::LANE` consecutive rows
+/// over one column block, decided together by the lane-blocked kernel
+/// (`kernel::decide_tile`).
 struct DecideTile<'a> {
-    row: usize,
+    /// First absolute row of the lane group.
+    row0: usize,
+    /// First absolute PE column of the block.
     start: usize,
-    ok: &'a mut [bool],
+    /// One verdict slice per row in the group (all the block's width).
+    lanes: Vec<&'a mut [bool]>,
 }
 
 /// The RNG source of one row-update job — one serial stream for the
@@ -610,83 +646,6 @@ struct PeTile<'a> {
     ok: &'a [bool],
     /// The tile's shard-partial aggregate slot (merged after the barrier).
     shard: &'a mut StepStats,
-}
-
-fn run_decide_tiles(
-    tiles: &mut [DecideTile<'_>],
-    tau: &[f64],
-    pend: &[u8],
-    nbr: &NeighbourTable,
-    edges: &[f64],
-    pes: usize,
-    kind: DecideKind,
-) {
-    for tile in tiles.iter_mut() {
-        let row_tau = &tau[tile.row * pes..(tile.row + 1) * pes];
-        let row_pend = &pend[tile.row * pes..(tile.row + 1) * pes];
-        let edge = edges[tile.row];
-        match kind {
-            DecideKind::Local => decide_block_local(row_tau, tile.start, edge, tile.ok),
-            DecideKind::RingHalo => decide_block_ring(row_tau, row_pend, tile.start, edge, tile.ok),
-            DecideKind::Generic => {
-                decide_block_generic(row_tau, row_pend, nbr, tile.start, edge, tile.ok)
-            }
-        }
-    }
-}
-
-/// Local decision kernel (RD families): no neighbour reads at all.
-fn decide_block_local(row_tau: &[f64], start: usize, edge: f64, ok: &mut [bool]) {
-    for (i, okk) in ok.iter_mut().enumerate() {
-        *okk = row_tau[start + i] <= edge;
-    }
-}
-
-/// Ring halo kernel: PE k in the block checks its frozen left/right
-/// neighbours; the only values read outside `[start, start + len)` are the
-/// two halo τ's — the literal halo exchange of the paper's worker-per-
-/// block arrangement.  A one-PE block reads only halos (halo == shard).
-fn decide_block_ring(row_tau: &[f64], row_pend: &[u8], start: usize, edge: f64, ok: &mut [bool]) {
-    let pes = row_tau.len();
-    let len = ok.len();
-    let left_halo = row_tau[(start + pes - 1) % pes];
-    let right_halo = row_tau[(start + len) % pes];
-    for (i, okk) in ok.iter_mut().enumerate() {
-        let k = start + i;
-        let cur = row_tau[k];
-        let left = if i == 0 { left_halo } else { row_tau[k - 1] };
-        let right = if i + 1 == len { right_halo } else { row_tau[k + 1] };
-        let nn_ok = match row_pend[k] {
-            PEND_INTERIOR => true,
-            PEND_ALL => cur <= left && cur <= right,
-            1 => cur <= left,
-            _ => cur <= right, // slot 2: ring tables list [left, right]
-        };
-        *okk = nn_ok && cur <= edge;
-    }
-}
-
-/// Generic-topology block kernel: same verdicts as the single-threaded
-/// `decide_row_generic`, restricted to one block (neighbour gathers go
-/// through the shared frozen row).
-fn decide_block_generic(
-    row_tau: &[f64],
-    row_pend: &[u8],
-    nbr: &NeighbourTable,
-    start: usize,
-    edge: f64,
-    ok: &mut [bool],
-) {
-    for (i, okk) in ok.iter_mut().enumerate() {
-        let k = start + i;
-        let tk = row_tau[k];
-        let nn_ok = match row_pend[k] {
-            PEND_INTERIOR => true,
-            PEND_ALL => nbr.neighbours(k).iter().all(|&j| tk <= row_tau[j as usize]),
-            slot => tk <= row_tau[nbr.neighbours(k)[(slot - 1) as usize] as usize],
-        };
-        *okk = nn_ok && tk <= edge;
-    }
 }
 
 fn run_update_rows(

@@ -1,0 +1,212 @@
+//! Exact-equality proof of the decision-kernel dispatch (ISSUE 9): the
+//! scalar, SIMD and auto kernels must produce **bit-identical**
+//! trajectories — τ, pending classes, counts and tracked [`StepStats`]
+//! compared to the bit — across topologies × modes × batch heights ×
+//! stream families, on both engines and for every worker count tested.
+//!
+//! B ∈ {1, 3, 8} is deliberate: 1 and 3 are not multiples of the lane
+//! width (LANE = 4), so partial lane groups (the scalar tail path) are
+//! pinned alongside full groups (B = 8 = two full AVX2 groups).
+//!
+//! On machines without AVX2 the SIMD request clamps to scalar
+//! (`BatchPdes::set_decide_kernel`), so the suite stays green — vacuously
+//! for the SIMD half — and CI's `-Ctarget-cpu=native` kernel-smoke leg
+//! provides the non-vacuous run.
+
+use repro::pdes::{
+    ActiveKernel, BatchPdes, Mode, ShardedPdes, StreamFamily, Topology, VolumeLoad,
+};
+
+const STEPS: usize = 30;
+const SEED: u64 = 90210;
+
+fn topologies() -> [Topology; 5] {
+    [
+        Topology::Ring { l: 24 },
+        Topology::KRing { l: 24, k: 2 },
+        Topology::SmallWorld { l: 24, extra: 8, seed: 3 },
+        Topology::ScaleFree { l: 24, m: 2, seed: 5 },
+        Topology::RandomRegular { l: 24, k: 4, seed: 7 },
+    ]
+}
+
+fn modes() -> [Mode; 4] {
+    [
+        Mode::Conservative,
+        Mode::Windowed { delta: 2.0 },
+        Mode::Rd,
+        Mode::WindowedRd { delta: 1.5 },
+    ]
+}
+
+/// Bit-faithful trajectory snapshot: τ and stats as raw u64 bits so the
+/// comparison is exact equality, not an epsilon.
+#[derive(PartialEq, Eq, Debug)]
+struct Snapshot {
+    tau_bits: Vec<u64>,
+    pend: Vec<u8>,
+    counts: Vec<u32>,
+    stats_bits: Vec<(u32, u64, u64, u64)>,
+}
+
+fn snapshot(sim: &BatchPdes) -> Snapshot {
+    Snapshot {
+        tau_bits: sim.tau().iter().map(|t| t.to_bits()).collect(),
+        pend: (0..sim.rows())
+            .flat_map(|r| sim.pending_row(r).to_vec())
+            .collect(),
+        counts: sim.counts().to_vec(),
+        stats_bits: sim
+            .step_stats()
+            .iter()
+            .map(|s| {
+                (
+                    s.n_updated,
+                    s.sum.to_bits(),
+                    s.min.to_bits(),
+                    s.max.to_bits(),
+                )
+            })
+            .collect(),
+    }
+}
+
+fn run_batch(
+    topo: Topology,
+    load: VolumeLoad,
+    mode: Mode,
+    rows: usize,
+    family: StreamFamily,
+    kernel: Option<ActiveKernel>,
+) -> Snapshot {
+    let mut sim = BatchPdes::with_streams_family(topo, load, mode, rows, SEED, 0, family);
+    if let Some(k) = kernel {
+        sim.set_decide_kernel(k);
+    }
+    for _ in 0..STEPS {
+        sim.step();
+    }
+    snapshot(&sim)
+}
+
+fn run_sharded(
+    topo: Topology,
+    load: VolumeLoad,
+    mode: Mode,
+    rows: usize,
+    family: StreamFamily,
+    kernel: ActiveKernel,
+    workers: usize,
+) -> Snapshot {
+    let mut sim =
+        ShardedPdes::with_streams_family(topo, load, mode, rows, SEED, 0, workers, family);
+    sim.set_decide_kernel(kernel);
+    for _ in 0..STEPS {
+        sim.step();
+    }
+    snapshot(&sim)
+}
+
+fn grid_check_family(family: StreamFamily) {
+    for topo in topologies() {
+        for mode in modes() {
+            for load in [VolumeLoad::Sites(1), VolumeLoad::Sites(3)] {
+                for rows in [1usize, 3, 8] {
+                    let base = run_batch(topo, load, mode, rows, family, Some(ActiveKernel::Scalar));
+                    let simd =
+                        run_batch(topo, load, mode, rows, family, Some(ActiveKernel::SimdAvx2));
+                    assert_eq!(
+                        base, simd,
+                        "scalar vs simd diverged: {topo:?} {mode:?} {load:?} B={rows} {family:?}"
+                    );
+                    let auto = run_batch(topo, load, mode, rows, family, None);
+                    assert_eq!(
+                        base, auto,
+                        "scalar vs auto diverged: {topo:?} {mode:?} {load:?} B={rows} {family:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn kernel_dispatch_is_bit_exact_across_the_grid_rowv1() {
+    grid_check_family(StreamFamily::RowV1);
+}
+
+#[test]
+fn kernel_dispatch_is_bit_exact_across_the_grid_pe() {
+    grid_check_family(StreamFamily::Pe);
+}
+
+#[test]
+fn kernel_dispatch_is_bit_exact_on_the_sharded_engine() {
+    // sharded lane-blocked column strips vs the batch whole-row kernel,
+    // per kernel, per worker count — a narrower (topology, mode) slice
+    // than the batch grid since every (kernel, workers) pair multiplies
+    for topo in [
+        Topology::Ring { l: 24 },
+        Topology::KRing { l: 24, k: 2 },
+        Topology::SmallWorld { l: 24, extra: 8, seed: 3 },
+    ] {
+        for mode in [Mode::Conservative, Mode::Windowed { delta: 2.0 }] {
+            for family in [StreamFamily::RowV1, StreamFamily::Pe] {
+                for rows in [1usize, 3, 8] {
+                    let load = VolumeLoad::Sites(3);
+                    let base = run_batch(topo, load, mode, rows, family, Some(ActiveKernel::Scalar));
+                    for workers in [1usize, 4] {
+                        for kernel in [ActiveKernel::Scalar, ActiveKernel::SimdAvx2] {
+                            let got = run_sharded(topo, load, mode, rows, family, kernel, workers);
+                            assert_eq!(
+                                base, got,
+                                "sharded diverged: {topo:?} {mode:?} B={rows} {family:?} \
+                                 W={workers} {kernel:?}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn kernel_simd_request_clamps_to_scalar_without_avx2() {
+    let mut sim = BatchPdes::with_streams(
+        Topology::Ring { l: 8 },
+        VolumeLoad::Sites(1),
+        Mode::Conservative,
+        2,
+        1,
+        0,
+    );
+    sim.set_decide_kernel(ActiveKernel::SimdAvx2);
+    if repro::pdes::simd_supported() {
+        assert_eq!(sim.decide_kernel(), ActiveKernel::SimdAvx2);
+    } else {
+        // the dispatch-safety invariant: SimdAvx2 never survives on a
+        // machine where the AVX2 kernel could not legally run
+        assert_eq!(sim.decide_kernel(), ActiveKernel::Scalar);
+    }
+    sim.set_decide_kernel(ActiveKernel::Scalar);
+    assert_eq!(sim.decide_kernel(), ActiveKernel::Scalar);
+}
+
+#[test]
+fn kernel_decide_only_is_trajectory_invisible() {
+    // interleaving decide_only() between steps must not perturb the
+    // trajectory: the decision pass is RNG-free and idempotent
+    let topo = Topology::KRing { l: 20, k: 2 };
+    let (load, mode) = (VolumeLoad::Sites(4), Mode::Windowed { delta: 3.0 });
+    let mut plain = BatchPdes::with_streams(topo, load, mode, 5, 11, 0);
+    let mut probed = BatchPdes::with_streams(topo, load, mode, 5, 11, 0);
+    for _ in 0..25 {
+        plain.step();
+        let a = probed.decide_only();
+        let b = probed.decide_only();
+        assert_eq!(a, b, "decide_only is not idempotent");
+        probed.step();
+    }
+    assert_eq!(snapshot(&plain), snapshot(&probed));
+}
