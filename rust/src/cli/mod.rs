@@ -25,7 +25,7 @@ const VALUED: &[&str] = &[
     "out", "config", "trials", "steps", "seed", "l", "nv", "delta", "mode", "artifacts",
     "workers", "lattice-workers", "chunks", "warm", "topology", "k", "links", "model", "beta",
     "coupling", "streams", "max-retries", "on-fault", "autotune-cap", "autotune-window",
-    "autotune-epochs",
+    "autotune-epochs", "addr", "cache-dir",
 ];
 
 impl Args {

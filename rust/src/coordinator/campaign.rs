@@ -86,6 +86,20 @@ impl ShardStrategy {
                 // rest of the budget across trials
                 let lw = if lattice_workers == 0 {
                     2.clamp(1, budget)
+                } else if lattice_workers > budget {
+                    // an explicit lw above the pool budget would
+                    // oversubscribe every trial shard (trial_workers
+                    // floors at 1, so lw × 1 > budget threads); clamp to
+                    // the budget and warn once, mirroring pool.rs's
+                    // REPRO_WORKERS garbage-value contract
+                    static WARNED: std::sync::Once = std::sync::Once::new();
+                    WARNED.call_once(|| {
+                        eprintln!(
+                            "warning: lattice_workers = {lattice_workers} exceeds the \
+                             worker budget {budget}; clamping to {budget}"
+                        );
+                    });
+                    budget
                 } else {
                     lattice_workers
                 };
@@ -970,10 +984,50 @@ pub struct CampaignReport {
     /// Cache entries that were present but corrupt/unreadable under
     /// `--resume` and were recomputed (silent degradation made loud).
     pub corrupt_entries: usize,
+    /// Completed points whose `cache.store` failed (disk full,
+    /// permissions): the result was still returned this run, but every
+    /// future `--resume` silently recomputes it — so the count is
+    /// surfaced here and on the summary line instead of only a warning.
+    pub store_failures: usize,
     /// Points that exhausted their retries, plan-order.
     pub quarantined: Vec<PointFailure>,
     /// Did a cancellation request drain this run early?
     pub cancelled: bool,
+}
+
+/// One scheduler event streamed to [`run_plan_streaming`]'s callback as
+/// it happens — the incremental-delivery seam the `repro serve` daemon
+/// subscribes to (results stream per point instead of becoming visible
+/// only after the whole `thread::scope` joins).
+///
+/// Borrows are per-call: the callback must copy what it keeps.  It runs
+/// on the completing worker's thread while sibling points are still in
+/// flight, so it must be cheap and MUST NOT panic (a panic would tear
+/// down the scheduler scope — exactly what supervision exists to
+/// prevent).
+#[derive(Debug)]
+pub enum PointEvent<'a> {
+    /// A point completed (freshly executed or restored from cache) and
+    /// its result is final.  Fired after the cache store attempt, so a
+    /// subscriber reading the cache right after this sees the entry.
+    Completed {
+        /// Plan-order index of the point.
+        index: usize,
+        /// The point's label.
+        label: &'a str,
+        /// The point's frozen spec string (the cache key).
+        spec: &'a str,
+        /// The completed result.
+        result: &'a PointResult,
+        /// Restored from the result cache (`true`) vs executed.
+        from_cache: bool,
+    },
+    /// A point exhausted its retries and was quarantined: it will have
+    /// no result this run.  Its subscribers fail; the scheduler lives.
+    Quarantined {
+        /// The failure record (index, label, spec, attempts, error).
+        failure: &'a PointFailure,
+    },
 }
 
 /// A supervised campaign's full outcome: per-slot results (`None` =
@@ -1050,6 +1104,20 @@ pub fn run_plan(plan: &SweepPlan, opts: &CampaignOpts) -> Result<(Vec<PointResul
 /// - under [`OnFault::Abort`] the first quarantined point stops workers
 ///   from claiming further points (in-flight ones still drain).
 pub fn run_plan_supervised(plan: &SweepPlan, opts: &CampaignOpts) -> Result<CampaignOutcome> {
+    run_plan_streaming(plan, opts, &|_| {})
+}
+
+/// [`run_plan_supervised`] with incremental delivery: `on_event` fires
+/// on the completing worker's thread the moment each point settles
+/// ([`PointEvent::Completed`] after its cache store, or
+/// [`PointEvent::Quarantined`] when retries are exhausted), instead of
+/// results becoming visible only after the scope joins.  The supervision
+/// contract above rides unchanged; the callback must not panic.
+pub fn run_plan_streaming(
+    plan: &SweepPlan,
+    opts: &CampaignOpts,
+    on_event: &(dyn Fn(PointEvent<'_>) + Sync),
+) -> Result<CampaignOutcome> {
     let cache = match &opts.cache_dir {
         Some(dir) => Some(ResultCache::open(dir)?),
         None => None,
@@ -1066,6 +1134,7 @@ pub fn run_plan_supervised(plan: &SweepPlan, opts: &CampaignOpts) -> Result<Camp
     let ran = AtomicUsize::new(0);
     let retried = AtomicUsize::new(0);
     let corrupt = AtomicUsize::new(0);
+    let store_failed = AtomicUsize::new(0);
     let cancelled_flag = AtomicBool::new(false);
     let abort_flag = AtomicBool::new(false);
     let failures: Mutex<Vec<PointFailure>> = Mutex::new(Vec::new());
@@ -1119,6 +1188,7 @@ pub fn run_plan_supervised(plan: &SweepPlan, opts: &CampaignOpts) -> Result<Camp
                         ) {
                             Ok(r) => (r, false),
                             Err(Some(failure)) => {
+                                on_event(PointEvent::Quarantined { failure: &failure });
                                 failures
                                     .lock()
                                     .unwrap_or_else(|e| e.into_inner())
@@ -1141,6 +1211,10 @@ pub fn run_plan_supervised(plan: &SweepPlan, opts: &CampaignOpts) -> Result<Camp
                     if let Some(c) = &cache {
                         // stream the completed point to disk as it lands
                         if let Err(e) = c.store(&spec, &result.to_cache_text()) {
+                            // the point still returns this run, but every
+                            // future --resume recomputes it: count it so
+                            // the degradation is loud (store_failures=)
+                            store_failed.fetch_add(1, Ordering::Relaxed);
                             eprintln!("warning: cache store failed for {}: {e}", point.label);
                         }
                         if let Some(faults) = &opts.faults {
@@ -1150,6 +1224,15 @@ pub fn run_plan_supervised(plan: &SweepPlan, opts: &CampaignOpts) -> Result<Camp
                         }
                     }
                 }
+                // stream the settled point to the subscriber seam (after
+                // the store attempt, so the cache entry is visible first)
+                on_event(PointEvent::Completed {
+                    index: i,
+                    label: &point.label,
+                    spec: &spec,
+                    result: &result,
+                    from_cache: hit,
+                });
                 if !opts.quiet {
                     println!(
                         "  point {}/{n} {} [{}]",
@@ -1175,6 +1258,7 @@ pub fn run_plan_supervised(plan: &SweepPlan, opts: &CampaignOpts) -> Result<Camp
         workers,
         retried: retried.into_inner(),
         corrupt_entries: corrupt.into_inner(),
+        store_failures: store_failed.into_inner(),
         quarantined,
         cancelled: cancelled_flag.into_inner(),
     };
@@ -1191,7 +1275,7 @@ pub fn run_plan_supervised(plan: &SweepPlan, opts: &CampaignOpts) -> Result<Camp
         // NOTE: the prefix through `workers=` is frozen — CI greps key on
         // it; new fields only ever append after.
         println!(
-            "campaign {}: {} points, cache_hits={} executed={} workers={} retried={} corrupt={} quarantined={}{}",
+            "campaign {}: {} points, cache_hits={} executed={} workers={} retried={} corrupt={} quarantined={} store_failures={}{}",
             plan.name,
             report.points,
             report.cache_hits,
@@ -1200,6 +1284,7 @@ pub fn run_plan_supervised(plan: &SweepPlan, opts: &CampaignOpts) -> Result<Camp
             report.retried,
             report.corrupt_entries,
             report.quarantined.len(),
+            report.store_failures,
             if report.cancelled { " cancelled" } else { "" }
         );
     }
@@ -1752,10 +1837,31 @@ mod tests {
                 trial_workers,
                 lattice_workers,
             } => {
-                assert_eq!(lattice_workers, 2);
+                // an explicit lw within the budget passes through; on a
+                // 1-core budget it clamps (the oversubscription guard)
+                assert_eq!(lattice_workers, 2.min(worker_count()));
                 assert!(trial_workers >= 1);
             }
             other => panic!("unexpected strategy {other:?}"),
+        }
+        // an explicit lattice_workers above the pool budget clamps to
+        // the budget instead of silently oversubscribing
+        let budget = worker_count();
+        let over = (budget + 1).min(ShardedPdes::MAX_WORKERS);
+        if over > budget {
+            match ShardStrategy::from_spec("both", over).unwrap() {
+                ShardStrategy::Both {
+                    trial_workers,
+                    lattice_workers,
+                } => {
+                    assert_eq!(
+                        lattice_workers, budget,
+                        "explicit lw above the budget must clamp to it"
+                    );
+                    assert!(trial_workers >= 1);
+                }
+                other => panic!("unexpected strategy {other:?}"),
+            }
         }
         // auto lattice workers resolve against the pool budget
         match ShardStrategy::from_spec("lattice", 0).unwrap() {
@@ -2087,6 +2193,136 @@ mod tests {
                 other => panic!("result kind drifted across resume: {other:?}"),
             }
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn streaming_events_fire_per_point_as_results_land() {
+        let dir = std::env::temp_dir().join("repro_sched_stream_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let plan = test_plan(73);
+        let opts = CampaignOpts {
+            workers: 2,
+            cache_dir: Some(dir.clone()),
+            quiet: true,
+            ..Default::default()
+        };
+        // cold run: one Completed event per point, all executions, specs
+        // matching the plan's cache keys
+        let events: Mutex<Vec<(usize, String, bool)>> = Mutex::new(Vec::new());
+        let outcome = run_plan_streaming(&plan, &opts, &|ev| {
+            if let PointEvent::Completed {
+                index,
+                spec,
+                from_cache,
+                ..
+            } = ev
+            {
+                events
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .push((index, spec.to_string(), from_cache));
+            }
+        })
+        .unwrap();
+        assert!(outcome.report.quarantined.is_empty());
+        assert_eq!(outcome.report.store_failures, 0);
+        let mut got = events.into_inner().unwrap_or_else(|e| e.into_inner());
+        got.sort();
+        assert_eq!(got.len(), plan.len());
+        for (i, (idx, spec, hit)) in got.iter().enumerate() {
+            assert_eq!(*idx, i);
+            assert_eq!(*spec, plan.points[i].spec());
+            assert!(!hit, "cold-run events must report executions");
+        }
+        // warm resume: same events, every one a cache restore
+        let restored = AtomicUsize::new(0);
+        run_plan_streaming(
+            &plan,
+            &CampaignOpts {
+                resume: true,
+                ..opts
+            },
+            &|ev| {
+                if let PointEvent::Completed { from_cache, .. } = ev {
+                    assert!(from_cache, "warm-cache events must report restores");
+                    restored.fetch_add(1, Ordering::Relaxed);
+                }
+            },
+        )
+        .unwrap();
+        assert_eq!(restored.into_inner(), plan.len());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn streaming_quarantine_event_fires_without_killing_the_run() {
+        let plan = test_plan(74);
+        // poison exactly the first steady point (spec contains l=8)
+        let poisoned = plan.points[0].spec();
+        let opts = CampaignOpts {
+            workers: 2,
+            quiet: true,
+            faults: Some(FaultPlan::new().panic_on("l=8;", u32::MAX)),
+            ..Default::default()
+        };
+        let quarantined: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        let completed = AtomicUsize::new(0);
+        let outcome = run_plan_streaming(&plan, &opts, &|ev| match ev {
+            PointEvent::Quarantined { failure } => quarantined
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .push(failure.spec.clone()),
+            PointEvent::Completed { .. } => {
+                completed.fetch_add(1, Ordering::Relaxed);
+            }
+        })
+        .unwrap();
+        let q = quarantined.into_inner().unwrap_or_else(|e| e.into_inner());
+        assert_eq!(q, vec![poisoned], "exactly the poisoned point fails");
+        assert_eq!(outcome.report.quarantined.len(), 1);
+        // siblings keep completing: the failure reached only its event
+        assert_eq!(completed.into_inner(), plan.len() - 1);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn failed_cache_stores_are_counted() {
+        use std::os::unix::fs::PermissionsExt;
+        let dir = std::env::temp_dir().join("repro_sched_storefail_test");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::set_permissions(&dir, std::fs::Permissions::from_mode(0o555)).unwrap();
+        // root bypasses permission bits — probe and skip if so
+        if std::fs::File::create(dir.join("probe")).is_ok() {
+            std::fs::set_permissions(&dir, std::fs::Permissions::from_mode(0o755)).unwrap();
+            std::fs::remove_dir_all(&dir).ok();
+            eprintln!("skipping failed_cache_stores_are_counted: running as root");
+            return;
+        }
+        let mut plan = SweepPlan::new("storefail-test", "store-failure accounting");
+        plan.push(SweepPoint::steady(
+            "steady_L8",
+            Topology::Ring { l: 8 },
+            spec(8, Mode::Windowed { delta: 3.0 }, 2, 0),
+            10,
+            10,
+        ));
+        let outcome = run_plan_supervised(
+            &plan,
+            &CampaignOpts {
+                workers: 1,
+                cache_dir: Some(dir.clone()),
+                quiet: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // the point still completes this run — only the persistence failed
+        assert!(outcome.results[0].is_some());
+        assert_eq!(outcome.report.executed, 1);
+        assert_eq!(outcome.report.store_failures, 1, "failed store must be counted");
+        std::fs::set_permissions(&dir, std::fs::Permissions::from_mode(0o755)).unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -23,16 +23,17 @@ pub mod faults;
 mod jax;
 pub mod plan;
 pub mod pool;
+pub mod serve;
 mod spec;
 
 pub use autotune::{AutotuneCfg, AutotuneController, Control};
 pub use campaign::{
     autotune_topology, execute_point, model_steady_topology, run_ensemble, run_plan,
-    run_plan_supervised, run_topology_ensemble, run_topology_ensemble_model,
+    run_plan_streaming, run_plan_supervised, run_topology_ensemble, run_topology_ensemble_model,
     run_topology_ensemble_with, steady_state, steady_state_topology,
     steady_state_topology_model, steady_state_topology_with, update_stats_topology,
-    AutotuneStats, CampaignOpts, CampaignOutcome, CampaignReport, ModelSteadyStats, RunSpec,
-    ShardStrategy, SteadyStats, BATCH_ROWS,
+    AutotuneStats, CampaignOpts, CampaignOutcome, CampaignReport, ModelSteadyStats, PointEvent,
+    RunSpec, ShardStrategy, SteadyStats, BATCH_ROWS,
 };
 pub use faults::{
     Backoff, CampaignError, CancelToken, FaultPlan, Interrupted, OnFault, PointFailure,
@@ -40,4 +41,5 @@ pub use faults::{
 pub use jax::{run_artifact_ensemble, run_with_executor as run_with_executor_bench, JaxRunSpec};
 pub use plan::{fnv1a64, PointResult, Profile, Sampling, SweepPlan, SweepPoint};
 pub use pool::{shard_lattice, shard_trials, worker_count, StepPool};
+pub use serve::{submit, PlanResolver, ServeOpts, ServeReport, Server, SubmitSummary};
 pub use spec::CampaignSpec;

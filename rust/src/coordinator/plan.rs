@@ -192,6 +192,105 @@ impl Sampling {
         }
     }
 
+    /// Parse a [`Sampling::spec_string`] fragment (exact inverse — the
+    /// tolerant reader for tooling and the `repro serve` submission
+    /// path; the cache itself never parses, it byte-compares the
+    /// canonical emission).
+    pub fn parse_spec(s: &str) -> Result<Sampling> {
+        let (kind, rest) = match s.split_once(':') {
+            Some((k, r)) => (k, Some(r)),
+            None => (s, None),
+        };
+        // fixed-arity numeric argument lists (every kind except snap)
+        let fields = |n: usize| -> Result<Vec<u64>> {
+            let rest =
+                rest.with_context(|| format!("samp spec {s:?} is missing its arguments"))?;
+            let vals = rest
+                .split(':')
+                .map(|v| {
+                    v.parse::<u64>()
+                        .map_err(|_| anyhow::anyhow!("bad samp field {v:?} in {s:?}"))
+                })
+                .collect::<Result<Vec<u64>>>()?;
+            if vals.len() != n {
+                bail!("samp spec {s:?} wants {n} field(s), got {}", vals.len());
+            }
+            Ok(vals)
+        };
+        Ok(match kind {
+            "curves" => {
+                let v = fields(1)?;
+                Sampling::Curves {
+                    steps: v[0] as usize,
+                }
+            }
+            "steady" => {
+                let v = fields(2)?;
+                Sampling::Steady {
+                    warm: v[0] as usize,
+                    measure: v[1] as usize,
+                }
+            }
+            "snap" => {
+                let rest = rest
+                    .with_context(|| format!("samp spec {s:?} wants snap:<t,..>:<stream>"))?;
+                let (ats, stream) = rest
+                    .rsplit_once(':')
+                    .with_context(|| format!("samp spec {s:?} wants snap:<t,..>:<stream>"))?;
+                let at = ats
+                    .split(',')
+                    .map(|t| {
+                        t.parse::<usize>()
+                            .map_err(|_| anyhow::anyhow!("bad snapshot time {t:?} in {s:?}"))
+                    })
+                    .collect::<Result<Vec<usize>>>()?;
+                if at.is_empty() || !at.windows(2).all(|w| w[0] < w[1]) {
+                    bail!("snapshot times must strictly ascend in {s:?}");
+                }
+                let stream = stream
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("bad snapshot stream {stream:?} in {s:?}"))?;
+                Sampling::Snapshot { at, stream }
+            }
+            "counters" => {
+                let v = fields(3)?;
+                Sampling::Counters {
+                    warm: v[0] as usize,
+                    steps: v[1] as usize,
+                    stream: v[2],
+                }
+            }
+            "latticeu" => {
+                let v = fields(2)?;
+                Sampling::LatticeU {
+                    warm: v[0] as usize,
+                    measure: v[1] as usize,
+                }
+            }
+            "modelsteady" => {
+                let v = fields(2)?;
+                Sampling::ModelSteady {
+                    warm: v[0] as usize,
+                    measure: v[1] as usize,
+                }
+            }
+            "updstats" => {
+                let v = fields(2)?;
+                Sampling::UpdateStats {
+                    warm: v[0] as usize,
+                    measure: v[1] as usize,
+                }
+            }
+            "autotune" => {
+                if rest.is_some() {
+                    bail!("autotune sampling takes no arguments (got {s:?})");
+                }
+                Sampling::Autotune
+            }
+            other => bail!("unknown samp kind {other:?} in {s:?}"),
+        })
+    }
+
     /// Short kind tag (EXPERIMENTS.md and plan listings).
     pub fn kind_tag(&self) -> &'static str {
         match self {
@@ -447,6 +546,55 @@ impl SweepPoint {
     /// Content-addressed cache key: [`fnv1a64`] of [`SweepPoint::spec`].
     pub fn key(&self) -> u64 {
         fnv1a64(&self.spec())
+    }
+
+    /// Parse a [`SweepPoint::spec`] string back into a point — the
+    /// `repro serve` submission reader (clients submit the frozen v1
+    /// spec strings as request keys).  Only the *canonical* rendering is
+    /// accepted: the parsed point must re-render byte-identically, so a
+    /// submitted key always resolves to exactly the cache entry its
+    /// execution would publish (no near-miss spellings of the same
+    /// point under different cache identities).
+    pub fn parse_spec(s: &str) -> Result<SweepPoint> {
+        let rest = s
+            .strip_prefix("repro/v1 ")
+            .with_context(|| format!("point spec must start with \"repro/v1 \" (got {s:?})"))?;
+        let (mut topo, mut run, mut samp) = (None, None, None);
+        let mut model = ModelSpec::None;
+        for field in rest.split(' ') {
+            let Some((k, v)) = field.split_once('=') else {
+                bail!("bad point-spec field {field:?} in {s:?}");
+            };
+            match k {
+                "topo" => topo = Some(Topology::parse_spec(v)?),
+                "run" => run = Some(RunSpec::parse_spec(v)?),
+                "samp" => samp = Some(Sampling::parse_spec(v)?),
+                "model" => model = ModelSpec::parse_spec(v)?,
+                _ => bail!("unknown point-spec key {k:?} in {s:?}"),
+            }
+        }
+        let (Some(topology), Some(run), Some(sampling)) = (topo, run, samp) else {
+            bail!("point spec {s:?} is missing one of topo=/run=/samp=");
+        };
+        if topology.len() != run.l {
+            bail!(
+                "point spec {s:?}: topology size {} does not match run l={}",
+                topology.len(),
+                run.l
+            );
+        }
+        let point = SweepPoint {
+            label: format!("spec:{:016x}", fnv1a64(s)),
+            topology,
+            run,
+            sampling,
+            model,
+        };
+        let canonical = point.spec();
+        if canonical != s {
+            bail!("point spec {s:?} is not canonical (renders as {canonical:?})");
+        }
+        Ok(point)
     }
 }
 
@@ -929,6 +1077,105 @@ mod tests {
     #[should_panic]
     fn topology_size_mismatch_rejected() {
         SweepPoint::steady("x", Topology::Ring { l: 64 }, run(100), 10, 10);
+    }
+
+    #[test]
+    fn sampling_parse_spec_roundtrips() {
+        let all = [
+            Sampling::Curves { steps: 250 },
+            Sampling::Steady {
+                warm: 3000,
+                measure: 3000,
+            },
+            Sampling::Snapshot {
+                at: vec![2, 100],
+                stream: 7,
+            },
+            Sampling::Counters {
+                warm: 20,
+                steps: 60,
+                stream: 3,
+            },
+            Sampling::LatticeU {
+                warm: 10,
+                measure: 10,
+            },
+            Sampling::ModelSteady {
+                warm: 10,
+                measure: 20,
+            },
+            Sampling::UpdateStats {
+                warm: 10,
+                measure: 20,
+            },
+            Sampling::Autotune,
+        ];
+        for samp in all {
+            assert_eq!(
+                Sampling::parse_spec(&samp.spec_string()).unwrap(),
+                samp,
+                "round-trip of {}",
+                samp.spec_string()
+            );
+        }
+        // arity, ordering, and kind errors are loud
+        assert!(Sampling::parse_spec("steady:10").is_err());
+        assert!(Sampling::parse_spec("steady:10:20:30").is_err());
+        assert!(Sampling::parse_spec("snap:100,2:7").is_err(), "times must ascend");
+        assert!(Sampling::parse_spec("snap:7").is_err());
+        assert!(Sampling::parse_spec("autotune:3").is_err());
+        assert!(Sampling::parse_spec("bogus:1").is_err());
+        assert!(Sampling::parse_spec("curves:x").is_err());
+    }
+
+    #[test]
+    fn point_parse_spec_roundtrips_and_rejects_non_canonical() {
+        // the pinned steady spec round-trips field-for-field
+        let p = SweepPoint::steady("L100", Topology::Ring { l: 100 }, run(100), 3000, 3000);
+        let parsed = SweepPoint::parse_spec(&p.spec()).unwrap();
+        assert_eq!(parsed.spec(), p.spec());
+        assert_eq!(parsed.key(), p.key());
+        assert_eq!(parsed.topology, p.topology);
+        assert_eq!(parsed.run, p.run);
+        assert_eq!(parsed.sampling, p.sampling);
+        assert_eq!(parsed.model, ModelSpec::None);
+        // model points carry their payload through the round-trip
+        let ising = SweepPoint::model_steady(
+            "i",
+            Topology::Ring { l: 100 },
+            run(100),
+            10,
+            20,
+            ModelSpec::Ising { beta: 0.7, coupling: 1.0 },
+        );
+        let parsed = SweepPoint::parse_spec(&ising.spec()).unwrap();
+        assert_eq!(parsed.spec(), ising.spec());
+        assert_eq!(parsed.model, ising.model);
+        // autotune points carry their control config through the run spec
+        let mut r = run(64);
+        r.control = Control::Autotune(super::super::autotune::AutotuneCfg {
+            spread_cap: 10.0,
+            window: 100,
+            max_epochs: 24,
+        });
+        let auto = SweepPoint::autotune("a", Topology::Ring { l: 64 }, r);
+        let parsed = SweepPoint::parse_spec(&auto.spec()).unwrap();
+        assert_eq!(parsed.spec(), auto.spec());
+        assert_eq!(parsed.run.control, auto.run.control);
+        // non-canonical field order re-renders differently and is refused
+        assert!(SweepPoint::parse_spec(
+            "repro/v1 run=l=100;load=1;mode=win:10;trials=8;steps=0;seed=20020601 \
+             topo=ring:100 samp=steady:3000:3000"
+        )
+        .is_err());
+        // structure errors are loud
+        assert!(SweepPoint::parse_spec("nonsense").is_err());
+        assert!(SweepPoint::parse_spec("repro/v1 topo=ring:100 samp=steady:1:1").is_err());
+        assert!(SweepPoint::parse_spec(
+            "repro/v1 topo=ring:64 run=l=100;load=1;mode=win:10;trials=8;steps=0;seed=1 \
+             samp=steady:1:1"
+        )
+        .is_err(), "topology size must match run l");
     }
 
     #[test]

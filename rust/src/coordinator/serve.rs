@@ -1,0 +1,896 @@
+//! Simulation-as-a-service: the `repro serve` daemon.
+//!
+//! A long-running TCP front end over the campaign machinery: clients
+//! submit sweep points (by their frozen v1 spec strings) or whole
+//! registered plans over a newline-delimited protocol, and the daemon
+//! streams each [`PointResult`] back the moment it lands — cache hits
+//! straight from the [`ResultCache`] without touching the engine,
+//! misses batched onto the supervised scheduler
+//! ([`run_plan_streaming`]), and **in-flight identical points deduped
+//! across clients**: one execution, every subscriber gets the bytes.
+//! Std-only by construction (plain [`TcpListener`] + threads + mpsc —
+//! the workspace is offline/vendored).
+//!
+//! # Wire protocol (v1, line-oriented)
+//!
+//! Server greets with `repro-serve/1 ready`.  Client lines:
+//!
+//! * `point <spec>` — submit one canonical [`SweepPoint::spec`] string;
+//! * `plan <name> [quick] [seed=N]` — expand a registered plan into its
+//!   points and submit them all (requires the daemon's plan registry);
+//! * `stats` — one `stats ...` counters line;
+//! * `bye` — close after all of this connection's submissions resolve.
+//!
+//! Server lines: `ack <n>` per submission, then per point **in
+//! submission order** either `result <key16> <lines>` followed by
+//! exactly `<lines>` payload lines ([`PointResult::to_cache_text`]
+//! bytes, verbatim), or `failed <key16> <message>`; `done <n>` after a
+//! submission completes; `error <message>` for malformed input; `bye`
+//! to close.  Delivery is *streamed* (a result is written as soon as
+//! every earlier point of the same submission has been written), and
+//! the per-submission ordering makes two clients' streams for the same
+//! submission byte-identical — the dedupe acceptance is `cmp`-able.
+//!
+//! # Dedupe and subscription semantics
+//!
+//! Every submitted point resolves its cache key first (`load_checked` +
+//! payload parse): a hit is served directly (`direct_hits`).  A miss
+//! subscribes the connection to the point's spec in the shared in-flight
+//! registry: the first subscriber queues the point for execution, later
+//! ones just join (`joined`).  The scheduler thread drains the queue
+//! into serve batches run by [`run_plan_streaming`] with `resume: true`
+//! (so a point that got cached between submission and execution is a
+//! `batch_hit`, not a recompute), and its per-point completion events
+//! fan each outcome out to every subscriber.  The supervision layer
+//! rides unchanged: a panicking point is retried per
+//! [`ServeOpts::max_retries`] and then *fails only its subscribers*
+//! (`failed <key> ...`) — never the daemon.
+//!
+//! # Graceful drain
+//!
+//! [`Server::run`] takes a [`CancelToken`] (signal-backed in the CLI).
+//! On cancellation the in-flight batch drains at a step boundary (the
+//! §Supervision steps-are-atomic invariant: completed points are
+//! rename-published, interrupted ones leave no trace), undelivered
+//! subscribers get a `failed <key> daemon is draining...` line, every
+//! connection is told `bye`, and the process exits with a bitwise
+//! resumable cache: resubmitting after restart serves the completed
+//! points with `executed=0`.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::runtime::{CacheLoad, ResultCache};
+
+use super::campaign::{run_plan_streaming, CampaignOpts, PointEvent};
+use super::faults::{Backoff, CancelToken, FaultPlan, OnFault};
+use super::plan::{fnv1a64, PointResult, Profile, SweepPlan, SweepPoint};
+
+/// Protocol greeting; clients verify the `repro-serve/` prefix.
+pub const GREETING: &str = "repro-serve/1 ready";
+
+/// Poll tick for every blocking edge (accept, reads, channel waits) so
+/// cancellation is honored within one tick everywhere.
+const IO_TICK: Duration = Duration::from_millis(100);
+
+/// What subscribers of an undelivered point hear when the daemon drains.
+const DRAIN_MSG: &str =
+    "daemon is draining; completed points are cached, resubmit after restart";
+
+/// Plan registry hook: resolves a plan name + fidelity profile to its
+/// point list.  Injected as a plain fn pointer (`experiments::plan_for`
+/// in the CLI) so this module stays below the experiment layer.
+pub type PlanResolver = fn(&str, &Profile) -> Option<SweepPlan>;
+
+/// Daemon configuration.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Listen address (`--addr`).
+    pub addr: String,
+    /// Shared result-cache directory (`--cache-dir`) — the daemon's
+    /// memo table and its restart/resume substrate.
+    pub cache_dir: PathBuf,
+    /// Point-level workers per batch (0 = pool budget).
+    pub workers: usize,
+    /// Lattice workers inside each simulation.
+    pub lattice_workers: usize,
+    /// Retries per point before its subscribers are failed.
+    pub max_retries: u32,
+    /// Deterministic fault injection (tests / `REPRO_FAULT_PLAN`).
+    pub faults: Option<FaultPlan>,
+    /// Plan registry for `plan <name>` submissions (`None` = point
+    /// submissions only).
+    pub resolver: Option<PlanResolver>,
+    /// Suppress per-batch and summary log lines.
+    pub quiet: bool,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7878".to_string(),
+            cache_dir: PathBuf::from("serve-cache"),
+            workers: 0,
+            lattice_workers: 1,
+            max_retries: 0,
+            faults: None,
+            resolver: None,
+            quiet: false,
+        }
+    }
+}
+
+/// Lifetime counters of one daemon run (the final summary line).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeReport {
+    /// Points submitted across all connections (dupes included).
+    pub submitted: usize,
+    /// Submissions served straight from the cache, engine untouched.
+    pub direct_hits: usize,
+    /// Submissions that joined an already-in-flight identical point.
+    pub joined: usize,
+    /// Queued points that resolved from cache at batch time (stored
+    /// between submission and execution).
+    pub batch_hits: usize,
+    /// Points actually executed by the engine.
+    pub executed: usize,
+    /// Points whose subscribers were failed (quarantine or drain).
+    pub failed: usize,
+    /// Serve batches the scheduler ran.
+    pub batches: usize,
+}
+
+/// Final outcome of one point, shared across its subscribers.
+#[derive(Debug)]
+enum Outcome {
+    /// The point's cache payload ([`PointResult::to_cache_text`] bytes).
+    Done(String),
+    /// The point produced no result; the message explains why.
+    Failed(String),
+}
+
+/// Messages into a connection's single writer thread (reader thread and
+/// the scheduler's delivery fan-out both feed it, so all socket writes
+/// are serialized without a per-connection lock).
+enum ServerMsg {
+    /// Verbatim protocol line (`ack`/`stats`/`error`).
+    Line(String),
+    /// A submission's spec list, in submission order (opens a
+    /// [`Subscription`] reorder buffer).
+    Subscribe(Vec<String>),
+    /// A point settled; route to the oldest awaiting subscription.
+    Point(String, Arc<Outcome>),
+    /// Client said `bye`: close once every subscription has flushed.
+    Bye,
+    /// Daemon is draining: tell the client and close now.
+    Shutdown,
+}
+
+/// State shared by the accept loop, connection threads, and scheduler.
+struct Shared {
+    /// The memo table (opened once; per-batch scheduler opens are safe
+    /// under the cache's multi-process sweep contract).
+    cache: ResultCache,
+    /// In-flight registry + work queue.
+    state: Mutex<State>,
+    /// Signals the scheduler that the queue is non-empty.
+    work: Condvar,
+    /// The daemon-wide cancellation token.
+    cancel: CancelToken,
+    submitted: AtomicUsize,
+    direct_hits: AtomicUsize,
+    joined: AtomicUsize,
+    batch_hits: AtomicUsize,
+    executed: AtomicUsize,
+    failed: AtomicUsize,
+    batches: AtomicUsize,
+}
+
+/// The mutable core: spec → subscriber channels, plus the pending queue.
+#[derive(Default)]
+struct State {
+    /// Every spec currently queued or executing, with the writer-thread
+    /// channels waiting on it (the dedupe structure: one entry, N
+    /// subscribers).
+    inflight: HashMap<String, Vec<Sender<ServerMsg>>>,
+    /// Points waiting for the next serve batch (unique specs — dupes
+    /// join `inflight` instead).
+    queue: Vec<SweepPoint>,
+    /// Set once the drain began: new submissions fail immediately
+    /// instead of queueing work that would never run.
+    draining: bool,
+}
+
+/// A bound listener, ready to [`Server::run`].
+pub struct Server {
+    listener: TcpListener,
+    opts: ServeOpts,
+}
+
+impl Server {
+    /// Bind the listen socket (fails fast on a bad/busy address).
+    pub fn bind(opts: ServeOpts) -> Result<Server> {
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("binding repro serve to {}", opts.addr))?;
+        Ok(Server { listener, opts })
+    }
+
+    /// The bound address (resolves `:0` ephemeral ports for tests).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until `cancel` trips, then drain gracefully and return the
+    /// run's counters.
+    pub fn run(self, cancel: CancelToken) -> Result<ServeReport> {
+        let cache = ResultCache::open(&self.opts.cache_dir)?;
+        self.listener
+            .set_nonblocking(true)
+            .context("setting the listener non-blocking")?;
+        let addr = self.local_addr()?;
+        let shared = Arc::new(Shared {
+            cache,
+            state: Mutex::new(State::default()),
+            work: Condvar::new(),
+            cancel,
+            submitted: AtomicUsize::new(0),
+            direct_hits: AtomicUsize::new(0),
+            joined: AtomicUsize::new(0),
+            batch_hits: AtomicUsize::new(0),
+            executed: AtomicUsize::new(0),
+            failed: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+        });
+        if !self.opts.quiet {
+            eprintln!(
+                "serve: listening on {addr} (cache {})",
+                self.opts.cache_dir.display()
+            );
+        }
+        let opts = &self.opts;
+        std::thread::scope(|scope| {
+            {
+                let shared = Arc::clone(&shared);
+                scope.spawn(move || scheduler_loop(&shared, opts));
+            }
+            loop {
+                if shared.cancel.is_cancelled() {
+                    break;
+                }
+                match self.listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let shared = Arc::clone(&shared);
+                        scope.spawn(move || {
+                            if let Err(e) = handle_connection(stream, &shared, opts) {
+                                eprintln!("serve: connection error: {e:#}");
+                            }
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(IO_TICK);
+                    }
+                    Err(e) => {
+                        eprintln!("serve: accept error: {e}");
+                        std::thread::sleep(IO_TICK);
+                    }
+                }
+            }
+            // wake the scheduler promptly so its drain pass runs; the
+            // scope then joins it and every connection thread
+            shared.work.notify_all();
+        });
+        let report = ServeReport {
+            submitted: shared.submitted.load(Ordering::Relaxed),
+            direct_hits: shared.direct_hits.load(Ordering::Relaxed),
+            joined: shared.joined.load(Ordering::Relaxed),
+            batch_hits: shared.batch_hits.load(Ordering::Relaxed),
+            executed: shared.executed.load(Ordering::Relaxed),
+            failed: shared.failed.load(Ordering::Relaxed),
+            batches: shared.batches.load(Ordering::Relaxed),
+        };
+        if !self.opts.quiet {
+            println!(
+                "serve: drained submitted={} direct_hits={} joined={} batch_hits={} executed={} failed={} batches={}",
+                report.submitted,
+                report.direct_hits,
+                report.joined,
+                report.batch_hits,
+                report.executed,
+                report.failed,
+                report.batches
+            );
+        }
+        Ok(report)
+    }
+}
+
+/// The single batch scheduler: waits for queued points, runs them as a
+/// serve batch through the supervised streaming scheduler, and fans each
+/// completion out to its subscribers the moment it lands.
+fn scheduler_loop(shared: &Shared, opts: &ServeOpts) {
+    let mut batch_no = 0usize;
+    loop {
+        let points: Vec<SweepPoint> = {
+            let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if shared.cancel.is_cancelled() {
+                    st.draining = true;
+                    st.queue.clear();
+                    let undelivered: Vec<(String, Vec<Sender<ServerMsg>>)> =
+                        st.inflight.drain().collect();
+                    drop(st);
+                    // fail every undelivered subscriber: completed points
+                    // are already rename-published, so a resubmission
+                    // after restart is served from cache
+                    for (spec, subs) in undelivered {
+                        shared.failed.fetch_add(1, Ordering::Relaxed);
+                        let outcome = Arc::new(Outcome::Failed(DRAIN_MSG.to_string()));
+                        for sub in subs {
+                            let _ =
+                                sub.send(ServerMsg::Point(spec.clone(), Arc::clone(&outcome)));
+                        }
+                    }
+                    return;
+                }
+                if !st.queue.is_empty() {
+                    break;
+                }
+                let (guard, _timeout) = shared
+                    .work
+                    .wait_timeout(st, IO_TICK)
+                    .unwrap_or_else(|e| e.into_inner());
+                st = guard;
+            }
+            std::mem::take(&mut st.queue)
+        };
+        batch_no += 1;
+        shared.batches.fetch_add(1, Ordering::Relaxed);
+        let mut plan = SweepPlan::new(format!("serve-batch-{batch_no}"), "service batch");
+        for point in points {
+            plan.push(point);
+        }
+        let copts = CampaignOpts {
+            workers: opts.workers,
+            lattice_workers: opts.lattice_workers,
+            // resume against the shared cache: a point stored between
+            // submission and execution becomes a batch hit, not a rerun
+            resume: true,
+            cache_dir: Some(opts.cache_dir.clone()),
+            quiet: true,
+            max_retries: opts.max_retries,
+            backoff: Backoff::default(),
+            on_fault: OnFault::Quarantine,
+            cancel: Some(shared.cancel.clone()),
+            faults: opts.faults.clone(),
+            failed_manifest: None,
+        };
+        let outcome = run_plan_streaming(&plan, &copts, &|ev| match ev {
+            PointEvent::Completed { spec, result, .. } => {
+                // fires after the cache store: subscribers observing the
+                // result can immediately re-resolve it from disk
+                deliver(shared, spec, Outcome::Done(result.to_cache_text()));
+            }
+            PointEvent::Quarantined { failure } => {
+                shared.failed.fetch_add(1, Ordering::Relaxed);
+                let error = failure.error.replace(['\n', '\r'], " ");
+                deliver(
+                    shared,
+                    &failure.spec,
+                    Outcome::Failed(format!(
+                        "point quarantined after {} attempt(s): {error}",
+                        failure.attempts
+                    )),
+                );
+            }
+        });
+        match outcome {
+            Ok(out) => {
+                shared
+                    .executed
+                    .fetch_add(out.report.executed, Ordering::Relaxed);
+                shared
+                    .batch_hits
+                    .fetch_add(out.report.cache_hits, Ordering::Relaxed);
+                if !opts.quiet {
+                    eprintln!(
+                        "serve: batch {batch_no} points={} cache_hits={} executed={} quarantined={}{}",
+                        out.report.points,
+                        out.report.cache_hits,
+                        out.report.executed,
+                        out.report.quarantined.len(),
+                        if out.report.cancelled { " cancelled" } else { "" }
+                    );
+                }
+                // a cancelled batch leaves its unfinished points in the
+                // in-flight registry; the drain pass above fails them
+            }
+            Err(e) => {
+                // scheduler-level failure (e.g. cache dir vanished):
+                // fail this batch's remaining subscribers, keep serving
+                eprintln!("serve: batch {batch_no} failed: {e:#}");
+                for point in &plan.points {
+                    if deliver(
+                        shared,
+                        &point.spec(),
+                        Outcome::Failed(format!("batch failed: {e:#}")),
+                    ) {
+                        shared.failed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Resolve a spec's subscribers and send them the outcome.  Returns
+/// whether the spec was still in flight (false = already delivered or
+/// never submitted — a no-op).
+fn deliver(shared: &Shared, spec: &str, outcome: Outcome) -> bool {
+    let subs = shared
+        .state
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .inflight
+        .remove(spec);
+    let Some(subs) = subs else {
+        return false;
+    };
+    let outcome = Arc::new(outcome);
+    for sub in subs {
+        // a dead subscriber (client hung up) just drops the message
+        let _ = sub.send(ServerMsg::Point(spec.to_string(), Arc::clone(&outcome)));
+    }
+    true
+}
+
+/// One connection: a reader thread parsing commands plus this thread
+/// writing responses — all socket writes serialized through one channel.
+fn handle_connection(stream: TcpStream, shared: &Shared, opts: &ServeOpts) -> Result<()> {
+    stream
+        .set_read_timeout(Some(IO_TICK))
+        .context("setting the connection read timeout")?;
+    let reader_stream = stream.try_clone().context("cloning the connection stream")?;
+    let (tx, rx) = channel();
+    std::thread::scope(|scope| {
+        let reader_tx = tx.clone();
+        scope.spawn(move || reader_loop(reader_stream, reader_tx, shared, opts));
+        // the writer holds only the registry-held clones alive: rx
+        // disconnects once the reader exits AND every subscribed point
+        // has delivered (or the registry entry was drained)
+        drop(tx);
+        writer_loop(stream, rx)
+    })
+}
+
+/// Parse newline-delimited commands off the socket.  The read timeout
+/// doubles as the cancellation poll; partial lines accumulate across
+/// timeouts (`read_line` appends what it read before the timeout).
+fn reader_loop(stream: TcpStream, out: Sender<ServerMsg>, shared: &Shared, opts: &ServeOpts) {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if shared.cancel.is_cancelled() {
+            let _ = out.send(ServerMsg::Shutdown);
+            return;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => {
+                // EOF: treat like `bye` so pending results still flush
+                let _ = out.send(ServerMsg::Bye);
+                return;
+            }
+            Ok(_) => {
+                let cmd = line.trim().to_string();
+                line.clear();
+                if !handle_command(&cmd, &out, shared, opts) {
+                    return;
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue;
+            }
+            Err(_) => {
+                let _ = out.send(ServerMsg::Bye);
+                return;
+            }
+        }
+    }
+}
+
+/// Dispatch one protocol line.  Returns false when the reader should
+/// exit (the client said `bye`).
+fn handle_command(cmd: &str, out: &Sender<ServerMsg>, shared: &Shared, opts: &ServeOpts) -> bool {
+    if cmd.is_empty() {
+        return true;
+    }
+    if cmd == "bye" {
+        let _ = out.send(ServerMsg::Bye);
+        return false;
+    }
+    if cmd == "stats" {
+        let _ = out.send(ServerMsg::Line(format!(
+            "stats submitted={} direct_hits={} joined={} executed={} failed={}",
+            shared.submitted.load(Ordering::Relaxed),
+            shared.direct_hits.load(Ordering::Relaxed),
+            shared.joined.load(Ordering::Relaxed),
+            shared.executed.load(Ordering::Relaxed),
+            shared.failed.load(Ordering::Relaxed),
+        )));
+        return true;
+    }
+    if let Some(spec) = cmd.strip_prefix("point ") {
+        match SweepPoint::parse_spec(spec) {
+            Ok(point) => submit_points(vec![point], out, shared),
+            Err(e) => send_error(out, &e),
+        }
+        return true;
+    }
+    if let Some(req) = cmd.strip_prefix("plan ") {
+        match resolve_plan(req, opts) {
+            Ok(points) => submit_points(points, out, shared),
+            Err(e) => send_error(out, &e),
+        }
+        return true;
+    }
+    let _ = out.send(ServerMsg::Line(format!(
+        "error unknown command {cmd:?} (point <spec> | plan <name> [quick] [seed=N] | stats | bye)"
+    )));
+    true
+}
+
+/// Report a submission error as a single protocol line.
+fn send_error(out: &Sender<ServerMsg>, e: &anyhow::Error) {
+    let msg = format!("{e:#}").replace(['\n', '\r'], " ");
+    let _ = out.send(ServerMsg::Line(format!("error {msg}")));
+}
+
+/// Expand a `plan <name> [quick] [seed=N]` request against the injected
+/// registry.
+fn resolve_plan(req: &str, opts: &ServeOpts) -> Result<Vec<SweepPoint>> {
+    let resolver = opts
+        .resolver
+        .context("this daemon has no plan registry; submit `point <spec>` instead")?;
+    let mut words = req.split_whitespace();
+    let name = words.next().context("plan command wants a name")?;
+    let mut profile = Profile::full(crate::DEFAULT_SEED);
+    for word in words {
+        if word == "quick" {
+            profile.quick = true;
+        } else if let Some(seed) = word.strip_prefix("seed=") {
+            profile.seed = seed
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad seed {seed:?}"))?;
+        } else {
+            bail!("unknown plan option {word:?} (quick | seed=N)");
+        }
+    }
+    let plan = resolver(name, &profile).with_context(|| format!("unknown plan {name:?}"))?;
+    if plan.is_empty() {
+        bail!("plan {name:?} holds no points");
+    }
+    Ok(plan.points)
+}
+
+/// Register a submission: ack it, open its ordered subscription, then
+/// resolve each point — direct cache hit, join an in-flight twin, or
+/// queue a fresh execution.
+fn submit_points(points: Vec<SweepPoint>, out: &Sender<ServerMsg>, shared: &Shared) {
+    let _ = out.send(ServerMsg::Line(format!("ack {}", points.len())));
+    let specs: Vec<String> = points.iter().map(|p| p.spec()).collect();
+    let _ = out.send(ServerMsg::Subscribe(specs));
+    shared.submitted.fetch_add(points.len(), Ordering::Relaxed);
+    for point in points {
+        let spec = point.spec();
+        // fast path: an intact cache entry is served without touching
+        // the engine or the in-flight registry
+        if let CacheLoad::Hit(payload) = shared.cache.load_checked(&spec) {
+            if PointResult::from_cache_text(&payload).is_ok() {
+                shared.direct_hits.fetch_add(1, Ordering::Relaxed);
+                let _ = out.send(ServerMsg::Point(spec, Arc::new(Outcome::Done(payload))));
+                continue;
+            }
+        }
+        let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        if st.draining {
+            drop(st);
+            shared.failed.fetch_add(1, Ordering::Relaxed);
+            let _ = out.send(ServerMsg::Point(
+                spec,
+                Arc::new(Outcome::Failed(DRAIN_MSG.to_string())),
+            ));
+            continue;
+        }
+        if let Some(subs) = st.inflight.get_mut(&spec) {
+            // the dedupe: an identical point is already queued or
+            // executing — subscribe, don't re-queue
+            subs.push(out.clone());
+            shared.joined.fetch_add(1, Ordering::Relaxed);
+        } else {
+            st.inflight.insert(spec, vec![out.clone()]);
+            st.queue.push(point);
+            shared.work.notify_all();
+        }
+    }
+}
+
+/// Per-submission reorder buffer: results stream back the moment they
+/// can, but always in submission order, so two subscribers of the same
+/// submission read byte-identical streams regardless of completion or
+/// fan-out order.
+struct Subscription {
+    /// Spec strings in submission order.
+    specs: Vec<String>,
+    /// Next index to emit.
+    next: usize,
+    /// Outcomes that arrived ahead of their turn, per spec.
+    ready: HashMap<String, Vec<Arc<Outcome>>>,
+    /// Deliveries still expected per spec (handles duplicate specs in
+    /// one submission: each occurrence consumes one delivery).
+    awaiting: HashMap<String, usize>,
+}
+
+impl Subscription {
+    fn new(specs: Vec<String>) -> Self {
+        let mut awaiting: HashMap<String, usize> = HashMap::new();
+        for spec in &specs {
+            *awaiting.entry(spec.clone()).or_insert(0) += 1;
+        }
+        Self {
+            specs,
+            next: 0,
+            ready: HashMap::new(),
+            awaiting,
+        }
+    }
+
+    /// Is this subscription still expecting a delivery for `spec`?
+    fn wants(&self, spec: &str) -> bool {
+        self.awaiting.get(spec).copied().unwrap_or(0) > 0
+    }
+
+    /// Accept one delivery for `spec` (caller checked [`wants`]).
+    ///
+    /// [`wants`]: Subscription::wants
+    fn offer(&mut self, spec: &str, outcome: Arc<Outcome>) {
+        if let Some(n) = self.awaiting.get_mut(spec) {
+            if *n > 0 {
+                *n -= 1;
+                self.ready.entry(spec.to_string()).or_default().push(outcome);
+            }
+        }
+    }
+
+    /// Every spec emitted?
+    fn done(&self) -> bool {
+        self.next == self.specs.len()
+    }
+}
+
+/// The connection's single socket writer: serializes protocol lines,
+/// routes deliveries into the submission reorder buffers, and flushes
+/// results in order as they become emittable.
+fn writer_loop(stream: TcpStream, rx: Receiver<ServerMsg>) -> Result<()> {
+    let mut w = BufWriter::new(stream);
+    writeln!(w, "{GREETING}")?;
+    w.flush()?;
+    let mut subs: VecDeque<Subscription> = VecDeque::new();
+    let mut bye = false;
+    let mut shutdown = false;
+    loop {
+        match rx.recv_timeout(IO_TICK) {
+            Ok(ServerMsg::Line(line)) => {
+                writeln!(w, "{line}")?;
+                w.flush()?;
+            }
+            Ok(ServerMsg::Subscribe(specs)) => subs.push_back(Subscription::new(specs)),
+            Ok(ServerMsg::Point(spec, outcome)) => {
+                // route to the oldest subscription still awaiting it
+                for sub in subs.iter_mut() {
+                    if sub.wants(&spec) {
+                        sub.offer(&spec, outcome);
+                        break;
+                    }
+                }
+                flush_ready(&mut w, &mut subs)?;
+            }
+            Ok(ServerMsg::Bye) => bye = true,
+            Ok(ServerMsg::Shutdown) => shutdown = true,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                // reader gone and every registry clone resolved/dropped
+                writeln!(w, "bye")?;
+                w.flush()?;
+                return Ok(());
+            }
+        }
+        // a shutdown still flushes pending deliveries first: the drain
+        // pass resolves every in-flight subscription promptly, so this
+        // terminates within the drain
+        if (bye || shutdown) && subs.is_empty() {
+            if shutdown {
+                writeln!(
+                    w,
+                    "error daemon shutting down; completed points are cached, resubmit after restart"
+                )?;
+            }
+            writeln!(w, "bye")?;
+            w.flush()?;
+            return Ok(());
+        }
+    }
+}
+
+/// Emit, in submission order, every result the front subscriptions can
+/// already deliver; completed subscriptions emit `done <n>` and retire.
+fn flush_ready(
+    w: &mut BufWriter<TcpStream>,
+    subs: &mut VecDeque<Subscription>,
+) -> std::io::Result<()> {
+    while let Some(front) = subs.front_mut() {
+        loop {
+            if front.next >= front.specs.len() {
+                break;
+            }
+            let spec = front.specs[front.next].clone();
+            let Some(queue) = front.ready.get_mut(&spec) else {
+                break;
+            };
+            if queue.is_empty() {
+                break;
+            }
+            let outcome = queue.remove(0);
+            emit(w, &spec, &outcome)?;
+            front.next += 1;
+        }
+        if front.done() {
+            writeln!(w, "done {}", front.specs.len())?;
+            subs.pop_front();
+        } else {
+            break;
+        }
+    }
+    w.flush()
+}
+
+/// Write one point outcome in wire format.
+fn emit(w: &mut impl Write, spec: &str, outcome: &Outcome) -> std::io::Result<()> {
+    let key = fnv1a64(spec);
+    match outcome {
+        Outcome::Done(payload) => {
+            writeln!(w, "result {key:016x} {}", payload.lines().count())?;
+            w.write_all(payload.as_bytes())?;
+            if !payload.ends_with('\n') {
+                w.write_all(b"\n")?;
+            }
+        }
+        Outcome::Failed(msg) => writeln!(w, "failed {key:016x} {msg}")?,
+    }
+    Ok(())
+}
+
+/// Per-submission totals counted by the [`submit`] client.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SubmitSummary {
+    /// `result` blocks received.
+    pub results: usize,
+    /// `failed` lines received.
+    pub failed: usize,
+}
+
+/// The `repro submit` client: connect, send `commands` (protocol lines,
+/// e.g. `point <spec>` or `plan fig2 quick`) followed by `bye`, and echo
+/// every server line to `sink` verbatim until the server closes.
+pub fn submit(addr: &str, commands: &[String], sink: &mut dyn Write) -> Result<SubmitSummary> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to repro serve at {addr}"))?;
+    let mut writer = stream.try_clone().context("cloning the client stream")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading the greeting")?;
+    if !line.starts_with("repro-serve/") {
+        bail!("{addr} is not a repro serve daemon (greeting {line:?})");
+    }
+    sink.write_all(line.as_bytes())?;
+    for cmd in commands {
+        writeln!(writer, "{cmd}")?;
+    }
+    writeln!(writer, "bye")?;
+    writer.flush()?;
+    let mut summary = SubmitSummary::default();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("connection closed before the server said bye");
+        }
+        sink.write_all(line.as_bytes())?;
+        let trimmed = line.trim_end();
+        if trimmed == "bye" {
+            break;
+        }
+        if let Some(rest) = trimmed.strip_prefix("result ") {
+            let n: usize = rest
+                .split_whitespace()
+                .nth(1)
+                .context("malformed result header")?
+                .parse()
+                .context("malformed result line count")?;
+            for _ in 0..n {
+                line.clear();
+                if reader.read_line(&mut line)? == 0 {
+                    bail!("connection closed mid-payload");
+                }
+                sink.write_all(line.as_bytes())?;
+            }
+            summary.results += 1;
+        } else if trimmed.starts_with("failed ") {
+            summary.failed += 1;
+        }
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn done(s: &str) -> Arc<Outcome> {
+        Arc::new(Outcome::Done(format!("{s}\n")))
+    }
+
+    #[test]
+    fn subscription_reorders_out_of_order_deliveries() {
+        let mut sub = Subscription::new(vec!["a".into(), "b".into(), "c".into()]);
+        assert!(sub.wants("b") && !sub.wants("x"));
+        // deliveries land out of order; emission order must be a, b, c
+        sub.offer("c", done("pc"));
+        assert!(sub.wants("a") && !sub.wants("c"));
+        sub.offer("a", done("pa"));
+        sub.offer("b", done("pb"));
+        let mut emitted = Vec::new();
+        while sub.next < sub.specs.len() {
+            let spec = sub.specs[sub.next].clone();
+            let q = sub.ready.get_mut(&spec).unwrap();
+            let outcome = q.remove(0);
+            if let Outcome::Done(p) = &*outcome {
+                emitted.push((spec.clone(), p.clone()));
+            }
+            sub.next += 1;
+        }
+        assert!(sub.done());
+        assert_eq!(
+            emitted,
+            vec![
+                ("a".to_string(), "pa\n".to_string()),
+                ("b".to_string(), "pb\n".to_string()),
+                ("c".to_string(), "pc\n".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn subscription_handles_duplicate_specs() {
+        // the same spec twice in one submission consumes two deliveries
+        let mut sub = Subscription::new(vec!["a".into(), "a".into()]);
+        assert!(sub.wants("a"));
+        sub.offer("a", done("p"));
+        assert!(sub.wants("a"), "one delivery down, one still awaited");
+        sub.offer("a", done("p"));
+        assert!(!sub.wants("a"));
+        assert_eq!(sub.ready.get("a").map(|q| q.len()), Some(2));
+    }
+}

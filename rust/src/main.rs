@@ -19,14 +19,23 @@
 //!   (`--autotune-cap`/`--autotune-window`/`--autotune-epochs`).
 //! * `repro jax --l L [--trials N] [--steps T]`
 //!   — the same through the AOT JAX/Pallas artifacts (PJRT runtime).
+//! * `repro serve [--addr HOST:PORT] [--cache-dir DIR]` — the
+//!   simulation-as-a-service daemon: serves cached sweep points without
+//!   touching the engine, dedupes in-flight identical submissions
+//!   across clients, streams results as they land, drains gracefully on
+//!   SIGINT/SIGTERM leaving a bitwise-resumable cache.
+//! * `repro submit [--addr HOST:PORT] <plan|spec>...` — client for the
+//!   daemon: submit registered plan names or quoted `repro/v1 ...` spec
+//!   strings, stream the results to stdout.
 //! * `repro info` — artifact manifest + platform diagnostics.
 
 use anyhow::Result;
 
 use repro::cli::Args;
 use repro::coordinator::{
-    autotune_topology, run_artifact_ensemble, run_topology_ensemble_model, AutotuneCfg,
-    CancelToken, Control, FaultPlan, JaxRunSpec, OnFault, Profile, RunSpec, ShardStrategy,
+    autotune_topology, run_artifact_ensemble, run_topology_ensemble_model, submit, AutotuneCfg,
+    CancelToken, Control, FaultPlan, JaxRunSpec, OnFault, Profile, RunSpec, ServeOpts, Server,
+    ShardStrategy,
 };
 use repro::experiments::{self, Ctx};
 use repro::pdes::model::{DEFAULT_BETA, DEFAULT_COUPLING};
@@ -162,6 +171,9 @@ fn main() -> Result<()> {
                  \x20                 [--autotune] [--autotune-cap C] [--autotune-window W] [--autotune-epochs E]\n\
                  \x20      repro jax  --l L --nv NV --delta D [--trials N] [--steps T] [--artifacts DIR]\n\
                  \x20      repro campaign --config FILE [--out DIR]\n\
+                 \x20      repro serve  [--addr HOST:PORT] [--cache-dir DIR] [--workers N]\n\
+                 \x20                 [--lattice-workers N] [--max-retries N] [--quiet]\n\
+                 \x20      repro submit [--addr HOST:PORT] [--quick] [--seed S] <plan-name|'repro/v1 ...'>...\n\
                  \x20      repro info [--artifacts DIR]"
             );
             Ok(())
@@ -269,6 +281,56 @@ fn main() -> Result<()> {
             let series =
                 run_topology_ensemble_model(topology, &spec, &model, ShardStrategy::Trials);
             print_summary(&series);
+            Ok(())
+        }
+        "serve" => {
+            let opts = ServeOpts {
+                addr: args.opt("addr", "127.0.0.1:7878"),
+                cache_dir: std::path::PathBuf::from(args.opt("cache-dir", "serve-cache")),
+                workers: args.opt_u64("workers", 0)? as usize,
+                lattice_workers: args.opt_u64("lattice-workers", 1)? as usize,
+                max_retries: args.opt_u64("max-retries", 0)? as u32,
+                faults: FaultPlan::from_env()?,
+                resolver: Some(experiments::plan_for),
+                quiet: args.has_flag("quiet"),
+            };
+            // SIGINT/SIGTERM drain the in-flight batch at a step
+            // boundary and leave a bitwise-resumable cache
+            Server::bind(opts)?.run(CancelToken::for_signals())?;
+            Ok(())
+        }
+        "submit" => {
+            let addr = args.opt("addr", "127.0.0.1:7878");
+            if args.positional.is_empty() {
+                anyhow::bail!(
+                    "usage: repro submit [--addr HOST:PORT] [--quick] [--seed S] \
+                     <plan-name|'repro/v1 ...'>..."
+                );
+            }
+            let seed = args.opt_u64("seed", DEFAULT_SEED)?;
+            let quick = args.has_flag("quick");
+            let mut commands = Vec::new();
+            for arg in &args.positional {
+                if arg.starts_with("repro/v1 ") {
+                    commands.push(format!("point {arg}"));
+                } else {
+                    let mut cmd = format!("plan {arg}");
+                    if quick {
+                        cmd.push_str(" quick");
+                    }
+                    if seed != DEFAULT_SEED {
+                        cmd.push_str(&format!(" seed={seed}"));
+                    }
+                    commands.push(cmd);
+                }
+            }
+            let mut stdout = std::io::stdout().lock();
+            let summary = submit(&addr, &commands, &mut stdout)?;
+            drop(stdout);
+            eprintln!("submit: results={} failed={}", summary.results, summary.failed);
+            if summary.failed > 0 {
+                anyhow::bail!("{} point(s) came back failed", summary.failed);
+            }
             Ok(())
         }
         "jax" => {

@@ -67,22 +67,43 @@ pub struct ResultCache {
 }
 
 impl ResultCache {
-    /// Open (creating if needed) a cache directory, sweeping any stale
-    /// `*.tmp` files a killed writer left behind (rename-publish means
-    /// they were never visible as entries — they are pure litter).
+    /// Open (creating if needed) a cache directory, sweeping stale
+    /// `*.tmp` litter left behind by dead writers (rename-publish means
+    /// a temp file was never visible as an entry — it is pure litter).
     ///
-    /// The sweep assumes no *other* process is mid-`store` on the same
-    /// directory while we open it; concurrent multi-process sharing of
-    /// one cache dir is not a supported pattern (kill/resume relaunches
-    /// are sequential).
+    /// Multi-process contract: several processes may share one cache
+    /// directory concurrently (the `repro serve` daemon plus CLI runs,
+    /// or two parallel campaigns).  Temp names embed the writer's pid
+    /// (`{key}.tmp{pid}-{seq}`), and the sweep removes only entries
+    /// whose embedded pid is dead or is *this* process's own pid — a
+    /// live foreign writer's in-flight temp file is never touched, so
+    /// its rename-publish cannot be broken mid-`store`.  Own-pid
+    /// entries at open time are litter from a recycled pid: within one
+    /// process every supported flow opens before it stores (`open` must
+    /// not race a same-process `store`).  Temp names that do not parse
+    /// (no embedded pid) are treated as litter and removed.  On
+    /// non-Linux targets pid liveness cannot be probed without libc, so
+    /// only own-pid litter is swept there — conservative in the safe
+    /// direction (foreign litter survives until its own process, or a
+    /// Linux janitor, reopens the directory).
     pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
         let dir = dir.into();
         fs::create_dir_all(&dir)
             .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        let own = std::process::id();
         if let Ok(entries) = fs::read_dir(&dir) {
             for entry in entries.flatten() {
-                if entry.file_name().to_string_lossy().contains(".tmp") {
-                    let _ = fs::remove_file(entry.path());
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                if !name.contains(".tmp") {
+                    continue;
+                }
+                match tmp_writer_pid(&name) {
+                    // a live foreign writer is mid-store: keep its temp
+                    Some(pid) if pid != own && !pid_is_dead(pid) => {}
+                    _ => {
+                        let _ = fs::remove_file(entry.path());
+                    }
                 }
             }
         }
@@ -186,6 +207,29 @@ impl ResultCache {
             let _ = d.sync_all();
         }
         Ok(())
+    }
+}
+
+/// Extract the writer pid embedded in a temp-file name
+/// (`{key}.tmp{pid}-{seq}`).  `None` = the name does not follow the
+/// contract (foreign litter from an unknown writer).
+fn tmp_writer_pid(name: &str) -> Option<u32> {
+    let rest = name.split(".tmp").nth(1)?;
+    rest.split('-').next()?.parse::<u32>().ok()
+}
+
+/// Whether `pid` is certainly dead.  Must only ever return `true` for a
+/// pid with no live process — a false "alive" merely defers litter
+/// collection, a false "dead" would delete a live writer's temp file.
+fn pid_is_dead(pid: u32) -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        !Path::new(&format!("/proc/{pid}")).exists()
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = pid;
+        false
     }
 }
 
@@ -332,20 +376,73 @@ mod tests {
 
     #[test]
     fn stale_tmp_files_are_swept_on_open() {
+        // own-pid litter (a recycled pid, or crash-and-relaunch under
+        // the same pid namespace slot) is swept, published entries stay
         let c = tmp_cache("sweep");
         let spec = "repro/v1 sweep-case";
         c.store(spec, "latticeu 0 0\n").unwrap();
-        // plant a torn tmp file, as a kill -9 mid-store would leave
-        let torn = c.dir().join("00deadbeef00cafe.tmp12345-0");
+        let torn = c
+            .dir()
+            .join(format!("00deadbeef00cafe.tmp{}-0", std::process::id()));
         std::fs::write(&torn, "# repro point cache v2\nspec trunc").unwrap();
         assert!(torn.exists());
         let reopened = ResultCache::open(c.dir()).unwrap();
-        assert!(!torn.exists(), "stale tmp must be swept on open");
+        assert!(!torn.exists(), "own-pid tmp litter must be swept on open");
         // the published entry survives the sweep
         assert_eq!(
             reopened.load_checked(spec),
             CacheLoad::Hit("latticeu 0 0\n".to_string())
         );
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn unparsable_tmp_names_are_swept_on_open() {
+        // a temp name with no embedded pid does not follow the store
+        // contract — no live writer can own it, so it is litter
+        let c = tmp_cache("sweepjunk");
+        let junk = c.dir().join("junk.tmpgarbage");
+        std::fs::write(&junk, "x").unwrap();
+        ResultCache::open(c.dir()).unwrap();
+        assert!(!junk.exists(), "unparsable tmp name must be swept");
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[test]
+    fn live_foreign_tmp_files_survive_open() {
+        // a temp file owned by a live *other* process is an in-flight
+        // store: sweeping it would break that writer's rename-publish.
+        // pid 1 is always alive (init / the container entrypoint).
+        let c = tmp_cache("sweeplive");
+        assert_ne!(std::process::id(), 1, "test cannot run as pid 1");
+        let live = c.dir().join("00deadbeef00cafe.tmp1-0");
+        std::fs::write(&live, "# repro point cache v2\nspec in-fl").unwrap();
+        let _ = ResultCache::open(c.dir()).unwrap();
+        #[cfg(target_os = "linux")]
+        assert!(live.exists(), "live foreign writer's tmp must survive open");
+        // non-Linux: liveness is unprobeable, foreign tmps always survive
+        #[cfg(not(target_os = "linux"))]
+        assert!(live.exists());
+        std::fs::remove_dir_all(c.dir()).ok();
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn dead_foreign_tmp_files_are_swept_on_open() {
+        // obtain a guaranteed-dead pid: spawn a short-lived child and
+        // reap it, then plant litter under its (now unused) pid
+        let mut child = std::process::Command::new("true")
+            .spawn()
+            .expect("spawn true");
+        let dead_pid = child.id();
+        child.wait().expect("reap child");
+        let c = tmp_cache("sweepdead");
+        let torn = c
+            .dir()
+            .join(format!("00deadbeef00cafe.tmp{dead_pid}-0"));
+        std::fs::write(&torn, "# repro point cache v2\nspec trunc").unwrap();
+        let _ = ResultCache::open(c.dir()).unwrap();
+        assert!(!torn.exists(), "dead foreign writer's tmp must be swept");
         std::fs::remove_dir_all(c.dir()).ok();
     }
 

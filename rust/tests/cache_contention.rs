@@ -1,0 +1,149 @@
+//! Two-writer cache contention suite (ISSUE 10 satellite): several
+//! [`ResultCache`] handles on one directory `store`/`load_checked`
+//! concurrently, and a daemon-style reader must only ever observe
+//! `Hit` (intact bytes) or `Miss` — never `Corrupt`, never a torn
+//! entry, never a failed rename.  The write-tmp-fsync-rename publish
+//! protocol plus the pid-scoped sweep (the ISSUE 10 headline bugfix)
+//! are what make this hold; the CI serve-smoke job adds the
+//! two-process leg (two daemons sharing one cache dir).
+//!
+//! Test names carry the `cache_contention` prefix on purpose: the CI
+//! ThreadSanitizer filter (`sharded pool pe_family kernel
+//! cache_contention`) picks them up by substring.
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Barrier;
+
+use repro::coordinator::fnv1a64;
+use repro::runtime::{CacheLoad, ResultCache};
+
+const ROUNDS: usize = 6;
+const SPECS: usize = 64;
+
+/// Deterministic payload per spec so any reader can verify integrity
+/// byte-for-byte (the daemon's world: content-addressed, deterministic
+/// results — concurrent writers of one spec write identical bytes).
+fn payload(spec: &str) -> String {
+    format!("latticeu {:016x} 0000000000000000\n", fnv1a64(spec))
+}
+
+fn spec(i: usize) -> String {
+    format!("contend/v1 point={i}")
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("repro_cache_contention_{tag}"));
+    fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn cache_contention_two_writers_one_reader() {
+    let dir = tmp_dir("basic");
+    // all handles open BEFORE any store: open() must not race a
+    // same-process store (the documented own-pid sweep contract)
+    let a = ResultCache::open(&dir).unwrap();
+    let b = ResultCache::open(&dir).unwrap();
+    let reader = ResultCache::open(&dir).unwrap();
+    let barrier = Barrier::new(3);
+    let done = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for cache in [&a, &b] {
+            let barrier = &barrier;
+            let done = &done;
+            scope.spawn(move || {
+                barrier.wait();
+                for _round in 0..ROUNDS {
+                    for i in 0..SPECS {
+                        let s = spec(i);
+                        cache
+                            .store(&s, &payload(&s))
+                            .expect("store must survive two-writer contention");
+                    }
+                }
+                done.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        barrier.wait();
+        // daemon-style reader polling while both writers hammer the dir
+        while done.load(Ordering::SeqCst) < 2 {
+            for i in 0..SPECS {
+                let s = spec(i);
+                match reader.load_checked(&s) {
+                    CacheLoad::Hit(p) => {
+                        assert_eq!(p, payload(&s), "{s}: reader saw a torn entry")
+                    }
+                    CacheLoad::Miss => {}
+                    CacheLoad::Corrupt => {
+                        panic!("{s}: reader saw a corrupt entry under contention")
+                    }
+                }
+            }
+        }
+    });
+    // quiescent state: every spec resolves intact
+    for i in 0..SPECS {
+        let s = spec(i);
+        match reader.load_checked(&s) {
+            CacheLoad::Hit(p) => assert_eq!(p, payload(&s)),
+            other => panic!("{s}: expected a hit once both writers finished, got {other:?}"),
+        }
+    }
+    // rename-publish leaves no tmp litter behind
+    for entry in fs::read_dir(&dir).unwrap().flatten() {
+        let name = entry.file_name();
+        assert!(
+            !name.to_string_lossy().contains(".tmp"),
+            "tmp litter left behind: {name:?}"
+        );
+    }
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cache_contention_conflicting_writers_never_tear() {
+    // two writers race DIFFERENT payloads onto one spec: atomic rename
+    // means a reader sees one of the two complete payloads, never a mix
+    let dir = tmp_dir("conflict");
+    let a = ResultCache::open(&dir).unwrap();
+    let b = ResultCache::open(&dir).unwrap();
+    let reader = ResultCache::open(&dir).unwrap();
+    let clash = "contend/v1 clash";
+    let pa = "alpha payload\nwith a second line\n";
+    let pb = "beta payload\n";
+    let barrier = Barrier::new(3);
+    let done = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for (cache, text) in [(&a, pa), (&b, pb)] {
+            let barrier = &barrier;
+            let done = &done;
+            scope.spawn(move || {
+                barrier.wait();
+                for _ in 0..200 {
+                    cache
+                        .store(clash, text)
+                        .expect("conflicting stores must both survive");
+                }
+                done.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        barrier.wait();
+        while done.load(Ordering::SeqCst) < 2 {
+            match reader.load_checked(clash) {
+                CacheLoad::Hit(p) => assert!(
+                    p == pa || p == pb,
+                    "reader saw a blend of two payloads: {p:?}"
+                ),
+                CacheLoad::Miss => {}
+                CacheLoad::Corrupt => panic!("reader saw a corrupt entry under contention"),
+            }
+        }
+    });
+    match reader.load_checked(clash) {
+        CacheLoad::Hit(p) => assert!(p == pa || p == pb),
+        other => panic!("expected a winner after the race, got {other:?}"),
+    }
+    fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,320 @@
+//! End-to-end protocol suite for the `repro serve` daemon (ISSUE 10
+//! acceptance): identical submissions from concurrent clients dedupe to
+//! one engine execution with byte-identical streamed results, a
+//! restarted daemon serves resubmissions entirely from cache
+//! (`executed=0`), malformed input gets `error` lines instead of
+//! disconnects, a drain mid-execution fails only the subscribers and
+//! leaves a bitwise-resumable cache, and plan submissions expand and
+//! stream in plan order.
+//!
+//! All servers bind `127.0.0.1:0` (ephemeral ports) and are cancelled
+//! through a plain [`CancelToken`] — the signal-backed token is CLI
+//! wiring, exercised by the CI serve-smoke job.
+
+use std::fs;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Barrier};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use repro::coordinator::{
+    fnv1a64, submit, CancelToken, Control, FaultPlan, Profile, RunSpec, ServeOpts, ServeReport,
+    Server, SubmitSummary, SweepPlan, SweepPoint,
+};
+use repro::pdes::{Mode, StreamFamily, Topology, VolumeLoad};
+use repro::runtime::{CacheLoad, ResultCache};
+
+/// A steady point small enough to execute in milliseconds; `tag` varies
+/// the seed so tests never share cache identities.
+fn tiny_point(tag: u64) -> SweepPoint {
+    SweepPoint::steady(
+        format!("serve{tag}"),
+        Topology::Ring { l: 8 },
+        RunSpec {
+            l: 8,
+            load: VolumeLoad::Sites(1),
+            mode: Mode::Windowed { delta: 10.0 },
+            trials: 2,
+            steps: 0,
+            seed: 100 + tag,
+            streams: StreamFamily::Pe,
+            control: Control::Static,
+        },
+        5,
+        10,
+    )
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("repro_serve_{tag}"));
+    fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Bind an ephemeral-port daemon and run it on a background thread;
+/// returns the dialable address, the cancel handle, and the report join.
+fn start_server(
+    dir: &Path,
+    mutate: impl FnOnce(&mut ServeOpts),
+) -> (String, CancelToken, JoinHandle<ServeReport>) {
+    let mut opts = ServeOpts {
+        addr: "127.0.0.1:0".to_string(),
+        cache_dir: dir.to_path_buf(),
+        quiet: true,
+        ..ServeOpts::default()
+    };
+    mutate(&mut opts);
+    let server = Server::bind(opts).expect("bind ephemeral port");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let cancel = CancelToken::new();
+    let run_cancel = cancel.clone();
+    let handle = std::thread::spawn(move || server.run(run_cancel).expect("server run"));
+    (addr, cancel, handle)
+}
+
+#[test]
+fn identical_submissions_dedupe_to_one_execution() {
+    let dir = tmp_dir("dedupe");
+    let point = tiny_point(1);
+    let spec = point.spec();
+    // hold the single execution open so the second client reliably
+    // arrives while the point is still in flight
+    let faults = FaultPlan::new().delay_on(&spec, 700, 1);
+    let (addr, cancel, handle) = start_server(&dir, |o| o.faults = Some(faults));
+    let cmd = vec![format!("point {spec}")];
+    let barrier = Arc::new(Barrier::new(2));
+    let logs: Vec<String> = std::thread::scope(|scope| {
+        let clients: Vec<_> = (0..2)
+            .map(|_| {
+                let addr = addr.clone();
+                let cmd = cmd.clone();
+                let barrier = Arc::clone(&barrier);
+                scope.spawn(move || {
+                    barrier.wait();
+                    let mut log = Vec::new();
+                    let summary = submit(&addr, &cmd, &mut log).expect("submit");
+                    assert_eq!(
+                        summary,
+                        SubmitSummary {
+                            results: 1,
+                            failed: 0
+                        }
+                    );
+                    String::from_utf8(log).expect("utf8 stream")
+                })
+            })
+            .collect();
+        clients.into_iter().map(|c| c.join().unwrap()).collect()
+    });
+    assert_eq!(
+        logs[0], logs[1],
+        "both subscribers must read byte-identical streams"
+    );
+    assert!(logs[0].contains("ack 1"), "{}", logs[0]);
+    assert!(logs[0].contains("done 1"), "{}", logs[0]);
+    cancel.cancel();
+    let report = handle.join().unwrap();
+    assert_eq!(
+        report.executed, 1,
+        "two identical submissions, one engine execution: {report:?}"
+    );
+    assert_eq!(report.submitted, 2);
+    assert_eq!(
+        report.direct_hits + report.joined + report.batch_hits,
+        1,
+        "the twin submission must resolve without a fresh execution: {report:?}"
+    );
+    assert_eq!(report.failed, 0);
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn restart_serves_resubmissions_from_cache_without_the_engine() {
+    let dir = tmp_dir("restart");
+    let spec = tiny_point(2).spec();
+    let cmd = vec![format!("point {spec}")];
+
+    let (addr, cancel, handle) = start_server(&dir, |_| {});
+    let mut cold = Vec::new();
+    assert_eq!(
+        submit(&addr, &cmd, &mut cold).expect("cold submit"),
+        SubmitSummary {
+            results: 1,
+            failed: 0
+        }
+    );
+    cancel.cancel();
+    assert_eq!(handle.join().unwrap().executed, 1);
+
+    // a fresh daemon over the same cache dir: pure hit, engine untouched
+    let (addr, cancel, handle) = start_server(&dir, |_| {});
+    let mut warm = Vec::new();
+    assert_eq!(
+        submit(&addr, &cmd, &mut warm).expect("warm submit"),
+        SubmitSummary {
+            results: 1,
+            failed: 0
+        }
+    );
+    cancel.cancel();
+    let report = handle.join().unwrap();
+    assert_eq!(
+        report.executed, 0,
+        "post-restart resubmission must be served entirely from cache: {report:?}"
+    );
+    assert_eq!(report.direct_hits, 1);
+    assert_eq!(
+        cold, warm,
+        "executed and cache-served streams must be byte-identical"
+    );
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn malformed_input_gets_error_lines_not_disconnects() {
+    let dir = tmp_dir("errors");
+    let (addr, cancel, handle) = start_server(&dir, |_| {});
+    let stream = TcpStream::connect(&addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("repro-serve/1"), "{line:?}");
+
+    writeln!(writer, "frobnicate").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("error unknown command"), "{line:?}");
+
+    writeln!(writer, "point repro/v1 topo=ring:8 run=nonsense").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("error "), "{line:?}");
+    assert!(!line.contains('\r'), "errors must stay single-line");
+
+    // no resolver injected: plan submissions are refused, not fatal
+    writeln!(writer, "plan fig2").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("no plan registry"), "{line:?}");
+
+    writeln!(writer, "stats").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("stats submitted=0 "), "{line:?}");
+
+    writeln!(writer, "bye").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "bye");
+
+    cancel.cancel();
+    let report = handle.join().unwrap();
+    assert_eq!(report.submitted, 0);
+    assert_eq!(report.executed, 0);
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn drain_fails_subscribers_and_leaves_a_resumable_cache() {
+    let dir = tmp_dir("drain");
+    let spec = tiny_point(4).spec();
+    // park the execution long enough to cancel mid-flight
+    let faults = FaultPlan::new().delay_on(&spec, 1200, 1);
+    let (addr, cancel, handle) = start_server(&dir, |o| o.faults = Some(faults));
+    let client = {
+        let addr = addr.clone();
+        let cmd = vec![format!("point {spec}")];
+        std::thread::spawn(move || {
+            let mut log = Vec::new();
+            let summary = submit(&addr, &cmd, &mut log).expect("submit");
+            (summary, String::from_utf8(log).expect("utf8 stream"))
+        })
+    };
+    // let the batch claim the point, then pull the plug mid-delay
+    std::thread::sleep(Duration::from_millis(500));
+    cancel.cancel();
+    let (summary, log) = client.join().unwrap();
+    assert_eq!(summary.results, 0);
+    assert_eq!(summary.failed, 1, "subscriber must hear the drain: {log}");
+    assert!(log.contains("daemon is draining"), "{log}");
+    let report = handle.join().unwrap();
+    assert_eq!(
+        report.executed, 0,
+        "an interrupted point must not count as executed: {report:?}"
+    );
+    assert_eq!(report.failed, 1);
+
+    // steps are atomic: the interrupted point left no cache entry...
+    let cache = ResultCache::open(&dir).expect("reopen cache");
+    assert!(matches!(cache.load_checked(&spec), CacheLoad::Miss));
+    drop(cache);
+
+    // ...and a restarted daemon executes it cleanly from the same dir
+    let (addr, cancel, handle) = start_server(&dir, |_| {});
+    let mut log = Vec::new();
+    assert_eq!(
+        submit(&addr, &[format!("point {spec}")], &mut log).expect("resubmit"),
+        SubmitSummary {
+            results: 1,
+            failed: 0
+        }
+    );
+    cancel.cancel();
+    assert_eq!(handle.join().unwrap().executed, 1);
+    fs::remove_dir_all(&dir).ok();
+}
+
+/// Plan registry stand-in for the daemon under test (the CLI injects
+/// `experiments::plan_for` here).
+fn test_resolver(name: &str, _profile: &Profile) -> Option<SweepPlan> {
+    if name != "tinyplan" {
+        return None;
+    }
+    let mut plan = SweepPlan::new("tinyplan", "serve protocol test plan");
+    plan.push(tiny_point(50));
+    plan.push(tiny_point(51));
+    Some(plan)
+}
+
+#[test]
+fn plan_submissions_expand_and_stream_in_plan_order() {
+    let dir = tmp_dir("plan");
+    let (addr, cancel, handle) = start_server(&dir, |o| o.resolver = Some(test_resolver));
+
+    let mut log = Vec::new();
+    let summary = submit(&addr, &["plan tinyplan".to_string()], &mut log).expect("submit");
+    let log = String::from_utf8(log).expect("utf8 stream");
+    assert_eq!(
+        summary,
+        SubmitSummary {
+            results: 2,
+            failed: 0
+        }
+    );
+    assert!(log.contains("ack 2"), "{log}");
+    assert!(log.contains("done 2"), "{log}");
+    // results stream in plan order regardless of completion order
+    let first = format!("result {:016x}", fnv1a64(&tiny_point(50).spec()));
+    let second = format!("result {:016x}", fnv1a64(&tiny_point(51).spec()));
+    let p0 = log.find(&first).expect("first point's result header");
+    let p1 = log.find(&second).expect("second point's result header");
+    assert!(p0 < p1, "plan order must be preserved: {log}");
+
+    // unknown names are an error line, not a hangup
+    let mut elog = Vec::new();
+    let es = submit(&addr, &["plan nope".to_string()], &mut elog).expect("unknown plan");
+    assert_eq!(es, SubmitSummary::default());
+    assert!(
+        String::from_utf8(elog).unwrap().contains("error unknown plan"),
+        "unknown plan must produce an error line"
+    );
+
+    cancel.cancel();
+    let report = handle.join().unwrap();
+    assert_eq!(report.executed, 2);
+    assert_eq!(report.submitted, 2);
+    fs::remove_dir_all(&dir).ok();
+}
